@@ -1,0 +1,38 @@
+//! Bench AB-*: the design-space ablations — buffering × partitioning
+//! matrix, Blocks chunk-size sweep, and the VGG19 failure modes.
+
+mod common;
+
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::{ablation_chunk_sweep, ablation_matrix, ablation_vgg};
+use psoc_dma::report;
+
+fn main() {
+    let cfg = SimConfig::default();
+
+    let rows = ablation_matrix(&cfg, 2 << 20).unwrap();
+    print!("{}", report::ablation_text(&rows));
+    println!();
+
+    let chunks: Vec<u64> = (12..=20).map(|e| 1u64 << e).collect();
+    let sweep = ablation_chunk_sweep(&cfg, 4 << 20, &chunks).unwrap();
+    println!("chunk sweep (4MB, double buffer):");
+    for (chunk, rx) in &sweep {
+        println!("  {:>8}: {:.4} ms", report::size_label(*chunk), rx.as_ms());
+    }
+    println!();
+
+    let vgg = ablation_vgg(&cfg).unwrap();
+    print!("{}", report::vgg_text(&vgg));
+    println!();
+
+    common::bench("ablations/matrix_2MB", 1, 5, || {
+        ablation_matrix(&cfg, 2 << 20).unwrap();
+    });
+    common::bench("ablations/chunk_sweep_4MB", 1, 5, || {
+        ablation_chunk_sweep(&cfg, 4 << 20, &chunks).unwrap();
+    });
+    common::bench("ablations/vgg_failures", 1, 5, || {
+        ablation_vgg(&cfg).unwrap();
+    });
+}

@@ -1,0 +1,27 @@
+//! Shared harness for the hand-rolled benches (criterion is unavailable
+//! offline): warm up, run N timed iterations, print a summary line that
+//! `cargo bench` surfaces and EXPERIMENTS.md records.
+
+use std::time::Instant;
+
+use psoc_dma::util::stats::Summary;
+
+/// Time `f` over `iters` iterations (after `warmup` unmeasured ones) and
+/// print a stats line. Returns per-iteration means in milliseconds.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let s = Summary::of(&samples);
+    println!(
+        "bench {name:<40} {:>10.3} ms/iter  (p50 {:.3}, p95 {:.3}, n={})",
+        s.mean, s.p50, s.p95, s.n
+    );
+    s
+}

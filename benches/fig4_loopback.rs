@@ -1,0 +1,39 @@
+//! Bench FIG4: regenerate Fig. 4 (loop-back transfer-time sweep, 8 B →
+//! 6 MB, three drivers) and time how fast the simulator produces it.
+
+mod common;
+
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::{fig45_sizes, loopback_sweep};
+use psoc_dma::drivers::DriverKind;
+use psoc_dma::report;
+
+fn main() {
+    let cfg = SimConfig::default();
+    let sizes = fig45_sizes();
+
+    // The figure itself (one run).
+    let rows = loopback_sweep(&cfg, &sizes, &DriverKind::ALL).unwrap();
+    print!("{}", report::fig4_text(&rows));
+    println!();
+
+    // Simulator throughput on the full sweep.
+    common::bench("fig4/full_sweep(23 sizes x 3 drivers)", 1, 5, || {
+        let r = loopback_sweep(&cfg, &sizes, &DriverKind::ALL).unwrap();
+        assert_eq!(r.len(), sizes.len() * 3);
+    });
+
+    // Per-driver cost at the extremes.
+    for kind in DriverKind::ALL {
+        for bytes in [8u64, 6 << 20] {
+            common::bench(
+                &format!("fig4/{:?}/{}", kind, report::size_label(bytes)),
+                1,
+                10,
+                || {
+                    loopback_sweep(&cfg, &[bytes], &[kind]).unwrap();
+                },
+            );
+        }
+    }
+}

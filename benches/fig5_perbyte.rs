@@ -1,0 +1,43 @@
+//! Bench FIG5: regenerate Fig. 5 (per-byte transfer cost) and check the
+//! curve shapes the paper reports: steep fall, flattening toward the bus
+//! roofline, kernel starting highest and converging.
+
+mod common;
+
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::{fig45_sizes, loopback_sweep};
+use psoc_dma::drivers::DriverKind;
+use psoc_dma::report;
+
+fn main() {
+    let cfg = SimConfig::default();
+    let sizes = fig45_sizes();
+    let rows = loopback_sweep(&cfg, &sizes, &DriverKind::ALL).unwrap();
+    print!("{}", report::fig5_text(&rows));
+    println!();
+
+    // Shape checks (the paper's qualitative claims).
+    let per_byte = |kind: DriverKind, bytes: u64| {
+        rows.iter()
+            .find(|r| r.driver == kind && r.bytes == bytes)
+            .unwrap()
+            .rx_us_per_byte()
+    };
+    let small = *sizes.first().unwrap();
+    let large = *sizes.last().unwrap();
+    assert!(
+        per_byte(DriverKind::KernelIrq, small) > per_byte(DriverKind::UserPolling, small) * 2.0,
+        "kernel must start far above user-level at 8 B"
+    );
+    let k = per_byte(DriverKind::KernelIrq, large);
+    let p = per_byte(DriverKind::UserPolling, large);
+    assert!(k < p * 1.15, "kernel must converge by 6 MB: {k} vs {p}");
+    println!("shape checks OK: kernel {:.3}x polling at 8B, {:.3}x at 6MB",
+        per_byte(DriverKind::KernelIrq, small) / per_byte(DriverKind::UserPolling, small),
+        k / p);
+
+    common::bench("fig5/normalisation_pass", 1, 5, || {
+        let r = loopback_sweep(&cfg, &sizes, &DriverKind::ALL).unwrap();
+        let _ = report::fig5_text(&r);
+    });
+}

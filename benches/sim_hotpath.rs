@@ -1,0 +1,59 @@
+//! Bench PERF: microbenchmarks of the simulator's hot paths — the §Perf
+//! targets. The DES event loop (calendar push/pop + dispatch) dominates
+//! every experiment, so its per-event cost is the number to optimize.
+
+mod common;
+
+use psoc_dma::axi::descriptor::Descriptor;
+use psoc_dma::axi::dma::DmaMode;
+use psoc_dma::config::SimConfig;
+use psoc_dma::memory::buffer::PhysAddr;
+use psoc_dma::sim::engine::Engine;
+use psoc_dma::sim::event::{Channel, Event};
+use psoc_dma::sim::time::Dur;
+use psoc_dma::system::System;
+
+fn main() {
+    // Raw calendar throughput: schedule/pop cycles.
+    let s = common::bench("hotpath/calendar_push_pop_1M", 1, 10, || {
+        let mut eng = Engine::new();
+        for i in 0..1_000_000u64 {
+            eng.schedule(Dur(i % 977), Event::DevKick);
+            if i % 2 == 1 {
+                eng.pop();
+                eng.pop();
+            }
+        }
+        while eng.pop().is_some() {}
+        assert_eq!(eng.dispatched, 1_000_000);
+    });
+    println!("  -> {:.1} ns/event", s.mean * 1e6 / 1_000_000.0);
+
+    // Full-system event cost: one 6 MB loop-back round trip, polled.
+    let cfg = SimConfig::default();
+    let mut events = 0u64;
+    let s = common::bench("hotpath/system_6MB_roundtrip", 1, 10, || {
+        let mut sys = System::loopback(cfg.clone());
+        let n = 6 << 20;
+        sys.program_dma(
+            Channel::S2mm,
+            DmaMode::Simple,
+            vec![Descriptor::new(PhysAddr(0x100000), n).with_irq()],
+        );
+        sys.program_dma(
+            Channel::Mm2s,
+            DmaMode::Simple,
+            vec![Descriptor::new(PhysAddr(0), n).with_irq()],
+        );
+        sys.poll_wait(Channel::Mm2s).unwrap();
+        sys.poll_wait(Channel::S2mm).unwrap();
+        events = sys.eng.dispatched;
+    });
+    println!("  -> {events} events, {:.1} ns/event (full dispatch)", s.mean * 1e6 / events as f64);
+
+    // System construction cost (sweeps build thousands).
+    common::bench("hotpath/system_construction", 10, 20, || {
+        let sys = System::loopback(cfg.clone());
+        std::hint::black_box(&sys.cfg);
+    });
+}

@@ -1,0 +1,24 @@
+//! Bench TAB1: regenerate Table I (RoShamBo on NullHop, three drivers,
+//! Unique mode + single buffer) and time the end-to-end frame runs.
+
+mod common;
+
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::table1;
+use psoc_dma::report;
+
+fn main() {
+    let cfg = SimConfig::default();
+    let rows = table1(&cfg, 3).unwrap();
+    print!("{}", report::table1_text(&rows));
+    print!("{}", report::table1_paper_reference());
+    println!();
+
+    // Ordering assertion (the paper's headline for this workload).
+    let ms: Vec<f64> = rows.iter().map(|r| r.report.frame_ms()).collect();
+    assert!(ms[0] < ms[1] && ms[1] < ms[2], "frame ordering violated: {ms:?}");
+
+    common::bench("table1/3_drivers_x_3_frames", 1, 5, || {
+        table1(&cfg, 3).unwrap();
+    });
+}

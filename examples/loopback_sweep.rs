@@ -1,0 +1,43 @@
+//! Loop-back size sweep (the Fig. 4/5 experiment) with CSV export:
+//! where does the kernel driver's scatter-gather pipeline overtake
+//! user-level polling?
+//!
+//! ```
+//! cargo run --release --example loopback_sweep [-- out.csv]
+//! ```
+
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::{fig45_sizes, loopback_sweep};
+use psoc_dma::drivers::DriverKind;
+use psoc_dma::report;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SimConfig::default();
+    let rows = loopback_sweep(&cfg, &fig45_sizes(), &DriverKind::ALL)?;
+
+    print!("{}", report::fig4_text(&rows));
+    println!();
+    print!("{}", report::fig5_text(&rows));
+
+    // Find the crossover: first size where the kernel driver's RX beats
+    // user-level polling.
+    let crossover = fig45_sizes().into_iter().find(|&b| {
+        let rx = |kind| {
+            rows.iter()
+                .find(|r| r.bytes == b && r.driver == kind)
+                .unwrap()
+                .rx
+        };
+        rx(DriverKind::KernelIrq) <= rx(DriverKind::UserPolling)
+    });
+    match crossover {
+        Some(b) => println!("\nkernel-level overtakes user-level polling at {}", report::size_label(b)),
+        None => println!("\nkernel-level never overtakes polling in this sweep"),
+    }
+
+    if let Some(path) = std::env::args().nth(1) {
+        report::save(&path, &report::sweep_csv(&rows))?;
+        println!("CSV written to {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! End-to-end driver: the paper's full application, all layers composed.
+//!
+//!   DAVIS sensor (synthetic events) → frame collection + normalisation
+//!   → per-layer NullHop execution through the AXI-DMA simulator, with
+//!   the layer numerics running through the AOT JAX/Pallas artifacts on
+//!   the PJRT runtime → PS-side FC classification — under each of the
+//!   three driver schemes.
+//!
+//! Requires `make artifacts`. Prints per-frame classifications and the
+//! Table-I-style timing summary; this run is recorded in EXPERIMENTS.md.
+//!
+//! ```
+//! make artifacts && cargo run --release --example roshambo_pipeline
+//! ```
+
+use psoc_dma::cnn::roshambo::roshambo;
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::pipeline::{plan_with_runtime, run_frame};
+use psoc_dma::drivers::{Driver, DriverConfig, DriverKind};
+use psoc_dma::memory::buffer::CmaAllocator;
+use psoc_dma::runtime::Runtime;
+use psoc_dma::sensor::davis::{DavisConfig, DavisSim};
+use psoc_dma::sensor::frame::FrameCollector;
+use psoc_dma::sim::time::Dur;
+use psoc_dma::system::System;
+
+const CLASS_NAMES: [&str; 4] = ["rock", "paper", "scissors", "background"];
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SimConfig::default();
+    let net = roshambo();
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    println!(
+        "PJRT {} | artifacts: {}",
+        rt.platform,
+        rt.names().collect::<Vec<_>>().join(", ")
+    );
+
+    // Sensor front end.
+    let n_frames = 5usize;
+    let mut davis = DavisSim::new(DavisConfig::default());
+    let mut collector = FrameCollector::new(5000);
+
+    // One driver per run of the whole frame stream.
+    for kind in DriverKind::ALL {
+        let mut sys = System::nullhop(cfg.clone());
+        let mut cma = CmaAllocator::zynq_default();
+
+        println!("\n=== {} ===", kind.label());
+        let mut total = Dur::ZERO;
+        let mut tx_ns = 0u64;
+        let mut rx_ns = 0u64;
+        let (mut tx_bytes, mut rx_bytes) = (0u64, 0u64);
+        for fno in 0..n_frames {
+            // 1. Collect + normalise a frame (PS-side software task).
+            let frame = loop {
+                if let Some(f) = collector.push(&davis.next_event()) {
+                    break f;
+                }
+            };
+            let fdata: Vec<f32> = frame.data.iter().map(|&q| q as f32 / 256.0).collect();
+
+            // 2. Real numerics through the artifacts; measured feature
+            //    maps size the simulated transfers.
+            let plan = plan_with_runtime(&net, &cfg, &rt, &fdata)?;
+
+            // 3. Simulated per-layer execution under this driver.
+            let max = plan
+                .plans
+                .iter()
+                .map(|p| p.timing.tx_bytes.max(p.timing.rx_bytes))
+                .max()
+                .unwrap();
+            let mut drv = Driver::new(DriverConfig::table1(kind), &mut cma, &cfg, max)?;
+            let rep = run_frame(&mut sys, &mut drv, &net, &plan.plans)?;
+            drv.release(&mut cma);
+
+            total += rep.frame_time;
+            tx_ns += rep.tx_time.ns();
+            rx_ns += rep.rx_time.ns();
+            tx_bytes += rep.tx_bytes;
+            rx_bytes += rep.rx_bytes;
+            println!(
+                "frame {fno}: {:>10} ({} events, sparsity {:.2}) -> {:<10} in {:.2} ms \
+                 (tx {} B, rx {} B)",
+                format!("#{}", collector.frames_produced),
+                frame.events,
+                frame.sparsity,
+                CLASS_NAMES[plan.class],
+                rep.frame_time.as_ms(),
+                rep.tx_bytes,
+                rep.rx_bytes,
+            );
+        }
+        println!(
+            "summary: frame {:.2} ms | TX {:.4} us/B | RX {:.3} us/B",
+            total.as_ms() / n_frames as f64,
+            (tx_ns as f64 / 1e3) / tx_bytes as f64,
+            (rx_ns as f64 / 1e3) / rx_bytes as f64,
+        );
+    }
+
+    println!("\npaper Table I: polling 6.31 ms < scheduled 6.57 ms < kernel 7.39 ms");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+"""L2 profiling: XLA HLO cost analysis of every lowered artifact.
+
+The §Perf pass for layers 1–2 (DESIGN.md §7): compile each artifact the
+way the rust runtime will and ask XLA's cost model for FLOPs and bytes
+accessed; compare against the analytic MAC counts and the fused-vs-
+unfused conv+pool pipelines. interpret-mode wallclock is deliberately
+NOT reported — CPU-numpy timing says nothing about the TPU structure.
+
+Usage: ``cd python && python -m compile.analyze``
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+
+
+def cost_of(fn, in_shape):
+    """(flops, bytes_accessed, output_bytes) from XLA's cost analysis."""
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    compiled = jax.jit(fn).lower(spec).compile()
+    [analysis] = [compiled.cost_analysis()] if isinstance(compiled.cost_analysis(), dict) else [
+        compiled.cost_analysis()[0]
+    ]
+    return (
+        analysis.get("flops", 0.0),
+        analysis.get("bytes accessed", 0.0),
+        analysis.get("bytes accessed output {}", 0.0),
+    )
+
+
+def analytic_macs(side: int, cin: int, cout: int, k: int = 3) -> int:
+    return side * side * k * k * cin * cout
+
+
+def main() -> None:
+    params = model.make_params()
+    print(f"{'artifact':<10} {'GFLOP':>10} {'MB accessed':>12} {'flops/analytic':>15}")
+    print("-" * 52)
+    for name, side, cin, cout in model.LAYERS:
+        fn = model.layer_fn(params, name)
+        flops, bytes_acc, _ = cost_of(fn, (side, side, cin))
+        expect = 2 * analytic_macs(side, cin, cout)
+        print(
+            f"{name:<10} {flops / 1e9:>10.4f} {bytes_acc / 1e6:>12.3f} {flops / expect:>15.2f}"
+        )
+
+    flops, bytes_acc, _ = cost_of(model.net_fn(params), (64, 64, 1))
+    print(f"{'full_net':<10} {flops / 1e9:>10.4f} {bytes_acc / 1e6:>12.3f}")
+
+    # Fusion comparison on conv1: separate conv->pool vs fused kernel.
+    from .kernels import conv2d_bias_relu, maxpool2
+    from .kernels.fused import conv_pool_fused
+
+    w, b = params["conv1"]
+
+    def separate(x):
+        return maxpool2(conv2d_bias_relu(x, w, b))
+
+    def fused(x):
+        return conv_pool_fused(x, w, b)
+
+    fs, bs, _ = cost_of(separate, (64, 64, 1))
+    ff, bf, _ = cost_of(fused, (64, 64, 1))
+    print("\nconv1 fusion (separate vs fused conv+pool):")
+    print(f"  separate: {fs / 1e6:8.2f} MFLOP, {bs / 1e6:8.3f} MB accessed")
+    print(f"  fused:    {ff / 1e6:8.2f} MFLOP, {bf / 1e6:8.3f} MB accessed")
+    print(f"  HBM traffic ratio: {bs / bf:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

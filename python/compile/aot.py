@@ -1,0 +1,76 @@
+"""AOT compile path: lower every RoShamBo artifact to HLO **text** for
+the rust PJRT runtime, plus a manifest describing shapes.
+
+Run once via ``make artifacts``; Python is never on the request path.
+
+HLO text — not ``lowered.compile()`` output or a serialized
+``HloModuleProto`` — is the interchange format: jax ≥ 0.5 emits protos
+with 64-bit instruction ids that xla_extension 0.5.1 (behind the
+published ``xla`` 0.1.6 crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see aot_recipe.md and /opt/xla-example).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the baked weights must survive the text
+    # round trip (the default elides them as `constant({...})`, which the
+    # rust-side parser cannot reconstruct).
+    return comp.as_hlo_text(True)
+
+
+def lower_artifact(fn, in_shape):
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def build(out_dir: pathlib.Path, seed: int) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    params = model.make_params(seed)
+
+    fns = {name: model.layer_fn(params, name) for name, *_ in model.LAYERS}
+    fns["fc"] = model.fc_fn(params)
+    fns["full_net"] = model.net_fn(params)
+
+    manifest = {"seed": seed, "artifacts": {}}
+    for name, in_shape, out_shape in model.layer_shapes():
+        text = lower_artifact(fns[name], in_shape)
+        fname = f"{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "in_shape": list(in_shape),
+            "out_shape": list(out_shape),
+        }
+        print(f"  {name:10s} {str(in_shape):>16} -> {str(out_shape):>14}  {len(text)} chars")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+    build(pathlib.Path(args.out), args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for the RoShamBo CNN.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT client the
+rust runtime uses cannot execute Mosaic custom-calls, so the interpret
+path is both the correctness reference *and* the deployed artifact on
+this testbed. The BlockSpec structure is still written for the real TPU
+memory system (DESIGN.md §Hardware-Adaptation): HBM→VMEM row-block
+tiles stand in for NullHop's on-chip row buffers, and the inner loop is
+an im2col patch-matmul shaped for the MXU rather than a scalar MAC loop.
+"""
+
+from .conv2d import conv2d_bias_relu
+from .dense import dense
+from .pool import maxpool2
+
+__all__ = ["conv2d_bias_relu", "dense", "maxpool2"]

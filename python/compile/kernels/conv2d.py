@@ -1,0 +1,108 @@
+"""Pallas conv2d (3x3 'same', bias, ReLU) — the NullHop layer body.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): NullHop streams
+input rows through on-chip row buffers into a 128-MAC array. On TPU the
+same dataflow becomes a **row-block pipeline**: the grid walks blocks of
+output rows; each step slices its row block *plus the k-1 halo rows*
+out of the VMEM-resident padded input (the row-buffer analogue),
+im2col-expands it, and hits the MXU with one
+``[rows*W, k*k*Cin] @ [k*k*Cin, Cout]`` matmul — dense instead of
+zero-skipping, because the MXU has no fine-grained skip; the sparsity
+benefit is taken on the AXI stream (rust side), which is where this
+paper actually measures it.
+
+RoShamBo feature maps are small enough that the whole padded input of a
+layer sits in VMEM next to the working set (worst case, f32):
+  padded input  66·66·16·4   ≈ 279 KB   (conv2's view of conv1 output)
+  im2col        8·64·144·4   ≈ 295 KB
+  weights       144·128·4    ≈  74 KB
+  out block     8·64·128·4   ≈ 262 KB
+  total < 1 MB per step — comfortably inside a TensorCore's 16 MB VMEM
+with double-buffering headroom. (On real hardware one would move only
+the halo'd row block per step via overlapping input DMAs; the interpret
+path used here keeps the resident-input form, which lowers to identical
+HLO structure.)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, block_h: int, k: int):
+    """One grid step: one block of output rows, all channels.
+
+    x_ref:  [H + k - 1, W + k - 1, Cin]  (whole padded input)
+    w_ref:  [k*k*Cin, Cout]
+    b_ref:  [1, Cout]
+    o_ref:  [block_h, W, Cout]
+    """
+    _, w_out, cout = o_ref.shape
+    cin = x_ref.shape[-1]
+    i = pl.program_id(0)
+
+    # The row buffer: this block's rows plus the halo.
+    x = jax.lax.dynamic_slice(
+        x_ref[...],
+        (i * block_h, 0, 0),
+        (block_h + k - 1, w_out + k - 1, cin),
+    )
+
+    # im2col: k*k shifted views stacked as the patch axis. Static python
+    # loop => unrolled strided slices, fused by XLA; no dynamic gather.
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(x[dy : dy + block_h, dx : dx + w_out, :])
+    # [block_h, W, k*k, Cin] -> [block_h*W, k*k*Cin]
+    patches = jnp.stack(cols, axis=2).reshape(block_h * w_out, k * k * cin)
+
+    # The MXU matmul; accumulate in f32.
+    acc = jnp.dot(patches, w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.reshape(block_h, w_out, cout).astype(o_ref.dtype)
+
+
+def _pick_block_h(h: int) -> int:
+    """Largest row block ≤ 8 dividing H (RoShamBo sizes are powers of
+    two, so this lands on 8, 4, 2 or 1)."""
+    for bh in (8, 4, 2, 1):
+        if h % bh == 0:
+            return bh
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def conv2d_bias_relu(x, w, b, *, k: int = 3):
+    """`k`×`k` 'same' convolution + bias + ReLU via a Pallas row-block
+    kernel.
+
+    x: [H, W, Cin] f32;  w: [k, k, Cin, Cout];  b: [Cout]
+    returns [H, W, Cout] f32.
+    """
+    h, w_in, cin = x.shape
+    kk, kk2, cin_w, cout = w.shape
+    assert kk == k and kk2 == k and cin_w == cin, (x.shape, w.shape)
+    assert k % 2 == 1, "same-padding needs an odd kernel"
+    pad = k // 2
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    wmat = w.reshape(k * k * cin, cout)
+    brow = b.reshape(1, cout)
+
+    block_h = _pick_block_h(h)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, block_h=block_h, k=k),
+        grid=(h // block_h,),
+        in_specs=[
+            # Whole padded input resident per step (see module docstring).
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(wmat.shape, lambda i: (0, 0)),
+            pl.BlockSpec(brow.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_h, w_in, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w_in, cout), x.dtype),
+        interpret=True,
+    )(xp, wmat, brow)

@@ -1,0 +1,27 @@
+"""Pallas dense (fully connected) kernel — the PS-side classifier head.
+
+A single MXU matmul: [1, N] @ [N, M] + b. No grid; the operands are far
+below VMEM limits (RoShamBo head: 512×4).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = (acc + b_ref[...]).astype(o_ref.dtype)
+
+
+@jax.jit
+def dense(x, w, b):
+    """x: [N] f32; w: [N, M]; b: [M] -> logits [M] (no activation)."""
+    n, m = w.shape
+    assert x.shape == (n,), (x.shape, w.shape)
+    out = pl.pallas_call(
+        _dense_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, m), x.dtype),
+        interpret=True,
+    )(x.reshape(1, n), w, b.reshape(1, m))
+    return out.reshape(m)

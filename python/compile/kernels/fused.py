@@ -1,0 +1,97 @@
+"""Fused conv2d+ReLU+maxpool Pallas kernel — the L1 optimization.
+
+The unfused pipeline materialises the full pre-pool feature map in HBM
+between the conv kernel and the pool kernel: for conv1 that is
+64·64·16·4 = 256 KB written and read back per frame. NullHop itself
+never does that — pooling happens on the output stream as it leaves the
+MAC array. This kernel restores that fusion on the TPU side: each grid
+step computes 2·BH conv rows in VMEM and writes only the BH pooled rows
+to HBM, eliminating the intermediate round trip entirely (×2 HBM
+traffic on the conv output path; see python/compile/analyze.py for the
+measured byte counts).
+
+VMEM budget per step (worst case conv2: 34·34·16 input resident,
+2·8 rows computed): input 74 KB + im2col 2·8·32·144·4 ≈ 590 KB +
+weights 74 KB + pooled out 8·16·32·4 ≈ 16 KB — still < 1 MB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_kernel(x_ref, w_ref, b_ref, o_ref, *, block_h: int, k: int):
+    """One grid step: `block_h` *pooled* output rows.
+
+    x_ref:  [H + k - 1, W + k - 1, Cin]  (whole padded input)
+    w_ref:  [k*k*Cin, Cout]
+    b_ref:  [1, Cout]
+    o_ref:  [block_h, W/2, Cout]
+    """
+    _, wo, cout = o_ref.shape
+    w_conv = wo * 2
+    conv_h = block_h * 2
+    cin = x_ref.shape[-1]
+    i = pl.program_id(0)
+
+    # The conv rows feeding this pooled block, plus halo.
+    x = jax.lax.dynamic_slice(
+        x_ref[...],
+        (i * conv_h, 0, 0),
+        (conv_h + k - 1, w_conv + k - 1, cin),
+    )
+
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(x[dy : dy + conv_h, dx : dx + w_conv, :])
+    patches = jnp.stack(cols, axis=2).reshape(conv_h * w_conv, k * k * cin)
+
+    acc = jnp.dot(patches, w_ref[...], preferred_element_type=jnp.float32)
+    acc = jnp.maximum(acc + b_ref[...], 0.0)
+    conv = acc.reshape(conv_h, w_conv, cout)
+
+    # Pool on the stream, NullHop-style: never leaves VMEM unpooled.
+    pooled = conv.reshape(block_h, 2, wo, 2, cout)
+    o_ref[...] = jnp.max(jnp.max(pooled, axis=3), axis=1).astype(o_ref.dtype)
+
+
+def _pick_block_h(h_out: int) -> int:
+    for bh in (4, 2, 1):  # conv rows per step = 2*bh <= 8
+        if h_out % bh == 0:
+            return bh
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def conv_pool_fused(x, w, b, *, k: int = 3):
+    """conv(k×k,'same')+bias+ReLU+maxpool2 in one kernel.
+
+    x: [H, W, Cin] (H, W even);  w: [k, k, Cin, Cout];  b: [Cout]
+    returns [H/2, W/2, Cout].
+    """
+    h, w_in, cin = x.shape
+    assert h % 2 == 0 and w_in % 2 == 0, f"odd spatial dims: {x.shape}"
+    kk, kk2, cin_w, cout = w.shape
+    assert kk == k and kk2 == k and cin_w == cin
+    pad = k // 2
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    wmat = w.reshape(k * k * cin, cout)
+    brow = b.reshape(1, cout)
+
+    ho, wo = h // 2, w_in // 2
+    block_h = _pick_block_h(ho)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, block_h=block_h, k=k),
+        grid=(ho // block_h,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(wmat.shape, lambda i: (0, 0)),
+            pl.BlockSpec(brow.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_h, wo, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, cout), x.dtype),
+        interpret=True,
+    )(xp, wmat, brow)

@@ -1,0 +1,46 @@
+"""Pallas 2x2/stride-2 max-pool — NullHop's fused output pooling.
+
+NullHop applies max-pooling on the output stream as it leaves the MAC
+array; here it is a separate row-block kernel over the conv output (XLA
+fuses the pair after lowering). Grid walks blocks of *output* rows; the
+input block is the corresponding 2x stripe.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref):
+    """x_ref: [2*block_h, W, C]  ->  o_ref: [block_h, W/2, C]."""
+    bh, wo, c = o_ref.shape
+    x = x_ref[...]
+    # Expose the 2x2 windows as axes and reduce them.
+    x = x.reshape(bh, 2, wo, 2, c)
+    o_ref[...] = jnp.max(jnp.max(x, axis=3), axis=1)
+
+
+def _pick_block_h(h_out: int) -> int:
+    for bh in (8, 4, 2, 1):
+        if h_out % bh == 0:
+            return bh
+    return 1
+
+
+@jax.jit
+def maxpool2(x):
+    """2x2 stride-2 max pool. x: [H, W, C] with even H, W."""
+    h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"odd spatial dims: {x.shape}"
+    ho, wo = h // 2, w // 2
+    block_h = _pick_block_h(ho)
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=(ho // block_h,),
+        in_specs=[pl.BlockSpec((2 * block_h, w, c), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_h, wo, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, c), x.dtype),
+        interpret=True,
+    )(x)

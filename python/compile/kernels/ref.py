@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+The reference implementations use only `jax.numpy`/`jax.lax` primitives
+whose semantics are independent of the Pallas machinery under test.
+pytest (and the hypothesis sweeps) assert the kernels match these to
+float tolerance across shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_bias_relu_ref(x, w, b, *, k: int = 3):
+    """Reference 'same' conv + bias + ReLU. Shapes as the kernel."""
+    h, w_in, cin = x.shape
+    assert w.shape[:3] == (k, k, cin)
+    # lax conv wants NCHW/OIHW.
+    lhs = x.transpose(2, 0, 1)[None]              # [1, Cin, H, W]
+    rhs = w.transpose(3, 2, 0, 1)                 # [Cout, Cin, k, k]
+    out = lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1, 1), padding="SAME"
+    )[0].transpose(1, 2, 0)                       # [H, W, Cout]
+    return jnp.maximum(out + b[None, None, :], 0.0)
+
+
+def maxpool2_ref(x):
+    """Reference 2x2/stride-2 max pool via reshape-reduce."""
+    h, w, c = x.shape
+    return x.reshape(h // 2, 2, w // 2, 2, c).max(axis=(1, 3))
+
+
+def dense_ref(x, w, b):
+    return x @ w + b

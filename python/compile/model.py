@@ -1,0 +1,107 @@
+"""Layer-2: the RoShamBo CNN in JAX, built on the L1 Pallas kernels.
+
+Geometry mirrors `rust/src/cnn/roshambo.rs` exactly (the rust tests
+cross-check byte counts against the manifest): a 64×64 single-channel
+DVS histogram through five 3×3 'same' conv+ReLU+maxpool layers
+(16→32→64→128→128 channels), then a 512→4 fully connected head.
+
+Weights are generated deterministically from a seed (He-init scaled,
+biased slightly negative so post-ReLU maps show DVS-classifier-like
+sparsity) and **baked into the lowered HLO as constants**: each
+artifact takes only the activation tensor, which keeps the rust-side
+execution interface to one input/one output per layer.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d_bias_relu, dense, maxpool2
+from .kernels.fused import conv_pool_fused
+
+INPUT_SIDE = 64
+CLASSES = 4
+# (name, side_in, cin, cout)
+LAYERS = (
+    ("conv1", 64, 1, 16),
+    ("conv2", 32, 16, 32),
+    ("conv3", 16, 32, 64),
+    ("conv4", 8, 64, 128),
+    ("conv5", 4, 128, 128),
+)
+FC_IN = 2 * 2 * 128
+K = 3
+
+
+def make_params(seed: int = 42):
+    """Deterministic weights for every layer + the FC head."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, _side, cin, cout in LAYERS:
+        key, kw, kb = jax.random.split(key, 3)
+        fan_in = K * K * cin
+        w = jax.random.normal(kw, (K, K, cin, cout), jnp.float32)
+        w = w * jnp.sqrt(2.0 / fan_in)
+        # Slightly negative bias: drives realistic post-ReLU sparsity.
+        b = -0.15 + 0.05 * jax.random.normal(kb, (cout,), jnp.float32)
+        params[name] = (w, b)
+    key, kw, kb = jax.random.split(key, 3)
+    wf = jax.random.normal(kw, (FC_IN, CLASSES), jnp.float32) * jnp.sqrt(1.0 / FC_IN)
+    bf = jnp.zeros((CLASSES,), jnp.float32)
+    params["fc"] = (wf, bf)
+    return params
+
+
+def layer_apply(params, name, x, *, fused: bool = True):
+    """One NullHop job: conv+bias+ReLU+2×2 max-pool.
+
+    Deployed path: the fused Pallas kernel (pooling on the stream, as
+    NullHop itself does — 6.7× less HBM traffic on conv1, see
+    `compile.analyze`). `fused=False` keeps the two-kernel pipeline for
+    the equivalence tests.
+
+    x: [side, side, cin] -> [side/2, side/2, cout]
+    """
+    w, b = params[name]
+    if fused:
+        return conv_pool_fused(x, w, b, k=K)
+    return maxpool2(conv2d_bias_relu(x, w, b, k=K))
+
+
+def layer_fn(params, name):
+    """Closure over baked weights: activation -> activation."""
+
+    def f(x):
+        return layer_apply(params, name, x)
+
+    return f
+
+
+def fc_fn(params):
+    """The PS-side classifier head: flattened activations -> logits."""
+
+    def f(x):
+        wf, bf = params["fc"]
+        return dense(x.reshape(-1), wf, bf)
+
+    return f
+
+
+def net_fn(params):
+    """The fused full network: frame -> logits."""
+
+    def f(x):
+        for name, _side, _cin, _cout in LAYERS:
+            x = layer_apply(params, name, x)
+        return fc_fn(params)(x)
+
+    return f
+
+
+def layer_shapes():
+    """(name, in_shape, out_shape) for every artifact, incl. fc + net."""
+    shapes = []
+    for name, side, cin, cout in LAYERS:
+        shapes.append((name, (side, side, cin), (side // 2, side // 2, cout)))
+    shapes.append(("fc", (2, 2, 128), (CLASSES,)))
+    shapes.append(("full_net", (INPUT_SIDE, INPUT_SIDE, 1), (CLASSES,)))
+    return shapes

@@ -1,0 +1,158 @@
+"""L1 kernel correctness: Pallas vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value distributions; fixed cases pin the
+exact geometries the RoShamBo artifacts use.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d_bias_relu, dense, maxpool2
+from compile.kernels.ref import conv2d_bias_relu_ref, dense_ref, maxpool2_ref
+
+# The Pallas kernel accumulates the im2col matmul in a different order
+# than lax.conv; deep reductions (576-wide for conv4/5) differ by a few
+# ULP-scaled bits.
+RTOL, ATOL = 1e-3, 1e-4
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------- conv2d
+
+ROSHAMBO_GEOMETRIES = [
+    (64, 1, 16),
+    (32, 16, 32),
+    (16, 32, 64),
+    (8, 64, 128),
+    (4, 128, 128),
+]
+
+
+@pytest.mark.parametrize("side,cin,cout", ROSHAMBO_GEOMETRIES)
+def test_conv_matches_ref_on_roshambo_shapes(side, cin, cout):
+    rng = np.random.default_rng(side * 1000 + cin)
+    x, w, b = rand(rng, side, side, cin), rand(rng, 3, 3, cin, cout), rand(rng, cout)
+    got = conv2d_bias_relu(x, w, b)
+    want = conv2d_bias_relu_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    side=st.sampled_from([2, 4, 6, 8, 12, 16]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_ref_random_shapes(side, cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, side, side, cin), rand(rng, 3, 3, cin, cout), rand(rng, cout)
+    np.testing.assert_allclose(
+        conv2d_bias_relu(x, w, b), conv2d_bias_relu_ref(x, w, b), rtol=RTOL, atol=ATOL
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.sampled_from([1, 3, 5]), seed=st.integers(0, 2**31 - 1))
+def test_conv_kernel_sizes(k, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, 8, 8, 3), rand(rng, k, k, 3, 5), rand(rng, 5)
+    np.testing.assert_allclose(
+        conv2d_bias_relu(x, w, b, k=k),
+        conv2d_bias_relu_ref(x, w, b, k=k),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+def test_conv_relu_clamps_negative():
+    rng = np.random.default_rng(7)
+    x, w = rand(rng, 8, 8, 2), rand(rng, 3, 3, 2, 4)
+    b = jnp.full((4,), -100.0)  # drive everything negative
+    out = conv2d_bias_relu(x, w, b)
+    assert float(jnp.max(out)) == 0.0
+
+
+def test_conv_rejects_shape_mismatch():
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError):
+        conv2d_bias_relu(rand(rng, 8, 8, 2), rand(rng, 3, 3, 3, 4), rand(rng, 4))
+
+
+# ---------------------------------------------------------------- fused
+
+@pytest.mark.parametrize("side,cin,cout", ROSHAMBO_GEOMETRIES)
+def test_fused_conv_pool_equals_pipeline(side, cin, cout):
+    """The deployed fused kernel must match conv→pool exactly (same MXU
+    matmul, same reduction — only the HBM round trip is removed)."""
+    from compile.kernels.fused import conv_pool_fused
+
+    rng = np.random.default_rng(side + cin + cout)
+    x, w, b = rand(rng, side, side, cin), rand(rng, 3, 3, cin, cout), rand(rng, cout)
+    fused = conv_pool_fused(x, w, b)
+    pipeline = maxpool2(conv2d_bias_relu(x, w, b))
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(pipeline))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    side=st.sampled_from([2, 4, 8, 16]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_matches_ref_random(side, cin, cout, seed):
+    from compile.kernels.fused import conv_pool_fused
+
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, side, side, cin), rand(rng, 3, 3, cin, cout), rand(rng, cout)
+    want = maxpool2_ref(conv2d_bias_relu_ref(x, w, b))
+    np.testing.assert_allclose(conv_pool_fused(x, w, b), want, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------- maxpool
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([2, 4, 8, 16, 64]),
+    w=st.sampled_from([2, 4, 8, 32]),
+    c=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pool_matches_ref(h, w, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, h, w, c)
+    np.testing.assert_allclose(maxpool2(x), maxpool2_ref(x), rtol=RTOL, atol=ATOL)
+
+
+def test_pool_rejects_odd_dims():
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError):
+        maxpool2(rand(rng, 5, 4, 1))
+
+
+def test_pool_picks_window_max():
+    x = jnp.arange(16.0, dtype=jnp.float32).reshape(4, 4, 1)
+    out = maxpool2(x)
+    np.testing.assert_array_equal(np.asarray(out)[..., 0], [[5.0, 7.0], [13.0, 15.0]])
+
+
+# ---------------------------------------------------------------- dense
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 600), m=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_dense_matches_ref(n, m, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, n), rand(rng, n, m), rand(rng, m)
+    np.testing.assert_allclose(dense(x, w, b), dense_ref(x, w, b), rtol=1e-4, atol=1e-4)
+
+
+def test_dense_fc_head_shape():
+    rng = np.random.default_rng(1)
+    x, w, b = rand(rng, 512), rand(rng, 512, 4), rand(rng, 4)
+    assert dense(x, w, b).shape == (4,)

@@ -1,0 +1,58 @@
+//! PL-side devices: what sits on the AXI-Stream side of the DMA engine.
+//!
+//! The paper tests two: a **loop-back** core (scenario 1, Fig. 4/5) that
+//! streams MM2S data straight back into S2MM, and the **NullHop** CNN
+//! accelerator (scenario 2, Table I) whose output rate is bounded by its
+//! MAC array, not the bus.
+//!
+//! Both are modelled as chunked stream processors driven by
+//! [`Event::DevKick`](crate::sim::event::Event): each kick either finishes
+//! the chunk in flight, drains finished bytes into the S2MM FIFO, or
+//! starts a new chunk from the MM2S FIFO. FIFO occupancy provides the
+//! back-pressure in both directions.
+
+pub mod loopback;
+pub mod nullhop;
+
+use crate::axi::stream::ByteFifo;
+use crate::sim::engine::Engine;
+
+pub use loopback::Loopback;
+pub use nullhop::{LayerTiming, NullHopCore};
+
+/// The device plugged into the PL for a given experiment.
+pub enum PlDevice {
+    /// Nothing attached: MM2S data vanishes, S2MM never produces. Used by
+    /// unit tests and the TX-only calibration runs.
+    Sink,
+    Loopback(Loopback),
+    NullHop(NullHopCore),
+}
+
+impl PlDevice {
+    /// Advance the device (handles `Event::DevKick`).
+    pub fn advance(&mut self, eng: &mut Engine, mm2s: &mut ByteFifo, s2mm: &mut ByteFifo) {
+        match self {
+            PlDevice::Sink => {
+                // Consume instantly so TX-only runs measure pure DMA time.
+                let lvl = mm2s.level();
+                if lvl > 0 {
+                    mm2s.pop(lvl);
+                    eng.schedule_now(crate::sim::event::Event::DmaKick {
+                        ch: crate::sim::event::Channel::Mm2s,
+                    });
+                }
+            }
+            PlDevice::Loopback(d) => d.advance(eng, mm2s, s2mm),
+            PlDevice::NullHop(d) => d.advance(eng, mm2s, s2mm),
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        match self {
+            PlDevice::Sink => true,
+            PlDevice::Loopback(d) => d.is_idle(),
+            PlDevice::NullHop(d) => d.is_idle(),
+        }
+    }
+}

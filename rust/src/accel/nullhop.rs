@@ -1,0 +1,390 @@
+//! NullHop CNN accelerator timing model (scenario 2, Table I).
+//!
+//! NullHop (Aimar et al. 2017) executes one convolution layer at a time:
+//! the PS streams in the layer's kernels + compressed input feature maps
+//! (TX/MM2S); "after a couple of rows are received, the MACs start to
+//! operate and to produce an streamed output, which is sent back to the
+//! PS" (RX/S2MM). The 128-MAC array, not the AXI bus, bounds the output
+//! rate — which is why the paper's Table I RX cost (0.197 µs/B) is ~40×
+//! the TX cost (0.0054 µs/B).
+//!
+//! This module is the *timing* half of the substitution: the functional
+//! half (the layer's actual numerics) runs through the JAX/Pallas AOT →
+//! PJRT pipeline in [`crate::runtime`], and the byte counts + sparsity
+//! that parameterize [`LayerTiming`] come from [`crate::cnn`], measured on
+//! the real feature maps.
+//!
+//! Model per layer:
+//! * a configuration phase (register writes through the stream) of
+//!   `config_ns`;
+//! * input consumption at stream line rate into the internal row buffers;
+//! * output production that starts once `start_threshold` input bytes
+//!   ("a couple of rows" worth) have arrived, and then advances at the
+//!   MAC-array rate, additionally gated so production never runs ahead of
+//!   the fraction of input consumed.
+
+use crate::axi::stream::ByteFifo;
+use crate::config::SimConfig;
+use crate::sim::engine::Engine;
+use crate::sim::event::{Channel, Event};
+use crate::sim::time::{Dur, SimTime};
+
+/// Timing parameters of one layer execution, derived by
+/// [`crate::cnn::layer::LayerDesc::timing`] from layer geometry, measured
+/// sparsity and the MAC-array configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerTiming {
+    /// Bytes streamed to the accelerator (kernels + biases + compressed
+    /// input feature map).
+    pub tx_bytes: u64,
+    /// Bytes streamed back (compressed output feature map).
+    pub rx_bytes: u64,
+    /// Input bytes that must arrive before the MACs produce the first
+    /// output ("a couple of rows").
+    pub start_threshold: u64,
+    /// MAC-array compute time for the whole layer; production is spread
+    /// uniformly over it.
+    pub compute_ns: u64,
+}
+
+impl LayerTiming {
+    /// Output production cost in ns/byte (the MAC-side rate).
+    pub fn ns_per_out_byte(&self) -> f64 {
+        if self.rx_bytes == 0 {
+            0.0
+        } else {
+            self.compute_ns as f64 / self.rx_bytes as f64
+        }
+    }
+}
+
+/// State of the layer currently executing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// Waiting for [`NullHopCore::configure_layer`].
+    Unconfigured,
+    /// Register/config words are flowing in (fixed latency).
+    Configuring,
+    /// Streaming input / computing / streaming output.
+    Running,
+    /// All input consumed and all output pushed to S2MM.
+    LayerDone,
+}
+
+pub struct NullHopCore {
+    stream_bps: f64,
+    chunk: u64,
+    config_latency: Dur,
+    /// On-chip output FIFO: bounds `pending_out + out_processing`; when
+    /// full, the whole pipeline — input consumption included — stalls.
+    out_fifo: u64,
+
+    timing: LayerTiming,
+    phase: Phase,
+    config_done_at: Option<SimTime>,
+
+    /// Input-side progress.
+    pub consumed: u64,
+    in_busy_until: Option<SimTime>,
+    in_processing: u64,
+
+    /// Output-side progress.
+    pub produced: u64,
+    /// Bytes whose MAC time has elapsed but that wait for S2MM space.
+    pending_out: u64,
+    out_busy_until: Option<SimTime>,
+    out_processing: u64,
+
+    /// Cumulative stats across layers (frame accounting).
+    pub layers_done: u64,
+}
+
+impl NullHopCore {
+    pub fn new(cfg: &SimConfig) -> Self {
+        NullHopCore {
+            stream_bps: cfg.stream_bandwidth_bps,
+            chunk: cfg.max_burst_bytes,
+            config_latency: Dur(cfg.nullhop_config_ns),
+            out_fifo: cfg.nullhop_out_fifo_bytes,
+            timing: LayerTiming { tx_bytes: 0, rx_bytes: 0, start_threshold: 0, compute_ns: 0 },
+            phase: Phase::Unconfigured,
+            config_done_at: None,
+            consumed: 0,
+            in_busy_until: None,
+            in_processing: 0,
+            produced: 0,
+            pending_out: 0,
+            out_busy_until: None,
+            out_processing: 0,
+            layers_done: 0,
+        }
+    }
+
+    /// Program the accelerator for the next layer and start its config
+    /// phase. The driver calls this before kicking off the TX DMA.
+    pub fn configure_layer(&mut self, eng: &mut Engine, timing: LayerTiming) {
+        assert!(
+            self.phase == Phase::Unconfigured || self.phase == Phase::LayerDone,
+            "configuring NullHop mid-layer"
+        );
+        assert!(timing.tx_bytes > 0, "layer with no input");
+        self.timing = timing;
+        self.phase = Phase::Configuring;
+        self.config_done_at = Some(eng.now() + self.config_latency);
+        self.consumed = 0;
+        self.in_busy_until = None;
+        self.in_processing = 0;
+        self.produced = 0;
+        self.pending_out = 0;
+        self.out_busy_until = None;
+        self.out_processing = 0;
+        eng.schedule(self.config_latency, Event::DevKick);
+    }
+
+    /// The layer finished (all TX consumed, all RX produced).
+    pub fn layer_done(&self) -> bool {
+        self.phase == Phase::LayerDone
+    }
+
+    pub fn is_idle(&self) -> bool {
+        matches!(self.phase, Phase::Unconfigured | Phase::LayerDone)
+    }
+
+    /// How many output bytes the MAC array is entitled to have produced
+    /// given input progress: nothing before the start threshold, then
+    /// proportional to the consumed fraction (row-streamed operation).
+    fn out_entitlement(&self) -> u64 {
+        if self.consumed < self.timing.start_threshold {
+            return 0;
+        }
+        if self.consumed >= self.timing.tx_bytes {
+            return self.timing.rx_bytes;
+        }
+        let frac = self.consumed as f64 / self.timing.tx_bytes as f64;
+        // Ceil, not floor: drivers that cut the RX stream into
+        // proportional chunks (Blocks mode) distribute remainders to the
+        // earliest chunks, and a floor here would leave their final byte
+        // unproduced — a deadlock, not an off-by-one.
+        ((self.timing.rx_bytes as f64 * frac).ceil() as u64).min(self.timing.rx_bytes)
+    }
+
+    pub fn advance(&mut self, eng: &mut Engine, mm2s: &mut ByteFifo, s2mm: &mut ByteFifo) {
+        let now = eng.now();
+        match self.phase {
+            Phase::Unconfigured | Phase::LayerDone => return,
+            Phase::Configuring => {
+                if now < self.config_done_at.unwrap() {
+                    return; // config still in flight; kick already queued
+                }
+                self.phase = Phase::Running;
+            }
+            Phase::Running => {}
+        }
+
+        // ---- Input side: retire chunk, start the next one. -------------
+        if let Some(t) = self.in_busy_until {
+            if now >= t {
+                self.consumed += self.in_processing;
+                self.in_processing = 0;
+                self.in_busy_until = None;
+            }
+        }
+        // Pipeline stall: with the output FIFO backed up, the MAC
+        // pipeline cannot retire work, so the input side stops consuming
+        // — this is what lets an unmanaged RX stream block TX (§IV).
+        let out_backed_up = self.pending_out + self.out_processing >= self.out_fifo;
+        if self.in_busy_until.is_none() && !out_backed_up {
+            let want = self.timing.tx_bytes - self.consumed - self.in_processing;
+            let n = self.chunk.min(mm2s.level()).min(want);
+            if n > 0 {
+                mm2s.pop(n);
+                eng.schedule_now(Event::DmaKick { ch: Channel::Mm2s });
+                let dt = Dur::for_bytes(n, self.stream_bps);
+                self.in_processing = n;
+                self.in_busy_until = Some(now + dt);
+                eng.schedule(dt, Event::DevKick);
+            }
+        }
+
+        // ---- Output side: retire computed chunk, drain, start next. ----
+        if let Some(t) = self.out_busy_until {
+            if now >= t {
+                self.pending_out += self.out_processing;
+                self.out_processing = 0;
+                self.out_busy_until = None;
+            }
+        }
+        if self.pending_out > 0 {
+            let n = self.pending_out.min(s2mm.free());
+            if n > 0 {
+                s2mm.push(n);
+                self.pending_out -= n;
+                self.produced += n;
+                eng.schedule_now(Event::DmaKick { ch: Channel::S2mm });
+            }
+        }
+        if self.out_busy_until.is_none() {
+            let already = self.produced + self.pending_out + self.out_processing;
+            let entitled = self.out_entitlement().saturating_sub(already);
+            let n = self.chunk.min(entitled);
+            if n > 0 {
+                // MAC time for n output bytes; never faster than the
+                // stream interface itself.
+                let mac_ns = (n as f64 * self.timing.ns_per_out_byte()).ceil() as u64;
+                let dt = Dur(mac_ns).max(Dur::for_bytes(n, self.stream_bps));
+                self.out_processing = n;
+                self.out_busy_until = Some(now + dt);
+                eng.schedule(dt, Event::DevKick);
+            }
+        }
+
+        // ---- Completion. ------------------------------------------------
+        if self.consumed == self.timing.tx_bytes
+            && self.produced == self.timing.rx_bytes
+            && self.in_processing == 0
+            && self.out_processing == 0
+            && self.pending_out == 0
+        {
+            self.phase = Phase::LayerDone;
+            self.layers_done += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.stream_bandwidth_bps = 1e9; // 1 B/ns
+        c.max_burst_bytes = 1024;
+        c.nullhop_config_ns = 500;
+        c
+    }
+
+    fn run(nh: &mut NullHopCore, eng: &mut Engine, mm2s: &mut ByteFifo, s2mm: &mut ByteFifo) {
+        while let Some((_, ev)) = eng.pop() {
+            match ev {
+                Event::DevKick => nh.advance(eng, mm2s, s2mm),
+                Event::DmaKick { .. } => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    fn timing() -> LayerTiming {
+        LayerTiming {
+            tx_bytes: 4096,
+            rx_bytes: 2048,
+            start_threshold: 1024,
+            compute_ns: 100_000, // slow MACs: ~48.8 ns per output byte
+        }
+    }
+
+    #[test]
+    fn layer_runs_to_completion() {
+        let c = cfg();
+        let mut nh = NullHopCore::new(&c);
+        let mut eng = Engine::new();
+        let mut mm2s = ByteFifo::new(8192);
+        let mut s2mm = ByteFifo::new(8192);
+        mm2s.push(4096);
+        nh.configure_layer(&mut eng, timing());
+        run(&mut nh, &mut eng, &mut mm2s, &mut s2mm);
+        assert!(nh.layer_done());
+        assert_eq!(nh.consumed, 4096);
+        assert_eq!(nh.produced, 2048);
+        assert_eq!(s2mm.level(), 2048);
+        assert_eq!(nh.layers_done, 1);
+    }
+
+    #[test]
+    fn compute_bound_output_is_slower_than_input() {
+        let c = cfg();
+        let mut nh = NullHopCore::new(&c);
+        let mut eng = Engine::new();
+        let mut mm2s = ByteFifo::new(8192);
+        let mut s2mm = ByteFifo::new(8192);
+        mm2s.push(4096);
+        nh.configure_layer(&mut eng, timing());
+        run(&mut nh, &mut eng, &mut mm2s, &mut s2mm);
+        // Input: 500 config + 4096 B at 1 B/ns. Output: 100 µs of MAC
+        // time dominates. End time must be compute-bound.
+        assert!(eng.now().ns() >= 100_000, "end {} not compute-bound", eng.now().ns());
+        assert!(eng.now().ns() < 110_000, "end {} way past roofline", eng.now().ns());
+    }
+
+    #[test]
+    fn no_output_before_start_threshold() {
+        let c = cfg();
+        let mut nh = NullHopCore::new(&c);
+        let mut eng = Engine::new();
+        let mut mm2s = ByteFifo::new(8192);
+        let mut s2mm = ByteFifo::new(8192);
+        // Feed less than the threshold: device must not produce.
+        mm2s.push(512);
+        nh.configure_layer(&mut eng, timing());
+        run(&mut nh, &mut eng, &mut mm2s, &mut s2mm);
+        assert_eq!(nh.produced, 0);
+        assert!(!nh.layer_done());
+        // Now complete the input.
+        mm2s.push(4096 - 512);
+        eng.schedule_now(Event::DevKick);
+        run(&mut nh, &mut eng, &mut mm2s, &mut s2mm);
+        assert!(nh.layer_done());
+    }
+
+    #[test]
+    fn production_gated_by_input_progress() {
+        let c = cfg();
+        let mut nh = NullHopCore::new(&c);
+        let mut eng = Engine::new();
+        let mut mm2s = ByteFifo::new(8192);
+        let mut s2mm = ByteFifo::new(8192);
+        let mut t = timing();
+        t.compute_ns = 0; // infinitely fast MACs: gate is the input stream
+        mm2s.push(2048); // half the input
+        nh.configure_layer(&mut eng, t);
+        run(&mut nh, &mut eng, &mut mm2s, &mut s2mm);
+        // Entitlement at 50% input = 50% output.
+        assert_eq!(nh.produced, 1024);
+        assert!(!nh.layer_done());
+    }
+
+    #[test]
+    fn stalls_on_full_s2mm_fifo() {
+        let c = cfg();
+        let mut nh = NullHopCore::new(&c);
+        let mut eng = Engine::new();
+        let mut mm2s = ByteFifo::new(8192);
+        let mut s2mm = ByteFifo::new(512); // tiny RX FIFO
+        let mut t = timing();
+        t.compute_ns = 0;
+        mm2s.push(4096);
+        nh.configure_layer(&mut eng, t);
+        run(&mut nh, &mut eng, &mut mm2s, &mut s2mm);
+        assert!(s2mm.is_full());
+        assert!(!nh.layer_done());
+        // Software drains RX; device finishes.
+        while nh.produced < 2048 {
+            let lvl = s2mm.level();
+            if lvl > 0 {
+                s2mm.pop(lvl);
+            }
+            eng.schedule_now(Event::DevKick);
+            run(&mut nh, &mut eng, &mut mm2s, &mut s2mm);
+        }
+        assert!(nh.layer_done());
+    }
+
+    #[test]
+    #[should_panic(expected = "mid-layer")]
+    fn reconfigure_mid_layer_is_a_bug() {
+        let c = cfg();
+        let mut nh = NullHopCore::new(&c);
+        let mut eng = Engine::new();
+        nh.configure_layer(&mut eng, timing());
+        nh.configure_layer(&mut eng, timing());
+    }
+}

@@ -1,0 +1,98 @@
+//! Scatter-gather descriptors.
+//!
+//! Only the fields that affect timing are modelled: the transfer length,
+//! and whether the descriptor asserts "interrupt on complete". Buffer
+//! addresses come from the CMA allocator but the data itself lives outside
+//! the DES (numerics flow through the PJRT runtime, not the simulator).
+
+use crate::memory::buffer::PhysAddr;
+
+/// One DMA descriptor (a BD in Xilinx AXI-DMA terms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Descriptor {
+    /// Physical source/destination of this segment.
+    pub addr: PhysAddr,
+    /// Payload length in bytes. Xilinx BDs carry a 23-bit length field:
+    /// 8 MB - 1 max — the "maximum supported transfer lengths are 8 Mbytes"
+    /// limit the paper's conclusions cite.
+    pub len: u64,
+    /// Raise the completion interrupt when this BD finishes.
+    pub irq_on_complete: bool,
+}
+
+/// Hardware limit of the 23-bit BD length field.
+pub const MAX_DESC_LEN: u64 = (1 << 23) - 1;
+
+impl Descriptor {
+    pub fn new(addr: PhysAddr, len: u64) -> Self {
+        assert!(len > 0, "zero-length descriptor");
+        assert!(len <= MAX_DESC_LEN, "descriptor length {len} exceeds the 23-bit AXI-DMA limit");
+        Descriptor { addr, len, irq_on_complete: false }
+    }
+
+    pub fn with_irq(mut self) -> Self {
+        self.irq_on_complete = true;
+        self
+    }
+}
+
+/// Split a buffer into a descriptor chain of at-most-`chunk`-byte BDs,
+/// asserting IRQ on the final one. This is what both the kernel driver's
+/// SG path and the user-level *Blocks* mode use.
+pub fn chain(base: PhysAddr, total: u64, chunk: u64) -> Vec<Descriptor> {
+    assert!(total > 0 && chunk > 0);
+    assert!(chunk <= MAX_DESC_LEN);
+    let mut out = Vec::with_capacity(total.div_ceil(chunk) as usize);
+    let mut off = 0;
+    while off < total {
+        let len = chunk.min(total - off);
+        out.push(Descriptor::new(PhysAddr(base.0 + off), len));
+        off += len;
+    }
+    out.last_mut().unwrap().irq_on_complete = true;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_covers_buffer_exactly() {
+        let descs = chain(PhysAddr(0x1000), 10_000, 4096);
+        assert_eq!(descs.len(), 3);
+        assert_eq!(descs[0].len, 4096);
+        assert_eq!(descs[1].len, 4096);
+        assert_eq!(descs[2].len, 10_000 - 8192);
+        assert_eq!(descs.iter().map(|d| d.len).sum::<u64>(), 10_000);
+        assert_eq!(descs[1].addr, PhysAddr(0x1000 + 4096));
+    }
+
+    #[test]
+    fn only_final_descriptor_interrupts() {
+        let descs = chain(PhysAddr(0), 10_000, 4096);
+        assert!(!descs[0].irq_on_complete);
+        assert!(!descs[1].irq_on_complete);
+        assert!(descs[2].irq_on_complete);
+    }
+
+    #[test]
+    fn single_descriptor_chain() {
+        let descs = chain(PhysAddr(0), 100, 4096);
+        assert_eq!(descs.len(), 1);
+        assert!(descs[0].irq_on_complete);
+    }
+
+    #[test]
+    #[should_panic(expected = "23-bit")]
+    fn oversized_descriptor_rejected() {
+        Descriptor::new(PhysAddr(0), 8 << 20);
+    }
+
+    #[test]
+    fn exact_multiple_has_no_runt() {
+        let descs = chain(PhysAddr(0), 8192, 4096);
+        assert_eq!(descs.len(), 2);
+        assert_eq!(descs[1].len, 4096);
+    }
+}

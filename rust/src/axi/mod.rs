@@ -1,0 +1,12 @@
+//! AXI interconnect models: stream FIFOs, scatter-gather descriptors, and
+//! the AXI-DMA engine (MM2S + S2MM channel state machines).
+
+pub mod descriptor;
+pub mod dma;
+pub mod regs;
+pub mod stream;
+
+pub use descriptor::{chain, Descriptor, MAX_DESC_LEN};
+pub use dma::{DmaChannelEngine, DmaMode};
+pub use regs::DmaRegFile;
+pub use stream::ByteFifo;

@@ -1,0 +1,213 @@
+//! NullHop's sparse feature-map encoding.
+//!
+//! NullHop streams feature maps compressed as a **sparsity map** (one bit
+//! per element) plus the list of **non-zero 16-bit values** — ReLU
+//! feature maps are mostly zeros, so this cuts the bytes crossing the
+//! AXI bus, which is where the sparsity benefit of the architecture
+//! lives in *this* paper (transfer time, not MAC time alone).
+//!
+//! The rust side both *computes sizes* (the timing simulator only needs
+//! byte counts) and *actually encodes/decodes* the tensors produced by
+//! the PJRT runtime, so the coordinator's per-layer byte counts come from
+//! the real data the accelerator would see. Values are Q8.8 fixed point
+//! (the NullHop datapath is 16-bit).
+
+/// Encoded size in bytes of a map with `total` elements of which
+/// `nonzero` are non-zero: 4-byte element count + bitmask + 2 B/value.
+pub fn encoded_len(total: usize, nonzero: usize) -> u64 {
+    assert!(nonzero <= total);
+    4 + total.div_ceil(8) as u64 + 2 * nonzero as u64
+}
+
+/// Quantize an `f32` tensor to Q8.8 (the accelerator's input format),
+/// saturating at the representable range.
+pub fn quantize_q88(vals: &[f32]) -> Vec<i16> {
+    vals.iter()
+        .map(|&v| {
+            let q = (v * 256.0).round();
+            q.clamp(i16::MIN as f32, i16::MAX as f32) as i16
+        })
+        .collect()
+}
+
+/// Dequantize Q8.8 back to `f32` (for checking the runtime round trip).
+pub fn dequantize_q88(vals: &[i16]) -> Vec<f32> {
+    vals.iter().map(|&v| v as f32 / 256.0).collect()
+}
+
+/// Encode a Q8.8 tensor: `[len: u32 LE][bitmask][nonzero values i16 LE]`.
+pub fn encode_i16(vals: &[i16]) -> Vec<u8> {
+    let nnz = vals.iter().filter(|&&v| v != 0).count();
+    let mut out = Vec::with_capacity(encoded_len(vals.len(), nnz) as usize);
+    out.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+    // Sparsity map.
+    let mut mask = vec![0u8; vals.len().div_ceil(8)];
+    for (i, &v) in vals.iter().enumerate() {
+        if v != 0 {
+            mask[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out.extend_from_slice(&mask);
+    // Non-zero payload.
+    for &v in vals {
+        if v != 0 {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    debug_assert_eq!(out.len() as u64, encoded_len(vals.len(), nnz));
+    out
+}
+
+/// Decoding failure (the simulator never produces these; they guard the
+/// runtime path against artifact/driver mismatches).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum DecodeError {
+    #[error("encoded stream truncated: need {need} bytes, have {have}")]
+    Truncated { need: usize, have: usize },
+    #[error("trailing bytes after payload: {0}")]
+    Trailing(usize),
+}
+
+/// Decode an [`encode_i16`] stream back to the dense tensor.
+pub fn decode_i16(bytes: &[u8]) -> Result<Vec<i16>, DecodeError> {
+    if bytes.len() < 4 {
+        return Err(DecodeError::Truncated { need: 4, have: bytes.len() });
+    }
+    let total = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+    let mask_len = total.div_ceil(8);
+    if bytes.len() < 4 + mask_len {
+        return Err(DecodeError::Truncated { need: 4 + mask_len, have: bytes.len() });
+    }
+    let mask = &bytes[4..4 + mask_len];
+    let nnz: usize = (0..total).filter(|i| mask[i / 8] & (1 << (i % 8)) != 0).count();
+    let need = 4 + mask_len + 2 * nnz;
+    if bytes.len() < need {
+        return Err(DecodeError::Truncated { need, have: bytes.len() });
+    }
+    if bytes.len() > need {
+        return Err(DecodeError::Trailing(bytes.len() - need));
+    }
+    let mut vals = Vec::with_capacity(total);
+    let mut payload = &bytes[4 + mask_len..];
+    for i in 0..total {
+        if mask[i / 8] & (1 << (i % 8)) != 0 {
+            vals.push(i16::from_le_bytes(payload[..2].try_into().unwrap()));
+            payload = &payload[2..];
+        } else {
+            vals.push(0);
+        }
+    }
+    Ok(vals)
+}
+
+/// Sparsity (zero fraction) of a tensor — what drives both the encoded
+/// size and NullHop's MAC skipping.
+pub fn sparsity(vals: &[i16]) -> f64 {
+    if vals.is_empty() {
+        return 0.0;
+    }
+    vals.iter().filter(|&&v| v == 0).count() as f64 / vals.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Pcg32;
+
+    #[test]
+    fn roundtrip_simple() {
+        let v: Vec<i16> = vec![0, 5, 0, 0, -7, 256, 0, 1, 0];
+        let enc = encode_i16(&v);
+        assert_eq!(decode_i16(&enc).unwrap(), v);
+    }
+
+    #[test]
+    fn all_zero_compresses_to_mask_only() {
+        let v = vec![0i16; 1000];
+        let enc = encode_i16(&v);
+        assert_eq!(enc.len() as u64, encoded_len(1000, 0));
+        assert_eq!(enc.len(), 4 + 125);
+        assert_eq!(decode_i16(&enc).unwrap(), v);
+    }
+
+    #[test]
+    fn dense_map_costs_more_than_raw() {
+        // Fully dense: mask is pure overhead (the NullHop paper's known
+        // worst case).
+        let v = vec![1i16; 800];
+        let enc = encode_i16(&v);
+        assert!(enc.len() > 2 * 800);
+        assert_eq!(decode_i16(&enc).unwrap(), v);
+    }
+
+    #[test]
+    fn property_roundtrip_random_sparsities() {
+        // Hand-rolled property test (no proptest offline): 200 random
+        // tensors across sparsity levels and lengths.
+        let mut rng = Pcg32::new(0xE2C0DE);
+        for case in 0..200 {
+            let len = rng.range_u64(0, 4096) as usize;
+            let p_zero = rng.next_f64();
+            let v: Vec<i16> = (0..len)
+                .map(|_| {
+                    if rng.chance(p_zero) {
+                        0
+                    } else {
+                        // Never 0 here, so sparsity is exactly the zero count.
+                        let x = rng.range_u64(1, u16::MAX as u64) as u16 as i16;
+                        if x == 0 {
+                            1
+                        } else {
+                            x
+                        }
+                    }
+                })
+                .collect();
+            let enc = encode_i16(&v);
+            let nnz = v.iter().filter(|&&x| x != 0).count();
+            assert_eq!(enc.len() as u64, encoded_len(len, nnz), "case {case}");
+            assert_eq!(decode_i16(&enc).unwrap(), v, "case {case}");
+        }
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let enc = encode_i16(&[1, 2, 3]);
+        for cut in 0..enc.len() {
+            assert!(decode_i16(&enc[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut enc = encode_i16(&[1, 0, 3]);
+        enc.push(0xAB);
+        assert_eq!(decode_i16(&enc), Err(DecodeError::Trailing(1)));
+    }
+
+    #[test]
+    fn quantize_dequantize_q88() {
+        let v = vec![0.0f32, 1.0, -1.5, 0.25, 100.0, -200.0];
+        let q = quantize_q88(&v);
+        assert_eq!(q[0], 0);
+        assert_eq!(q[1], 256);
+        assert_eq!(q[2], -384);
+        assert_eq!(q[3], 64);
+        let d = dequantize_q88(&q);
+        for (a, b) in v.iter().zip(&d) {
+            if a.abs() < 120.0 {
+                assert!((a - b).abs() < 1.0 / 256.0 + 1e-6, "{a} vs {b}");
+            }
+        }
+        // Saturation.
+        assert_eq!(q[4], i16::MAX.min((100.0f32 * 256.0) as i16));
+        assert_eq!(quantize_q88(&[1000.0])[0], i16::MAX);
+        assert_eq!(quantize_q88(&[-1000.0])[0], i16::MIN);
+    }
+
+    #[test]
+    fn sparsity_measure() {
+        assert_eq!(sparsity(&[0, 0, 1, 0]), 0.75);
+        assert_eq!(sparsity(&[]), 0.0);
+    }
+}

@@ -1,0 +1,274 @@
+//! Convolution-layer geometry and its cost on the bus and the MAC array.
+//!
+//! A [`LayerDesc`] fixes everything the simulator needs to time one
+//! NullHop layer execution: how many bytes cross MM2S (kernels + biases +
+//! encoded input map), how many come back on S2MM (encoded output map),
+//! and how long the 128-MAC array computes. Sparsity enters twice — it
+//! shrinks the encoded maps *and* lets NullHop skip zero-operand MACs —
+//! and is either estimated (defaults) or measured on the real feature
+//! maps produced by the PJRT runtime.
+
+use crate::accel::nullhop::LayerTiming;
+use crate::cnn::encoding::encoded_len;
+use crate::config::SimConfig;
+
+/// One convolutional layer as NullHop executes it (conv + ReLU, with an
+/// optional fused 2×2 max-pool on the output stream).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerDesc {
+    pub name: &'static str,
+    /// Input feature-map geometry.
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    /// Output channels.
+    pub out_c: usize,
+    /// Square kernel side (3 for all RoShamBo layers).
+    pub k: usize,
+    /// 'Same' zero padding (NullHop supports it in hardware).
+    pub same_pad: bool,
+    /// Fused 2×2/stride-2 max-pool on the output stream.
+    pub pool: bool,
+    /// Expected zero fraction of the *input* map (ReLU sparsity of the
+    /// previous layer; 0 for the sensor frame). Overridden by measured
+    /// values when the runtime is attached.
+    pub sparsity_in: f64,
+    /// Expected zero fraction of the output map (post-ReLU).
+    pub sparsity_out: f64,
+}
+
+impl LayerDesc {
+    /// Convolution output spatial size (before pooling).
+    pub fn conv_h(&self) -> usize {
+        if self.same_pad {
+            self.in_h
+        } else {
+            self.in_h - self.k + 1
+        }
+    }
+
+    pub fn conv_w(&self) -> usize {
+        if self.same_pad {
+            self.in_w
+        } else {
+            self.in_w - self.k + 1
+        }
+    }
+
+    /// Output spatial size as streamed back to the PS.
+    pub fn out_h(&self) -> usize {
+        if self.pool {
+            self.conv_h() / 2
+        } else {
+            self.conv_h()
+        }
+    }
+
+    pub fn out_w(&self) -> usize {
+        if self.pool {
+            self.conv_w() / 2
+        } else {
+            self.conv_w()
+        }
+    }
+
+    pub fn in_elems(&self) -> usize {
+        self.in_h * self.in_w * self.in_c
+    }
+
+    pub fn out_elems(&self) -> usize {
+        self.out_h() * self.out_w() * self.out_c
+    }
+
+    /// Multiply-accumulates for the dense convolution.
+    pub fn macs(&self) -> u64 {
+        (self.conv_h() * self.conv_w() * self.out_c * self.k * self.k * self.in_c) as u64
+    }
+
+    /// Kernel + bias bytes (16-bit weights, one bias per output channel).
+    pub fn weight_bytes(&self) -> u64 {
+        (self.k * self.k * self.in_c * self.out_c * 2 + self.out_c * 2) as u64
+    }
+
+    /// Encoded input-map bytes at a given zero fraction.
+    pub fn input_bytes_at(&self, sparsity: f64) -> u64 {
+        let total = self.in_elems();
+        let nnz = ((1.0 - sparsity) * total as f64).round() as usize;
+        encoded_len(total, nnz.min(total))
+    }
+
+    /// Encoded output-map bytes at a given zero fraction.
+    pub fn output_bytes_at(&self, sparsity: f64) -> u64 {
+        let total = self.out_elems();
+        let nnz = ((1.0 - sparsity) * total as f64).round() as usize;
+        encoded_len(total, nnz.min(total))
+    }
+
+    /// TX payload with the descriptor's default sparsity estimates.
+    pub fn tx_bytes(&self) -> u64 {
+        self.weight_bytes() + self.input_bytes_at(self.sparsity_in)
+    }
+
+    /// RX payload with the default sparsity estimates.
+    pub fn rx_bytes(&self) -> u64 {
+        self.output_bytes_at(self.sparsity_out)
+    }
+
+    /// MAC-array time: dense MACs derated by the zero-skip the sparse
+    /// decoder actually achieves on this input.
+    pub fn compute_ns(&self, cfg: &SimConfig, sparsity_in: f64) -> u64 {
+        let skip = sparsity_in * cfg.nullhop_skip_efficiency;
+        let eff_macs = self.macs() as f64 * (1.0 - skip);
+        let cycles = eff_macs / cfg.nullhop_macs as f64;
+        (cycles / cfg.nullhop_clk_hz * 1e9).ceil() as u64
+    }
+
+    /// Full [`LayerTiming`] for the accelerator model, with explicit
+    /// (e.g. measured) sparsities.
+    pub fn timing_at(&self, cfg: &SimConfig, sp_in: f64, sp_out: f64) -> LayerTiming {
+        let tx = self.weight_bytes() + self.input_bytes_at(sp_in);
+        let rx = self.output_bytes_at(sp_out);
+        // "After a couple of rows are received, the MACs start to
+        // operate": kernels + k input rows must land first.
+        let row_bytes = encoded_len(self.in_w * self.in_c, self.in_w * self.in_c) ;
+        let start = (self.weight_bytes() + self.k as u64 * row_bytes).min(tx);
+        LayerTiming {
+            tx_bytes: tx,
+            rx_bytes: rx,
+            start_threshold: start,
+            compute_ns: self.compute_ns(cfg, sp_in),
+        }
+    }
+
+    /// Timing with the descriptor's built-in sparsity estimates.
+    pub fn timing(&self, cfg: &SimConfig) -> LayerTiming {
+        self.timing_at(cfg, self.sparsity_in, self.sparsity_out)
+    }
+}
+
+/// A whole network as a NullHop job list plus a final PS-side classifier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetDesc {
+    pub name: &'static str,
+    pub layers: Vec<LayerDesc>,
+    /// Fully connected head executed on the PS (NullHop does conv only).
+    pub fc_in: usize,
+    pub fc_out: usize,
+}
+
+impl NetDesc {
+    /// Sanity: each layer's input geometry chains from the previous.
+    pub fn check_chain(&self) -> Result<(), String> {
+        for w in self.layers.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            if a.out_h() != b.in_h || a.out_w() != b.in_w || a.out_c != b.in_c {
+                return Err(format!(
+                    "layer {}({}x{}x{}) does not feed {}({}x{}x{})",
+                    a.name,
+                    a.out_h(),
+                    a.out_w(),
+                    a.out_c,
+                    b.name,
+                    b.in_h,
+                    b.in_w,
+                    b.in_c
+                ));
+            }
+        }
+        let last = self.layers.last().ok_or("empty network")?;
+        if last.out_elems() != self.fc_in {
+            return Err(format!(
+                "FC head expects {} inputs, last layer produces {}",
+                self.fc_in,
+                last.out_elems()
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn total_tx_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.tx_bytes()).sum()
+    }
+
+    pub fn total_rx_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.rx_bytes()).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> LayerDesc {
+        LayerDesc {
+            name: "conv1",
+            in_h: 64,
+            in_w: 64,
+            in_c: 1,
+            out_c: 16,
+            k: 3,
+            same_pad: true,
+            pool: true,
+            sparsity_in: 0.0,
+            sparsity_out: 0.5,
+        }
+    }
+
+    #[test]
+    fn geometry_same_pad_pool() {
+        let l = layer();
+        assert_eq!((l.conv_h(), l.conv_w()), (64, 64));
+        assert_eq!((l.out_h(), l.out_w()), (32, 32));
+        assert_eq!(l.out_elems(), 32 * 32 * 16);
+    }
+
+    #[test]
+    fn geometry_valid_conv() {
+        let mut l = layer();
+        l.same_pad = false;
+        l.pool = false;
+        assert_eq!((l.out_h(), l.out_w()), (62, 62));
+    }
+
+    #[test]
+    fn macs_formula() {
+        let l = layer();
+        assert_eq!(l.macs(), 64 * 64 * 16 * 9);
+    }
+
+    #[test]
+    fn sparsity_shrinks_bytes() {
+        let l = layer();
+        assert!(l.output_bytes_at(0.9) < l.output_bytes_at(0.1));
+        // Dense encoding still costs mask overhead over raw 16-bit.
+        let dense = l.output_bytes_at(0.0);
+        assert!(dense as usize > l.out_elems() * 2);
+    }
+
+    #[test]
+    fn zero_skip_cuts_compute() {
+        let cfg = SimConfig::default();
+        let l = layer();
+        let dense = l.compute_ns(&cfg, 0.0);
+        let sparse = l.compute_ns(&cfg, 0.8);
+        assert!(sparse < dense);
+        let expect = 1.0 - 0.8 * cfg.nullhop_skip_efficiency;
+        let ratio = sparse as f64 / dense as f64;
+        assert!((ratio - expect).abs() < 0.01, "ratio {ratio} vs {expect}");
+    }
+
+    #[test]
+    fn timing_fields_consistent() {
+        let cfg = SimConfig::default();
+        let l = layer();
+        let t = l.timing(&cfg);
+        assert_eq!(t.tx_bytes, l.tx_bytes());
+        assert_eq!(t.rx_bytes, l.rx_bytes());
+        assert!(t.start_threshold <= t.tx_bytes);
+        assert!(t.start_threshold >= l.weight_bytes());
+    }
+}

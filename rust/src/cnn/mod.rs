@@ -1,0 +1,12 @@
+//! CNN workload descriptions: layer geometry, byte counts on the AXI bus,
+//! NullHop's sparse feature-map encoding, and the two networks the paper
+//! references (RoShamBo, which it measures, and VGG19, which it cites as
+//! the case that blocks the user-level polling driver).
+
+pub mod encoding;
+pub mod layer;
+pub mod roshambo;
+pub mod vgg19;
+
+pub use encoding::{decode_i16, encode_i16, encoded_len, quantize_q88};
+pub use layer::{LayerDesc, NetDesc};

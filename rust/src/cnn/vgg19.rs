@@ -1,0 +1,106 @@
+//! VGG19 conv-layer descriptors — the paper's "big CNN" counter-example.
+//!
+//! §IV: "In [6] bigger CNN were tested, such as VGG19, where this
+//! [user-level polling] mode is not possible to be used and causes
+//! blocking the system", and §V cites the 8 MB AXI4-Stream user-level
+//! limit. VGG19's early feature maps (224×224×64 at 16 bit ≈ 6.4 MB
+//! dense, >8 MB with dense-encoding overhead) are exactly the payloads
+//! that trip both failure modes, which the AB-VGG ablation reproduces.
+//!
+//! Timing-only: we never run VGG19 numerics, so only the 16 conv layers'
+//! geometry matters.
+
+use crate::cnn::layer::{LayerDesc, NetDesc};
+
+/// The 16 convolutional layers of VGG19 (pooling after blocks 2, 4, 8,
+/// 12, 16 as in the original architecture).
+pub fn vgg19() -> NetDesc {
+    // (name, side, in_c, out_c, pool)
+    let spec: [(&'static str, usize, usize, usize, bool); 16] = [
+        ("conv1_1", 224, 3, 64, false),
+        ("conv1_2", 224, 64, 64, true),
+        ("conv2_1", 112, 64, 128, false),
+        ("conv2_2", 112, 128, 128, true),
+        ("conv3_1", 56, 128, 256, false),
+        ("conv3_2", 56, 256, 256, false),
+        ("conv3_3", 56, 256, 256, false),
+        ("conv3_4", 56, 256, 256, true),
+        ("conv4_1", 28, 256, 512, false),
+        ("conv4_2", 28, 512, 512, false),
+        ("conv4_3", 28, 512, 512, false),
+        ("conv4_4", 28, 512, 512, true),
+        ("conv5_1", 14, 512, 512, false),
+        ("conv5_2", 14, 512, 512, false),
+        ("conv5_3", 14, 512, 512, false),
+        ("conv5_4", 14, 512, 512, true),
+    ];
+    NetDesc {
+        name: "VGG19",
+        layers: spec
+            .iter()
+            .map(|&(name, side, in_c, out_c, pool)| LayerDesc {
+                name,
+                in_h: side,
+                in_w: side,
+                in_c,
+                out_c,
+                k: 3,
+                same_pad: true,
+                pool,
+                // ImageNet-trained VGG ReLU maps: ~50% zeros mid-network.
+                sparsity_in: if in_c == 3 { 0.0 } else { 0.5 },
+                sparsity_out: 0.5,
+            })
+            .collect(),
+        fc_in: 7 * 7 * 512,
+        fc_out: 1000,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::descriptor::MAX_DESC_LEN;
+
+    #[test]
+    fn chain_is_consistent() {
+        vgg19().check_chain().unwrap();
+    }
+
+    #[test]
+    fn whole_net_unique_exceeds_user_level_limit() {
+        let net = vgg19();
+        // "Unique mode sends all the data at once": VGG19's aggregate
+        // payload is far past the 23-bit descriptor limit (its weights
+        // alone are ~40 MB), while every RoShamBo transfer fits.
+        assert!(
+            net.total_tx_bytes() > 4 * MAX_DESC_LEN,
+            "VGG19 whole-net tx {} should dwarf the 8 MB limit",
+            net.total_tx_bytes()
+        );
+        let r = crate::cnn::roshambo::roshambo();
+        assert!(r.layers.iter().all(|l| l.tx_bytes() < MAX_DESC_LEN));
+    }
+
+    #[test]
+    fn conv1_2_overwhelms_the_fifos() {
+        // The blocking ablation relies on conv1_2's payload dwarfing the
+        // loop-back/S2MM buffering by orders of magnitude.
+        let net = vgg19();
+        let cfg = crate::config::SimConfig::default();
+        assert!(net.layers[1].tx_bytes() > 100 * cfg.s2mm_fifo_bytes);
+    }
+
+    #[test]
+    fn sixteen_conv_layers() {
+        assert_eq!(vgg19().layers.len(), 16);
+    }
+
+    #[test]
+    fn much_bigger_than_roshambo() {
+        let v = vgg19();
+        let r = crate::cnn::roshambo::roshambo();
+        assert!(v.total_macs() > 100 * r.total_macs());
+        assert!(v.total_tx_bytes() > 20 * r.total_tx_bytes());
+    }
+}

@@ -1,0 +1,427 @@
+//! Simulator configuration: every timing constant of the modelled Zynq-7100
+//! MMP platform in one place.
+//!
+//! The defaults are **calibrated** against the paper's own published
+//! numbers (Table I anchors, Fig. 4/5 crossover behaviour) plus public
+//! Zynq-7000-series datasheet figures (AXI HP port width/clock, ARM A9
+//! Linux syscall/context-switch costs). DESIGN.md §6 lists the anchors.
+//! Every field can be overridden from a JSON file via [`SimConfig::load`],
+//! which is how the calibration harness sweeps constants.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// All model constants. Units are in the field names: `_ns` = nanoseconds,
+/// `_bps` = bytes/second, `_bytes` = bytes, `_hz` = Hertz.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    // ---- DDR controller / PS memory system ------------------------------
+    /// Effective DDR3 bandwidth seen by one AXI HP port (64-bit @ 150 MHz,
+    /// derated for refresh + arbitration).
+    pub ddr_bandwidth_bps: f64,
+    /// Fixed latency per burst: HP-port arbitration + controller queue +
+    /// CAS. Paid once per DDR burst.
+    pub ddr_latency_ns: u64,
+    /// Extra penalty when the controller switches between read and write
+    /// streams (bus turnaround). This is what makes concurrent TX/RX slower
+    /// than either alone — the paper's "DDR memory cannot attend read and
+    /// write operations at the same time".
+    pub ddr_turnaround_ns: u64,
+
+    // ---- AXI interconnect / DMA engine ----------------------------------
+    /// AXI4-Stream payload bandwidth between DMA and PL (64-bit @ 100 MHz).
+    pub stream_bandwidth_bps: f64,
+    /// Largest single AXI burst the DMA issues (256 beats x 8 B).
+    pub max_burst_bytes: u64,
+    /// Datamover FIFO between MM2S and the PL device.
+    pub mm2s_fifo_bytes: u64,
+    /// Datamover FIFO between the PL device and S2MM.
+    pub s2mm_fifo_bytes: u64,
+    /// Cost of one scatter-gather descriptor fetch from DDR.
+    pub desc_fetch_ns: u64,
+    /// Uncached register write from the PS into the DMA (via M_AXI_GP).
+    pub reg_write_ns: u64,
+    /// Uncached register read (status polling). Slightly slower than a
+    /// write because the A9 stalls on the read response.
+    pub reg_read_ns: u64,
+
+    // ---- CPU / memcpy model ----------------------------------------------
+    /// memcpy bandwidth when the working set fits in the A9's L2 (cached,
+    /// store-buffer friendly).
+    pub memcpy_bw_cached_bps: f64,
+    /// memcpy bandwidth DDR-to-DDR (both sides miss; A9 @ 666 MHz).
+    pub memcpy_bw_ddr_bps: f64,
+    /// Working-set size above which memcpy degrades to DDR bandwidth
+    /// (the Zynq A9 L2 is 512 KB shared; half is a realistic usable set).
+    pub memcpy_cache_threshold_bytes: u64,
+    /// Multiplier (<1) applied to memcpy bandwidth while a DMA transfer is
+    /// in flight — the copy and the engine contend for the same DDR.
+    pub memcpy_dma_contention: f64,
+    /// User-level bounce buffers are mapped non-cacheable (CMA via
+    /// /dev/mem): stores cannot hit the cache, costing extra per byte.
+    pub uncached_copy_factor: f64,
+
+    // ---- OS model ---------------------------------------------------------
+    /// One-way user->kernel mode switch (trap + register save).
+    pub syscall_entry_ns: u64,
+    /// Kernel->user return path.
+    pub syscall_exit_ns: u64,
+    /// Full context switch between tasks (save/restore + scheduler pick +
+    /// cache/TLB disturbance amortised in).
+    pub ctx_switch_ns: u64,
+    /// GIC distributor latency from peripheral edge to CPU IRQ assertion.
+    pub gic_latency_ns: u64,
+    /// IRQ entry: pipeline flush, vector, handler prologue.
+    pub isr_entry_ns: u64,
+    /// The AXI-DMA ISR body (ack IRQ, walk completed descriptors).
+    pub isr_dma_handler_ns: u64,
+    /// Waking a blocked task from the ISR bottom half (softirq + enqueue).
+    pub wake_latency_ns: u64,
+    /// Round-robin timeslice of the modelled CFS (only matters when
+    /// background load is enabled).
+    pub timeslice_ns: u64,
+    /// Re-check period of the *scheduled* user-level driver: instead of
+    /// spinning it sleeps this long between status reads (usleep-based).
+    pub sched_poll_period_ns: u64,
+
+    // ---- Driver constants --------------------------------------------------
+    /// User-level: computing register values / bookkeeping per transfer.
+    pub user_setup_ns: u64,
+    /// Extra CPU overhead in the polling loop per status read (loop body,
+    /// barrier).
+    pub poll_loop_overhead_ns: u64,
+    /// Slowdown factor (>1) on DMA service while the CPU is actively
+    /// spinning on the status register: the uncached reads occupy the same
+    /// interconnect the engine uses for descriptor/status traffic.
+    pub polling_dma_penalty: f64,
+    /// Kernel driver: ioctl argument marshalling + dmaengine submit path.
+    pub kernel_submit_ns: u64,
+    /// Kernel driver: building one SG descriptor (alloc from pool + fill).
+    pub kernel_desc_build_ns: u64,
+    /// Kernel driver: granularity of the copy_{from,to}_user pipeline. The
+    /// driver copies one chunk while the engine DMAs the previous one.
+    pub kernel_sg_chunk_bytes: u64,
+    /// Cache clean (TX) / invalidate (RX) throughput for dma_map_single on
+    /// the kernel bounce buffers: the A9 walks the lines by MVA. This is
+    /// the per-byte toll that makes the kernel path *slower per byte* than
+    /// the user drivers in Table I despite its cached copies.
+    pub kernel_cache_flush_bps: f64,
+    /// Default chunk size of the user-level *Blocks* mode.
+    pub blocks_chunk_bytes: u64,
+
+    // ---- PL devices --------------------------------------------------------
+    /// Loop-back core: pipeline latency input beat -> output beat.
+    pub loopback_latency_ns: u64,
+    /// Loop-back core internal FIFO (bounds TX/RX skew before backpressure).
+    pub loopback_fifo_bytes: u64,
+    /// NullHop MAC array size.
+    pub nullhop_macs: u64,
+    /// NullHop core clock.
+    pub nullhop_clk_hz: f64,
+    /// NullHop's on-chip output FIFO. When S2MM stops draining, this
+    /// fills and the whole pipeline (including input consumption) stalls
+    /// — the coupling that lets an unmanaged RX block TX (§IV).
+    pub nullhop_out_fifo_bytes: u64,
+    /// Per-layer configuration/registers phase inside NullHop.
+    pub nullhop_config_ns: u64,
+    /// Fraction of zero-operand MAC slots NullHop actually skips (its
+    /// sparse decoder is not perfect; derated from the NullHop paper).
+    pub nullhop_skip_efficiency: f64,
+
+    // ---- Background load ---------------------------------------------------
+    /// DDR bandwidth consumed by other processes (the CPU requester in
+    /// the arbiter, lowest priority). 0 disables background traffic.
+    /// The AB-LOAD ablation sweeps this to show how a loaded PS degrades
+    /// each driver's transfers.
+    pub bg_mem_bps: f64,
+    /// Burst size of the background stream.
+    pub bg_burst_bytes: u64,
+    /// Watchdog on every wait primitive, in simulated time: a transfer
+    /// that has not completed by then is declared blocked even if
+    /// background traffic keeps the calendar alive.
+    pub wait_deadline_ns: u64,
+
+    // ---- Misc ---------------------------------------------------------------
+    /// RNG seed for jitter and workload generation.
+    pub seed: u64,
+    /// Gaussian jitter applied to OS costs (stddev as a fraction of the
+    /// mean); 0 disables jitter for bit-deterministic tests.
+    pub os_jitter_frac: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            // DDR: 64-bit HP port @ 150 MHz = 1200 MB/s raw; ~85% efficient.
+            ddr_bandwidth_bps: 1.02e9,
+            ddr_latency_ns: 150,
+            ddr_turnaround_ns: 45,
+
+            // AXI-Stream: 32-bit datamover @ 100 MHz (the NullHop
+            // integration's stream width; calibrated against Table I's
+            // TX ~0.0054 µs/B).
+            stream_bandwidth_bps: 400e6,
+            max_burst_bytes: 2048,
+            mm2s_fifo_bytes: 4096,
+            s2mm_fifo_bytes: 4096,
+            desc_fetch_ns: 180,
+            reg_write_ns: 120,
+            reg_read_ns: 150,
+
+            memcpy_bw_cached_bps: 1.35e9,
+            memcpy_bw_ddr_bps: 620e6,
+            memcpy_cache_threshold_bytes: 256 * 1024,
+            memcpy_dma_contention: 0.82,
+            uncached_copy_factor: 0.42,
+
+            syscall_entry_ns: 900,
+            syscall_exit_ns: 700,
+            ctx_switch_ns: 4_200,
+            gic_latency_ns: 300,
+            isr_entry_ns: 2_300,
+            isr_dma_handler_ns: 3_000,
+            wake_latency_ns: 4_500,
+            timeslice_ns: 10_000_000,
+            sched_poll_period_ns: 100_000,
+
+            user_setup_ns: 600,
+            poll_loop_overhead_ns: 60,
+            polling_dma_penalty: 1.04,
+            kernel_submit_ns: 9_000,
+            kernel_desc_build_ns: 800,
+            kernel_sg_chunk_bytes: 256 * 1024,
+            kernel_cache_flush_bps: 250e6,
+            blocks_chunk_bytes: 64 * 1024,
+
+            loopback_latency_ns: 240,
+            loopback_fifo_bytes: 8 * 1024,
+            nullhop_macs: 128,
+            // The real core ran at 60 MHz; our RoShamBo geometry is an
+            // approximation with ~2.4x fewer dense MACs than the deployed
+            // net, so the effective clock folds that ratio in (DESIGN.md
+            // §6 calibration anchors).
+            nullhop_clk_hz: 25e6,
+            nullhop_out_fifo_bytes: 16 * 1024,
+            nullhop_config_ns: 2_500,
+            nullhop_skip_efficiency: 0.75,
+
+            bg_mem_bps: 0.0,
+            bg_burst_bytes: 1024,
+            wait_deadline_ns: 10_000_000_000, // 10 s of simulated time
+
+            seed: 0xC0DE5EED,
+            os_jitter_frac: 0.0,
+        }
+    }
+}
+
+macro_rules! config_fields {
+    ($($field:ident : $kind:ident),* $(,)?) => {
+        impl SimConfig {
+            /// Apply overrides from a parsed JSON object; unknown keys are an
+            /// error (catches typos in calibration sweeps).
+            pub fn apply_json(&mut self, v: &Json) -> anyhow::Result<()> {
+                let obj = v
+                    .as_obj()
+                    .ok_or_else(|| anyhow::anyhow!("config root must be a JSON object"))?;
+                for (k, val) in obj {
+                    match k.as_str() {
+                        $(stringify!($field) => {
+                            config_fields!(@set self, $field, $kind, val, k);
+                        })*
+                        _ => anyhow::bail!("unknown config key: {k}"),
+                    }
+                }
+                Ok(())
+            }
+
+            /// Serialize the full config (for EXPERIMENTS.md provenance).
+            pub fn to_json(&self) -> Json {
+                Json::obj(vec![
+                    $((stringify!($field), config_fields!(@get self, $field, $kind)),)*
+                ])
+            }
+        }
+    };
+    (@set $self:ident, $field:ident, f64, $val:ident, $k:ident) => {
+        $self.$field = $val
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("config key {} must be a number", $k))?;
+    };
+    (@set $self:ident, $field:ident, u64, $val:ident, $k:ident) => {
+        $self.$field = $val
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("config key {} must be a non-negative integer", $k))?;
+    };
+    (@get $self:ident, $field:ident, f64) => { Json::num($self.$field) };
+    (@get $self:ident, $field:ident, u64) => { Json::num($self.$field as f64) };
+}
+
+config_fields! {
+    ddr_bandwidth_bps: f64,
+    ddr_latency_ns: u64,
+    ddr_turnaround_ns: u64,
+    stream_bandwidth_bps: f64,
+    max_burst_bytes: u64,
+    mm2s_fifo_bytes: u64,
+    s2mm_fifo_bytes: u64,
+    desc_fetch_ns: u64,
+    reg_write_ns: u64,
+    reg_read_ns: u64,
+    memcpy_bw_cached_bps: f64,
+    memcpy_bw_ddr_bps: f64,
+    memcpy_cache_threshold_bytes: u64,
+    memcpy_dma_contention: f64,
+    uncached_copy_factor: f64,
+    syscall_entry_ns: u64,
+    syscall_exit_ns: u64,
+    ctx_switch_ns: u64,
+    gic_latency_ns: u64,
+    isr_entry_ns: u64,
+    isr_dma_handler_ns: u64,
+    wake_latency_ns: u64,
+    timeslice_ns: u64,
+    sched_poll_period_ns: u64,
+    user_setup_ns: u64,
+    poll_loop_overhead_ns: u64,
+    polling_dma_penalty: f64,
+    kernel_submit_ns: u64,
+    kernel_desc_build_ns: u64,
+    kernel_sg_chunk_bytes: u64,
+    kernel_cache_flush_bps: f64,
+    blocks_chunk_bytes: u64,
+    loopback_latency_ns: u64,
+    loopback_fifo_bytes: u64,
+    nullhop_macs: u64,
+    nullhop_clk_hz: f64,
+    nullhop_out_fifo_bytes: u64,
+    nullhop_config_ns: u64,
+    nullhop_skip_efficiency: f64,
+    bg_mem_bps: f64,
+    bg_burst_bytes: u64,
+    wait_deadline_ns: u64,
+    seed: u64,
+    os_jitter_frac: f64,
+}
+
+impl SimConfig {
+    /// Load a config: defaults overridden by the JSON file at `path`.
+    pub fn load(path: &Path) -> anyhow::Result<SimConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {}: {e}", path.display()))?;
+        let json = Json::parse(&text)?;
+        let mut cfg = SimConfig::default();
+        cfg.apply_json(&json)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks: bandwidths positive, factors in range, FIFOs can hold
+    /// at least one burst.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.ddr_bandwidth_bps > 0.0, "ddr_bandwidth_bps must be > 0");
+        anyhow::ensure!(self.stream_bandwidth_bps > 0.0, "stream_bandwidth_bps must be > 0");
+        anyhow::ensure!(self.memcpy_bw_cached_bps > 0.0, "memcpy_bw_cached_bps must be > 0");
+        anyhow::ensure!(self.memcpy_bw_ddr_bps > 0.0, "memcpy_bw_ddr_bps must be > 0");
+        anyhow::ensure!(self.max_burst_bytes > 0, "max_burst_bytes must be > 0");
+        anyhow::ensure!(
+            self.mm2s_fifo_bytes >= self.max_burst_bytes,
+            "MM2S FIFO smaller than one burst would deadlock the engine"
+        );
+        anyhow::ensure!(
+            self.s2mm_fifo_bytes >= self.max_burst_bytes,
+            "S2MM FIFO smaller than one burst would deadlock the engine"
+        );
+        anyhow::ensure!(
+            self.kernel_sg_chunk_bytes > 0 && self.blocks_chunk_bytes > 0,
+            "chunk sizes must be > 0"
+        );
+        anyhow::ensure!(self.kernel_cache_flush_bps > 0.0, "kernel_cache_flush_bps must be > 0");
+        anyhow::ensure!(self.bg_mem_bps >= 0.0, "bg_mem_bps must be >= 0");
+        anyhow::ensure!(self.bg_burst_bytes > 0, "bg_burst_bytes must be > 0");
+        anyhow::ensure!(self.wait_deadline_ns > 0, "wait_deadline_ns must be > 0");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.memcpy_dma_contention),
+            "memcpy_dma_contention must be in [0,1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.uncached_copy_factor),
+            "uncached_copy_factor must be in [0,1]"
+        );
+        anyhow::ensure!(
+            self.polling_dma_penalty >= 1.0,
+            "polling_dma_penalty is a slowdown, must be >= 1"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.nullhop_skip_efficiency),
+            "nullhop_skip_efficiency must be in [0,1]"
+        );
+        anyhow::ensure!(self.nullhop_macs > 0 && self.nullhop_clk_hz > 0.0, "nullhop params");
+        anyhow::ensure!(
+            (0.0..=0.5).contains(&self.os_jitter_frac),
+            "os_jitter_frac must be in [0, 0.5]"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_identity() {
+        let cfg = SimConfig::default();
+        let json = cfg.to_json();
+        let mut cfg2 = SimConfig::default();
+        cfg2.ddr_latency_ns = 0; // perturb, then restore from json
+        cfg2.apply_json(&json).unwrap();
+        assert_eq!(cfg, cfg2);
+    }
+
+    #[test]
+    fn override_single_key() {
+        let mut cfg = SimConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"ddr_latency_ns": 99}"#).unwrap()).unwrap();
+        assert_eq!(cfg.ddr_latency_ns, 99);
+        // Everything else untouched.
+        assert_eq!(cfg.reg_read_ns, SimConfig::default().reg_read_ns);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = SimConfig::default();
+        let err = cfg.apply_json(&Json::parse(r#"{"ddr_latencyns": 99}"#).unwrap());
+        assert!(err.is_err(), "typo'd key must be rejected");
+    }
+
+    #[test]
+    fn wrong_type_rejected() {
+        let mut cfg = SimConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"ddr_latency_ns": "fast"}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"ddr_latency_ns": -5}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn validation_catches_deadlocky_fifo() {
+        let mut cfg = SimConfig::default();
+        cfg.mm2s_fifo_bytes = cfg.max_burst_bytes - 1;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_factors() {
+        let mut cfg = SimConfig::default();
+        cfg.polling_dma_penalty = 0.9;
+        assert!(cfg.validate().is_err());
+        let mut cfg = SimConfig::default();
+        cfg.memcpy_dma_contention = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! The L3 coordinator: fuses simulated transfer timing with real
+//! accelerator numerics and drives every experiment in the paper.
+//!
+//! * [`pipeline`] — per-layer frame execution: configure NullHop, run the
+//!   TX/RX round trip through a [`crate::drivers::Driver`], carry the
+//!   real feature maps between layers via the PJRT [`crate::runtime`];
+//! * [`experiments`] — the runners behind every figure/table: the
+//!   loop-back size sweep (Fig. 4/5), the RoShamBo frame timing
+//!   (Table I), and the ablations (buffering, partitioning, VGG19
+//!   blocking).
+
+pub mod calibrate;
+pub mod experiments;
+pub mod pipeline;
+
+pub use experiments::{loopback_sweep, table1, SweepRow, Table1Row};
+pub use pipeline::{plan_from_estimates, plan_with_runtime, run_frame, FrameReport, LayerPlan};

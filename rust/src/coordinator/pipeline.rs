@@ -1,0 +1,265 @@
+//! Per-frame execution pipeline: the software loop the paper's
+//! application runs for every DAVIS frame.
+//!
+//! For each of the network's five conv layers: configure NullHop, stream
+//! the layer's kernels + encoded input in (TX), stream the encoded output
+//! map back (RX) — all through whichever driver scheme is under test.
+//! The FC head then runs on the PS.
+//!
+//! Two planning modes:
+//!
+//! * [`plan_from_estimates`] — byte counts and MAC derating from the
+//!   descriptor's built-in sparsity estimates (timing-only runs, no
+//!   artifacts needed);
+//! * [`plan_with_runtime`] — the *functional* path: each layer's real
+//!   numerics run through the AOT JAX/Pallas artifacts, the resulting
+//!   feature maps are Q8.8-quantized and NullHop-encoded, and the
+//!   *measured* encoded sizes and sparsities drive the simulator. This is
+//!   the co-design loop: real data shapes the timing.
+
+use anyhow::Result;
+
+use crate::accel::nullhop::LayerTiming;
+use crate::cnn::encoding::{encoded_len, quantize_q88, sparsity};
+use crate::cnn::layer::NetDesc;
+use crate::config::SimConfig;
+use crate::drivers::{Driver, DriverError, TransferReport};
+use crate::runtime::Runtime;
+use crate::sim::time::Dur;
+use crate::system::{CpuLedger, System};
+
+/// One layer's execution plan: everything the simulator needs.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub name: String,
+    pub timing: LayerTiming,
+    /// Zero fraction used for the input map (estimated or measured).
+    pub sparsity_in: f64,
+    pub sparsity_out: f64,
+}
+
+/// Build plans from the descriptor's sparsity estimates.
+pub fn plan_from_estimates(net: &NetDesc, cfg: &SimConfig) -> Vec<LayerPlan> {
+    net.layers
+        .iter()
+        .map(|l| LayerPlan {
+            name: l.name.to_string(),
+            timing: l.timing(cfg),
+            sparsity_in: l.sparsity_in,
+            sparsity_out: l.sparsity_out,
+        })
+        .collect()
+}
+
+/// Result of the functional planning pass.
+pub struct RuntimePlan {
+    pub plans: Vec<LayerPlan>,
+    /// FC-head logits for the frame.
+    pub logits: Vec<f32>,
+    /// argmax class.
+    pub class: usize,
+}
+
+/// Execute the real network layer-by-layer through the PJRT artifacts,
+/// measuring encoded sizes and sparsities of the actual feature maps.
+///
+/// `frame` is the normalised DAVIS frame as f32 (length 64·64). Artifact
+/// naming contract with `python/compile/aot.py`: one artifact per conv
+/// layer named like the layer (`conv1`..`conv5`) and one `fc` head.
+pub fn plan_with_runtime(
+    net: &NetDesc,
+    cfg: &SimConfig,
+    rt: &Runtime,
+    frame: &[f32],
+) -> Result<RuntimePlan> {
+    let mut plans = Vec::with_capacity(net.layers.len());
+    let mut act: Vec<f32> = frame.to_vec();
+    for l in &net.layers {
+        // Measured input-side sparsity (as the accelerator would see it:
+        // Q8.8 quantized, then NullHop-encoded).
+        let q_in = quantize_q88(&act);
+        let sp_in = sparsity(&q_in);
+        let in_bytes = {
+            let nnz = q_in.iter().filter(|&&v| v != 0).count();
+            encoded_len(q_in.len(), nnz)
+        };
+
+        // Real numerics for this layer.
+        act = rt.execute(l.name, &act)?;
+
+        let q_out = quantize_q88(&act);
+        let sp_out = sparsity(&q_out);
+        let out_bytes = {
+            let nnz = q_out.iter().filter(|&&v| v != 0).count();
+            encoded_len(q_out.len(), nnz)
+        };
+
+        let row_bytes = encoded_len(l.in_w * l.in_c, l.in_w * l.in_c);
+        let tx = l.weight_bytes() + in_bytes;
+        plans.push(LayerPlan {
+            name: l.name.to_string(),
+            timing: LayerTiming {
+                tx_bytes: tx,
+                rx_bytes: out_bytes,
+                start_threshold: (l.weight_bytes() + l.k as u64 * row_bytes).min(tx),
+                compute_ns: l.compute_ns(cfg, sp_in),
+            },
+            sparsity_in: sp_in,
+            sparsity_out: sp_out,
+        });
+    }
+    // FC head on the PS.
+    let logits = rt.execute("fc", &act)?;
+    let class = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Ok(RuntimePlan { plans, logits, class })
+}
+
+/// Timing of one whole frame through the accelerator.
+#[derive(Clone, Debug)]
+pub struct FrameReport {
+    pub per_layer: Vec<TransferReport>,
+    /// Wall time of the frame: first configure → last RX byte in user
+    /// space (plus the PS-side FC head cost).
+    pub frame_time: Dur,
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+    /// Sum of software-observed TX / RX windows across layers.
+    pub tx_time: Dur,
+    pub rx_time: Dur,
+    pub ledger: CpuLedger,
+}
+
+impl FrameReport {
+    /// Table I's "TX (us/byte)": aggregate TX time over aggregate bytes.
+    pub fn tx_us_per_byte(&self) -> f64 {
+        self.tx_time.as_us() / self.tx_bytes.max(1) as f64
+    }
+
+    pub fn rx_us_per_byte(&self) -> f64 {
+        self.rx_time.as_us() / self.rx_bytes.max(1) as f64
+    }
+
+    pub fn frame_ms(&self) -> f64 {
+        self.frame_time.as_ms()
+    }
+}
+
+/// CPU cost of the FC head on the PS (simple dot-product model: ~2 ops
+/// per weight on the A9 at ~2 ops/cycle → ~1 weight/cycle @ 666 MHz).
+fn fc_cpu_cost(net: &NetDesc) -> Dur {
+    let weights = (net.fc_in * net.fc_out) as u64;
+    Dur((weights as f64 / 0.666).ceil() as u64)
+}
+
+/// Run one frame through the simulator: five NullHop layer executions
+/// via `drv`, then the FC head on the CPU.
+pub fn run_frame(
+    sys: &mut System,
+    drv: &mut Driver,
+    net: &NetDesc,
+    plans: &[LayerPlan],
+) -> Result<FrameReport, DriverError> {
+    assert_eq!(plans.len(), net.layers.len(), "plan/layer mismatch");
+    let t0 = sys.now();
+    let ledger0 = sys.ledger;
+    let mut per_layer = Vec::with_capacity(plans.len());
+    for p in plans {
+        sys.configure_nullhop(p.timing);
+        let r = drv.transfer(sys, p.timing.tx_bytes, p.timing.rx_bytes)?;
+        per_layer.push(r);
+    }
+    // FC head runs on the PS.
+    sys.cpu_exec(fc_cpu_cost(net));
+    let frame_time = sys.now().since(t0);
+    let l = sys.ledger;
+    Ok(FrameReport {
+        tx_bytes: per_layer.iter().map(|r| r.tx_bytes).sum(),
+        rx_bytes: per_layer.iter().map(|r| r.rx_bytes).sum(),
+        tx_time: per_layer.iter().map(|r| r.tx_time).sum(),
+        rx_time: per_layer.iter().map(|r| r.rx_time).sum(),
+        ledger: CpuLedger {
+            busy: l.busy.saturating_sub(ledger0.busy),
+            freed: l.freed.saturating_sub(ledger0.freed),
+            used_by_tasks: l.used_by_tasks.saturating_sub(ledger0.used_by_tasks),
+            poll_reads: l.poll_reads - ledger0.poll_reads,
+            sleep_cycles: l.sleep_cycles - ledger0.sleep_cycles,
+            irqs: l.irqs - ledger0.irqs,
+        },
+        per_layer,
+        frame_time,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::roshambo::roshambo;
+    use crate::drivers::{DriverConfig, DriverKind};
+    use crate::memory::buffer::CmaAllocator;
+
+    fn frame_with(kind: DriverKind) -> FrameReport {
+        let cfg = SimConfig::default();
+        let net = roshambo();
+        let plans = plan_from_estimates(&net, &cfg);
+        let mut sys = System::nullhop(cfg.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let max = plans
+            .iter()
+            .map(|p| p.timing.tx_bytes.max(p.timing.rx_bytes))
+            .max()
+            .unwrap();
+        let mut drv = Driver::new(DriverConfig::table1(kind), &mut cma, &cfg, max).unwrap();
+        run_frame(&mut sys, &mut drv, &net, &plans).unwrap()
+    }
+
+    #[test]
+    fn frame_runs_five_layers() {
+        let r = frame_with(DriverKind::UserPolling);
+        assert_eq!(r.per_layer.len(), 5);
+        assert!(r.frame_ms() > 0.5, "frame {} too fast", r.frame_ms());
+        assert!(r.frame_ms() < 100.0, "frame {} too slow", r.frame_ms());
+    }
+
+    #[test]
+    fn rx_per_byte_much_slower_than_tx() {
+        // The paper's headline asymmetry: RX is compute-bound (0.197 vs
+        // 0.0054 µs/B — ~35×). Require at least 10× in the model.
+        let r = frame_with(DriverKind::UserPolling);
+        assert!(
+            r.rx_us_per_byte() > 10.0 * r.tx_us_per_byte(),
+            "tx {} rx {}",
+            r.tx_us_per_byte(),
+            r.rx_us_per_byte()
+        );
+    }
+
+    #[test]
+    fn table1_ordering_polling_fastest() {
+        let poll = frame_with(DriverKind::UserPolling);
+        let sched = frame_with(DriverKind::UserScheduled);
+        let kern = frame_with(DriverKind::KernelIrq);
+        assert!(
+            poll.frame_time < sched.frame_time && sched.frame_time < kern.frame_time,
+            "ordering violated: poll {} sched {} kernel {}",
+            poll.frame_ms(),
+            sched.frame_ms(),
+            kern.frame_ms()
+        );
+    }
+
+    #[test]
+    fn estimates_plan_matches_descriptor_bytes() {
+        let cfg = SimConfig::default();
+        let net = roshambo();
+        let plans = plan_from_estimates(&net, &cfg);
+        for (p, l) in plans.iter().zip(&net.layers) {
+            assert_eq!(p.timing.tx_bytes, l.tx_bytes());
+            assert_eq!(p.timing.rx_bytes, l.rx_bytes());
+        }
+    }
+}

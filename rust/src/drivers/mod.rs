@@ -1,0 +1,306 @@
+//! The paper's transfer-management schemes: who moves data between the
+//! application's virtual memory and the DMA-visible physical bounce
+//! buffers, and how completion is awaited.
+//!
+//! Three **drivers** (§III):
+//!
+//! * [`DriverKind::UserPolling`] — `mmap()`'d registers + CMA buffer,
+//!   spin on the status register. Lowest latency, burns the CPU, no
+//!   memory protection, can deadlock the system on unbalanced TX/RX.
+//! * [`DriverKind::UserScheduled`] — same user-space register access but
+//!   the wait usleeps, letting the OS schedule other tasks.
+//! * [`DriverKind::KernelIrq`] — ioctl into a kernel driver wrapping the
+//!   Xilinx AXI-DMA dmaengine: `copy_{from,to}_user` through cached
+//!   kernel mappings, scatter-gather descriptor chains pipelined with the
+//!   copies, interrupt-driven completion.
+//!
+//! Two orthogonal knobs for the user-level drivers (§III.A):
+//!
+//! * [`BufferScheme`] — `Single` reuses one bounce buffer (next chunk's
+//!   copy must wait for the engine); `Double` ping-pongs two, overlapping
+//!   the copy of chunk *i+1* with the DMA of chunk *i*.
+//! * [`PartitionMode`] — `Unique` sends the whole payload as one
+//!   transfer; `Blocks` chops it into `blocks_chunk_bytes` pieces so
+//!   double buffering has something to overlap.
+//!
+//! Every combination exposes the same entry point,
+//! [`Driver::transfer`], which runs one TX/RX round trip on a
+//! [`System`] and reports software-observed TX/RX completion times plus
+//! the CPU ledger.
+
+pub mod kernel;
+pub mod user;
+
+use crate::axi::descriptor::MAX_DESC_LEN;
+use crate::memory::buffer::{AllocError, CmaAllocator, DmaBuffer};
+use crate::sim::time::Dur;
+use crate::system::{CpuLedger, SimError, System};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DriverKind {
+    UserPolling,
+    UserScheduled,
+    KernelIrq,
+}
+
+impl DriverKind {
+    /// Paper row/series label.
+    pub fn label(self) -> &'static str {
+        match self {
+            DriverKind::UserPolling => "user-level polling",
+            DriverKind::UserScheduled => "user-level drv scheduled",
+            DriverKind::KernelIrq => "kernel-level drv",
+        }
+    }
+
+    pub const ALL: [DriverKind; 3] =
+        [DriverKind::UserPolling, DriverKind::UserScheduled, DriverKind::KernelIrq];
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BufferScheme {
+    Single,
+    Double,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PartitionMode {
+    /// One transfer for the whole payload.
+    Unique,
+    /// Chunked into `blocks_chunk_bytes` transfers.
+    Blocks,
+}
+
+/// Full driver configuration for one experiment cell.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct DriverConfig {
+    pub kind: DriverKind,
+    pub buffering: BufferScheme,
+    pub partition: PartitionMode,
+}
+
+impl DriverConfig {
+    /// The paper's Table I configuration: "single-buffer" + "Unique".
+    pub fn table1(kind: DriverKind) -> DriverConfig {
+        DriverConfig { kind, buffering: BufferScheme::Single, partition: PartitionMode::Unique }
+    }
+}
+
+/// What a transfer attempt can report.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum DriverError {
+    #[error(transparent)]
+    Sim(#[from] SimError),
+    #[error("CMA allocation failed: {0}")]
+    Alloc(#[from] AllocError),
+    #[error(
+        "transfer of {bytes} bytes exceeds the user-level 8 MB AXI-DMA limit \
+         ({MAX_DESC_LEN} bytes per descriptor) in Unique mode"
+    )]
+    TooLarge { bytes: u64 },
+}
+
+/// Software-observed timing of one TX/RX round trip. All durations are
+/// measured from the instant the application handed the payload to the
+/// driver (t0), matching the paper's instrumentation.
+#[derive(Clone, Copy, Debug)]
+pub struct TransferReport {
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+    /// t0 → software observes TX (MM2S) complete, including the TX-side
+    /// staging copy.
+    pub tx_time: Dur,
+    /// t0 → RX payload available in application virtual memory (S2MM
+    /// complete + copy-back).
+    pub rx_time: Dur,
+    /// CPU accounting over the transfer window.
+    pub ledger: CpuLedger,
+}
+
+impl TransferReport {
+    pub fn tx_us_per_byte(&self) -> f64 {
+        self.tx_time.as_us() / self.tx_bytes.max(1) as f64
+    }
+
+    pub fn rx_us_per_byte(&self) -> f64 {
+        self.rx_time.as_us() / self.rx_bytes.max(1) as f64
+    }
+}
+
+/// Bounce-buffer set held by a driver instance (allocated once, reused
+/// across transfers, as a real application would).
+struct BounceBufs {
+    tx: Vec<DmaBuffer>,
+    rx: Vec<DmaBuffer>,
+}
+
+/// One configured driver bound to a CMA reservation.
+pub struct Driver {
+    pub cfg: DriverConfig,
+    bufs: BounceBufs,
+    /// Capacity of each bounce buffer.
+    buf_len: u64,
+}
+
+impl Driver {
+    /// Set up bounce buffers sized for transfers up to `max_bytes`.
+    ///
+    /// * user Unique: full-payload buffers (1 or 2 per direction);
+    /// * user Blocks: chunk-sized buffers (1 or 2 per direction);
+    /// * kernel: two SG-chunk bounce buffers per direction (the driver's
+    ///   internal pipeline), regardless of the user-visible knobs.
+    pub fn new(
+        cfg: DriverConfig,
+        cma: &mut CmaAllocator,
+        sys_cfg: &crate::config::SimConfig,
+        max_bytes: u64,
+    ) -> Result<Driver, DriverError> {
+        let kernel_worst_case = cfg.kind == DriverKind::KernelIrq
+            && cfg.buffering == BufferScheme::Single
+            && cfg.partition == PartitionMode::Unique;
+        let buf_len = match (cfg.kind, cfg.partition) {
+            // Worst-case kernel mode stages the whole payload at once.
+            (DriverKind::KernelIrq, _) if kernel_worst_case => max_bytes,
+            (DriverKind::KernelIrq, _) => sys_cfg.kernel_sg_chunk_bytes,
+            (_, PartitionMode::Unique) => max_bytes,
+            (_, PartitionMode::Blocks) => sys_cfg.blocks_chunk_bytes.min(max_bytes),
+        };
+        let n = match (cfg.kind, cfg.buffering) {
+            (DriverKind::KernelIrq, _) => 2,
+            (_, BufferScheme::Single) => 1,
+            (_, BufferScheme::Double) => 2,
+        };
+        let mut tx = Vec::new();
+        let mut rx = Vec::new();
+        for _ in 0..n {
+            tx.push(cma.alloc(buf_len)?);
+            rx.push(cma.alloc(buf_len)?);
+        }
+        Ok(Driver { cfg, bufs: BounceBufs { tx, rx }, buf_len })
+    }
+
+    /// Release the bounce buffers back to the CMA pool.
+    pub fn release(self, cma: &mut CmaAllocator) {
+        for b in self.bufs.tx.into_iter().chain(self.bufs.rx) {
+            cma.free(b).expect("driver buffers double-freed");
+        }
+    }
+
+    pub fn buf_len(&self) -> u64 {
+        self.buf_len
+    }
+
+    fn tx_buf(&self, i: usize) -> DmaBuffer {
+        self.bufs.tx[i % self.bufs.tx.len()]
+    }
+
+    fn rx_buf(&self, i: usize) -> DmaBuffer {
+        self.bufs.rx[i % self.bufs.rx.len()]
+    }
+
+    /// Run one TX/RX round trip: send `tx_bytes` to the PL, receive
+    /// `rx_bytes` back (loop-back: equal; NullHop layer: rx is the output
+    /// feature map). The PL device must already be set up to consume/
+    /// produce these amounts.
+    pub fn transfer(
+        &mut self,
+        sys: &mut System,
+        tx_bytes: u64,
+        rx_bytes: u64,
+    ) -> Result<TransferReport, DriverError> {
+        assert!(tx_bytes > 0, "transfer with no TX payload");
+        let ledger_before = sys.ledger;
+        let report = match self.cfg.kind {
+            DriverKind::UserPolling => {
+                user::transfer(self, sys, tx_bytes, rx_bytes, user::WaitMode::Poll)?
+            }
+            DriverKind::UserScheduled => {
+                user::transfer(self, sys, tx_bytes, rx_bytes, user::WaitMode::Sleep)?
+            }
+            DriverKind::KernelIrq => kernel::transfer(self, sys, tx_bytes, rx_bytes)?,
+        };
+        let mut report = report;
+        report.ledger = diff_ledger(ledger_before, sys.ledger);
+        Ok(report)
+    }
+}
+
+fn diff_ledger(before: CpuLedger, after: CpuLedger) -> CpuLedger {
+    CpuLedger {
+        busy: after.busy.saturating_sub(before.busy),
+        freed: after.freed.saturating_sub(before.freed),
+        used_by_tasks: after.used_by_tasks.saturating_sub(before.used_by_tasks),
+        poll_reads: after.poll_reads - before.poll_reads,
+        sleep_cycles: after.sleep_cycles - before.sleep_cycles,
+        irqs: after.irqs - before.irqs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn setup(cfg: DriverConfig, max: u64) -> (System, CmaAllocator, Driver) {
+        let sys_cfg = SimConfig::default();
+        let sys = System::loopback(sys_cfg.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let drv = Driver::new(cfg, &mut cma, &sys_cfg, max).unwrap();
+        (sys, cma, drv)
+    }
+
+    #[test]
+    fn all_nine_user_cells_complete_a_loopback() {
+        for kind in [DriverKind::UserPolling, DriverKind::UserScheduled] {
+            for buffering in [BufferScheme::Single, BufferScheme::Double] {
+                for partition in [PartitionMode::Unique, PartitionMode::Blocks] {
+                    let cfg = DriverConfig { kind, buffering, partition };
+                    let (mut sys, mut cma, mut drv) = setup(cfg, 1 << 20);
+                    let r = drv.transfer(&mut sys, 1 << 20, 1 << 20).unwrap();
+                    assert!(r.tx_time > Dur::ZERO, "{cfg:?}");
+                    assert!(r.rx_time >= r.tx_time, "{cfg:?}");
+                    drv.release(&mut cma);
+                    assert_eq!(cma.free_bytes(), cma.capacity());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_cell_completes_a_loopback() {
+        let cfg = DriverConfig::table1(DriverKind::KernelIrq);
+        let (mut sys, _cma, mut drv) = setup(cfg, 1 << 20);
+        let r = drv.transfer(&mut sys, 1 << 20, 1 << 20).unwrap();
+        assert!(r.rx_time >= r.tx_time);
+        assert!(r.ledger.irqs >= 2, "kernel driver is interrupt-driven");
+    }
+
+    #[test]
+    fn user_unique_rejects_past_8mb_limit() {
+        let cfg = DriverConfig::table1(DriverKind::UserPolling);
+        let (mut sys, _cma, mut drv) = setup(cfg, 16 << 20);
+        let err = drv.transfer(&mut sys, 9 << 20, 9 << 20).unwrap_err();
+        assert!(matches!(err, DriverError::TooLarge { .. }));
+    }
+
+    #[test]
+    fn kernel_sg_handles_past_8mb() {
+        let cfg = DriverConfig::table1(DriverKind::KernelIrq);
+        let (mut sys, _cma, mut drv) = setup(cfg, 16 << 20);
+        let r = drv.transfer(&mut sys, 9 << 20, 9 << 20).unwrap();
+        assert_eq!(r.tx_bytes, 9 << 20);
+    }
+
+    #[test]
+    fn per_byte_helpers() {
+        let r = TransferReport {
+            tx_bytes: 1000,
+            rx_bytes: 500,
+            tx_time: Dur::from_us(10.0),
+            rx_time: Dur::from_us(20.0),
+            ledger: CpuLedger::default(),
+        };
+        assert!((r.tx_us_per_byte() - 0.01).abs() < 1e-12);
+        assert!((r.rx_us_per_byte() - 0.04).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,63 @@
+//! # psoc-dma — HW/SW co-design SoC memory-transfer study, reproduced
+//!
+//! Reproduction of *"Performance evaluation over HW/SW co-design SoC memory
+//! transfers for a CNN accelerator"* (Rios-Navarro et al., 2018).
+//!
+//! The paper measures, on a Xilinx Zynq-7100 PSoC, how three software
+//! schemes for driving the AXI-DMA engine between the ARM Processing
+//! System and the Programmable Logic compare: **user-level polling**,
+//! **user-level scheduled**, and a **kernel-level interrupt-driven
+//! driver** — across transfer sizes (loop-back sweep, Fig. 4/5) and on a
+//! real CNN accelerator workload (NullHop running the RoShamBo network,
+//! Table I).
+//!
+//! We do not have the hardware, so the whole platform is rebuilt as a
+//! calibrated **discrete-event simulator** (see `DESIGN.md`):
+//!
+//! * [`sim`] — event calendar, virtual ns clock, deterministic PRNG;
+//! * [`memory`] — DDR3 controller + arbitration, CMA bounce-buffer
+//!   allocator, CPU memcpy cost model;
+//! * [`axi`] — AXI4-Stream FIFOs, scatter-gather descriptors, and the
+//!   AXI-DMA engine (MM2S/S2MM channel state machines);
+//! * [`os`] — scheduler, syscall/context-switch/interrupt cost model;
+//! * [`accel`] — the PL devices: loop-back core and the NullHop CNN
+//!   accelerator timing model;
+//! * [`system`] — the dispatcher that owns all components and routes
+//!   events between them; also the software-process facade the drivers
+//!   program against;
+//! * [`drivers`] — the paper's three transfer-management schemes ×
+//!   {single,double}-buffer × {Unique,Blocks} partitioning;
+//! * [`cnn`] — layer descriptors (RoShamBo, VGG19) and NullHop's sparse
+//!   feature-map encoding;
+//! * [`sensor`] — DAVIS dynamic-vision-sensor event generator + frame
+//!   histogramming (the PS-side workload);
+//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
+//!   CNN (HLO text in `artifacts/`) and executes the *numerics* that the
+//!   simulator only times;
+//! * [`coordinator`] — the per-layer pipeline fusing simulated transfer
+//!   timing with real accelerator numerics, plus metrics;
+//! * [`report`] — figure/table regeneration (Fig. 4, Fig. 5, Table I,
+//!   ablations).
+//!
+//! Python (JAX + Pallas) runs only at `make artifacts`; the rust binary is
+//! self-contained afterwards.
+
+pub mod accel;
+pub mod axi;
+pub mod cnn;
+pub mod config;
+pub mod coordinator;
+pub mod drivers;
+pub mod memory;
+pub mod os;
+pub mod report;
+pub mod runtime;
+pub mod sensor;
+pub mod sim;
+pub mod system;
+pub mod util;
+
+/// Crate version (for `--version` and experiment provenance).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,262 @@
+//! `psoc-dma` CLI: regenerate every figure/table of the paper.
+//!
+//! ```text
+//! psoc-dma fig4              # Fig. 4: loop-back transfer times (ms)
+//! psoc-dma fig5              # Fig. 5: time per byte (us/B)
+//! psoc-dma table1            # Table I (estimate-based plans)
+//! psoc-dma table1 --runtime  # Table I driven by real feature maps (needs artifacts/)
+//! psoc-dma ablation-buffer   # single vs double buffer x Unique vs Blocks
+//! psoc-dma ablation-blocks   # Blocks chunk-size sweep
+//! psoc-dma ablation-vgg      # VGG19 failure modes
+//! psoc-dma all               # everything above (estimate plans)
+//! ```
+//!
+//! `--config <file.json>` overrides any `SimConfig` constant;
+//! `--csv <dir>` additionally writes machine-readable outputs.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::{
+    ablation_chunk_sweep, ablation_load, ablation_matrix, ablation_vgg, fig45_sizes,
+    loopback_sweep, table1, table1_runtime,
+};
+use psoc_dma::drivers::DriverKind;
+use psoc_dma::report;
+use psoc_dma::runtime::Runtime;
+
+struct Args {
+    cmd: String,
+    config: Option<String>,
+    csv_dir: Option<String>,
+    use_runtime: bool,
+    frames: usize,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut args = Args {
+        cmd: String::new(),
+        config: None,
+        csv_dir: None,
+        use_runtime: false,
+        frames: 3,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--config" => {
+                args.config =
+                    Some(it.next().ok_or_else(|| anyhow::anyhow!("--config needs a path"))?)
+            }
+            "--csv" => {
+                args.csv_dir =
+                    Some(it.next().ok_or_else(|| anyhow::anyhow!("--csv needs a dir"))?)
+            }
+            "--runtime" => args.use_runtime = true,
+            "--frames" => {
+                args.frames = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--frames needs a count"))?
+                    .parse()?
+            }
+            "--version" => {
+                println!("psoc-dma {}", psoc_dma::version());
+                std::process::exit(0);
+            }
+            flag if flag.starts_with('-') => bail!("unknown flag {flag}"),
+            cmd if args.cmd.is_empty() => args.cmd = cmd.to_string(),
+            extra => bail!("unexpected argument {extra}"),
+        }
+    }
+    if args.cmd.is_empty() {
+        args.cmd = "all".into();
+    }
+    Ok(args)
+}
+
+fn load_cfg(args: &Args) -> Result<SimConfig> {
+    Ok(match &args.config {
+        Some(p) => SimConfig::load(Path::new(p))?,
+        None => SimConfig::default(),
+    })
+}
+
+fn run_fig45(cfg: &SimConfig, args: &Args, fig5: bool) -> Result<()> {
+    let rows = loopback_sweep(cfg, &fig45_sizes(), &DriverKind::ALL)?;
+    if fig5 {
+        print!("{}", report::fig5_text(&rows));
+        println!();
+        print!("{}", report::plot::fig5_ascii(&rows, 72, 18));
+    } else {
+        print!("{}", report::fig4_text(&rows));
+    }
+    if let Some(dir) = &args.csv_dir {
+        report::save(&format!("{dir}/loopback_sweep.csv"), &report::sweep_csv(&rows))?;
+    }
+    Ok(())
+}
+
+fn run_table1(cfg: &SimConfig, args: &Args) -> Result<()> {
+    let rows = if args.use_runtime {
+        let rt = Runtime::load(&Runtime::default_dir())?;
+        eprintln!(
+            "runtime: platform={}, artifacts: {:?}",
+            rt.platform,
+            rt.names().collect::<Vec<_>>()
+        );
+        let (rows, plan) = table1_runtime(cfg, &rt, args.frames)?;
+        eprintln!(
+            "functional path: frame classified as class {} (logits {:?})",
+            plan.class, plan.logits
+        );
+        for p in &plan.plans {
+            eprintln!(
+                "  {}: tx {} B, rx {} B, sparsity in/out {:.2}/{:.2}",
+                p.name, p.timing.tx_bytes, p.timing.rx_bytes, p.sparsity_in, p.sparsity_out
+            );
+        }
+        rows
+    } else {
+        table1(cfg, args.frames)?
+    };
+    print!("{}", report::table1_text(&rows));
+    print!("{}", report::table1_paper_reference());
+    if let Some(dir) = &args.csv_dir {
+        report::save(&format!("{dir}/table1.csv"), &report::table1_csv(&rows))?;
+    }
+    Ok(())
+}
+
+fn run_ablation_buffer(cfg: &SimConfig) -> Result<()> {
+    for bytes in [256u64 << 10, 2 << 20] {
+        let rows = ablation_matrix(cfg, bytes)?;
+        print!("{}", report::ablation_text(&rows));
+        println!();
+    }
+    Ok(())
+}
+
+fn run_ablation_blocks(cfg: &SimConfig) -> Result<()> {
+    let chunks: Vec<u64> = (12..=20).map(|e| 1u64 << e).collect(); // 4KB..1MB
+    let rows = ablation_chunk_sweep(cfg, 4 << 20, &chunks)?;
+    println!("Blocks chunk-size sweep (4MB loop-back, double buffer):");
+    println!("{:>10} | {:>12}", "chunk", "RX total ms");
+    for (chunk, rx) in rows {
+        println!("{:>10} | {:>12.4}", report::size_label(chunk), rx.as_ms());
+    }
+    Ok(())
+}
+
+fn run_ablation_vgg(cfg: &SimConfig) -> Result<()> {
+    let ab = ablation_vgg(cfg)?;
+    print!("{}", report::vgg_text(&ab));
+    Ok(())
+}
+
+fn run_ablation_load(cfg: &SimConfig) -> Result<()> {
+    let rows = ablation_load(cfg, 1 << 20, &[0.0, 100.0, 200.0, 400.0, 800.0])?;
+    print!("{}", report::load_text(&rows));
+    Ok(())
+}
+
+/// Fit report + knob sensitivities against the paper's Table I anchors.
+fn run_calibrate(cfg: &SimConfig) -> Result<()> {
+    use psoc_dma::coordinator::calibrate;
+    let rep = calibrate::fit(cfg)?;
+    println!("Fit vs. paper Table I:");
+    println!("{:<12} {:<10} {:>12} {:>12} {:>9}", "driver", "metric", "paper", "measured", "err");
+    println!("{}", "-".repeat(60));
+    for c in &rep.cells {
+        println!(
+            "{:<12} {:<10} {:>12.4} {:>12.4} {:>8.1}%",
+            c.driver,
+            c.metric,
+            c.paper,
+            c.measured,
+            100.0 * c.rel_err()
+        );
+    }
+    println!(
+        "\ngeometric-mean |ratio| = {:.3}x; worst cell: {} {} ({:+.1}%); orderings {}",
+        rep.gmean_abs_ratio(),
+        rep.worst().driver,
+        rep.worst().metric,
+        100.0 * rep.worst().rel_err(),
+        if rep.orderings_hold() { "hold" } else { "VIOLATED" },
+    );
+
+    println!("\nSensitivity (elasticity per +20% knob bump; |e| >= 0.05 shown):");
+    println!("{:<24} {:<12} {:<10} {:>10}", "knob", "driver", "metric", "elasticity");
+    println!("{}", "-".repeat(60));
+    for s in calibrate::sensitivity(cfg)? {
+        if s.elasticity.abs() >= 0.05 {
+            println!(
+                "{:<24} {:<12} {:<10} {:>10.2}",
+                s.knob, s.driver, s.metric, s.elasticity
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Record a chrome://tracing timeline of one 256 KB loop-back round trip
+/// per driver into `results/trace_<driver>.json`.
+fn run_trace(cfg: &SimConfig) -> Result<()> {
+    use psoc_dma::drivers::{Driver, DriverConfig};
+    use psoc_dma::memory::buffer::CmaAllocator;
+    use psoc_dma::system::System;
+    let bytes = 256 << 10;
+    for kind in DriverKind::ALL {
+        let mut sys = System::loopback(cfg.clone());
+        sys.enable_trace();
+        let mut cma = CmaAllocator::zynq_default();
+        let mut drv = Driver::new(DriverConfig::table1(kind), &mut cma, cfg, bytes)?;
+        drv.transfer(&mut sys, bytes, bytes)?;
+        let trace = sys.trace.take().unwrap();
+        let path = format!(
+            "results/trace_{}.json",
+            kind.label().replace(' ', "_").replace('-', "_")
+        );
+        report::save(&path, &trace.to_chrome_json().to_string_compact())?;
+        println!(
+            "{path}: {} spans, {} markers — open in chrome://tracing or Perfetto",
+            trace.spans.len(),
+            trace.instants.len()
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    let cfg = load_cfg(&args)?;
+    match args.cmd.as_str() {
+        "fig4" => run_fig45(&cfg, &args, false)?,
+        "fig5" => run_fig45(&cfg, &args, true)?,
+        "table1" => run_table1(&cfg, &args)?,
+        "ablation-buffer" => run_ablation_buffer(&cfg)?,
+        "ablation-blocks" => run_ablation_blocks(&cfg)?,
+        "ablation-vgg" => run_ablation_vgg(&cfg)?,
+        "ablation-load" => run_ablation_load(&cfg)?,
+        "trace" => run_trace(&cfg)?,
+        "calibrate" => run_calibrate(&cfg)?,
+        "all" => {
+            run_fig45(&cfg, &args, false)?;
+            println!();
+            run_fig45(&cfg, &args, true)?;
+            println!();
+            run_table1(&cfg, &args)?;
+            println!();
+            run_ablation_buffer(&cfg)?;
+            run_ablation_blocks(&cfg)?;
+            println!();
+            run_ablation_vgg(&cfg)?;
+            println!();
+            run_ablation_load(&cfg)?;
+        }
+        other => bail!("unknown command {other}; see the README"),
+    }
+    Ok(())
+}

@@ -1,0 +1,236 @@
+//! Physically contiguous bounce-buffer allocator (CMA model).
+//!
+//! DMA descriptors address *physical* memory, so the drivers stage data in
+//! buffers carved out of a contiguous-memory-area reservation — exactly what
+//! the paper's user-level driver gets from `/dev/mem` + `mmap()` and the
+//! kernel driver from `dma_alloc_coherent`. The allocator is a first-fit
+//! free-list over a fixed region; it exists so the drivers' single- vs
+//! double-buffer schemes manage real reservations with real exhaustion
+//! behaviour (VGG19's 8 MB-limit ablation trips on this).
+
+use thiserror::Error;
+
+/// Physical address within the CMA region (offset from region base).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash, PartialOrd, Ord)]
+pub struct PhysAddr(pub u64);
+
+/// An allocated physically contiguous buffer.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct DmaBuffer {
+    pub addr: PhysAddr,
+    pub len: u64,
+}
+
+#[derive(Debug, Clone, Error, PartialEq, Eq)]
+pub enum AllocError {
+    #[error("CMA exhausted: requested {requested} bytes, largest free block {largest}")]
+    OutOfMemory { requested: u64, largest: u64 },
+    #[error("zero-length allocation")]
+    ZeroLength,
+    #[error("buffer {0:?} was not allocated from this pool (double free?)")]
+    BadFree(DmaBuffer),
+}
+
+/// First-fit free-list allocator with coalescing on free.
+pub struct CmaAllocator {
+    capacity: u64,
+    align: u64,
+    /// Sorted, non-overlapping, coalesced free extents (addr, len).
+    free: Vec<(u64, u64)>,
+    /// Live allocations, for double-free/invariant checking.
+    live: Vec<DmaBuffer>,
+}
+
+impl CmaAllocator {
+    /// `capacity` bytes of contiguous reservation; all allocations aligned
+    /// to `align` (AXI-DMA requires at least word alignment; Linux CMA
+    /// hands out pages).
+    pub fn new(capacity: u64, align: u64) -> Self {
+        assert!(align.is_power_of_two(), "alignment must be a power of two");
+        assert!(capacity > 0 && capacity % align == 0);
+        CmaAllocator { capacity, align, free: vec![(0, capacity)], live: Vec::new() }
+    }
+
+    /// Zynq-ish default: 128 MB CMA, 4 KB page alignment.
+    pub fn zynq_default() -> Self {
+        CmaAllocator::new(128 << 20, 4096)
+    }
+
+    fn round_up(&self, n: u64) -> u64 {
+        n.div_ceil(self.align) * self.align
+    }
+
+    pub fn alloc(&mut self, len: u64) -> Result<DmaBuffer, AllocError> {
+        if len == 0 {
+            return Err(AllocError::ZeroLength);
+        }
+        let want = self.round_up(len);
+        let mut largest = 0;
+        for i in 0..self.free.len() {
+            let (addr, flen) = self.free[i];
+            largest = largest.max(flen);
+            if flen >= want {
+                if flen == want {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (addr + want, flen - want);
+                }
+                let buf = DmaBuffer { addr: PhysAddr(addr), len };
+                self.live.push(buf);
+                return Ok(buf);
+            }
+        }
+        Err(AllocError::OutOfMemory { requested: want, largest })
+    }
+
+    pub fn free(&mut self, buf: DmaBuffer) -> Result<(), AllocError> {
+        let Some(pos) = self.live.iter().position(|b| *b == buf) else {
+            return Err(AllocError::BadFree(buf));
+        };
+        self.live.swap_remove(pos);
+        let addr = buf.addr.0;
+        let len = self.round_up(buf.len);
+        // Insert sorted and coalesce with neighbours.
+        let idx = self.free.partition_point(|&(a, _)| a < addr);
+        self.free.insert(idx, (addr, len));
+        // Coalesce right then left.
+        if idx + 1 < self.free.len() {
+            let (a, l) = self.free[idx];
+            let (na, nl) = self.free[idx + 1];
+            if a + l == na {
+                self.free[idx] = (a, l + nl);
+                self.free.remove(idx + 1);
+            }
+        }
+        if idx > 0 {
+            let (pa, pl) = self.free[idx - 1];
+            let (a, l) = self.free[idx];
+            if pa + pl == a {
+                self.free[idx - 1] = (pa, pl + l);
+                self.free.remove(idx);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.free.iter().map(|&(_, l)| l).sum()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Invariant check used by the property tests: free extents sorted,
+    /// non-overlapping, coalesced, within capacity, and disjoint from all
+    /// live allocations.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut prev_end = 0u64;
+        for (i, &(a, l)) in self.free.iter().enumerate() {
+            if l == 0 {
+                return Err(format!("empty free extent at {i}"));
+            }
+            if i > 0 && a < prev_end {
+                return Err("free extents overlap or unsorted".into());
+            }
+            if i > 0 && a == prev_end {
+                return Err("adjacent free extents not coalesced".into());
+            }
+            if a + l > self.capacity {
+                return Err("free extent beyond capacity".into());
+            }
+            prev_end = a + l;
+        }
+        for b in &self.live {
+            let (ba, bl) = (b.addr.0, self.round_up(b.len));
+            for &(fa, fl) in &self.free {
+                if ba < fa + fl && fa < ba + bl {
+                    return Err(format!("live buffer {b:?} overlaps free extent"));
+                }
+            }
+            if ba % self.align != 0 {
+                return Err(format!("misaligned live buffer {b:?}"));
+            }
+        }
+        let live_total: u64 = self.live.iter().map(|b| self.round_up(b.len)).sum();
+        if live_total + self.free_bytes() != self.capacity {
+            return Err("accounting mismatch: live + free != capacity".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = CmaAllocator::new(1 << 20, 4096);
+        let b1 = a.alloc(5000).unwrap();
+        assert_eq!(b1.addr, PhysAddr(0));
+        let b2 = a.alloc(4096).unwrap();
+        assert_eq!(b2.addr, PhysAddr(8192), "5000 rounds up to 2 pages");
+        a.check_invariants().unwrap();
+        a.free(b1).unwrap();
+        a.check_invariants().unwrap();
+        a.free(b2).unwrap();
+        assert_eq!(a.free_bytes(), 1 << 20);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn coalescing_restores_one_extent() {
+        let mut a = CmaAllocator::new(64 * 4096, 4096);
+        let bufs: Vec<_> = (0..8).map(|_| a.alloc(4096).unwrap()).collect();
+        // Free in an interleaved order to exercise left/right coalescing.
+        for i in [1usize, 3, 5, 7, 0, 2, 4, 6] {
+            a.free(bufs[i]).unwrap();
+            a.check_invariants().unwrap();
+        }
+        assert_eq!(a.free.len(), 1);
+        assert_eq!(a.free_bytes(), 64 * 4096);
+    }
+
+    #[test]
+    fn out_of_memory_reports_largest_block() {
+        let mut a = CmaAllocator::new(8 * 4096, 4096);
+        let _b = a.alloc(6 * 4096).unwrap();
+        match a.alloc(4 * 4096) {
+            Err(AllocError::OutOfMemory { requested, largest }) => {
+                assert_eq!(requested, 4 * 4096);
+                assert_eq!(largest, 2 * 4096);
+            }
+            other => panic!("expected OOM, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut a = CmaAllocator::new(1 << 20, 4096);
+        let b = a.alloc(100).unwrap();
+        a.free(b).unwrap();
+        assert!(matches!(a.free(b), Err(AllocError::BadFree(_))));
+    }
+
+    #[test]
+    fn zero_len_rejected() {
+        let mut a = CmaAllocator::new(1 << 20, 4096);
+        assert_eq!(a.alloc(0), Err(AllocError::ZeroLength));
+    }
+
+    #[test]
+    fn first_fit_reuses_gap() {
+        let mut a = CmaAllocator::new(16 * 4096, 4096);
+        let b1 = a.alloc(4 * 4096).unwrap();
+        let _b2 = a.alloc(4 * 4096).unwrap();
+        a.free(b1).unwrap();
+        let b3 = a.alloc(2 * 4096).unwrap();
+        assert_eq!(b3.addr, PhysAddr(0), "first fit takes the front gap");
+        a.check_invariants().unwrap();
+    }
+}

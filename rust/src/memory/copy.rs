@@ -1,0 +1,126 @@
+//! CPU memcpy cost model: virtual-space <-> physical-bounce-buffer copies.
+//!
+//! The paper's three drivers differ in *where and when* they pay this cost:
+//!  * user-level drivers `memcpy()` into an **uncached** CMA bounce buffer
+//!    mapped through `/dev/mem` (stores bypass L2, ~half the bandwidth);
+//!  * the kernel driver's `copy_from_user`/`copy_to_user` runs on cached
+//!    kernel mappings (and flushes afterwards, folded into the rate), and
+//!    is chunked so it pipelines with the DMA engine.
+//!
+//! The model: bandwidth depends on whether the working set fits L2, whether
+//! the mapping is cached, and whether a DMA transfer is concurrently hitting
+//! DDR (contention derating).
+
+use crate::config::SimConfig;
+use crate::sim::time::Dur;
+
+/// Which mapping the CPU copies through.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CopyKind {
+    /// memcpy to/from an uncached user-mapped CMA buffer (user-level
+    /// drivers).
+    UserUncached,
+    /// copy_{from,to}_user on cached kernel mappings (kernel driver).
+    KernelCached,
+}
+
+#[derive(Clone, Debug)]
+pub struct CopyModel {
+    bw_cached_bps: f64,
+    bw_ddr_bps: f64,
+    cache_threshold: u64,
+    dma_contention: f64,
+    uncached_factor: f64,
+}
+
+impl CopyModel {
+    pub fn new(cfg: &SimConfig) -> Self {
+        CopyModel {
+            bw_cached_bps: cfg.memcpy_bw_cached_bps,
+            bw_ddr_bps: cfg.memcpy_bw_ddr_bps,
+            cache_threshold: cfg.memcpy_cache_threshold_bytes,
+            dma_contention: cfg.memcpy_dma_contention,
+            uncached_factor: cfg.uncached_copy_factor,
+        }
+    }
+
+    /// Effective bandwidth for one copy operation.
+    pub fn bandwidth(&self, bytes: u64, kind: CopyKind, dma_active: bool) -> f64 {
+        let mut bw = if bytes <= self.cache_threshold {
+            self.bw_cached_bps
+        } else {
+            self.bw_ddr_bps
+        };
+        if kind == CopyKind::UserUncached {
+            // Uncached stores cannot merge in L2; reads stall the pipeline.
+            bw *= self.uncached_factor;
+        }
+        if dma_active {
+            bw *= self.dma_contention;
+        }
+        bw
+    }
+
+    /// CPU time to copy `bytes`.
+    pub fn copy_time(&self, bytes: u64, kind: CopyKind, dma_active: bool) -> Dur {
+        Dur::for_bytes(bytes, self.bandwidth(bytes, kind, dma_active))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CopyModel {
+        let mut cfg = SimConfig::default();
+        cfg.memcpy_bw_cached_bps = 1e9;
+        cfg.memcpy_bw_ddr_bps = 5e8;
+        cfg.memcpy_cache_threshold_bytes = 1024;
+        cfg.memcpy_dma_contention = 0.5;
+        cfg.uncached_copy_factor = 0.5;
+        CopyModel::new(&cfg)
+    }
+
+    #[test]
+    fn small_copies_run_at_cache_speed() {
+        let m = model();
+        assert_eq!(m.bandwidth(1024, CopyKind::KernelCached, false), 1e9);
+        assert_eq!(m.copy_time(1000, CopyKind::KernelCached, false), Dur(1000));
+    }
+
+    #[test]
+    fn large_copies_degrade_to_ddr_speed() {
+        let m = model();
+        assert_eq!(m.bandwidth(1025, CopyKind::KernelCached, false), 5e8);
+        assert_eq!(m.copy_time(5000, CopyKind::KernelCached, false), Dur(10_000));
+    }
+
+    #[test]
+    fn uncached_mapping_halves_bandwidth() {
+        let m = model();
+        assert_eq!(m.bandwidth(100, CopyKind::UserUncached, false), 0.5e9);
+    }
+
+    #[test]
+    fn dma_contention_stacks_multiplicatively() {
+        let m = model();
+        // uncached (0.5) * contention (0.5) = 0.25 of cached bw.
+        assert_eq!(m.bandwidth(100, CopyKind::UserUncached, true), 0.25e9);
+    }
+
+    #[test]
+    fn kernel_beats_user_at_every_size() {
+        let m = CopyModel::new(&SimConfig::default());
+        for bytes in [64u64, 4096, 65536, 1 << 20, 6 << 20] {
+            let u = m.copy_time(bytes, CopyKind::UserUncached, true);
+            let k = m.copy_time(bytes, CopyKind::KernelCached, true);
+            assert!(k <= u, "kernel copy slower than user copy at {bytes}B");
+        }
+    }
+
+    #[test]
+    fn zero_bytes_is_free() {
+        let m = model();
+        assert_eq!(m.copy_time(0, CopyKind::UserUncached, true), Dur::ZERO);
+    }
+}

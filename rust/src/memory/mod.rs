@@ -1,0 +1,10 @@
+//! PS memory system: DDR3 controller model, contiguous (CMA) buffer
+//! allocator, and the CPU memcpy cost model.
+
+pub mod buffer;
+pub mod copy;
+pub mod ddr;
+
+pub use buffer::{CmaAllocator, DmaBuffer, PhysAddr};
+pub use copy::{CopyKind, CopyModel};
+pub use ddr::{DdrController, DdrDir, Requester};

@@ -1,0 +1,141 @@
+//! OS cost price list: what each kernel-boundary crossing costs the CPU.
+//!
+//! Constants come from [`SimConfig`] (calibrated per DESIGN.md §6 against
+//! ARM A9 embedded-Linux measurements and the paper's own Table I
+//! deltas). Optional Gaussian jitter makes sweep plots realistically
+//! noisy; tests run with jitter disabled for bit-exact assertions.
+
+use crate::config::SimConfig;
+use crate::sim::rng::Pcg32;
+use crate::sim::time::Dur;
+
+pub struct OsCosts {
+    syscall_entry: Dur,
+    syscall_exit: Dur,
+    ctx_switch: Dur,
+    gic_latency: Dur,
+    isr_entry: Dur,
+    isr_dma_handler: Dur,
+    wake_latency: Dur,
+    jitter_frac: f64,
+    rng: Pcg32,
+}
+
+impl OsCosts {
+    pub fn new(cfg: &SimConfig) -> Self {
+        OsCosts {
+            syscall_entry: Dur(cfg.syscall_entry_ns),
+            syscall_exit: Dur(cfg.syscall_exit_ns),
+            ctx_switch: Dur(cfg.ctx_switch_ns),
+            gic_latency: Dur(cfg.gic_latency_ns),
+            isr_entry: Dur(cfg.isr_entry_ns),
+            isr_dma_handler: Dur(cfg.isr_dma_handler_ns),
+            wake_latency: Dur(cfg.wake_latency_ns),
+            jitter_frac: cfg.os_jitter_frac,
+            rng: Pcg32::with_stream(cfg.seed, 0x05C057),
+        }
+    }
+
+    /// Apply the configured jitter: `d * max(0, N(1, frac))`, clamped so
+    /// a cost never goes negative or more than doubles.
+    fn jittered(&mut self, d: Dur) -> Dur {
+        if self.jitter_frac == 0.0 || d == Dur::ZERO {
+            return d;
+        }
+        let g = self.rng.next_gaussian();
+        let factor = (1.0 + g * self.jitter_frac).clamp(0.5, 2.0);
+        d.scaled(factor)
+    }
+
+    /// Full syscall round trip (entry + exit), e.g. `ioctl`, `usleep`.
+    pub fn syscall(&mut self) -> Dur {
+        let d = self.syscall_entry + self.syscall_exit;
+        self.jittered(d)
+    }
+
+    /// Entering the kernel only (the exit is charged when control
+    /// returns, possibly after a block).
+    pub fn syscall_entry(&mut self) -> Dur {
+        let d = self.syscall_entry;
+        self.jittered(d)
+    }
+
+    pub fn syscall_exit(&mut self) -> Dur {
+        let d = self.syscall_exit;
+        self.jittered(d)
+    }
+
+    pub fn ctx_switch(&mut self) -> Dur {
+        let d = self.ctx_switch;
+        self.jittered(d)
+    }
+
+    /// Peripheral edge → CPU IRQ assertion (GIC distributor latency).
+    /// Not jittered: it is hardware, not software.
+    pub fn gic_latency(&self) -> Dur {
+        self.gic_latency
+    }
+
+    /// CPU-side IRQ cost: vector + prologue + the AXI-DMA handler body.
+    pub fn isr(&mut self) -> Dur {
+        let d = self.isr_entry + self.isr_dma_handler;
+        self.jittered(d)
+    }
+
+    /// Waking a task blocked in the driver (bottom half + runqueue) and
+    /// switching to it.
+    pub fn wake_and_switch(&mut self) -> Dur {
+        let d = self.wake_latency + self.ctx_switch;
+        self.jittered(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs(jitter: f64) -> OsCosts {
+        let mut cfg = SimConfig::default();
+        cfg.os_jitter_frac = jitter;
+        OsCosts::new(&cfg)
+    }
+
+    #[test]
+    fn deterministic_without_jitter() {
+        let mut a = costs(0.0);
+        let mut b = costs(0.0);
+        for _ in 0..10 {
+            assert_eq!(a.syscall(), b.syscall());
+            assert_eq!(a.isr(), b.isr());
+        }
+        let cfg = SimConfig::default();
+        assert_eq!(a.syscall(), Dur(cfg.syscall_entry_ns + cfg.syscall_exit_ns));
+    }
+
+    #[test]
+    fn jitter_stays_bounded_and_seeded() {
+        let mut a = costs(0.2);
+        let base = SimConfig::default().syscall_entry_ns + SimConfig::default().syscall_exit_ns;
+        let mut saw_different = false;
+        for _ in 0..100 {
+            let d = a.syscall().ns();
+            assert!(d >= base / 2 && d <= base * 2, "jitter out of clamp: {d}");
+            if d != base {
+                saw_different = true;
+            }
+        }
+        assert!(saw_different, "jitter had no effect");
+        // Same seed -> same sequence.
+        let mut b = costs(0.2);
+        let mut c = costs(0.2);
+        let sb: Vec<_> = (0..20).map(|_| b.syscall()).collect();
+        let sc: Vec<_> = (0..20).map(|_| c.syscall()).collect();
+        assert_eq!(sb, sc);
+    }
+
+    #[test]
+    fn split_syscall_sums_to_round_trip() {
+        let mut a = costs(0.0);
+        assert_eq!(a.syscall_entry() + a.syscall_exit(), a.syscall());
+    }
+}

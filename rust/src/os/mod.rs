@@ -1,0 +1,19 @@
+//! Embedded-Linux OS model.
+//!
+//! The paper's three drivers differ in *which* OS costs they pay and
+//! *when* the CPU is free for other tasks; this module provides both
+//! halves:
+//!
+//! * [`costs`] — the price list: syscall entry/exit, context switch,
+//!   interrupt delivery path (GIC → ISR → wake), with optional jitter;
+//! * [`sched`] — a small round-robin scheduler with task states, used to
+//!   run the PS-side application tasks (frame collection, normalisation)
+//!   concurrently with transfers in the end-to-end example, and to
+//!   account the "CPU freed for other tasks" metric the paper argues
+//!   qualitatively.
+
+pub mod costs;
+pub mod sched;
+
+pub use costs::OsCosts;
+pub use sched::{Scheduler, TaskState};

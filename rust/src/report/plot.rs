@@ -1,0 +1,131 @@
+//! Terminal plots: log-log ASCII rendering of the sweep curves so the
+//! figures are *visible* without leaving the terminal (the CSVs remain
+//! the machine-readable artefact).
+
+use crate::coordinator::experiments::SweepRow;
+use crate::drivers::DriverKind;
+
+const GLYPHS: [(DriverKind, char); 3] = [
+    (DriverKind::UserPolling, 'p'),
+    (DriverKind::UserScheduled, 's'),
+    (DriverKind::KernelIrq, 'k'),
+];
+
+/// Render the Fig. 5 RX per-byte curves as a log-log scatter.
+pub fn fig5_ascii(rows: &[SweepRow], width: usize, height: usize) -> String {
+    let pts: Vec<(DriverKind, f64, f64)> = rows
+        .iter()
+        .map(|r| (r.driver, r.bytes as f64, r.rx_us_per_byte()))
+        .filter(|&(_, x, y)| x > 0.0 && y > 0.0)
+        .collect();
+    if pts.is_empty() {
+        return "(no data)".into();
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(_, x, y) in &pts {
+        let (lx, ly) = (x.log10(), y.log10());
+        x0 = x0.min(lx);
+        x1 = x1.max(lx);
+        y0 = y0.min(ly);
+        y1 = y1.max(ly);
+    }
+    // Avoid a degenerate axis when all values coincide.
+    if (x1 - x0).abs() < 1e-9 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-9 {
+        y1 = y0 + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for &(kind, x, y) in &pts {
+        let cx = (((x.log10() - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+        let cy = (((y.log10() - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+        let row = height - 1 - cy; // origin bottom-left
+        let cell = &mut grid[row][cx];
+        let g = GLYPHS.iter().find(|(k, _)| *k == kind).unwrap().1;
+        // Overlapping drivers: mark the collision.
+        *cell = if *cell == ' ' || *cell == g { g } else { '*' };
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "RX us/byte (log) from {:.2e} to {:.2e}   [p]=polling [s]=scheduled [k]=kernel [*]=overlap\n",
+        10f64.powf(y0),
+        10f64.powf(y1)
+    ));
+    for row in &grid {
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push('+');
+    out.extend(std::iter::repeat_n('-', width));
+    out.push('\n');
+    out.push_str(&format!(
+        " bytes (log) from {:.0} to {:.2e}\n",
+        10f64.powf(x0),
+        10f64.powf(x1)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::Dur;
+
+    fn rows() -> Vec<SweepRow> {
+        // A falling per-byte curve: rx_time = 100us + bytes * 10ns.
+        let mut v = Vec::new();
+        for e in 3..=20 {
+            let bytes = 1u64 << e;
+            for kind in DriverKind::ALL {
+                v.push(SweepRow {
+                    bytes,
+                    driver: kind,
+                    tx: Dur(bytes * 8),
+                    rx: Dur(100_000 + bytes * 10),
+                });
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn plot_has_requested_dimensions() {
+        let p = fig5_ascii(&rows(), 60, 16);
+        let lines: Vec<&str> = p.lines().collect();
+        // header + 16 grid rows + axis + footer.
+        assert_eq!(lines.len(), 19);
+        assert!(lines[1].len() >= 60);
+    }
+
+    #[test]
+    fn all_glyphs_appear() {
+        let p = fig5_ascii(&rows(), 72, 20);
+        // Identical curves for all drivers here, so points collide.
+        assert!(p.contains('*') || (p.contains('p') && p.contains('k')));
+    }
+
+    #[test]
+    fn monotone_curve_slopes_down() {
+        // First grid column's mark must be above the last column's.
+        let p = fig5_ascii(&rows(), 60, 16);
+        let lines: Vec<&str> = p.lines().skip(1).take(16).collect();
+        let row_of = |col: usize| {
+            lines
+                .iter()
+                .position(|l| l.chars().nth(col + 1).is_some_and(|c| c != ' '))
+        };
+        let first = row_of(0).expect("left point missing");
+        let last = row_of(59).expect("right point missing");
+        assert!(first < last, "curve should fall left→right: {first} vs {last}");
+    }
+
+    #[test]
+    fn empty_input_is_graceful() {
+        assert_eq!(fig5_ascii(&[], 10, 5), "(no data)");
+    }
+}

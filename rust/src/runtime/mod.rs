@@ -1,0 +1,182 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas CNN and executes its
+//! numerics from the rust hot path.
+//!
+//! Python runs once, at `make artifacts`: `python/compile/aot.py` lowers
+//! each RoShamBo layer (and the fused full network) to **HLO text** and
+//! writes `artifacts/manifest.json` describing them. This module loads
+//! that directory, compiles every module on the PJRT CPU client, and
+//! exposes `execute` for the coordinator. No Python is ever on the
+//! request path.
+//!
+//! HLO *text* (not serialized `HloModuleProto`) is the interchange
+//! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+//! (see /opt/xla-example/README.md and aot_recipe.md).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One compiled artifact (a layer or the fused net).
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    /// Row-major input/output shapes as lowered (leading batch of 1).
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    pub fn in_elems(&self) -> usize {
+        self.in_shape.iter().product()
+    }
+
+    pub fn out_elems(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+}
+
+/// The PJRT client plus every compiled model from `artifacts/`.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    artifacts: BTreeMap<String, Artifact>,
+    pub platform: String,
+}
+
+fn shape_from_json(v: &Json) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("shape must be an array"))?
+        .iter()
+        .map(|d| {
+            d.as_u64()
+                .map(|u| u as usize)
+                .ok_or_else(|| anyhow!("shape dim must be a non-negative integer"))
+        })
+        .collect()
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        let arts = manifest
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest.json lacks an \"artifacts\" object"))?;
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let platform = client.platform_name();
+
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in arts {
+            let file = dir.join(
+                spec.get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact {name} lacks \"file\""))?,
+            );
+            let in_shape = shape_from_json(spec.get("in_shape"))
+                .with_context(|| format!("artifact {name}: in_shape"))?;
+            let out_shape = shape_from_json(spec.get("out_shape"))
+                .with_context(|| format!("artifact {name}: out_shape"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            artifacts.insert(
+                name.clone(),
+                Artifact { name: name.clone(), file, in_shape, out_shape, exe },
+            );
+        }
+        Ok(Runtime { client, artifacts, platform })
+    }
+
+    /// Default artifact directory (workspace-relative).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(String::as_str)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.get(name)
+    }
+
+    /// Execute one artifact on a single f32 input tensor; returns the
+    /// flattened f32 output. Shapes are validated against the manifest.
+    pub fn execute(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let art = self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "no artifact named {name} (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })?;
+        anyhow::ensure!(
+            input.len() == art.in_elems(),
+            "artifact {name} expects {} input elements ({:?}), got {}",
+            art.in_elems(),
+            art.in_shape,
+            input.len()
+        );
+        let dims: Vec<i64> = art.in_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .context("reshaping input literal")?;
+        let result = art.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let values = out.to_vec::<f32>().context("reading f32 output")?;
+        anyhow::ensure!(
+            values.len() == art.out_elems(),
+            "artifact {name} produced {} elements, manifest says {:?}",
+            values.len(),
+            art.out_shape
+        );
+        Ok(values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration tests that execute real artifacts live in
+    // rust/tests/e2e_runtime.rs (they require `make artifacts`). Here:
+    // manifest/shape plumbing only.
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let Err(err) = Runtime::load(Path::new("/nonexistent/dir")) else {
+            panic!("load of a nonexistent dir succeeded")
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn shape_parsing() {
+        let j = Json::parse("[1, 64, 64, 1]").unwrap();
+        assert_eq!(shape_from_json(&j).unwrap(), vec![1, 64, 64, 1]);
+        assert!(shape_from_json(&Json::parse("[1, -2]").unwrap()).is_err());
+        assert!(shape_from_json(&Json::parse("\"x\"").unwrap()).is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Event-to-frame collection and normalisation — the PS-side software
+//! task of the paper's application.
+//!
+//! "By collecting a fixed number of events from this sensor a histogram
+//! of those events can be used as a frame to be computed by the CNN
+//! accelerator." The collector bins events into the 64×64 CNN input
+//! (downsampling the 240×180 sensor onto the centre square), then
+//! normalises the histogram to Q8.8 for the accelerator. It also exposes
+//! a CPU-time estimate for the whole collect+normalise step so the
+//! scheduler can account it as background demand during transfers.
+
+use crate::cnn::roshambo::INPUT_SIDE;
+use crate::sensor::davis::{Event, SENSOR_H, SENSOR_W};
+use crate::sim::time::Dur;
+
+/// A normalised frame ready for the CNN: Q8.8 values in `[0, 1]` range
+/// (i.e. 0..=256), row-major `INPUT_SIDE × INPUT_SIDE`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NormalizedFrame {
+    pub data: Vec<i16>,
+    /// Events accumulated into this frame.
+    pub events: usize,
+    /// Zero fraction — DVS frames are sparse, which NullHop exploits.
+    pub sparsity: f64,
+}
+
+/// Accumulates events into a histogram and produces normalised frames.
+pub struct FrameCollector {
+    /// Events per frame (the paper's fixed-count window).
+    pub events_per_frame: usize,
+    hist: Vec<u32>,
+    count: usize,
+    /// CPU cost model: ns per event binned + ns per pixel normalised
+    /// (ARM A9-ish constants; the *shape* — work scales with events +
+    /// pixels — is what matters for the scheduler interaction).
+    pub ns_per_event: u64,
+    pub ns_per_pixel: u64,
+    pub frames_produced: u64,
+}
+
+impl FrameCollector {
+    pub fn new(events_per_frame: usize) -> Self {
+        FrameCollector {
+            events_per_frame,
+            hist: vec![0; INPUT_SIDE * INPUT_SIDE],
+            count: 0,
+            ns_per_event: 55,
+            ns_per_pixel: 18,
+            frames_produced: 0,
+        }
+    }
+
+    /// Map a sensor coordinate onto the CNN input grid: centre square of
+    /// the 240×180 array, downsampled to 64×64.
+    fn bin(x: u16, y: u16) -> Option<usize> {
+        let side = SENSOR_H.min(SENSOR_W); // 180: largest centred square
+        let x0 = (SENSOR_W - side) / 2;
+        let y0 = (SENSOR_H - side) / 2;
+        let (x, y) = (x as usize, y as usize);
+        if x < x0 || x >= x0 + side || y < y0 || y >= y0 + side {
+            return None;
+        }
+        let fx = (x - x0) * INPUT_SIDE / side;
+        let fy = (y - y0) * INPUT_SIDE / side;
+        Some(fy * INPUT_SIDE + fx)
+    }
+
+    /// Feed one event; returns a frame when the window fills.
+    pub fn push(&mut self, ev: &Event) -> Option<NormalizedFrame> {
+        if let Some(i) = Self::bin(ev.x, ev.y) {
+            self.hist[i] += 1;
+        }
+        self.count += 1;
+        if self.count >= self.events_per_frame {
+            Some(self.finish())
+        } else {
+            None
+        }
+    }
+
+    /// Close the current window: normalise to Q8.8 and reset.
+    fn finish(&mut self) -> NormalizedFrame {
+        let max = *self.hist.iter().max().unwrap();
+        let data: Vec<i16> = if max == 0 {
+            vec![0; self.hist.len()]
+        } else {
+            self.hist
+                .iter()
+                .map(|&h| ((h as f64 / max as f64) * 256.0).round() as i16)
+                .collect()
+        };
+        let zeros = data.iter().filter(|&&v| v == 0).count();
+        let frame = NormalizedFrame {
+            sparsity: zeros as f64 / data.len() as f64,
+            events: self.count,
+            data,
+        };
+        self.hist.iter_mut().for_each(|h| *h = 0);
+        self.count = 0;
+        self.frames_produced += 1;
+        frame
+    }
+
+    /// CPU time for collecting + normalising one frame (scheduler
+    /// demand).
+    pub fn frame_cpu_cost(&self) -> Dur {
+        Dur(self.events_per_frame as u64 * self.ns_per_event
+            + (INPUT_SIDE * INPUT_SIDE) as u64 * self.ns_per_pixel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sensor::davis::{DavisConfig, DavisSim};
+
+    #[test]
+    fn fills_after_configured_events() {
+        let mut c = FrameCollector::new(100);
+        let mut s = DavisSim::new(DavisConfig::default());
+        let mut frames = 0;
+        for _ in 0..350 {
+            let e = s.next_event();
+            if c.push(&e).is_some() {
+                frames += 1;
+            }
+        }
+        assert_eq!(frames, 3);
+        assert_eq!(c.frames_produced, 3);
+    }
+
+    #[test]
+    fn frame_is_q88_normalised() {
+        let mut c = FrameCollector::new(5000);
+        let mut s = DavisSim::new(DavisConfig::default());
+        let frame = loop {
+            let e = s.next_event();
+            if let Some(f) = c.push(&e) {
+                break f;
+            }
+        };
+        assert_eq!(frame.data.len(), INPUT_SIDE * INPUT_SIDE);
+        let max = *frame.data.iter().max().unwrap();
+        assert_eq!(max, 256, "peak bin normalises to 1.0 in Q8.8");
+        assert!(frame.data.iter().all(|&v| (0..=256).contains(&v)));
+    }
+
+    #[test]
+    fn dvs_frames_are_sparse() {
+        let mut c = FrameCollector::new(5000);
+        let mut s = DavisSim::new(DavisConfig::default());
+        let frame = loop {
+            if let Some(f) = c.push(&s.next_event()) {
+                break f;
+            }
+        };
+        assert!(
+            frame.sparsity > 0.4,
+            "a blob frame should be mostly zeros, got {}",
+            frame.sparsity
+        );
+    }
+
+    #[test]
+    fn bin_maps_centre_square() {
+        assert!(FrameCollector::bin(0, 0).is_none(), "left margin cropped");
+        assert!(FrameCollector::bin(239, 90).is_none(), "right margin cropped");
+        let centre = FrameCollector::bin(120, 90).unwrap();
+        assert_eq!(centre, (90 - 0) * 0 + 32 * INPUT_SIDE + 32);
+    }
+
+    #[test]
+    fn empty_window_yields_zero_frame() {
+        let mut c = FrameCollector::new(1);
+        // An event outside the centre square bins nowhere.
+        let e = Event {
+            x: 0,
+            y: 0,
+            t: crate::sim::time::SimTime(0),
+            polarity: crate::sensor::davis::Polarity::On,
+        };
+        let f = c.push(&e).unwrap();
+        assert!(f.data.iter().all(|&v| v == 0));
+        assert_eq!(f.sparsity, 1.0);
+    }
+
+    #[test]
+    fn cpu_cost_scales_with_window() {
+        let small = FrameCollector::new(1000).frame_cpu_cost();
+        let large = FrameCollector::new(10_000).frame_cpu_cost();
+        assert!(large > small);
+    }
+}

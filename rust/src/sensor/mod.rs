@@ -1,0 +1,15 @@
+//! DAVIS neuromorphic sensor model + frame collection.
+//!
+//! The paper's application pipeline starts at a DAVIS dynamic vision
+//! sensor: per-pixel luminosity-change events stream over USB into the
+//! PS, where a software task collects a fixed number of events into a
+//! histogram "frame" and normalises it for the CNN. That collection +
+//! normalisation work is exactly the "other important processes" the
+//! scheduled/kernel drivers free the CPU for, so the end-to-end example
+//! runs it as a scheduler task concurrent with the DMA transfers.
+
+pub mod davis;
+pub mod frame;
+
+pub use davis::{DavisConfig, DavisSim, Event as DvsEvent, Polarity};
+pub use frame::{FrameCollector, NormalizedFrame};

@@ -1,0 +1,210 @@
+//! The event calendar: virtual clock + priority queue.
+//!
+//! [`Engine`] is deliberately tiny — everything interesting happens in the
+//! component state machines ([`crate::memory::ddr`], [`crate::axi::dma`],
+//! [`crate::os`]) and the [`crate::system::System`] dispatcher that owns
+//! them. Keeping the calendar separate makes the hot path (push/pop on a
+//! binary heap) easy to benchmark and the components easy to unit-test with
+//! a bare `Engine`.
+
+use crate::sim::event::{Channel, Event, Scheduled};
+use crate::sim::time::{Dur, SimTime};
+
+/// Same-timestamp dedup slots for the idempotent "kick" events. Every
+/// producer liberally posts DevKick/DmaKick/DdrIssue notifications; two
+/// *pending* copies at the same instant are pure heap churn (the §Perf
+/// profile showed `BinaryHeap::pop` at 35% of the sweep). A kick that
+/// has already *popped* must not suppress a re-arm, so `pop` clears the
+/// slot — dropping only genuinely redundant duplicates.
+#[inline]
+fn dedup_slot(ev: &Event) -> Option<usize> {
+    match ev {
+        Event::DevKick => Some(0),
+        Event::DmaKick { ch: Channel::Mm2s } => Some(1),
+        Event::DmaKick { ch: Channel::S2mm } => Some(2),
+        Event::DdrIssue => Some(3),
+        _ => None,
+    }
+}
+
+/// Virtual clock and event calendar.
+///
+/// The calendar is an *unsorted vector* scanned linearly on pop, not a
+/// binary heap: the steady-state queue depth of this model is tiny
+/// (≤ ~8 events — one completion per hardware unit plus a few kicks),
+/// where a branchy sift-down loses to a single cache-line scan. The
+/// §Perf log in EXPERIMENTS.md records the measured swap (-20% on the
+/// full sweep); a workload that somehow queued thousands of events
+/// would want the heap back.
+pub struct Engine {
+    now: SimTime,
+    seq: u64,
+    queue: Vec<Scheduled>,
+    /// Pending same-timestamp kick events (see [`dedup_slot`]).
+    kick_pending: [Option<SimTime>; 4],
+    /// Total events dispatched (for the §Perf hot-path benches and as a
+    /// runaway-simulation guard).
+    pub dispatched: u64,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Engine {
+            now: SimTime::ZERO,
+            seq: 0,
+            // Pre-size: the steady state of a transfer keeps only a handful
+            // of events in flight; 64 slots absorb any startup burst.
+            queue: Vec::with_capacity(64),
+            kick_pending: [None; 4],
+            dispatched: 0,
+        }
+    }
+
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `ev` to fire `after` from now.
+    #[inline]
+    pub fn schedule(&mut self, after: Dur, ev: Event) {
+        self.schedule_at(self.now + after, ev);
+    }
+
+    /// Schedule `ev` at an absolute time (must not be in the past).
+    #[inline]
+    pub fn schedule_at(&mut self, at: SimTime, ev: Event) {
+        debug_assert!(at >= self.now, "scheduling into the past: {at:?} < {:?}", self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Scheduled { at, seq, ev });
+    }
+
+    /// Schedule `ev` immediately (same timestamp, FIFO after already-queued
+    /// events at this time). Idempotent kick events with a copy already
+    /// pending at this instant are dropped (see [`dedup_slot`]).
+    #[inline]
+    pub fn schedule_now(&mut self, ev: Event) {
+        if let Some(s) = dedup_slot(&ev) {
+            if self.kick_pending[s] == Some(self.now) {
+                return;
+            }
+            self.kick_pending[s] = Some(self.now);
+        }
+        self.schedule_at(self.now, ev);
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(SimTime, Event)> {
+        let i = self.earliest()?;
+        let s = self.queue.swap_remove(i);
+        debug_assert!(s.at >= self.now);
+        self.now = s.at;
+        self.dispatched += 1;
+        // Re-arm the dedup slot: a kick posted *after* this pop at the
+        // same instant is a fresh wakeup, not a duplicate.
+        if let Some(slot) = dedup_slot(&s.ev) {
+            if self.kick_pending[slot] == Some(s.at) {
+                self.kick_pending[slot] = None;
+            }
+        }
+        Some((s.at, s.ev))
+    }
+
+    /// Index of the earliest pending event (earliest time, lowest seq).
+    #[inline]
+    fn earliest(&self) -> Option<usize> {
+        let mut best: Option<(usize, SimTime, u64)> = None;
+        for (i, s) in self.queue.iter().enumerate() {
+            match best {
+                Some((_, t, q)) if (s.at, s.seq) >= (t, q) => {}
+                _ => best = Some((i, s.at, s.seq)),
+            }
+        }
+        best.map(|(i, _, _)| i)
+    }
+
+    /// Timestamp of the next pending event, if any.
+    #[inline]
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.earliest().map(|i| self.queue[i].at)
+    }
+
+    /// Advance the clock to `t` without dispatching anything. Used by the
+    /// software-process facade ([`crate::system`]) to charge CPU time that
+    /// ends *between* hardware events; it is a bug to skip over a pending
+    /// event this way.
+    #[inline]
+    pub fn advance_to(&mut self, t: SimTime) {
+        debug_assert!(t >= self.now, "advancing into the past");
+        debug_assert!(
+            self.peek_time().is_none_or(|next| next >= t),
+            "advance_to would skip a pending event"
+        );
+        self.now = t;
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    #[inline]
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut e = Engine::new();
+        e.schedule(Dur(50), Event::DevKick);
+        e.schedule(Dur(10), Event::DdrIssue);
+        e.schedule(Dur(10), Event::SchedTick);
+
+        let (t1, ev1) = e.pop().unwrap();
+        assert_eq!((t1, ev1), (SimTime(10), Event::DdrIssue));
+        let (t2, ev2) = e.pop().unwrap();
+        assert_eq!((t2, ev2), (SimTime(10), Event::SchedTick));
+        assert_eq!(e.now(), SimTime(10));
+
+        // Scheduling relative to the advanced clock.
+        e.schedule(Dur(5), Event::DevKick);
+        let (t3, _) = e.pop().unwrap();
+        assert_eq!(t3, SimTime(15));
+        let (t4, _) = e.pop().unwrap();
+        assert_eq!(t4, SimTime(50));
+        assert!(e.pop().is_none());
+        assert_eq!(e.dispatched, 4);
+    }
+
+    #[test]
+    fn schedule_now_is_fifo() {
+        let mut e = Engine::new();
+        e.schedule_now(Event::DdrIssue);
+        e.schedule_now(Event::DevKick);
+        assert_eq!(e.pop().unwrap().1, Event::DdrIssue);
+        assert_eq!(e.pop().unwrap().1, Event::DevKick);
+    }
+
+    #[test]
+    fn pending_and_empty() {
+        let mut e = Engine::new();
+        assert!(e.is_empty());
+        e.schedule(Dur(1), Event::SchedTick);
+        assert_eq!(e.pending(), 1);
+        e.pop();
+        assert!(e.is_empty());
+    }
+}

@@ -1,0 +1,139 @@
+//! Event vocabulary of the PSoC discrete-event simulator.
+//!
+//! The simulator is a single flat event calendar (see [`crate::sim::engine`])
+//! over which all hardware components — DDR controller, AXI-DMA channels,
+//! the PL device, the interrupt controller and the CPU/scheduler — exchange
+//! small typed events. Components never call each other directly; the
+//! [`crate::system::System`] dispatcher routes every popped event to the
+//! owning component and translates cross-component effects.
+
+use crate::sim::time::SimTime;
+
+/// Identifies one of the two AXI-DMA channels.
+///
+/// MM2S ("memory-mapped to stream") reads DDR and feeds the PL — the paper's
+/// TX direction. S2MM ("stream to memory-mapped") drains the PL into DDR —
+/// the paper's RX direction.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Channel {
+    Mm2s,
+    S2mm,
+}
+
+impl Channel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Channel::Mm2s => "MM2S",
+            Channel::S2mm => "S2MM",
+        }
+    }
+
+    /// The paper labels transfers from the software point of view.
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            Channel::Mm2s => "TX",
+            Channel::S2mm => "RX",
+        }
+    }
+}
+
+/// OS task identifier (index into the scheduler's task table).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct TaskId(pub u32);
+
+/// Interrupt line number on the (modelled) GIC.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct IrqLine(pub u8);
+
+/// Outstanding-DDR-request identifier.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct DdrReqId(pub u64);
+
+/// Every event the simulator can schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// DDR arbiter: try to issue the next queued burst (scheduled whenever
+    /// a request is enqueued or the data bus frees up).
+    DdrIssue,
+    /// DDR controller finished serving a burst.
+    DdrDone { req: DdrReqId },
+    /// Advance a DMA channel's state machine (descriptor fetch complete,
+    /// FIFO space freed, or a fresh kick after programming).
+    DmaKick { ch: Channel },
+    /// Advance the PL device (loop-back or NullHop): consume from its input
+    /// FIFO and/or produce into its output FIFO.
+    DevKick,
+    /// A peripheral raised an interrupt line (GIC input edge).
+    IrqRaise { line: IrqLine },
+    /// The GIC delivers the interrupt to the CPU (after controller latency).
+    IrqDispatch { line: IrqLine },
+    /// The CPU finished the compute chunk it was running for `tid`.
+    /// `gen` guards against stale events after preemption: the scheduler
+    /// bumps the generation whenever it re-plans the running chunk.
+    CpuChunkDone { tid: TaskId, gen: u64 },
+    /// A sleeping task's timer expired.
+    TimerFire { tid: TaskId, gen: u64 },
+    /// Periodic scheduler tick (timeslice accounting).
+    SchedTick,
+}
+
+/// A timestamped entry in the calendar. Ordering: earliest time first;
+/// ties broken by insertion sequence so the simulation is deterministic
+/// and FIFO for simultaneous events.
+#[derive(Clone, Copy, Debug)]
+pub struct Scheduled {
+    pub at: SimTime,
+    pub seq: u64,
+    pub ev: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the earliest first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BinaryHeap;
+
+    #[test]
+    fn heap_pops_earliest_first_fifo_on_ties() {
+        let mut h = BinaryHeap::new();
+        h.push(Scheduled { at: SimTime(30), seq: 0, ev: Event::DdrIssue });
+        h.push(Scheduled { at: SimTime(10), seq: 1, ev: Event::SchedTick });
+        h.push(Scheduled { at: SimTime(10), seq: 2, ev: Event::DevKick });
+        h.push(Scheduled { at: SimTime(20), seq: 3, ev: Event::DdrIssue });
+
+        let order: Vec<_> = std::iter::from_fn(|| h.pop()).collect();
+        assert_eq!(order[0].ev, Event::SchedTick);
+        assert_eq!(order[1].ev, Event::DevKick, "FIFO among equal times");
+        assert_eq!(order[2].at, SimTime(20));
+        assert_eq!(order[3].at, SimTime(30));
+    }
+
+    #[test]
+    fn channel_names() {
+        assert_eq!(Channel::Mm2s.paper_name(), "TX");
+        assert_eq!(Channel::S2mm.paper_name(), "RX");
+        assert_eq!(Channel::Mm2s.name(), "MM2S");
+    }
+}

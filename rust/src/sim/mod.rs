@@ -1,0 +1,11 @@
+//! Discrete-event simulation core: virtual clock, event calendar, PRNG.
+
+pub mod engine;
+pub mod event;
+pub mod rng;
+pub mod time;
+pub mod trace;
+
+pub use engine::Engine;
+pub use event::{Channel, Event};
+pub use time::{Dur, SimTime};

@@ -1,0 +1,208 @@
+//! Deterministic PRNG for the simulator.
+//!
+//! Everything in the reproduction must be bit-reproducible from a seed:
+//! the DAVIS event generator, timing jitter, and the property-test driver
+//! all draw from this PCG32 implementation (O'Neill 2014, `pcg32_oneseq`).
+//! We deliberately do not pull in an external `rand` crate: the sandbox is
+//! offline and the generator is ~40 lines.
+
+/// PCG-XSH-RR 64/32. Deterministic, seedable, good statistical quality for
+/// simulation purposes (not cryptographic).
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Independent stream selection: two generators with the same seed but
+    /// different streams are uncorrelated (the LCG increment differs).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift with rejection.
+    pub fn next_bounded(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0, "bound must be positive");
+        let t = bound.wrapping_neg() % bound;
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64) * (bound as u64);
+            if (m as u32) >= t {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        let span = hi - lo;
+        if span == 0 {
+            return lo;
+        }
+        if span < u32::MAX as u64 {
+            lo + self.next_bounded(span as u32 + 1) as u64
+        } else {
+            lo + self.next_u64() % (span + 1)
+        }
+    }
+
+    /// Uniform float in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// `true` with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box-Muller (one value per call; simple > fast
+    /// here, this is not on the hot path).
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u = self.next_f64();
+            if u > 1e-12 {
+                let v = self.next_f64();
+                return (-2.0 * u.ln()).sqrt() * (2.0 * std::f64::consts::PI * v).cos();
+            }
+        }
+    }
+
+    /// Exponential with mean `mean` (inter-arrival times for the DVS event
+    /// generator).
+    pub fn next_exp(&mut self, mean: f64) -> f64 {
+        loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                return -mean * u.ln();
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_bounded(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = Pcg32::with_stream(7, 1);
+        let mut b = Pcg32::with_stream(7, 2);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn bounded_in_range() {
+        let mut rng = Pcg32::new(3);
+        for _ in 0..10_000 {
+            assert!(rng.next_bounded(17) < 17);
+        }
+        for _ in 0..10_000 {
+            let v = rng.range_u64(5, 9);
+            assert!((5..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_roughly_uniform() {
+        let mut rng = Pcg32::new(9);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = rng.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg32::new(11);
+        let n = 20_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.next_gaussian();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg32::new(13);
+        let n = 20_000;
+        let mean_target = 250.0;
+        let s: f64 = (0..n).map(|_| rng.next_exp(mean_target)).sum();
+        let mean = s / n as f64;
+        assert!((mean - mean_target).abs() < 15.0, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "astronomically unlikely");
+    }
+}

@@ -1,0 +1,217 @@
+//! Simulation time: a nanosecond-granularity virtual clock.
+//!
+//! All hardware constants in the Zynq model (bus cycles, DDR latencies,
+//! interrupt latencies) are comfortably representable at 1 ns resolution;
+//! a `u64` nanosecond counter covers ~584 years of simulated time, so no
+//! overflow handling is needed anywhere in the engine.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in simulated time, in nanoseconds since simulation start.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default, Debug)]
+pub struct SimTime(pub u64);
+
+/// A span of simulated time, in nanoseconds.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default, Debug)]
+pub struct Dur(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    #[inline]
+    pub fn ns(self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 / 1_000.0
+    }
+
+    #[inline]
+    pub fn as_ms(self) -> f64 {
+        self.0 as f64 / 1_000_000.0
+    }
+
+    /// Duration elapsed since `earlier`. Saturates at zero rather than
+    /// panicking: callers comparing timestamps from independent streams
+    /// (e.g. TX vs RX completion) must never bring the engine down.
+    #[inline]
+    pub fn since(self, earlier: SimTime) -> Dur {
+        Dur(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl Dur {
+    pub const ZERO: Dur = Dur(0);
+
+    #[inline]
+    pub fn from_ns(ns: u64) -> Dur {
+        Dur(ns)
+    }
+
+    #[inline]
+    pub fn from_us(us: f64) -> Dur {
+        Dur((us * 1_000.0).round() as u64)
+    }
+
+    #[inline]
+    pub fn from_ms(ms: f64) -> Dur {
+        Dur((ms * 1_000_000.0).round() as u64)
+    }
+
+    /// Time to move `bytes` at `bytes_per_sec`, rounded up to whole ns.
+    #[inline]
+    pub fn for_bytes(bytes: u64, bytes_per_sec: f64) -> Dur {
+        if bytes == 0 || bytes_per_sec <= 0.0 {
+            return Dur::ZERO;
+        }
+        let ns = (bytes as f64) * 1e9 / bytes_per_sec;
+        Dur(ns.ceil() as u64)
+    }
+
+    #[inline]
+    pub fn ns(self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 / 1_000.0
+    }
+
+    #[inline]
+    pub fn as_ms(self) -> f64 {
+        self.0 as f64 / 1_000_000.0
+    }
+
+    #[inline]
+    pub fn saturating_sub(self, rhs: Dur) -> Dur {
+        Dur(self.0.saturating_sub(rhs.0))
+    }
+
+    #[inline]
+    pub fn min(self, rhs: Dur) -> Dur {
+        Dur(self.0.min(rhs.0))
+    }
+
+    #[inline]
+    pub fn max(self, rhs: Dur) -> Dur {
+        Dur(self.0.max(rhs.0))
+    }
+
+    #[inline]
+    pub fn scaled(self, f: f64) -> Dur {
+        Dur((self.0 as f64 * f).round() as u64)
+    }
+}
+
+impl Add<Dur> for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn add(self, rhs: Dur) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign<Dur> for SimTime {
+    #[inline]
+    fn add_assign(&mut self, rhs: Dur) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub<SimTime> for SimTime {
+    type Output = Dur;
+    #[inline]
+    fn sub(self, rhs: SimTime) -> Dur {
+        self.since(rhs)
+    }
+}
+
+impl Add for Dur {
+    type Output = Dur;
+    #[inline]
+    fn add(self, rhs: Dur) -> Dur {
+        Dur(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Dur {
+    #[inline]
+    fn add_assign(&mut self, rhs: Dur) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::iter::Sum for Dur {
+    fn sum<I: Iterator<Item = Dur>>(iter: I) -> Dur {
+        iter.fold(Dur::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Dur(self.0).fmt(f)
+    }
+}
+
+impl fmt::Display for Dur {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ns = self.0;
+        if ns >= 10_000_000 {
+            write!(f, "{:.3}ms", self.as_ms())
+        } else if ns >= 10_000 {
+            write!(f, "{:.3}us", self.as_us())
+        } else {
+            write!(f, "{ns}ns")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_roundtrip() {
+        let t = SimTime::ZERO + Dur::from_us(1.5);
+        assert_eq!(t.ns(), 1_500);
+        assert_eq!((t + Dur(500)).since(t), Dur(500));
+        assert_eq!(t.since(t + Dur(500)), Dur::ZERO, "since saturates");
+    }
+
+    #[test]
+    fn for_bytes_rounds_up() {
+        // 1 byte at 1 GB/s is exactly 1 ns.
+        assert_eq!(Dur::for_bytes(1, 1e9), Dur(1));
+        // 1 byte at 3 GB/s is 0.33 ns -> rounds up to 1 ns.
+        assert_eq!(Dur::for_bytes(1, 3e9), Dur(1));
+        assert_eq!(Dur::for_bytes(0, 1e9), Dur::ZERO);
+        // 6 MB at 600 MB/s = 10 ms.
+        assert_eq!(Dur::for_bytes(6_000_000, 600e6), Dur::from_ms(10.0));
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", Dur(999)), "999ns");
+        assert_eq!(format!("{}", Dur::from_us(123.0)), "123.000us");
+        assert_eq!(format!("{}", Dur::from_ms(45.5)), "45.500ms");
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(Dur::from_ms(1.0).as_us(), 1000.0);
+        assert_eq!(Dur::from_us(1.0).ns(), 1000);
+        assert!((Dur(1_234_567).as_ms() - 1.234567).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_and_minmax() {
+        assert_eq!(Dur(100).scaled(1.5), Dur(150));
+        assert_eq!(Dur(100).min(Dur(50)), Dur(50));
+        assert_eq!(Dur(100).max(Dur(50)), Dur(100));
+        assert_eq!(Dur(100).saturating_sub(Dur(150)), Dur::ZERO);
+    }
+}

@@ -1,0 +1,8 @@
+//! Dependency-free utilities: a minimal JSON parser/emitter (the sandbox
+//! has no serde) and summary statistics for the reports and benches.
+
+pub mod json;
+pub mod stats;
+
+pub use json::Json;
+pub use stats::Summary;

@@ -1,0 +1,120 @@
+//! Failure-mode integration tests: the paper's §IV/§V warnings about
+//! unbalanced TX/RX management, the 8 MB user-level limit, and resource
+//! exhaustion.
+
+use psoc_dma::axi::descriptor::{chain, MAX_DESC_LEN};
+use psoc_dma::axi::dma::DmaMode;
+use psoc_dma::cnn::vgg19::vgg19;
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::ablation_vgg;
+use psoc_dma::drivers::{Driver, DriverConfig, DriverError, DriverKind};
+use psoc_dma::memory::buffer::{CmaAllocator, PhysAddr};
+use psoc_dma::sim::event::Channel;
+use psoc_dma::system::{SimError, System};
+
+#[test]
+fn loopback_tx_without_rx_blocks_at_fifo_capacity() {
+    let cfg = SimConfig::default();
+    let mut sys = System::loopback(cfg.clone());
+    let n = 1 << 20;
+    sys.program_dma(
+        Channel::Mm2s,
+        DmaMode::Simple,
+        vec![psoc_dma::axi::descriptor::Descriptor::new(PhysAddr(0), n).with_irq()],
+    );
+    let err = sys.poll_wait(Channel::Mm2s).unwrap_err();
+    let SimError::Blocked { ch, mm2s_level, s2mm_level, .. } = err;
+    assert_eq!(ch, "TX");
+    // Every buffer in the chain is full: that is the deadlock signature.
+    assert_eq!(s2mm_level, cfg.s2mm_fifo_bytes);
+    assert!(mm2s_level > 0);
+}
+
+#[test]
+fn tiny_tx_without_rx_completes_because_fifos_absorb_it() {
+    // The flip side: the same unbalanced management is survivable when
+    // the payload fits the hardware buffering — which is exactly why
+    // "this is possible with this relative small CNN" (RoShamBo) but not
+    // VGG19.
+    let cfg = SimConfig::default();
+    let mut sys = System::loopback(cfg.clone());
+    let n = cfg.s2mm_fifo_bytes / 2;
+    sys.program_dma(
+        Channel::Mm2s,
+        DmaMode::Simple,
+        vec![psoc_dma::axi::descriptor::Descriptor::new(PhysAddr(0), n).with_irq()],
+    );
+    sys.poll_wait(Channel::Mm2s).unwrap();
+}
+
+#[test]
+fn vgg_ablation_all_three_outcomes() {
+    let ab = ablation_vgg(&SimConfig::default()).unwrap();
+    assert!(matches!(ab.too_large, DriverError::TooLarge { .. }), "{:?}", ab.too_large);
+    match ab.blocked {
+        DriverError::Sim(SimError::Blocked { .. }) => {}
+        other => panic!("expected Blocked, got {other:?}"),
+    }
+    assert!(ab.kernel_layer_time.as_ms() > 1.0, "9MB layer should take >1ms");
+}
+
+#[test]
+fn naive_split_blocks_even_in_sg_mode() {
+    // Splitting the TX into legal descriptors does not help if RX is
+    // never armed: conv1_2's output dwarfs all buffering.
+    let cfg = SimConfig::default();
+    let net = vgg19();
+    let timing = net.layers[1].timing(&cfg);
+    assert!(timing.tx_bytes < 2 * MAX_DESC_LEN, "payload should be chain-able");
+    let mut sys = System::nullhop(cfg.clone());
+    sys.configure_nullhop(timing);
+    sys.program_dma(
+        Channel::Mm2s,
+        DmaMode::ScatterGather,
+        chain(PhysAddr(0), timing.tx_bytes, 1 << 20),
+    );
+    assert!(sys.poll_wait(Channel::Mm2s).is_err());
+}
+
+#[test]
+fn descriptor_length_limit_enforced_exactly() {
+    let cfg = SimConfig::default();
+    let mut cma = CmaAllocator::zynq_default();
+    let dcfg = DriverConfig::table1(DriverKind::UserPolling);
+    let mut drv = Driver::new(dcfg, &mut cma, &cfg, MAX_DESC_LEN + 1).unwrap();
+
+    // Exactly at the limit: fine.
+    let mut sys = System::loopback(cfg.clone());
+    drv.transfer(&mut sys, MAX_DESC_LEN, MAX_DESC_LEN).unwrap();
+
+    // One byte past: the user-level Unique driver must refuse.
+    let mut sys = System::loopback(cfg.clone());
+    let err = drv.transfer(&mut sys, MAX_DESC_LEN + 1, MAX_DESC_LEN + 1).unwrap_err();
+    assert!(matches!(err, DriverError::TooLarge { bytes } if bytes == MAX_DESC_LEN + 1));
+}
+
+#[test]
+fn cma_exhaustion_is_reported_not_hidden() {
+    let cfg = SimConfig::default();
+    // A 1 MB CMA region cannot hold double buffers for a 4 MB transfer.
+    let mut cma = CmaAllocator::new(1 << 20, 4096);
+    let dcfg = DriverConfig::table1(DriverKind::UserPolling);
+    let Err(err) = Driver::new(dcfg, &mut cma, &cfg, 4 << 20) else {
+        panic!("allocation should have failed")
+    };
+    assert!(matches!(err, DriverError::Alloc(_)), "{err:?}");
+}
+
+#[test]
+fn blocked_error_message_is_actionable() {
+    let cfg = SimConfig::default();
+    let mut sys = System::loopback(cfg);
+    sys.program_dma(
+        Channel::Mm2s,
+        DmaMode::Simple,
+        vec![psoc_dma::axi::descriptor::Descriptor::new(PhysAddr(0), 1 << 20).with_irq()],
+    );
+    let msg = sys.poll_wait(Channel::Mm2s).unwrap_err().to_string();
+    assert!(msg.contains("blocked"), "{msg}");
+    assert!(msg.contains("unbalanced"), "{msg}");
+}

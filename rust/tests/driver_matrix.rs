@@ -1,0 +1,172 @@
+//! Integration: the full driver design space against the paper's
+//! qualitative claims, across transfer sizes.
+
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::{fig45_sizes, loopback_sweep, table1};
+use psoc_dma::drivers::{
+    BufferScheme, Driver, DriverConfig, DriverKind, PartitionMode,
+};
+use psoc_dma::memory::buffer::CmaAllocator;
+use psoc_dma::system::System;
+
+fn run_cell(cfg: &SimConfig, dcfg: DriverConfig, bytes: u64) -> psoc_dma::drivers::TransferReport {
+    let mut sys = System::loopback(cfg.clone());
+    let mut cma = CmaAllocator::zynq_default();
+    let mut drv = Driver::new(dcfg, &mut cma, cfg, bytes).unwrap();
+    drv.transfer(&mut sys, bytes, bytes).unwrap()
+}
+
+#[test]
+fn every_cell_completes_across_sizes() {
+    let cfg = SimConfig::default();
+    for kind in DriverKind::ALL {
+        for buffering in [BufferScheme::Single, BufferScheme::Double] {
+            for partition in [PartitionMode::Unique, PartitionMode::Blocks] {
+                for bytes in [8u64, 4096, 256 * 1024, 4 << 20] {
+                    let dcfg = DriverConfig { kind, buffering, partition };
+                    let r = run_cell(&cfg, dcfg, bytes);
+                    assert_eq!(r.tx_bytes, bytes, "{dcfg:?}");
+                    assert!(r.rx_time >= r.tx_time, "{dcfg:?} at {bytes}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn paper_claim_tx_faster_than_rx_at_every_size() {
+    // "TX transfers have lightly higher priority than RX, obtaining
+    // smaller latencies TX rather than RX transfers."
+    let cfg = SimConfig::default();
+    let rows = loopback_sweep(&cfg, &fig45_sizes(), &DriverKind::ALL).unwrap();
+    for r in &rows {
+        assert!(
+            r.tx <= r.rx,
+            "{:?} at {}B: TX {} > RX {}",
+            r.driver,
+            r.bytes,
+            r.tx,
+            r.rx
+        );
+    }
+}
+
+#[test]
+fn paper_claim_kernel_crosses_over_for_big_transfers() {
+    // "kernel-level driver... produces bigger latencies for smaller data
+    // lengths rather than user-level approach, but it increases the
+    // performance for bigger data lengths."
+    let cfg = SimConfig::default();
+    let rows = loopback_sweep(&cfg, &fig45_sizes(), &DriverKind::ALL).unwrap();
+    let rx = |bytes, kind| {
+        rows.iter()
+            .find(|r| r.bytes == bytes && r.driver == kind)
+            .unwrap()
+            .rx
+    };
+    // Small: kernel ≫ polling.
+    assert!(rx(8, DriverKind::KernelIrq).ns() > 3 * rx(8, DriverKind::UserPolling).ns());
+    // Large: kernel competitive-or-better.
+    let k6 = rx(6 << 20, DriverKind::KernelIrq).ns() as f64;
+    let p6 = rx(6 << 20, DriverKind::UserPolling).ns() as f64;
+    assert!(k6 < 1.15 * p6, "kernel {k6} vs polling {p6} at 6MB");
+}
+
+#[test]
+fn paper_claim_scheduled_sits_between_polling_and_kernel_small() {
+    let cfg = SimConfig::default();
+    let rows = loopback_sweep(&cfg, &[64 * 1024], &DriverKind::ALL).unwrap();
+    let rx = |kind| rows.iter().find(|r| r.driver == kind).unwrap().rx;
+    assert!(rx(DriverKind::UserPolling) < rx(DriverKind::UserScheduled));
+}
+
+#[test]
+fn double_buffering_only_pays_with_blocks_partitioning() {
+    // §III.A: Blocks mode exists "for taking a better advantage of
+    // double buffering" — with Unique there is nothing to overlap.
+    let cfg = SimConfig::default();
+    let bytes = 2 << 20;
+    let t = |buffering, partition| {
+        run_cell(
+            &cfg,
+            DriverConfig { kind: DriverKind::UserPolling, buffering, partition },
+            bytes,
+        )
+        .rx_time
+    };
+    let unique_single = t(BufferScheme::Single, PartitionMode::Unique);
+    let unique_double = t(BufferScheme::Double, PartitionMode::Unique);
+    let blocks_single = t(BufferScheme::Single, PartitionMode::Blocks);
+    let blocks_double = t(BufferScheme::Double, PartitionMode::Blocks);
+    assert_eq!(unique_single, unique_double, "double buffer is a no-op in Unique mode");
+    assert!(blocks_double < blocks_single, "double buffering must pay in Blocks mode");
+    assert!(blocks_double < unique_single, "pipelined Blocks must beat Unique");
+}
+
+#[test]
+fn table1_reproduces_paper_ordering_and_scale() {
+    let cfg = SimConfig::default();
+    let rows = table1(&cfg, 3).unwrap();
+    let frame: Vec<f64> = rows.iter().map(|r| r.report.frame_ms()).collect();
+    let tx: Vec<f64> = rows.iter().map(|r| r.report.tx_us_per_byte()).collect();
+    let rx: Vec<f64> = rows.iter().map(|r| r.report.rx_us_per_byte()).collect();
+
+    // Ordering (the paper's headline).
+    assert!(frame[0] < frame[1] && frame[1] < frame[2], "{frame:?}");
+    assert!(tx[0] < tx[1] && tx[1] < tx[2], "{tx:?}");
+
+    // Scale: within 2x of the paper's absolute numbers.
+    let paper_frame = [6.31, 6.57, 7.39];
+    let paper_tx = [0.0054, 0.0072, 0.011];
+    let paper_rx = [0.197, 0.335, 0.294];
+    for i in 0..3 {
+        assert!(
+            frame[i] > paper_frame[i] / 2.0 && frame[i] < paper_frame[i] * 2.0,
+            "frame[{i}] {} vs paper {}",
+            frame[i],
+            paper_frame[i]
+        );
+        assert!(
+            tx[i] > paper_tx[i] / 2.0 && tx[i] < paper_tx[i] * 2.0,
+            "tx[{i}] {} vs paper {}",
+            tx[i],
+            paper_tx[i]
+        );
+        assert!(
+            rx[i] > paper_rx[i] / 2.0 && rx[i] < paper_rx[i] * 2.0,
+            "rx[{i}] {} vs paper {}",
+            rx[i],
+            paper_rx[i]
+        );
+    }
+}
+
+#[test]
+fn scheduled_and_kernel_free_cpu_polling_does_not() {
+    let cfg = SimConfig::default();
+    let bytes = 1 << 20;
+    let poll = run_cell(&cfg, DriverConfig::table1(DriverKind::UserPolling), bytes);
+    let sched = run_cell(&cfg, DriverConfig::table1(DriverKind::UserScheduled), bytes);
+    let kern = run_cell(&cfg, DriverConfig::table1(DriverKind::KernelIrq), bytes);
+    assert_eq!(poll.ledger.freed.ns(), 0);
+    assert!(sched.ledger.freed.ns() > 0);
+    assert!(kern.ledger.freed.ns() > 0);
+
+    // On a compute-bound NullHop layer the kernel driver yields for
+    // nearly the whole wait — the CPU is free while the MACs grind.
+    let net = psoc_dma::cnn::roshambo::roshambo();
+    let plans = psoc_dma::coordinator::pipeline::plan_from_estimates(&net, &cfg);
+    let mut sys = System::nullhop(cfg.clone());
+    let mut cma = CmaAllocator::zynq_default();
+    let max = plans.iter().map(|p| p.timing.tx_bytes.max(p.timing.rx_bytes)).max().unwrap();
+    let mut drv =
+        Driver::new(DriverConfig::table1(DriverKind::KernelIrq), &mut cma, &cfg, max).unwrap();
+    let rep =
+        psoc_dma::coordinator::pipeline::run_frame(&mut sys, &mut drv, &net, &plans).unwrap();
+    assert!(
+        rep.ledger.freed > rep.ledger.busy,
+        "kernel frame: freed {} !> busy {}",
+        rep.ledger.freed,
+        rep.ledger.busy
+    );
+}

@@ -1,0 +1,119 @@
+//! End-to-end integration over the real AOT artifacts (requires
+//! `make artifacts`; tests skip with a notice when absent, so plain
+//! `cargo test` stays green in a fresh checkout).
+//!
+//! This is where all three layers compose: rust loads the JAX/Pallas
+//! HLO, executes real numerics on PJRT, NullHop-encodes the real feature
+//! maps, and drives the AXI-DMA simulator with the measured sizes.
+
+use std::path::Path;
+
+use psoc_dma::cnn::encoding::{decode_i16, encode_i16, quantize_q88, sparsity};
+use psoc_dma::cnn::roshambo::roshambo;
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::table1_runtime;
+use psoc_dma::coordinator::pipeline::plan_with_runtime;
+use psoc_dma::runtime::Runtime;
+use psoc_dma::sensor::davis::{DavisConfig, DavisSim};
+use psoc_dma::sensor::frame::FrameCollector;
+
+fn runtime() -> Option<Runtime> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::load(Path::new("artifacts")).expect("artifacts present but unloadable"))
+}
+
+fn davis_frame() -> Vec<f32> {
+    let mut davis = DavisSim::new(DavisConfig::default());
+    let mut coll = FrameCollector::new(5000);
+    loop {
+        if let Some(f) = coll.push(&davis.next_event()) {
+            return f.data.iter().map(|&q| q as f32 / 256.0).collect();
+        }
+    }
+}
+
+#[test]
+fn artifacts_cover_every_layer_plus_heads() {
+    let Some(rt) = runtime() else { return };
+    let names: Vec<&str> = rt.names().collect();
+    for expect in ["conv1", "conv2", "conv3", "conv4", "conv5", "fc", "full_net"] {
+        assert!(names.contains(&expect), "missing artifact {expect}: {names:?}");
+    }
+}
+
+#[test]
+fn layer_chain_matches_fused_net() {
+    // Executing conv1..conv5+fc layer-by-layer must equal the fused
+    // full_net artifact — the same cross-check the python tests do, but
+    // through the rust PJRT path.
+    let Some(rt) = runtime() else { return };
+    let frame = davis_frame();
+    let mut act = frame.clone();
+    for l in ["conv1", "conv2", "conv3", "conv4", "conv5"] {
+        act = rt.execute(l, &act).unwrap();
+    }
+    let logits_chain = rt.execute("fc", &act).unwrap();
+    let logits_fused = rt.execute("full_net", &frame).unwrap();
+    assert_eq!(logits_chain.len(), 4);
+    for (a, b) in logits_chain.iter().zip(&logits_fused) {
+        assert!((a - b).abs() < 1e-4, "chain {a} vs fused {b}");
+    }
+}
+
+#[test]
+fn execute_validates_shapes() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.execute("conv1", &[0.0; 10]).unwrap_err();
+    assert!(format!("{err:#}").contains("expects"), "{err:#}");
+    assert!(rt.execute("no_such_artifact", &[0.0; 10]).is_err());
+}
+
+#[test]
+fn real_feature_maps_are_sparse_and_roundtrip_the_encoder() {
+    let Some(rt) = runtime() else { return };
+    let mut act = davis_frame();
+    for l in ["conv1", "conv2", "conv3"] {
+        act = rt.execute(l, &act).unwrap();
+        let q = quantize_q88(&act);
+        let sp = sparsity(&q);
+        assert!(sp > 0.3, "{l}: real map sparsity {sp} too low for NullHop to pay");
+        // The actual encoded stream the accelerator would receive.
+        let enc = encode_i16(&q);
+        assert_eq!(decode_i16(&enc).unwrap(), q, "{l}: encoder roundtrip");
+        assert!(
+            (enc.len() as f64) < (2 * q.len()) as f64 * (1.0 - sp) + q.len() as f64 / 7.0,
+            "{l}: encoding not paying at sparsity {sp}"
+        );
+    }
+}
+
+#[test]
+fn runtime_driven_table1_keeps_paper_ordering() {
+    let Some(rt) = runtime() else { return };
+    let cfg = SimConfig::default();
+    let (rows, plan) = table1_runtime(&cfg, &rt, 1).unwrap();
+    assert!(plan.class < 4);
+    assert_eq!(plan.plans.len(), 5);
+    let ms: Vec<f64> = rows.iter().map(|r| r.report.frame_ms()).collect();
+    assert!(ms[0] < ms[1] && ms[1] < ms[2], "runtime-path ordering violated: {ms:?}");
+}
+
+#[test]
+fn measured_plans_respect_geometry_bounds() {
+    let Some(rt) = runtime() else { return };
+    let cfg = SimConfig::default();
+    let net = roshambo();
+    let plan = plan_with_runtime(&net, &cfg, &rt, &davis_frame()).unwrap();
+    for (p, l) in plan.plans.iter().zip(&net.layers) {
+        // Measured encodings can never beat the all-zero floor or exceed
+        // the fully-dense ceiling.
+        assert!(p.timing.tx_bytes >= l.weight_bytes() + l.input_bytes_at(1.0), "{}", p.name);
+        assert!(p.timing.tx_bytes <= l.weight_bytes() + l.input_bytes_at(0.0), "{}", p.name);
+        assert!(p.timing.rx_bytes >= l.output_bytes_at(1.0), "{}", p.name);
+        assert!(p.timing.rx_bytes <= l.output_bytes_at(0.0), "{}", p.name);
+        assert!(p.sparsity_in >= 0.0 && p.sparsity_in <= 1.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Property-based invariants of the whole simulator stack, driven by the
+//! crate's own deterministic PRNG (hand-rolled: proptest is unavailable
+//! offline). Each case builds a random-but-valid configuration, runs a
+//! random transfer under a random driver, and checks the invariants that
+//! must hold regardless of parameters.
+
+use psoc_dma::accel::PlDevice;
+use psoc_dma::config::SimConfig;
+use psoc_dma::drivers::{BufferScheme, Driver, DriverConfig, DriverKind, PartitionMode};
+use psoc_dma::memory::buffer::CmaAllocator;
+use psoc_dma::sim::rng::Pcg32;
+use psoc_dma::sim::time::Dur;
+use psoc_dma::system::System;
+
+fn random_cfg(rng: &mut Pcg32) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.ddr_bandwidth_bps = 0.4e9 + rng.next_f64() * 1.6e9;
+    c.stream_bandwidth_bps = 0.2e9 + rng.next_f64() * 0.8e9;
+    c.ddr_latency_ns = rng.range_u64(50, 400);
+    c.ddr_turnaround_ns = rng.range_u64(0, 120);
+    c.max_burst_bytes = 1 << rng.range_u64(9, 12); // 512..4096
+    c.mm2s_fifo_bytes = c.max_burst_bytes * rng.range_u64(1, 4);
+    c.s2mm_fifo_bytes = c.max_burst_bytes * rng.range_u64(1, 4);
+    c.desc_fetch_ns = rng.range_u64(50, 500);
+    c.sched_poll_period_ns = rng.range_u64(10_000, 300_000);
+    c.kernel_sg_chunk_bytes = 1 << rng.range_u64(14, 19);
+    c.blocks_chunk_bytes = 1 << rng.range_u64(13, 18);
+    c.validate().expect("random config must be valid by construction");
+    c
+}
+
+fn random_driver(rng: &mut Pcg32) -> DriverConfig {
+    let kind = match rng.next_bounded(3) {
+        0 => DriverKind::UserPolling,
+        1 => DriverKind::UserScheduled,
+        _ => DriverKind::KernelIrq,
+    };
+    let buffering = if rng.chance(0.5) { BufferScheme::Single } else { BufferScheme::Double };
+    let partition = if rng.chance(0.5) { PartitionMode::Unique } else { PartitionMode::Blocks };
+    DriverConfig { kind, buffering, partition }
+}
+
+#[test]
+fn property_loopback_conserves_bytes_and_orders_tx_before_rx() {
+    let mut rng = Pcg32::new(0x14F4);
+    for case in 0..60 {
+        let cfg = random_cfg(&mut rng);
+        let dcfg = random_driver(&mut rng);
+        let bytes = rng.range_u64(1, 512 * 1024);
+        let mut sys = System::loopback(cfg.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let mut drv = Driver::new(dcfg, &mut cma, &cfg, bytes).unwrap();
+        let r = drv
+            .transfer(&mut sys, bytes, bytes)
+            .unwrap_or_else(|e| panic!("case {case} {dcfg:?} {bytes}B: {e}"));
+
+        // Byte conservation through the whole stack.
+        assert_eq!(sys.mm2s.stats.bytes, bytes, "case {case}: TX bytes");
+        assert_eq!(sys.s2mm.stats.bytes, bytes, "case {case}: RX bytes");
+        match &sys.device {
+            PlDevice::Loopback(lb) => {
+                assert_eq!(lb.consumed, bytes, "case {case}");
+                assert_eq!(lb.produced, bytes, "case {case}");
+            }
+            _ => unreachable!(),
+        }
+        // Causality: software cannot see RX before TX on a loop-back.
+        assert!(r.tx_time <= r.rx_time, "case {case}: tx {} > rx {}", r.tx_time, r.rx_time);
+        // FIFOs fully drained.
+        assert_eq!(sys.mm2s_fifo.level(), 0, "case {case}");
+        assert_eq!(sys.s2mm_fifo.level(), 0, "case {case}");
+        // No CMA leaks.
+        drv.release(&mut cma);
+        assert_eq!(cma.free_bytes(), cma.capacity(), "case {case}");
+        cma.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn property_simulation_is_deterministic() {
+    let mut rng = Pcg32::new(0xDE7E);
+    for _ in 0..20 {
+        let cfg = random_cfg(&mut rng);
+        let dcfg = random_driver(&mut rng);
+        let bytes = rng.range_u64(64, 256 * 1024);
+        let run = || {
+            let mut sys = System::loopback(cfg.clone());
+            let mut cma = CmaAllocator::zynq_default();
+            let mut drv = Driver::new(dcfg, &mut cma, &cfg, bytes).unwrap();
+            let r = drv.transfer(&mut sys, bytes, bytes).unwrap();
+            (r.tx_time, r.rx_time, sys.eng.dispatched)
+        };
+        assert_eq!(run(), run(), "same config+seed must be bit-identical");
+    }
+}
+
+#[test]
+fn property_transfer_time_monotonic_in_size() {
+    // For any driver, quadrupling the payload must not make RX faster.
+    let mut rng = Pcg32::new(0x3030);
+    for _ in 0..15 {
+        let cfg = random_cfg(&mut rng);
+        let dcfg = random_driver(&mut rng);
+        let small = rng.range_u64(1024, 64 * 1024);
+        let large = small * 4;
+        let time = |bytes| {
+            let mut sys = System::loopback(cfg.clone());
+            let mut cma = CmaAllocator::zynq_default();
+            let mut drv = Driver::new(dcfg, &mut cma, &cfg, bytes).unwrap();
+            drv.transfer(&mut sys, bytes, bytes).unwrap().rx_time
+        };
+        let (ts, tl) = (time(small), time(large));
+        assert!(tl >= ts, "{dcfg:?}: {large}B ({tl}) faster than {small}B ({ts})");
+    }
+}
+
+#[test]
+fn property_jitter_keeps_results_bounded() {
+    // With OS jitter on, timings vary but stay within the clamp band of
+    // the deterministic run.
+    let mut base_cfg = SimConfig::default();
+    base_cfg.os_jitter_frac = 0.0;
+    let mut jit_cfg = base_cfg.clone();
+    jit_cfg.os_jitter_frac = 0.2;
+
+    let run = |cfg: &SimConfig, seed: u64| {
+        let mut c = cfg.clone();
+        c.seed = seed;
+        let mut sys = System::loopback(c.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let dcfg = DriverConfig::table1(DriverKind::KernelIrq);
+        let mut drv = Driver::new(dcfg, &mut cma, &c, 65536).unwrap();
+        drv.transfer(&mut sys, 65536, 65536).unwrap().rx_time
+    };
+    let det = run(&base_cfg, 1);
+    let mut distinct = std::collections::BTreeSet::new();
+    for seed in 0..10 {
+        let t = run(&jit_cfg, seed);
+        assert!(t.ns() > det.ns() / 2 && t.ns() < det.ns() * 2, "jitter out of band: {t} vs {det}");
+        distinct.insert(t.ns());
+    }
+    assert!(distinct.len() > 5, "jitter had no effect across seeds");
+}
+
+#[test]
+fn property_nullhop_frames_conserve_layer_bytes() {
+    use psoc_dma::cnn::roshambo::roshambo;
+    use psoc_dma::coordinator::pipeline::{plan_from_estimates, run_frame};
+    let mut rng = Pcg32::new(0x0F11);
+    for _ in 0..10 {
+        let cfg = random_cfg(&mut rng);
+        let net = roshambo();
+        let plans = plan_from_estimates(&net, &cfg);
+        let dcfg = random_driver(&mut rng);
+        let mut sys = System::nullhop(cfg.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let max = plans.iter().map(|p| p.timing.tx_bytes.max(p.timing.rx_bytes)).max().unwrap();
+        let mut drv = Driver::new(dcfg, &mut cma, &cfg, max).unwrap();
+        let rep = run_frame(&mut sys, &mut drv, &net, &plans).unwrap();
+        assert_eq!(rep.tx_bytes, plans.iter().map(|p| p.timing.tx_bytes).sum::<u64>());
+        assert_eq!(rep.rx_bytes, plans.iter().map(|p| p.timing.rx_bytes).sum::<u64>());
+        assert!(rep.frame_time > Dur::ZERO);
+        match &sys.device {
+            PlDevice::NullHop(nh) => assert_eq!(nh.layers_done, 5),
+            _ => unreachable!(),
+        }
+    }
+}
