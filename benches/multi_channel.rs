@@ -1,0 +1,128 @@
+//! Bench SCALE: multi-engine hot paths — 1/2/4-engine concurrent
+//! loop-backs, the frame-pipelined batch scheduler, and the multi-queue
+//! kernel driver — so the perf trajectory tracks scaling, not just the
+//! single-channel sweep.
+
+mod common;
+
+use psoc_dma::axi::descriptor::Descriptor;
+use psoc_dma::axi::dma::DmaMode;
+use psoc_dma::cnn::roshambo::roshambo;
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::pipeline::{plan_from_estimates, run_batch, PipelineOpts};
+use psoc_dma::drivers::{Driver, DriverConfig, DriverKind};
+use psoc_dma::memory::buffer::{CmaAllocator, PhysAddr};
+use psoc_dma::sim::event::{Channel, EngineId};
+use psoc_dma::system::System;
+
+fn cfg_engines(n: u64) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.num_engines = n;
+    c
+}
+
+fn main() {
+    // Raw dispatcher throughput with N engines moving data at once: the
+    // multi-engine event-routing hot path.
+    for engines in [1u64, 2, 4] {
+        let cfg = cfg_engines(engines);
+        let n = 1 << 20;
+        let mut events = 0u64;
+        let s = common::bench(
+            &format!("scale/concurrent_loopback_1MBx{engines}"),
+            1,
+            10,
+            || {
+                let mut sys = System::loopback(cfg.clone());
+                for e in 0..engines {
+                    let e = EngineId(e as u8);
+                    sys.program_dma_on(
+                        e,
+                        Channel::S2mm,
+                        DmaMode::Simple,
+                        vec![Descriptor::new(PhysAddr(0x100000), n).with_irq()],
+                    );
+                    sys.program_dma_on(
+                        e,
+                        Channel::Mm2s,
+                        DmaMode::Simple,
+                        vec![Descriptor::new(PhysAddr(0), n).with_irq()],
+                    );
+                }
+                for e in 0..engines {
+                    let e = EngineId(e as u8);
+                    sys.poll_wait_on(e, Channel::Mm2s).unwrap();
+                    sys.poll_wait_on(e, Channel::S2mm).unwrap();
+                }
+                events = sys.eng.dispatched;
+            },
+        );
+        println!(
+            "  -> {events} events, {:.1} ns/event (full dispatch)",
+            s.mean * 1e6 / events as f64
+        );
+    }
+
+    // The frame-pipelined batch scheduler at 1/2/4 channels.
+    let net = roshambo();
+    for channels in [1usize, 2, 4] {
+        let cfg = cfg_engines(channels as u64);
+        let plans = plan_from_estimates(&net, &cfg);
+        let max = plans.iter().map(|p| p.timing.tx_bytes.max(p.timing.rx_bytes)).max().unwrap();
+        let frames = 6;
+        let mut fps = 0.0;
+        common::bench(
+            &format!("scale/batch_roshambo_{channels}ch_depth{channels}"),
+            1,
+            5,
+            || {
+                let mut sys = System::nullhop(cfg.clone());
+                let mut cma = CmaAllocator::zynq_default();
+                let mut drivers: Vec<Driver> = (0..channels)
+                    .map(|c| {
+                        Driver::new_on(
+                            DriverConfig::table1(DriverKind::UserPolling),
+                            &mut cma,
+                            &cfg,
+                            max,
+                            EngineId(c as u8),
+                        )
+                        .unwrap()
+                    })
+                    .collect();
+                let r = run_batch(
+                    &mut sys,
+                    &mut drivers,
+                    &net,
+                    &plans,
+                    frames,
+                    PipelineOpts::new(channels, channels),
+                )
+                .unwrap();
+                fps = r.frames_per_sec();
+            },
+        );
+        println!("  -> simulated {fps:.1} frames/sec");
+    }
+
+    // Multi-queue kernel driver striping one payload across engines.
+    for engines in [1u64, 2, 4] {
+        let mut cfg = cfg_engines(engines);
+        cfg.kernel_cache_flush_bps = 4e9;
+        cfg.memcpy_bw_cached_bps = 8e9;
+        cfg.memcpy_bw_ddr_bps = 8e9;
+        let bytes = 4 << 20;
+        common::bench(&format!("scale/multiqueue_4MBx{engines}"), 1, 10, || {
+            let mut sys = System::loopback(cfg.clone());
+            let mut cma = CmaAllocator::zynq_default();
+            let mut drv = Driver::new(
+                DriverConfig::table1(DriverKind::KernelMultiQueue),
+                &mut cma,
+                &cfg,
+                bytes,
+            )
+            .unwrap();
+            drv.transfer(&mut sys, bytes, bytes).unwrap();
+        });
+    }
+}

@@ -9,7 +9,7 @@ use psoc_dma::axi::dma::DmaMode;
 use psoc_dma::config::SimConfig;
 use psoc_dma::memory::buffer::PhysAddr;
 use psoc_dma::sim::engine::Engine;
-use psoc_dma::sim::event::{Channel, Event};
+use psoc_dma::sim::event::{Channel, EngineId, Event};
 use psoc_dma::sim::time::Dur;
 use psoc_dma::system::System;
 
@@ -18,7 +18,7 @@ fn main() {
     let s = common::bench("hotpath/calendar_push_pop_1M", 1, 10, || {
         let mut eng = Engine::new();
         for i in 0..1_000_000u64 {
-            eng.schedule(Dur(i % 977), Event::DevKick);
+            eng.schedule(Dur(i % 977), Event::DevKick { eng: EngineId::ZERO });
             if i % 2 == 1 {
                 eng.pop();
                 eng.pop();

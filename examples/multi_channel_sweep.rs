@@ -1,0 +1,76 @@
+//! Multi-channel scaling, end to end: the RoShamBo workload over every
+//! channel-count × pipeline-depth cell, plus the multi-queue kernel
+//! driver striping one loop-back payload across engines.
+//!
+//! This is the experiment the single-engine seed could not express: with
+//! N AXI-DMA engines (each with its own FIFOs, register block, IRQ lines
+//! and NullHop context) and a frame-pipelined coordinator, frame *i+1*
+//! streams in on one channel while frame *i* streams out on another.
+//!
+//! ```
+//! cargo run --release --example multi_channel_sweep
+//! ```
+
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::scaling_sweep;
+use psoc_dma::drivers::{Driver, DriverConfig, DriverKind};
+use psoc_dma::memory::buffer::CmaAllocator;
+use psoc_dma::report;
+use psoc_dma::system::System;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SimConfig::default();
+    let frames = 8;
+
+    // 1. The scaling grid: frames/sec per (channels, depth) cell.
+    let rows = scaling_sweep(&cfg, &DriverKind::ALL, &[1, 2, 4], &[1, 2, 4], frames)?;
+    print!("{}", report::scaling_text(&rows));
+
+    // Headline: the best cell per driver.
+    println!();
+    for kind in DriverKind::ALL {
+        let best = rows
+            .iter()
+            .filter(|r| r.driver == kind)
+            .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+            .unwrap();
+        println!(
+            "{:<26} best: {} channels x depth {} -> {:.2}x ({:.1} fps)",
+            kind.label(),
+            best.channels,
+            best.depth,
+            best.speedup,
+            best.report.frames_per_sec()
+        );
+    }
+
+    // 2. The multi-queue kernel driver on a raw loop-back payload: one
+    //    transfer striped across engines (DMA-bound config so the
+    //    per-engine stream, not the CPU feed, is the bottleneck).
+    println!("\nmulti-queue kernel driver, 4 MB loop-back, DMA-bound config:");
+    let bytes = 4 << 20;
+    for engines in [1u64, 2, 4] {
+        let mut c = cfg.clone();
+        c.num_engines = engines;
+        c.kernel_cache_flush_bps = 4e9;
+        c.memcpy_bw_cached_bps = 8e9;
+        c.memcpy_bw_ddr_bps = 8e9;
+        let mut sys = System::loopback(c.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let mut drv =
+            Driver::new(DriverConfig::table1(DriverKind::KernelMultiQueue), &mut cma, &c, bytes)?;
+        let r = drv.transfer(&mut sys, bytes, bytes)?;
+        println!(
+            "  {engines} engine(s): RX {:>8.3} ms  ({:.0} MB/s effective)",
+            r.rx_time.as_ms(),
+            (2 * bytes) as f64 / 1e6 / (r.rx_time.ns() as f64 * 1e-9)
+        );
+    }
+
+    println!(
+        "\nthe overlap regimes the paper could not explore: more engines move the\n\
+         bottleneck from the single AXI port to the shared DDR controller, and\n\
+         frame pipelining turns per-frame latency into throughput."
+    );
+    Ok(())
+}

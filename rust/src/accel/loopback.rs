@@ -12,10 +12,12 @@
 use crate::axi::stream::ByteFifo;
 use crate::config::SimConfig;
 use crate::sim::engine::Engine;
-use crate::sim::event::{Channel, Event};
+use crate::sim::event::{Channel, EngineId, Event};
 use crate::sim::time::{Dur, SimTime};
 
 pub struct Loopback {
+    /// Which engine's stream ports this core is attached to.
+    port: EngineId,
     /// Line rate of the passthrough (AXI-Stream payload bandwidth).
     bandwidth_bps: f64,
     /// Pipeline fill latency, paid once per quiet-to-busy transition.
@@ -39,8 +41,9 @@ pub struct Loopback {
 }
 
 impl Loopback {
-    pub fn new(cfg: &SimConfig) -> Self {
+    pub fn new(cfg: &SimConfig, port: EngineId) -> Self {
         Loopback {
+            port,
             bandwidth_bps: cfg.stream_bandwidth_bps,
             latency: Dur(cfg.loopback_latency_ns),
             internal_fifo: cfg.loopback_fifo_bytes,
@@ -86,7 +89,7 @@ impl Loopback {
                 s2mm.push(n);
                 self.pending_out -= n;
                 self.produced += n;
-                eng.schedule_now(Event::DmaKick { ch: Channel::S2mm });
+                eng.schedule_now(Event::DmaKick { eng: self.port, ch: Channel::S2mm });
             }
         }
 
@@ -98,7 +101,7 @@ impl Loopback {
             if n > 0 {
                 mm2s.pop(n);
                 self.consumed += n;
-                eng.schedule_now(Event::DmaKick { ch: Channel::Mm2s });
+                eng.schedule_now(Event::DmaKick { eng: self.port, ch: Channel::Mm2s });
                 let mut dt = Dur::for_bytes(n, self.bandwidth_bps);
                 if !self.primed {
                     dt += self.latency;
@@ -106,7 +109,7 @@ impl Loopback {
                 }
                 self.processing = n;
                 self.busy_until = Some(now + dt);
-                eng.schedule(dt, Event::DevKick);
+                eng.schedule(dt, Event::DevKick { eng: self.port });
             } else if mm2s.is_empty() && self.processing == 0 && self.pending_out == 0 {
                 // Quiet again: next activity repays the pipeline latency.
                 self.primed = false;
@@ -130,10 +133,10 @@ mod tests {
 
     /// Drive only DevKick events (no DMA engine in the loop).
     fn run(lb: &mut Loopback, eng: &mut Engine, mm2s: &mut ByteFifo, s2mm: &mut ByteFifo) {
-        eng.schedule_now(Event::DevKick);
+        eng.schedule_now(Event::DevKick { eng: EngineId::ZERO });
         while let Some((_, ev)) = eng.pop() {
             match ev {
-                Event::DevKick => lb.advance(eng, mm2s, s2mm),
+                Event::DevKick { .. } => lb.advance(eng, mm2s, s2mm),
                 Event::DmaKick { .. } => {} // no engine attached
                 other => panic!("unexpected {other:?}"),
             }
@@ -143,7 +146,7 @@ mod tests {
     #[test]
     fn echoes_all_bytes() {
         let c = cfg();
-        let mut lb = Loopback::new(&c);
+        let mut lb = Loopback::new(&c, EngineId::ZERO);
         let mut eng = Engine::new();
         let mut mm2s = ByteFifo::new(8192);
         let mut s2mm = ByteFifo::new(8192);
@@ -161,7 +164,7 @@ mod tests {
     #[test]
     fn stalls_when_s2mm_full_and_resumes() {
         let c = cfg();
-        let mut lb = Loopback::new(&c);
+        let mut lb = Loopback::new(&c, EngineId::ZERO);
         let mut eng = Engine::new();
         let mut mm2s = ByteFifo::new(16384);
         let mut s2mm = ByteFifo::new(1024); // tiny output FIFO
@@ -181,7 +184,7 @@ mod tests {
     #[test]
     fn latency_paid_once_per_burst_of_activity() {
         let c = cfg();
-        let mut lb = Loopback::new(&c);
+        let mut lb = Loopback::new(&c, EngineId::ZERO);
         let mut eng = Engine::new();
         let mut mm2s = ByteFifo::new(8192);
         let mut s2mm = ByteFifo::new(8192);

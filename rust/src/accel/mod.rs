@@ -16,15 +16,18 @@ pub mod nullhop;
 
 use crate::axi::stream::ByteFifo;
 use crate::sim::engine::Engine;
+use crate::sim::event::EngineId;
 
 pub use loopback::Loopback;
 pub use nullhop::{LayerTiming, NullHopCore};
 
-/// The device plugged into the PL for a given experiment.
+/// The device plugged into one engine's PL stream ports for a given
+/// experiment. In a multi-engine system every engine carries its own
+/// device instance (NEURAghe-style: independent PS–PL stream port pairs).
 pub enum PlDevice {
     /// Nothing attached: MM2S data vanishes, S2MM never produces. Used by
     /// unit tests and the TX-only calibration runs.
-    Sink,
+    Sink(EngineId),
     Loopback(Loopback),
     NullHop(NullHopCore),
 }
@@ -33,12 +36,13 @@ impl PlDevice {
     /// Advance the device (handles `Event::DevKick`).
     pub fn advance(&mut self, eng: &mut Engine, mm2s: &mut ByteFifo, s2mm: &mut ByteFifo) {
         match self {
-            PlDevice::Sink => {
+            PlDevice::Sink(port) => {
                 // Consume instantly so TX-only runs measure pure DMA time.
                 let lvl = mm2s.level();
                 if lvl > 0 {
                     mm2s.pop(lvl);
                     eng.schedule_now(crate::sim::event::Event::DmaKick {
+                        eng: *port,
                         ch: crate::sim::event::Channel::Mm2s,
                     });
                 }
@@ -50,7 +54,7 @@ impl PlDevice {
 
     pub fn is_idle(&self) -> bool {
         match self {
-            PlDevice::Sink => true,
+            PlDevice::Sink(_) => true,
             PlDevice::Loopback(d) => d.is_idle(),
             PlDevice::NullHop(d) => d.is_idle(),
         }

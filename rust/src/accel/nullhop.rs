@@ -26,7 +26,7 @@
 use crate::axi::stream::ByteFifo;
 use crate::config::SimConfig;
 use crate::sim::engine::Engine;
-use crate::sim::event::{Channel, Event};
+use crate::sim::event::{Channel, EngineId, Event};
 use crate::sim::time::{Dur, SimTime};
 
 /// Timing parameters of one layer execution, derived by
@@ -72,6 +72,8 @@ enum Phase {
 }
 
 pub struct NullHopCore {
+    /// Which engine's stream ports this core is attached to.
+    port: EngineId,
     stream_bps: f64,
     chunk: u64,
     config_latency: Dur,
@@ -100,8 +102,9 @@ pub struct NullHopCore {
 }
 
 impl NullHopCore {
-    pub fn new(cfg: &SimConfig) -> Self {
+    pub fn new(cfg: &SimConfig, port: EngineId) -> Self {
         NullHopCore {
+            port,
             stream_bps: cfg.stream_bandwidth_bps,
             chunk: cfg.max_burst_bytes,
             config_latency: Dur(cfg.nullhop_config_ns),
@@ -138,7 +141,7 @@ impl NullHopCore {
         self.pending_out = 0;
         self.out_busy_until = None;
         self.out_processing = 0;
-        eng.schedule(self.config_latency, Event::DevKick);
+        eng.schedule(self.config_latency, Event::DevKick { eng: self.port });
     }
 
     /// The layer finished (all TX consumed, all RX produced).
@@ -198,11 +201,11 @@ impl NullHopCore {
             let n = self.chunk.min(mm2s.level()).min(want);
             if n > 0 {
                 mm2s.pop(n);
-                eng.schedule_now(Event::DmaKick { ch: Channel::Mm2s });
+                eng.schedule_now(Event::DmaKick { eng: self.port, ch: Channel::Mm2s });
                 let dt = Dur::for_bytes(n, self.stream_bps);
                 self.in_processing = n;
                 self.in_busy_until = Some(now + dt);
-                eng.schedule(dt, Event::DevKick);
+                eng.schedule(dt, Event::DevKick { eng: self.port });
             }
         }
 
@@ -220,7 +223,7 @@ impl NullHopCore {
                 s2mm.push(n);
                 self.pending_out -= n;
                 self.produced += n;
-                eng.schedule_now(Event::DmaKick { ch: Channel::S2mm });
+                eng.schedule_now(Event::DmaKick { eng: self.port, ch: Channel::S2mm });
             }
         }
         if self.out_busy_until.is_none() {
@@ -234,7 +237,7 @@ impl NullHopCore {
                 let dt = Dur(mac_ns).max(Dur::for_bytes(n, self.stream_bps));
                 self.out_processing = n;
                 self.out_busy_until = Some(now + dt);
-                eng.schedule(dt, Event::DevKick);
+                eng.schedule(dt, Event::DevKick { eng: self.port });
             }
         }
 
@@ -266,7 +269,7 @@ mod tests {
     fn run(nh: &mut NullHopCore, eng: &mut Engine, mm2s: &mut ByteFifo, s2mm: &mut ByteFifo) {
         while let Some((_, ev)) = eng.pop() {
             match ev {
-                Event::DevKick => nh.advance(eng, mm2s, s2mm),
+                Event::DevKick { .. } => nh.advance(eng, mm2s, s2mm),
                 Event::DmaKick { .. } => {}
                 other => panic!("unexpected {other:?}"),
             }
@@ -285,7 +288,7 @@ mod tests {
     #[test]
     fn layer_runs_to_completion() {
         let c = cfg();
-        let mut nh = NullHopCore::new(&c);
+        let mut nh = NullHopCore::new(&c, EngineId::ZERO);
         let mut eng = Engine::new();
         let mut mm2s = ByteFifo::new(8192);
         let mut s2mm = ByteFifo::new(8192);
@@ -302,7 +305,7 @@ mod tests {
     #[test]
     fn compute_bound_output_is_slower_than_input() {
         let c = cfg();
-        let mut nh = NullHopCore::new(&c);
+        let mut nh = NullHopCore::new(&c, EngineId::ZERO);
         let mut eng = Engine::new();
         let mut mm2s = ByteFifo::new(8192);
         let mut s2mm = ByteFifo::new(8192);
@@ -318,7 +321,7 @@ mod tests {
     #[test]
     fn no_output_before_start_threshold() {
         let c = cfg();
-        let mut nh = NullHopCore::new(&c);
+        let mut nh = NullHopCore::new(&c, EngineId::ZERO);
         let mut eng = Engine::new();
         let mut mm2s = ByteFifo::new(8192);
         let mut s2mm = ByteFifo::new(8192);
@@ -330,7 +333,7 @@ mod tests {
         assert!(!nh.layer_done());
         // Now complete the input.
         mm2s.push(4096 - 512);
-        eng.schedule_now(Event::DevKick);
+        eng.schedule_now(Event::DevKick { eng: EngineId::ZERO });
         run(&mut nh, &mut eng, &mut mm2s, &mut s2mm);
         assert!(nh.layer_done());
     }
@@ -338,7 +341,7 @@ mod tests {
     #[test]
     fn production_gated_by_input_progress() {
         let c = cfg();
-        let mut nh = NullHopCore::new(&c);
+        let mut nh = NullHopCore::new(&c, EngineId::ZERO);
         let mut eng = Engine::new();
         let mut mm2s = ByteFifo::new(8192);
         let mut s2mm = ByteFifo::new(8192);
@@ -355,7 +358,7 @@ mod tests {
     #[test]
     fn stalls_on_full_s2mm_fifo() {
         let c = cfg();
-        let mut nh = NullHopCore::new(&c);
+        let mut nh = NullHopCore::new(&c, EngineId::ZERO);
         let mut eng = Engine::new();
         let mut mm2s = ByteFifo::new(8192);
         let mut s2mm = ByteFifo::new(512); // tiny RX FIFO
@@ -372,7 +375,7 @@ mod tests {
             if lvl > 0 {
                 s2mm.pop(lvl);
             }
-            eng.schedule_now(Event::DevKick);
+            eng.schedule_now(Event::DevKick { eng: EngineId::ZERO });
             run(&mut nh, &mut eng, &mut mm2s, &mut s2mm);
         }
         assert!(nh.layer_done());
@@ -382,7 +385,7 @@ mod tests {
     #[should_panic(expected = "mid-layer")]
     fn reconfigure_mid_layer_is_a_bug() {
         let c = cfg();
-        let mut nh = NullHopCore::new(&c);
+        let mut nh = NullHopCore::new(&c, EngineId::ZERO);
         let mut eng = Engine::new();
         nh.configure_layer(&mut eng, timing());
         nh.configure_layer(&mut eng, timing());

@@ -31,7 +31,7 @@ use crate::axi::stream::ByteFifo;
 use crate::config::SimConfig;
 use crate::memory::ddr::{DdrController, DdrDir, Requester};
 use crate::sim::engine::Engine;
-use crate::sim::event::{Channel, Event};
+use crate::sim::event::{Channel, EngineId, Event};
 use crate::sim::time::{Dur, SimTime};
 
 /// How the channel was programmed.
@@ -63,8 +63,11 @@ pub struct DmaStats {
     pub fifo_stalls: u64,
 }
 
-/// One direction of the AXI-DMA IP.
+/// One direction of one AXI-DMA IP instance.
 pub struct DmaChannelEngine {
+    /// Which engine instance this channel belongs to (routes kicks,
+    /// DDR requests and IRQ lines in a multi-engine system).
+    id: EngineId,
     ch: Channel,
     mode: DmaMode,
     max_burst: u64,
@@ -85,8 +88,9 @@ pub struct DmaChannelEngine {
 }
 
 impl DmaChannelEngine {
-    pub fn new(ch: Channel, cfg: &SimConfig) -> Self {
+    pub fn new(id: EngineId, ch: Channel, cfg: &SimConfig) -> Self {
         DmaChannelEngine {
+            id,
             ch,
             mode: DmaMode::Simple,
             max_burst: cfg.max_burst_bytes,
@@ -103,6 +107,10 @@ impl DmaChannelEngine {
 
     pub fn channel(&self) -> Channel {
         self.ch
+    }
+
+    pub fn engine_id(&self) -> EngineId {
+        self.id
     }
 
     /// Status-register view: transfer chain fully complete.
@@ -141,7 +149,7 @@ impl DmaChannelEngine {
         self.done = false;
         // Stats accumulate across transfers (a Blocks-mode payload is
         // many back-to-back programs); reset them explicitly if needed.
-        eng.schedule_now(Event::DmaKick { ch: self.ch });
+        eng.schedule_now(Event::DmaKick { eng: self.id, ch: self.ch });
     }
 
     /// Append descriptors to a running SG chain (the kernel driver queues
@@ -151,7 +159,7 @@ impl DmaChannelEngine {
         assert!(!descs.is_empty());
         self.queue.extend(descs);
         self.done = false;
-        eng.schedule_now(Event::DmaKick { ch: self.ch });
+        eng.schedule_now(Event::DmaKick { eng: self.id, ch: self.ch });
     }
 
     pub fn is_idle(&self) -> bool {
@@ -172,7 +180,8 @@ impl DmaChannelEngine {
                     // Start the BD fetch; re-kick when it lands.
                     self.fetch_done_at = Some(eng.now() + self.desc_fetch);
                     self.stats.desc_fetches += 1;
-                    eng.schedule(self.desc_fetch, Event::DmaKick { ch: self.ch });
+                    let kick = Event::DmaKick { eng: self.id, ch: self.ch };
+                    eng.schedule(self.desc_fetch, kick);
                     return;
                 }
                 (DmaMode::ScatterGather, Some(t)) if eng.now() < t => {
@@ -208,14 +217,14 @@ impl DmaChannelEngine {
         }
         match self.ch {
             Channel::Mm2s => {
-                ddr.submit(eng, DdrDir::Read, burst, Requester::Mm2s);
+                ddr.submit(eng, DdrDir::Read, burst, Requester::Mm2s(self.id));
             }
             Channel::S2mm => {
                 // Data leaves the FIFO as the write burst is issued.
                 fifo.pop(burst);
-                ddr.submit(eng, DdrDir::Write, burst, Requester::S2mm);
+                ddr.submit(eng, DdrDir::Write, burst, Requester::S2mm(self.id));
                 // Freed FIFO space lets the device produce again.
-                eng.schedule_now(Event::DevKick);
+                eng.schedule_now(Event::DevKick { eng: self.id });
             }
         }
         self.in_flight = burst;
@@ -242,7 +251,7 @@ impl DmaChannelEngine {
             // The read data streams into the datamover FIFO. Space was
             // reserved at issue time; the device may now consume.
             fifo.push(bytes);
-            eng.schedule_now(Event::DevKick);
+            eng.schedule_now(Event::DevKick { eng: self.id });
         }
 
         let mut want_irq = false;
@@ -289,7 +298,7 @@ mod tests {
             Rig {
                 eng: Engine::new(),
                 ddr: DdrController::new(cfg),
-                ch: DmaChannelEngine::new(Channel::Mm2s, cfg),
+                ch: DmaChannelEngine::new(EngineId::ZERO, Channel::Mm2s, cfg),
                 fifo: ByteFifo::new(cfg.mm2s_fifo_bytes),
                 greedy_drain: true,
                 source_bytes: 0,
@@ -301,7 +310,7 @@ mod tests {
             Rig {
                 eng: Engine::new(),
                 ddr: DdrController::new(cfg),
-                ch: DmaChannelEngine::new(Channel::S2mm, cfg),
+                ch: DmaChannelEngine::new(EngineId::ZERO, Channel::S2mm, cfg),
                 fifo: ByteFifo::new(cfg.s2mm_fifo_bytes),
                 greedy_drain: false,
                 source_bytes: source,
@@ -334,19 +343,25 @@ mod tests {
                     Event::DmaKick { .. } => {
                         self.ch.kick(&mut self.eng, &mut self.ddr, &mut self.fifo)
                     }
-                    Event::DevKick => {
+                    Event::DevKick { .. } => {
                         if self.greedy_drain {
                             let lvl = self.fifo.level();
                             if lvl > 0 {
                                 self.fifo.pop(lvl);
-                                self.eng.schedule_now(Event::DmaKick { ch: Channel::Mm2s });
+                                self.eng.schedule_now(Event::DmaKick {
+                                    eng: EngineId::ZERO,
+                                    ch: Channel::Mm2s,
+                                });
                             }
                         } else if self.source_bytes > 0 {
                             let room = self.fifo.free().min(self.source_bytes);
                             if room > 0 {
                                 self.fifo.push(room);
                                 self.source_bytes -= room;
-                                self.eng.schedule_now(Event::DmaKick { ch: Channel::S2mm });
+                                self.eng.schedule_now(Event::DmaKick {
+                                    eng: EngineId::ZERO,
+                                    ch: Channel::S2mm,
+                                });
                             }
                         }
                     }

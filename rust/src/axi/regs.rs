@@ -19,7 +19,6 @@ use crate::axi::dma::{DmaChannelEngine, DmaMode};
 use crate::memory::buffer::PhysAddr;
 use crate::sim::engine::Engine;
 use crate::sim::event::Channel;
-use thiserror::Error;
 
 // ---- Register offsets (PG021). ------------------------------------------
 pub const MM2S_DMACR: u32 = 0x00;
@@ -47,17 +46,28 @@ pub const SR_IDLE: u32 = 1 << 1;
 /// Interrupt-on-complete latched (write-1-to-clear).
 pub const SR_IOC_IRQ: u32 = 1 << 12;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Error)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RegError {
-    #[error("write to read-only or unmapped register 0x{0:02x}")]
     BadWrite(u32),
-    #[error("read of unmapped register 0x{0:02x}")]
     BadRead(u32),
-    #[error("LENGTH write while channel halted (DMACR.RS clear)")]
     Halted,
-    #[error("LENGTH value {0} exceeds the 23-bit field")]
     LengthTooBig(u32),
 }
+
+impl std::fmt::Display for RegError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegError::BadWrite(off) => {
+                write!(f, "write to read-only or unmapped register 0x{off:02x}")
+            }
+            RegError::BadRead(off) => write!(f, "read of unmapped register 0x{off:02x}"),
+            RegError::Halted => write!(f, "LENGTH write while channel halted (DMACR.RS clear)"),
+            RegError::LengthTooBig(v) => write!(f, "LENGTH value {v} exceeds the 23-bit field"),
+        }
+    }
+}
+
+impl std::error::Error for RegError {}
 
 /// Per-channel register state.
 #[derive(Clone, Copy, Debug)]
@@ -202,7 +212,7 @@ mod tests {
     use crate::axi::stream::ByteFifo;
     use crate::config::SimConfig;
     use crate::memory::ddr::DdrController;
-    use crate::sim::event::Event;
+    use crate::sim::event::{EngineId, Event};
 
     struct Rig {
         eng: Engine,
@@ -218,8 +228,8 @@ mod tests {
         Rig {
             eng: Engine::new(),
             ddr: DdrController::new(&cfg),
-            mm2s: DmaChannelEngine::new(Channel::Mm2s, &cfg),
-            s2mm: DmaChannelEngine::new(Channel::S2mm, &cfg),
+            mm2s: DmaChannelEngine::new(EngineId::ZERO, Channel::Mm2s, &cfg),
+            s2mm: DmaChannelEngine::new(EngineId::ZERO, Channel::S2mm, &cfg),
             mm2s_fifo: ByteFifo::new(cfg.mm2s_fifo_bytes),
             regs: DmaRegFile::new(),
         }
@@ -243,15 +253,18 @@ mod tests {
                             self.regs.latch_ioc(Channel::Mm2s);
                         }
                     }
-                    Event::DmaKick { ch: Channel::Mm2s } => {
+                    Event::DmaKick { ch: Channel::Mm2s, .. } => {
                         self.mm2s.kick(&mut self.eng, &mut self.ddr, &mut self.mm2s_fifo)
                     }
                     Event::DmaKick { .. } => {}
-                    Event::DevKick => {
+                    Event::DevKick { .. } => {
                         let lvl = self.mm2s_fifo.level();
                         if lvl > 0 {
                             self.mm2s_fifo.pop(lvl);
-                            self.eng.schedule_now(Event::DmaKick { ch: Channel::Mm2s });
+                            self.eng.schedule_now(Event::DmaKick {
+                                eng: EngineId::ZERO,
+                                ch: Channel::Mm2s,
+                            });
                         }
                     }
                     other => panic!("unexpected {other:?}"),

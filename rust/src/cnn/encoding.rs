@@ -60,13 +60,24 @@ pub fn encode_i16(vals: &[i16]) -> Vec<u8> {
 
 /// Decoding failure (the simulator never produces these; they guard the
 /// runtime path against artifact/driver mismatches).
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum DecodeError {
-    #[error("encoded stream truncated: need {need} bytes, have {have}")]
     Truncated { need: usize, have: usize },
-    #[error("trailing bytes after payload: {0}")]
     Trailing(usize),
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated { need, have } => {
+                write!(f, "encoded stream truncated: need {need} bytes, have {have}")
+            }
+            DecodeError::Trailing(n) => write!(f, "trailing bytes after payload: {n}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// Decode an [`encode_i16`] stream back to the dense tensor.
 pub fn decode_i16(bytes: &[u8]) -> Result<Vec<i16>, DecodeError> {

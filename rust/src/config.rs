@@ -28,6 +28,18 @@ pub struct SimConfig {
     /// than either alone — the paper's "DDR memory cannot attend read and
     /// write operations at the same time".
     pub ddr_turnaround_ns: u64,
+    /// Per-engine DDR arbitration weights (deficit round-robin within
+    /// each priority class): engine `i` gets `weights[i]` grants per
+    /// refill round; engines beyond the list inherit the last entry, so
+    /// `[1]` means "all equal". See DESIGN.md §7.
+    pub ddr_engine_weights: Vec<u64>,
+
+    // ---- Multi-engine topology ------------------------------------------
+    /// Number of independent AXI-DMA engines (MM2S/S2MM pairs with their
+    /// own FIFOs, register blocks, IRQ lines and PL device instance).
+    /// The paper's platform is `1`; NEURAghe-style multi-port scaling
+    /// experiments sweep this up to [`crate::sim::event::MAX_ENGINES`].
+    pub num_engines: u64,
 
     // ---- AXI interconnect / DMA engine ----------------------------------
     /// AXI4-Stream payload bandwidth between DMA and PL (64-bit @ 100 MHz).
@@ -157,6 +169,8 @@ impl Default for SimConfig {
             ddr_bandwidth_bps: 1.02e9,
             ddr_latency_ns: 150,
             ddr_turnaround_ns: 45,
+            ddr_engine_weights: vec![1],
+            num_engines: 1,
 
             // AXI-Stream: 32-bit datamover @ 100 MHz (the NullHop
             // integration's stream width; calibrated against Table I's
@@ -254,14 +268,31 @@ macro_rules! config_fields {
             .as_u64()
             .ok_or_else(|| anyhow::anyhow!("config key {} must be a non-negative integer", $k))?;
     };
+    (@set $self:ident, $field:ident, vec_u64, $val:ident, $k:ident) => {
+        $self.$field = $val
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("config key {} must be an array", $k))?
+            .iter()
+            .map(|x| {
+                x.as_u64().ok_or_else(|| {
+                    anyhow::anyhow!("config key {} must hold non-negative integers", $k)
+                })
+            })
+            .collect::<anyhow::Result<Vec<u64>>>()?;
+    };
     (@get $self:ident, $field:ident, f64) => { Json::num($self.$field) };
     (@get $self:ident, $field:ident, u64) => { Json::num($self.$field as f64) };
+    (@get $self:ident, $field:ident, vec_u64) => {
+        Json::Arr($self.$field.iter().map(|&x| Json::num(x as f64)).collect())
+    };
 }
 
 config_fields! {
     ddr_bandwidth_bps: f64,
     ddr_latency_ns: u64,
     ddr_turnaround_ns: u64,
+    ddr_engine_weights: vec_u64,
+    num_engines: u64,
     stream_bandwidth_bps: f64,
     max_burst_bytes: u64,
     mm2s_fifo_bytes: u64,
@@ -342,6 +373,17 @@ impl SimConfig {
         anyhow::ensure!(self.bg_burst_bytes > 0, "bg_burst_bytes must be > 0");
         anyhow::ensure!(self.wait_deadline_ns > 0, "wait_deadline_ns must be > 0");
         anyhow::ensure!(
+            self.num_engines >= 1
+                && self.num_engines as usize <= crate::sim::event::MAX_ENGINES,
+            "num_engines must be in [1, {}]",
+            crate::sim::event::MAX_ENGINES
+        );
+        anyhow::ensure!(
+            !self.ddr_engine_weights.is_empty()
+                && self.ddr_engine_weights.iter().all(|&w| w >= 1),
+            "ddr_engine_weights must be non-empty with every weight >= 1"
+        );
+        anyhow::ensure!(
             (0.0..=1.0).contains(&self.memcpy_dma_contention),
             "memcpy_dma_contention must be in [0,1]"
         );
@@ -413,6 +455,35 @@ mod tests {
         let mut cfg = SimConfig::default();
         cfg.mm2s_fifo_bytes = cfg.max_burst_bytes - 1;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn engine_fields_roundtrip_and_validate() {
+        let mut cfg = SimConfig::default();
+        cfg.apply_json(
+            &Json::parse(r#"{"num_engines": 4, "ddr_engine_weights": [3, 1]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.num_engines, 4);
+        assert_eq!(cfg.ddr_engine_weights, vec![3, 1]);
+        cfg.validate().unwrap();
+        let json = cfg.to_json();
+        let mut cfg2 = SimConfig::default();
+        cfg2.apply_json(&json).unwrap();
+        assert_eq!(cfg, cfg2);
+
+        let mut bad = SimConfig::default();
+        bad.num_engines = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = SimConfig::default();
+        bad.num_engines = 99;
+        assert!(bad.validate().is_err());
+        let mut bad = SimConfig::default();
+        bad.ddr_engine_weights = vec![];
+        assert!(bad.validate().is_err());
+        let mut bad = SimConfig::default();
+        bad.ddr_engine_weights = vec![0];
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -19,7 +19,11 @@ use crate::sensor::frame::FrameCollector;
 use crate::sim::time::Dur;
 use crate::system::System;
 
-use super::pipeline::{self, plan_from_estimates, FrameReport, LayerPlan};
+use crate::sim::event::EngineId;
+
+use super::pipeline::{
+    self, plan_from_estimates, run_batch, BatchReport, FrameReport, LayerPlan, PipelineOpts,
+};
 
 /// The paper's Fig. 4/5 sweep sizes: 8 B → 6 MB, geometric with the 6 MB
 /// endpoint the figures show.
@@ -159,6 +163,81 @@ pub fn table1_runtime(
     let plan = pipeline::plan_with_runtime(&net, cfg, rt, &fdata)?;
     let rows = table1_with_plans(cfg, &net, &plan.plans, frames)?;
     Ok((rows, plan))
+}
+
+/// One cell of the channel-count × pipeline-depth scaling grid.
+#[derive(Clone, Debug)]
+pub struct ScalingRow {
+    pub driver: DriverKind,
+    pub channels: usize,
+    pub depth: usize,
+    pub frames: usize,
+    pub report: BatchReport,
+    /// Throughput gain over this driver's (1 channel, depth 1) cell.
+    pub speedup: f64,
+}
+
+/// One cell of the grid: build a fresh system with `channels` engines
+/// and run `frames` frames at the given depth.
+fn scaling_cell(
+    cfg: &SimConfig,
+    net: &NetDesc,
+    kind: DriverKind,
+    channels: usize,
+    depth: usize,
+    frames: usize,
+) -> Result<BatchReport, DriverError> {
+    let mut c = cfg.clone();
+    c.num_engines = channels as u64;
+    let plans = plan_from_estimates(net, &c);
+    let max = plans
+        .iter()
+        .map(|p| p.timing.tx_bytes.max(p.timing.rx_bytes))
+        .max()
+        .expect("empty plan");
+    let mut sys = System::nullhop(c.clone());
+    let mut cma = CmaAllocator::zynq_default();
+    let mut drvs: Vec<Driver> = (0..channels)
+        .map(|i| Driver::new_on(DriverConfig::table1(kind), &mut cma, &c, max, EngineId(i as u8)))
+        .collect::<Result<_, _>>()?;
+    let report = run_batch(
+        &mut sys,
+        &mut drvs,
+        net,
+        &plans,
+        frames,
+        PipelineOpts::new(channels, depth),
+    )?;
+    for d in drvs {
+        d.release(&mut cma);
+    }
+    Ok(report)
+}
+
+/// Scenario 3 (post-paper): the RoShamBo workload on N engines with up
+/// to `depth` frames in flight — the scaling table. For each driver the
+/// speedups are normalised against a dedicated (1 channel, depth 1)
+/// baseline run, independent of the order or contents of the grid.
+pub fn scaling_sweep(
+    cfg: &SimConfig,
+    drivers: &[DriverKind],
+    channels_list: &[usize],
+    depths: &[usize],
+    frames: usize,
+) -> Result<Vec<ScalingRow>, DriverError> {
+    let net = roshambo();
+    let mut rows = Vec::new();
+    for &kind in drivers {
+        let baseline_fps = scaling_cell(cfg, &net, kind, 1, 1, frames)?.frames_per_sec();
+        for &channels in channels_list {
+            for &depth in depths {
+                let report = scaling_cell(cfg, &net, kind, channels, depth, frames)?;
+                let speedup = report.frames_per_sec() / baseline_fps;
+                rows.push(ScalingRow { driver: kind, channels, depth, frames, report, speedup });
+            }
+        }
+    }
+    Ok(rows)
 }
 
 /// AB-BUF / AB-BLK: the §III.A design-space ablation — every
@@ -449,6 +528,21 @@ mod tests {
                 per[2].bg_served_mbps
             );
         }
+    }
+
+    #[test]
+    fn scaling_sweep_shows_multi_channel_gain() {
+        let rows =
+            scaling_sweep(&cfg(), &[DriverKind::UserPolling], &[1, 2], &[1, 2], 4).unwrap();
+        assert_eq!(rows.len(), 4);
+        let cell =
+            |ch: usize, d: usize| rows.iter().find(|r| r.channels == ch && r.depth == d).unwrap();
+        assert_eq!(cell(1, 1).speedup, 1.0, "baseline normalises to 1");
+        // More channels with depth to exploit them must gain throughput.
+        assert!(cell(2, 2).speedup > 1.0, "2x2 speedup {} not > 1", cell(2, 2).speedup);
+        // Depth without channels is useless (a frame owns its engine).
+        let d2 = cell(1, 2).speedup;
+        assert!((0.99..1.01).contains(&d2), "1-channel depth-2 speedup {d2}");
     }
 
     #[test]

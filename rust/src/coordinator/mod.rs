@@ -6,12 +6,15 @@
 //!   real feature maps between layers via the PJRT [`crate::runtime`];
 //! * [`experiments`] — the runners behind every figure/table: the
 //!   loop-back size sweep (Fig. 4/5), the RoShamBo frame timing
-//!   (Table I), and the ablations (buffering, partitioning, VGG19
-//!   blocking).
+//!   (Table I), the channel-count × pipeline-depth scaling grid, and the
+//!   ablations (buffering, partitioning, VGG19 blocking).
 
 pub mod calibrate;
 pub mod experiments;
 pub mod pipeline;
 
-pub use experiments::{loopback_sweep, table1, SweepRow, Table1Row};
-pub use pipeline::{plan_from_estimates, plan_with_runtime, run_frame, FrameReport, LayerPlan};
+pub use experiments::{loopback_sweep, scaling_sweep, table1, ScalingRow, SweepRow, Table1Row};
+pub use pipeline::{
+    plan_from_estimates, plan_with_runtime, run_batch, run_frame, BatchReport, ChannelPolicy,
+    FrameReport, LayerPlan, PipelineOpts,
+};

@@ -22,14 +22,26 @@
 //!   is copied + flushed, *then* the chain is submitted. No overlap —
 //!   which is why the kernel row of Table I loses to user-level polling
 //!   at RoShamBo's ~100 KB transfer lengths.
+//!
+//! The blocking [`transfer`] is [`submit`] (arm + feed the engine)
+//! followed by [`complete`] (block on the IRQs, invalidate + copy out) —
+//! the split-phase pair the frame-pipelined coordinator drives directly.
+//!
+//! [`transfer_multiqueue`] is the multi-engine extension: the same
+//! pipelined SG feed, but chunks are striped round-robin across *every*
+//! engine's MM2S queue (and the RX arms split proportionally), so a
+//! single payload exploits all PS–PL ports concurrently — NEURAghe's
+//! trick. The CPU-side copy+flush feed is still serial (one core), so
+//! striping pays exactly when the per-engine stream is the bottleneck.
 
 use crate::axi::descriptor::{chain, Descriptor};
 use crate::axi::dma::DmaMode;
 use crate::memory::copy::CopyKind;
-use crate::sim::event::Channel;
+use crate::sim::event::{Channel, EngineId};
 use crate::sim::time::Dur;
 use crate::system::{CpuLedger, System};
 
+use super::scheme::SubmitToken;
 use super::{BufferScheme, Driver, DriverError, PartitionMode, TransferReport};
 
 /// dma_map_single cache-maintenance time for `bytes`.
@@ -43,9 +55,22 @@ pub(super) fn transfer(
     tx_bytes: u64,
     rx_bytes: u64,
 ) -> Result<TransferReport, DriverError> {
+    let token = submit(drv, sys, tx_bytes, rx_bytes)?;
+    complete(drv, sys, token)
+}
+
+/// Split-phase entry: ioctl entry, RX chain arm, TX copy/flush/feed.
+/// Everything up to (not including) the completion waits.
+pub(super) fn submit(
+    drv: &mut Driver,
+    sys: &mut System,
+    tx_bytes: u64,
+    rx_bytes: u64,
+) -> Result<SubmitToken, DriverError> {
     let worst_case = drv.cfg.buffering == BufferScheme::Single
         && drv.cfg.partition == PartitionMode::Unique;
     let sg_chunk = sys.cfg.kernel_sg_chunk_bytes;
+    let port = drv.port;
     let t0 = sys.now();
 
     // ioctl entry + argument marshalling + dmaengine channel setup.
@@ -58,7 +83,7 @@ pub(super) fn transfer(
     if rx_bytes > 0 {
         let descs = chain(drv.rx_buf(0).addr, rx_bytes, sg_chunk);
         sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
-        sys.program_dma(Channel::S2mm, DmaMode::ScatterGather, descs);
+        sys.program_dma_on(port, Channel::S2mm, DmaMode::ScatterGather, descs);
     }
 
     if worst_case {
@@ -68,7 +93,7 @@ pub(super) fn transfer(
         sys.cpu_exec(fl);
         let descs = chain(drv.tx_buf(0).addr, tx_bytes, sg_chunk);
         sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
-        sys.program_dma(Channel::Mm2s, DmaMode::ScatterGather, descs);
+        sys.program_dma_on(port, Channel::Mm2s, DmaMode::ScatterGather, descs);
     } else {
         // Pipelined: copy/flush chunk i+1 while the engine DMAs chunk i.
         let mut off = 0u64;
@@ -86,23 +111,36 @@ pub(super) fn transfer(
                 d = d.with_irq();
             }
             if !programmed {
-                sys.program_dma(Channel::Mm2s, DmaMode::ScatterGather, vec![d]);
+                sys.program_dma_on(port, Channel::Mm2s, DmaMode::ScatterGather, vec![d]);
                 programmed = true;
             } else {
-                sys.append_dma(Channel::Mm2s, vec![d]);
+                sys.append_dma_on(port, Channel::Mm2s, vec![d]);
             }
             off += len;
             i += 1;
         }
     }
+    Ok(SubmitToken { t0, tx_bytes, rx_bytes })
+}
+
+/// Split-phase completion: block on the TX then RX interrupts, then
+/// invalidate + copy the payload out and return to user space.
+pub(super) fn complete(
+    drv: &mut Driver,
+    sys: &mut System,
+    token: SubmitToken,
+) -> Result<TransferReport, DriverError> {
+    let SubmitToken { t0, tx_bytes, rx_bytes } = token;
+    let sg_chunk = sys.cfg.kernel_sg_chunk_bytes;
+    let port = drv.port;
 
     // Block until the TX completion interrupt.
-    sys.irq_wait(Channel::Mm2s)?;
+    sys.irq_wait_on(port, Channel::Mm2s)?;
     let tx_time = sys.now().since(t0);
 
     // Block until RX completes, then invalidate + copy the payload out.
     let rx_time = if rx_bytes > 0 {
-        sys.irq_wait(Channel::S2mm)?;
+        sys.irq_wait_on(port, Channel::S2mm)?;
         let mut left = rx_bytes;
         while left > 0 {
             let len = sg_chunk.min(left);
@@ -110,6 +148,133 @@ pub(super) fn transfer(
             sys.cpu_exec(fl); // dma_unmap invalidate
             sys.cpu_copy(len, CopyKind::KernelCached);
             left -= len;
+        }
+        let exit = sys.costs.syscall_exit();
+        sys.cpu_exec(exit);
+        sys.now().since(t0)
+    } else {
+        let exit = sys.costs.syscall_exit();
+        sys.cpu_exec(exit);
+        Dur::ZERO
+    };
+
+    Ok(TransferReport { tx_bytes, rx_bytes, tx_time, rx_time, ledger: CpuLedger::default() })
+}
+
+/// Multi-queue kernel transfer: stripe the SG chunks across every
+/// engine round-robin, arm each engine's RX for its proportional share,
+/// feed the chunks in submission order, then collect every completion
+/// interrupt. With loop-back devices each engine echoes exactly its own
+/// stripe, so per-engine RX = per-engine TX share.
+pub(super) fn transfer_multiqueue(
+    drv: &mut Driver,
+    sys: &mut System,
+    tx_bytes: u64,
+    rx_bytes: u64,
+) -> Result<TransferReport, DriverError> {
+    let n = sys.num_ports();
+    let sg_chunk = sys.cfg.kernel_sg_chunk_bytes;
+    let t0 = sys.now();
+
+    // Plan the stripes: chunk i goes to engine i % n.
+    let mut tx_share = vec![0u64; n];
+    let mut chunks_of = vec![0usize; n];
+    {
+        let mut off = 0u64;
+        let mut i = 0usize;
+        while off < tx_bytes {
+            let len = sg_chunk.min(tx_bytes - off);
+            tx_share[i % n] += len;
+            chunks_of[i % n] += 1;
+            off += len;
+            i += 1;
+        }
+    }
+    // RX shares proportional to TX shares (exact for loop-back, where
+    // each engine's device echoes its own stripe); the last active
+    // engine absorbs the rounding remainder.
+    let mut rx_share = vec![0u64; n];
+    if rx_bytes > 0 {
+        let mut assigned = 0u64;
+        let mut last_active = 0usize;
+        for p in 0..n {
+            if tx_share[p] == 0 {
+                continue;
+            }
+            rx_share[p] = rx_bytes * tx_share[p] / tx_bytes;
+            assigned += rx_share[p];
+            last_active = p;
+        }
+        rx_share[last_active] += rx_bytes - assigned;
+    }
+
+    // ioctl entry + argument marshalling + one dmaengine submit per
+    // engine used.
+    let entry = sys.costs.syscall_entry();
+    sys.cpu_exec(entry);
+    let engines_used = tx_share.iter().filter(|&&s| s > 0).count() as u64;
+    sys.cpu_exec(Dur(engines_used.max(1) * sys.cfg.kernel_submit_ns));
+
+    // Arm every engine's RX chain up front.
+    for p in 0..n {
+        if rx_share[p] == 0 {
+            continue;
+        }
+        let descs = chain(drv.rx_buf(p).addr, rx_share[p], sg_chunk);
+        sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
+        sys.program_dma_on(EngineId(p as u8), Channel::S2mm, DmaMode::ScatterGather, descs);
+    }
+
+    // Pipelined TX feed, round-robin across engines.
+    let mut off = 0u64;
+    let mut i = 0usize;
+    let mut fed = vec![0usize; n];
+    let mut programmed = vec![false; n];
+    while off < tx_bytes {
+        let len = sg_chunk.min(tx_bytes - off);
+        let p = i % n;
+        sys.cpu_copy(len, CopyKind::KernelCached);
+        let fl = flush_time(sys, len);
+        sys.cpu_exec(fl);
+        sys.cpu_exec(Dur(sys.cfg.kernel_desc_build_ns));
+        let mut d = Descriptor::new(drv.tx_buf(i).addr, len);
+        if fed[p] + 1 == chunks_of[p] {
+            // Last chunk of this engine's stripe: interrupt on complete.
+            d = d.with_irq();
+        }
+        if !programmed[p] {
+            sys.program_dma_on(EngineId(p as u8), Channel::Mm2s, DmaMode::ScatterGather, vec![d]);
+            programmed[p] = true;
+        } else {
+            sys.append_dma_on(EngineId(p as u8), Channel::Mm2s, vec![d]);
+        }
+        fed[p] += 1;
+        off += len;
+        i += 1;
+    }
+
+    // Collect every TX completion, then every RX completion.
+    for p in 0..n {
+        if tx_share[p] > 0 {
+            sys.irq_wait_on(EngineId(p as u8), Channel::Mm2s)?;
+        }
+    }
+    let tx_time = sys.now().since(t0);
+
+    let rx_time = if rx_bytes > 0 {
+        for p in 0..n {
+            if rx_share[p] == 0 {
+                continue;
+            }
+            sys.irq_wait_on(EngineId(p as u8), Channel::S2mm)?;
+            let mut left = rx_share[p];
+            while left > 0 {
+                let len = sg_chunk.min(left);
+                let fl = flush_time(sys, len);
+                sys.cpu_exec(fl); // dma_unmap invalidate
+                sys.cpu_copy(len, CopyKind::KernelCached);
+                left -= len;
+            }
         }
         let exit = sys.costs.syscall_exit();
         sys.cpu_exec(exit);
@@ -163,8 +328,8 @@ mod tests {
     fn uses_scatter_gather_chunks() {
         let (_, sys) = run(1 << 20);
         let chunks = (1u64 << 20).div_ceil(SimConfig::default().kernel_sg_chunk_bytes);
-        assert_eq!(sys.mm2s.stats.desc_fetches, chunks);
-        assert!(sys.s2mm.stats.desc_fetches >= chunks);
+        assert_eq!(sys.mm2s().stats.desc_fetches, chunks);
+        assert!(sys.s2mm().stats.desc_fetches >= chunks);
     }
 
     #[test]
@@ -205,5 +370,51 @@ mod tests {
             r.tx_time,
             copy + flush + stream
         );
+    }
+
+    #[test]
+    fn kernel_split_phase_equals_blocking() {
+        let bytes = 1 << 20;
+        let (blocking, _) = run_cfg(bytes, DriverConfig::table1(DriverKind::KernelIrq));
+        let sys_cfg = SimConfig::default();
+        let mut sys = System::loopback(sys_cfg.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let dcfg = DriverConfig::table1(DriverKind::KernelIrq);
+        let mut drv = Driver::new(dcfg, &mut cma, &sys_cfg, bytes).unwrap();
+        let tok = drv.submit(&mut sys, bytes, bytes).unwrap();
+        let split = drv.complete(&mut sys, tok).unwrap();
+        assert_eq!(split.tx_time, blocking.tx_time);
+        assert_eq!(split.rx_time, blocking.rx_time);
+    }
+
+    #[test]
+    fn multiqueue_stripes_sum_to_payload() {
+        let mut sys_cfg = SimConfig::default();
+        sys_cfg.num_engines = 3;
+        let mut sys = System::loopback(sys_cfg.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let dcfg = DriverConfig::table1(DriverKind::KernelMultiQueue);
+        let bytes = 1 << 20;
+        let mut drv = Driver::new(dcfg, &mut cma, &sys_cfg, bytes).unwrap();
+        let r = drv.transfer(&mut sys, bytes, bytes).unwrap();
+        assert_eq!(r.tx_bytes, bytes);
+        let tx_total: u64 = (0..3).map(|p| sys.port(EngineId(p)).mm2s.stats.bytes).sum();
+        let rx_total: u64 = (0..3).map(|p| sys.port(EngineId(p)).s2mm.stats.bytes).sum();
+        assert_eq!(tx_total, bytes);
+        assert_eq!(rx_total, bytes);
+    }
+
+    #[test]
+    fn multiqueue_on_one_engine_matches_pipelined_shape() {
+        // With a single engine the multi-queue scheme degenerates to the
+        // pipelined SG feed; the IRQ count must stay at 2 (TX + RX).
+        let sys_cfg = SimConfig::default();
+        let mut sys = System::loopback(sys_cfg.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let dcfg = DriverConfig::table1(DriverKind::KernelMultiQueue);
+        let mut drv = Driver::new(dcfg, &mut cma, &sys_cfg, 1 << 20).unwrap();
+        let r = drv.transfer(&mut sys, 1 << 20, 1 << 20).unwrap();
+        assert_eq!(r.ledger.irqs, 2);
+        assert_eq!(r.ledger.poll_reads, 0);
     }
 }

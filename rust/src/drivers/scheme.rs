@@ -1,0 +1,256 @@
+//! The [`TransferScheme`] trait: one implementation per transfer-
+//! management scheme, extracted from the seed's enum-dispatched driver
+//! code so new schemes plug in without touching the dispatch sites.
+//!
+//! Every scheme offers two call shapes:
+//!
+//! * [`TransferScheme::transfer`] — the paper's blocking TX/RX round
+//!   trip. For the three paper drivers this is *exactly* the seed's code
+//!   path, so single-channel timings are golden-stable across the
+//!   refactor (asserted by `rust/tests/multi_channel.rs`).
+//! * [`TransferScheme::submit`] / [`TransferScheme::complete`] — the
+//!   split-phase pair the frame-pipelined coordinator uses: `submit`
+//!   stages and arms both directions on the driver's engine and returns
+//!   immediately; `complete` performs the waits and the copy-out. While
+//!   one frame sits between its `submit` and `complete`, the software
+//!   thread is free to submit or complete *other* frames on *other*
+//!   engines — that interleave is what keeps multiple frames in flight.
+//!   Split-phase arms are always Unique-shaped (one arm per direction),
+//!   matching the per-layer payloads of the CNN pipeline.
+
+use crate::sim::time::SimTime;
+use crate::system::System;
+
+use super::{kernel, user, Driver, DriverError, DriverKind, TransferReport};
+
+/// Handle returned by [`TransferScheme::submit`]; feed it back to
+/// [`TransferScheme::complete`] on the same driver.
+#[derive(Clone, Copy, Debug)]
+pub struct SubmitToken {
+    /// When the application handed the payload to the driver.
+    pub t0: SimTime,
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+}
+
+/// One transfer-management scheme (user polling / user scheduled /
+/// kernel IRQ / multi-queue kernel). Implementations are stateless —
+/// per-instance state (buffers, engine binding, knobs) lives in
+/// [`Driver`].
+pub trait TransferScheme {
+    fn kind(&self) -> DriverKind;
+
+    fn label(&self) -> &'static str {
+        self.kind().label()
+    }
+
+    /// One blocking TX/RX round trip on the driver's engine.
+    fn transfer(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        tx_bytes: u64,
+        rx_bytes: u64,
+    ) -> Result<TransferReport, DriverError>;
+
+    /// Stage + arm both directions without waiting.
+    fn submit(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        tx_bytes: u64,
+        rx_bytes: u64,
+    ) -> Result<SubmitToken, DriverError>;
+
+    /// Wait for both directions of a prior [`TransferScheme::submit`]
+    /// and copy the RX payload out.
+    fn complete(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        token: SubmitToken,
+    ) -> Result<TransferReport, DriverError>;
+}
+
+/// §III.A user-level polling.
+pub struct UserPollingScheme;
+
+/// §III.A user-level scheduled (usleep-based waits).
+pub struct UserScheduledScheme;
+
+/// §III.B kernel-level interrupt-driven driver.
+pub struct KernelIrqScheme;
+
+/// Multi-queue kernel driver: stripes SG chunks across every engine.
+pub struct KernelMultiQueueScheme;
+
+impl TransferScheme for UserPollingScheme {
+    fn kind(&self) -> DriverKind {
+        DriverKind::UserPolling
+    }
+
+    fn transfer(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        tx_bytes: u64,
+        rx_bytes: u64,
+    ) -> Result<TransferReport, DriverError> {
+        user::transfer(drv, sys, tx_bytes, rx_bytes, user::WaitMode::Poll)
+    }
+
+    fn submit(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        tx_bytes: u64,
+        rx_bytes: u64,
+    ) -> Result<SubmitToken, DriverError> {
+        user::submit(drv, sys, tx_bytes, rx_bytes)
+    }
+
+    fn complete(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        token: SubmitToken,
+    ) -> Result<TransferReport, DriverError> {
+        user::complete(drv, sys, token, user::WaitMode::Poll)
+    }
+}
+
+impl TransferScheme for UserScheduledScheme {
+    fn kind(&self) -> DriverKind {
+        DriverKind::UserScheduled
+    }
+
+    fn transfer(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        tx_bytes: u64,
+        rx_bytes: u64,
+    ) -> Result<TransferReport, DriverError> {
+        user::transfer(drv, sys, tx_bytes, rx_bytes, user::WaitMode::Sleep)
+    }
+
+    fn submit(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        tx_bytes: u64,
+        rx_bytes: u64,
+    ) -> Result<SubmitToken, DriverError> {
+        user::submit(drv, sys, tx_bytes, rx_bytes)
+    }
+
+    fn complete(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        token: SubmitToken,
+    ) -> Result<TransferReport, DriverError> {
+        user::complete(drv, sys, token, user::WaitMode::Sleep)
+    }
+}
+
+impl TransferScheme for KernelIrqScheme {
+    fn kind(&self) -> DriverKind {
+        DriverKind::KernelIrq
+    }
+
+    fn transfer(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        tx_bytes: u64,
+        rx_bytes: u64,
+    ) -> Result<TransferReport, DriverError> {
+        kernel::transfer(drv, sys, tx_bytes, rx_bytes)
+    }
+
+    fn submit(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        tx_bytes: u64,
+        rx_bytes: u64,
+    ) -> Result<SubmitToken, DriverError> {
+        kernel::submit(drv, sys, tx_bytes, rx_bytes)
+    }
+
+    fn complete(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        token: SubmitToken,
+    ) -> Result<TransferReport, DriverError> {
+        kernel::complete(drv, sys, token)
+    }
+}
+
+impl TransferScheme for KernelMultiQueueScheme {
+    fn kind(&self) -> DriverKind {
+        DriverKind::KernelMultiQueue
+    }
+
+    fn transfer(
+        &self,
+        drv: &mut Driver,
+        sys: &mut System,
+        tx_bytes: u64,
+        rx_bytes: u64,
+    ) -> Result<TransferReport, DriverError> {
+        kernel::transfer_multiqueue(drv, sys, tx_bytes, rx_bytes)
+    }
+
+    fn submit(
+        &self,
+        _drv: &mut Driver,
+        _sys: &mut System,
+        _tx_bytes: u64,
+        _rx_bytes: u64,
+    ) -> Result<SubmitToken, DriverError> {
+        unimplemented!(
+            "the multi-queue scheme manages every engine itself; \
+             frame pipelining uses per-engine drivers instead"
+        )
+    }
+
+    fn complete(
+        &self,
+        _drv: &mut Driver,
+        _sys: &mut System,
+        _token: SubmitToken,
+    ) -> Result<TransferReport, DriverError> {
+        unimplemented!("see KernelMultiQueueScheme::submit")
+    }
+}
+
+/// The singleton scheme implementation for a [`DriverKind`].
+pub fn scheme_for(kind: DriverKind) -> &'static dyn TransferScheme {
+    match kind {
+        DriverKind::UserPolling => &UserPollingScheme,
+        DriverKind::UserScheduled => &UserScheduledScheme,
+        DriverKind::KernelIrq => &KernelIrqScheme,
+        DriverKind::KernelMultiQueue => &KernelMultiQueueScheme,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_kinds_round_trip() {
+        for kind in [
+            DriverKind::UserPolling,
+            DriverKind::UserScheduled,
+            DriverKind::KernelIrq,
+            DriverKind::KernelMultiQueue,
+        ] {
+            assert_eq!(scheme_for(kind).kind(), kind);
+            assert_eq!(scheme_for(kind).label(), kind.label());
+        }
+    }
+}

@@ -2,8 +2,8 @@
 //! buffers, driven entirely from the application process.
 //!
 //! The two user-level variants differ only in the wait primitive:
-//! *polling* spins on the status register ([`System::poll_wait`]),
-//! *scheduled* usleeps between checks ([`System::sleep_wait`]). Staging
+//! *polling* spins on the status register ([`System::poll_wait_on`]),
+//! *scheduled* usleeps between checks ([`System::sleep_wait_on`]). Staging
 //! copies go through the **uncached** user mapping of the CMA buffer
 //! (`/dev/mem`), which is what makes them slower per byte than the kernel
 //! driver's cached `copy_from_user` path.
@@ -14,15 +14,21 @@
 //! staging copy of chunk *i+1* overlaps the DMA of chunk *i*, which is
 //! precisely the overhead reduction §III.A claims for the double-buffer
 //! scheme.
+//!
+//! The Unique path is expressed as [`submit`] (stage + arm) followed by
+//! [`complete`] (wait + copy out) — the same split-phase pair the
+//! frame-pipelined coordinator drives directly, so the two entry shapes
+//! cannot drift apart.
 
 use crate::axi::descriptor::MAX_DESC_LEN;
 use crate::axi::regs;
 use crate::memory::buffer::PhysAddr;
 use crate::memory::copy::CopyKind;
-use crate::sim::event::Channel;
+use crate::sim::event::{Channel, EngineId};
 use crate::sim::time::Dur;
 use crate::system::{CpuLedger, System};
 
+use super::scheme::SubmitToken;
 use super::{BufferScheme, Driver, DriverError, PartitionMode, TransferReport};
 
 /// How the user-level driver waits for channel completion.
@@ -34,12 +40,13 @@ pub enum WaitMode {
 
 fn wait(
     sys: &mut System,
+    port: EngineId,
     ch: Channel,
     mode: WaitMode,
 ) -> Result<crate::sim::time::SimTime, crate::system::SimError> {
     match mode {
-        WaitMode::Poll => sys.poll_wait(ch),
-        WaitMode::Sleep => sys.sleep_wait(ch),
+        WaitMode::Poll => sys.poll_wait_on(port, ch),
+        WaitMode::Sleep => sys.sleep_wait_on(port, ch),
     }
 }
 
@@ -47,15 +54,15 @@ fn wait(
 /// the real three-write sequence — DMACR(RS), SA/DA, LENGTH (the LENGTH
 /// write starts the engine). Callers validated `len` against the 23-bit
 /// field, so register errors here are driver bugs, not workload errors.
-fn arm_simple(sys: &mut System, ch: Channel, addr: PhysAddr, len: u64) {
+fn arm_simple(sys: &mut System, port: EngineId, ch: Channel, addr: PhysAddr, len: u64) {
     debug_assert!(len > 0 && len <= MAX_DESC_LEN);
     let (cr, a, l) = match ch {
         Channel::Mm2s => (regs::MM2S_DMACR, regs::MM2S_SA, regs::MM2S_LENGTH),
         Channel::S2mm => (regs::S2MM_DMACR, regs::S2MM_DA, regs::S2MM_LENGTH),
     };
-    sys.mmio_write(cr, regs::CR_RS).expect("DMACR write");
-    sys.mmio_write(a, addr.0 as u32).expect("address write");
-    sys.mmio_write(l, len as u32).expect("LENGTH write");
+    sys.mmio_write_on(port, cr, regs::CR_RS).expect("DMACR write");
+    sys.mmio_write_on(port, a, addr.0 as u32).expect("address write");
+    sys.mmio_write_on(port, l, len as u32).expect("LENGTH write");
 }
 
 pub(super) fn transfer(
@@ -71,20 +78,22 @@ pub(super) fn transfer(
     }
 }
 
-/// Unique mode: one staging copy, one simple-mode transfer per direction.
-fn unique(
+/// Split-phase entry: bookkeeping, staging copy, and one simple-mode arm
+/// per direction (RX first so the device output has somewhere to go).
+/// Returns without waiting.
+pub(super) fn submit(
     drv: &mut Driver,
     sys: &mut System,
     tx_bytes: u64,
     rx_bytes: u64,
-    mode: WaitMode,
-) -> Result<TransferReport, DriverError> {
+) -> Result<SubmitToken, DriverError> {
     if tx_bytes > MAX_DESC_LEN || rx_bytes > MAX_DESC_LEN {
         // The 23-bit BD length field: the paper's "maximum supported
         // transfer lengths are 8 Mbytes" user-level limit.
         return Err(DriverError::TooLarge { bytes: tx_bytes.max(rx_bytes) });
     }
     let t0 = sys.now();
+    let port = drv.port;
     let tx_buf = drv.tx_buf(0);
     let rx_buf = drv.rx_buf(0);
 
@@ -94,15 +103,26 @@ fn unique(
 
     // RX must be armed before TX so the loop-back has somewhere to go.
     if rx_bytes > 0 {
-        arm_simple(sys, Channel::S2mm, rx_buf.addr, rx_bytes);
+        arm_simple(sys, port, Channel::S2mm, rx_buf.addr, rx_bytes);
     }
-    arm_simple(sys, Channel::Mm2s, tx_buf.addr, tx_bytes);
+    arm_simple(sys, port, Channel::Mm2s, tx_buf.addr, tx_bytes);
+    Ok(SubmitToken { t0, tx_bytes, rx_bytes })
+}
 
-    let tx_done = wait(sys, Channel::Mm2s, mode)?;
+/// Split-phase completion: wait TX, wait RX, copy the RX payload out.
+pub(super) fn complete(
+    drv: &mut Driver,
+    sys: &mut System,
+    token: SubmitToken,
+    mode: WaitMode,
+) -> Result<TransferReport, DriverError> {
+    let SubmitToken { t0, tx_bytes, rx_bytes } = token;
+    let port = drv.port;
+    let tx_done = wait(sys, port, Channel::Mm2s, mode)?;
     let tx_time = tx_done.since(t0);
 
     let rx_time = if rx_bytes > 0 {
-        wait(sys, Channel::S2mm, mode)?;
+        wait(sys, port, Channel::S2mm, mode)?;
         sys.cpu_copy(rx_bytes, CopyKind::UserUncached);
         sys.now().since(t0)
     } else {
@@ -110,6 +130,19 @@ fn unique(
     };
 
     Ok(TransferReport { tx_bytes, rx_bytes, tx_time, rx_time, ledger: CpuLedger::default() })
+}
+
+/// Unique mode: one staging copy, one simple-mode transfer per direction
+/// — literally `submit` then `complete`.
+fn unique(
+    drv: &mut Driver,
+    sys: &mut System,
+    tx_bytes: u64,
+    rx_bytes: u64,
+    mode: WaitMode,
+) -> Result<TransferReport, DriverError> {
+    let token = submit(drv, sys, tx_bytes, rx_bytes)?;
+    complete(drv, sys, token, mode)
 }
 
 /// Blocks mode: the RX side is armed once for the whole payload (the
@@ -132,6 +165,7 @@ fn blocks(
         return Err(DriverError::TooLarge { bytes: rx_bytes });
     }
     let t0 = sys.now();
+    let port = drv.port;
 
     let n = tx_bytes.div_ceil(chunk).max(1);
     let tx_cut = cuts(tx_bytes, n);
@@ -140,12 +174,12 @@ fn blocks(
 
     // Arm the whole RX payload up front.
     if rx_bytes > 0 {
-        arm_simple(sys, Channel::S2mm, drv.rx_buf(0).addr, rx_bytes);
+        arm_simple(sys, port, Channel::S2mm, drv.rx_buf(0).addr, rx_bytes);
     }
 
     // TX pipeline: stage chunk 0, then overlap.
     sys.cpu_copy(tx_cut[0], CopyKind::UserUncached);
-    arm_simple(sys, Channel::Mm2s, drv.tx_buf(0).addr, tx_cut[0]);
+    arm_simple(sys, port, Channel::Mm2s, drv.tx_buf(0).addr, tx_cut[0]);
 
     let mut tx_done = sys.now();
     for i in 0..n as usize {
@@ -155,20 +189,20 @@ fn blocks(
         if staged_ahead {
             sys.cpu_copy(tx_cut[i + 1], CopyKind::UserUncached);
         }
-        tx_done = wait(sys, Channel::Mm2s, mode)?;
+        tx_done = wait(sys, port, Channel::Mm2s, mode)?;
         if i + 1 < n as usize {
             if !staged_ahead {
                 // Single buffer: stage into the just-freed buffer (no
                 // overlap — the scheme's cost, §III.A).
                 sys.cpu_copy(tx_cut[i + 1], CopyKind::UserUncached);
             }
-            arm_simple(sys, Channel::Mm2s, drv.tx_buf(i + 1).addr, tx_cut[i + 1]);
+            arm_simple(sys, port, Channel::Mm2s, drv.tx_buf(i + 1).addr, tx_cut[i + 1]);
         }
     }
     let tx_time = tx_done.since(t0);
 
     let rx_time = if rx_bytes > 0 {
-        wait(sys, Channel::S2mm, mode)?;
+        wait(sys, port, Channel::S2mm, mode)?;
         sys.cpu_copy(rx_bytes, CopyKind::UserUncached);
         sys.now().since(t0)
     } else {
@@ -263,5 +297,36 @@ mod tests {
         let r = drv.transfer(&mut sys, 4096, 0).unwrap();
         assert_eq!(r.rx_time, Dur::ZERO);
         assert!(r.tx_time > Dur::ZERO);
+    }
+
+    #[test]
+    fn split_phase_equals_blocking_unique() {
+        // The trait's submit/complete pair must be bit-identical to the
+        // blocking Unique path (it *is* the same code, but this pins it).
+        let sys_cfg = SimConfig::default();
+        let bytes = 256 * 1024;
+        let blocking = run(DriverConfig::table1(DriverKind::UserPolling), bytes);
+        let mut sys = System::loopback(sys_cfg.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let cfg = DriverConfig::table1(DriverKind::UserPolling);
+        let mut drv = Driver::new(cfg, &mut cma, &sys_cfg, bytes).unwrap();
+        let tok = drv.submit(&mut sys, bytes, bytes).unwrap();
+        let split = drv.complete(&mut sys, tok).unwrap();
+        assert_eq!(split.tx_time, blocking.tx_time);
+        assert_eq!(split.rx_time, blocking.rx_time);
+    }
+
+    #[test]
+    fn user_driver_runs_on_second_engine() {
+        let mut sys_cfg = SimConfig::default();
+        sys_cfg.num_engines = 2;
+        let mut sys = System::loopback(sys_cfg.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let cfg = DriverConfig::table1(DriverKind::UserPolling);
+        let mut drv = Driver::new_on(cfg, &mut cma, &sys_cfg, 64 * 1024, EngineId(1)).unwrap();
+        let r = drv.transfer(&mut sys, 64 * 1024, 64 * 1024).unwrap();
+        assert!(r.rx_time >= r.tx_time);
+        assert_eq!(sys.port(EngineId(1)).mm2s.stats.bytes, 64 * 1024);
+        assert_eq!(sys.port(EngineId(0)).mm2s.stats.bytes, 0, "engine 0 untouched");
     }
 }

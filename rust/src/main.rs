@@ -8,6 +8,7 @@
 //! psoc-dma ablation-buffer   # single vs double buffer x Unique vs Blocks
 //! psoc-dma ablation-blocks   # Blocks chunk-size sweep
 //! psoc-dma ablation-vgg      # VGG19 failure modes
+//! psoc-dma scaling           # channel-count x pipeline-depth frame throughput
 //! psoc-dma all               # everything above (estimate plans)
 //! ```
 //!
@@ -21,7 +22,7 @@ use anyhow::{bail, Result};
 use psoc_dma::config::SimConfig;
 use psoc_dma::coordinator::experiments::{
     ablation_chunk_sweep, ablation_load, ablation_matrix, ablation_vgg, fig45_sizes,
-    loopback_sweep, table1, table1_runtime,
+    loopback_sweep, scaling_sweep, table1, table1_runtime,
 };
 use psoc_dma::drivers::DriverKind;
 use psoc_dma::report;
@@ -161,6 +162,18 @@ fn run_ablation_load(cfg: &SimConfig) -> Result<()> {
     Ok(())
 }
 
+/// The multi-engine scaling grid: RoShamBo frames/sec for every
+/// channel-count x pipeline-depth cell, per driver.
+fn run_scaling(cfg: &SimConfig, args: &Args) -> Result<()> {
+    let drivers = [DriverKind::UserPolling, DriverKind::KernelIrq];
+    let rows = scaling_sweep(cfg, &drivers, &[1, 2, 4], &[1, 2, 4], args.frames.max(4))?;
+    print!("{}", report::scaling_text(&rows));
+    if let Some(dir) = &args.csv_dir {
+        report::save(&format!("{dir}/scaling.csv"), &report::scaling_csv(&rows))?;
+    }
+    Ok(())
+}
+
 /// Fit report + knob sensitivities against the paper's Table I anchors.
 fn run_calibrate(cfg: &SimConfig) -> Result<()> {
     use psoc_dma::coordinator::calibrate;
@@ -240,6 +253,7 @@ fn main() -> Result<()> {
         "ablation-blocks" => run_ablation_blocks(&cfg)?,
         "ablation-vgg" => run_ablation_vgg(&cfg)?,
         "ablation-load" => run_ablation_load(&cfg)?,
+        "scaling" => run_scaling(&cfg, &args)?,
         "trace" => run_trace(&cfg)?,
         "calibrate" => run_calibrate(&cfg)?,
         "all" => {
@@ -255,6 +269,8 @@ fn main() -> Result<()> {
             run_ablation_vgg(&cfg)?;
             println!();
             run_ablation_load(&cfg)?;
+            println!();
+            run_scaling(&cfg, &args)?;
         }
         other => bail!("unknown command {other}; see the README"),
     }

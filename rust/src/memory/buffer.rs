@@ -8,8 +8,6 @@
 //! double-buffer schemes manage real reservations with real exhaustion
 //! behaviour (VGG19's 8 MB-limit ablation trips on this).
 
-use thiserror::Error;
-
 /// Physical address within the CMA region (offset from region base).
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Hash, PartialOrd, Ord)]
 pub struct PhysAddr(pub u64);
@@ -21,15 +19,29 @@ pub struct DmaBuffer {
     pub len: u64,
 }
 
-#[derive(Debug, Clone, Error, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum AllocError {
-    #[error("CMA exhausted: requested {requested} bytes, largest free block {largest}")]
     OutOfMemory { requested: u64, largest: u64 },
-    #[error("zero-length allocation")]
     ZeroLength,
-    #[error("buffer {0:?} was not allocated from this pool (double free?)")]
     BadFree(DmaBuffer),
 }
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::OutOfMemory { requested, largest } => write!(
+                f,
+                "CMA exhausted: requested {requested} bytes, largest free block {largest}"
+            ),
+            AllocError::ZeroLength => write!(f, "zero-length allocation"),
+            AllocError::BadFree(b) => {
+                write!(f, "buffer {b:?} was not allocated from this pool (double free?)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 /// First-fit free-list allocator with coalescing on free.
 pub struct CmaAllocator {

@@ -6,6 +6,13 @@
 //! Service time = fixed latency + optional read/write turnaround +
 //! bytes / bandwidth.
 //!
+//! With multiple AXI-DMA engines, each priority class holds one subqueue
+//! per engine and grants rotate between engines **deficit-weighted
+//! round-robin** (`SimConfig::ddr_engine_weights`): an engine with weight
+//! *w* receives *w* grants per refill round while it has work queued. A
+//! single engine degenerates exactly to the seed's fixed-priority
+//! behaviour, which keeps the golden single-channel timings bit-identical.
+//!
 //! Two paper phenomena live here:
 //!  * "DDR memory cannot attend read and write operations at the same
 //!    time" — a loop-back run keeps both channels queued, and the
@@ -17,7 +24,7 @@ use std::collections::VecDeque;
 
 use crate::config::SimConfig;
 use crate::sim::engine::Engine;
-use crate::sim::event::{DdrReqId, Event};
+use crate::sim::event::{DdrReqId, EngineId, Event};
 use crate::sim::time::Dur;
 
 /// Direction of a DDR access (from the controller's point of view).
@@ -27,19 +34,39 @@ pub enum DdrDir {
     Write,
 }
 
-/// Who issued the burst. Declared in fixed priority order (highest first);
-/// `ALL` below relies on this.
+/// Who issued the burst. The two DMA classes carry the owning engine so
+/// the dispatcher can route completions; classes are in fixed priority
+/// order (highest first).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Requester {
-    /// MM2S descriptor/data reads (the TX path).
-    Mm2s,
-    /// S2MM data writes (the RX path).
-    S2mm,
+    /// MM2S descriptor/data reads (the TX path) of one engine.
+    Mm2s(EngineId),
+    /// S2MM data writes (the RX path) of one engine.
+    S2mm(EngineId),
     /// Background CPU traffic (memcpy spill, other processes).
     Cpu,
 }
 
-const ALL: [Requester; 3] = [Requester::Mm2s, Requester::S2mm, Requester::Cpu];
+impl Requester {
+    /// Priority class index: MM2S(any) = 0, S2MM(any) = 1, CPU = 2.
+    #[inline]
+    pub fn class(self) -> usize {
+        match self {
+            Requester::Mm2s(_) => 0,
+            Requester::S2mm(_) => 1,
+            Requester::Cpu => 2,
+        }
+    }
+
+    /// The owning engine, for the DMA classes.
+    #[inline]
+    pub fn engine(self) -> Option<EngineId> {
+        match self {
+            Requester::Mm2s(e) | Requester::S2mm(e) => Some(e),
+            Requester::Cpu => None,
+        }
+    }
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct DdrRequest {
@@ -61,17 +88,90 @@ pub struct DdrCompletion {
 }
 
 /// Aggregate controller statistics (per simulation run).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct DdrStats {
     pub bursts: u64,
     pub bytes: u64,
-    /// Served bytes split by requester (index = priority order
-    /// MM2S/S2MM/CPU) — how much each port actually got. Under
-    /// saturation the CPU row shows the starvation that fixed-priority
-    /// arbitration inflicts on background processes.
+    /// Served bytes split by priority class (index = MM2S/S2MM/CPU,
+    /// summed over engines) — how much each port class actually got.
+    /// Under saturation the CPU row shows the starvation that
+    /// fixed-priority arbitration inflicts on background processes.
     pub bytes_by: [u64; 3],
+    /// Served bytes per engine, split MM2S/S2MM — the per-channel share
+    /// the scaling experiments report.
+    pub bytes_by_engine: Vec<[u64; 2]>,
     pub turnarounds: u64,
     pub busy_ns: u64,
+}
+
+/// One priority class of DMA traffic: a subqueue per engine plus the
+/// deficit-round-robin grant state.
+struct DmaClass {
+    queues: Vec<VecDeque<DdrRequest>>,
+    /// Remaining grants this refill round, per engine.
+    credit: Vec<u64>,
+    /// Engine index to scan from on the next grant (rotates for fairness
+    /// among equal weights).
+    cursor: usize,
+}
+
+impl DmaClass {
+    fn new(n: usize, weights: &[u64]) -> Self {
+        DmaClass {
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            credit: (0..n).map(|i| weight_of(weights, i)).collect(),
+            cursor: 0,
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.queues.iter().all(VecDeque::is_empty)
+    }
+
+    /// Pick the next engine to serve: scan from the cursor for a
+    /// non-empty queue with credit left; if every non-empty queue is out
+    /// of credit, refill all credits and scan again. Deterministic, and
+    /// with one engine it always picks queue 0 immediately.
+    fn grant(&mut self, weights: &[u64]) -> Option<DdrRequest> {
+        let n = self.queues.len();
+        if self.is_empty() {
+            return None;
+        }
+        for round in 0..2 {
+            if round == 1 {
+                for (i, c) in self.credit.iter_mut().enumerate() {
+                    *c = weight_of(weights, i);
+                }
+            }
+            for off in 0..n {
+                let i = (self.cursor + off) % n;
+                if !self.queues[i].is_empty() && self.credit[i] > 0 {
+                    self.credit[i] -= 1;
+                    // Keep serving this engine while its credit lasts;
+                    // move the cursor only when its credit is spent.
+                    if self.credit[i] == 0 {
+                        self.cursor = (i + 1) % n;
+                    } else {
+                        self.cursor = i;
+                    }
+                    return self.queues[i].pop_front();
+                }
+            }
+        }
+        unreachable!("non-empty class must grant after a credit refill")
+    }
+}
+
+#[inline]
+fn weight_of(weights: &[u64], engine: usize) -> u64 {
+    // Engines beyond the configured list inherit the last weight (a
+    // single-element list means "all equal").
+    weights
+        .get(engine)
+        .or(weights.last())
+        .copied()
+        .unwrap_or(1)
+        .max(1)
 }
 
 pub struct DdrController {
@@ -80,7 +180,11 @@ pub struct DdrController {
     ns_per_byte: f64,
     latency: Dur,
     turnaround: Dur,
-    queues: [VecDeque<DdrRequest>; 3],
+    /// Per-engine arbitration weights (see `SimConfig::ddr_engine_weights`).
+    weights: Vec<u64>,
+    mm2s: DmaClass,
+    s2mm: DmaClass,
+    cpu: VecDeque<DdrRequest>,
     in_flight: Option<(DdrRequest, crate::sim::time::SimTime)>,
     last_dir: Option<DdrDir>,
     next_id: u64,
@@ -92,21 +196,21 @@ pub struct DdrController {
 
 impl DdrController {
     pub fn new(cfg: &SimConfig) -> Self {
+        let n = cfg.num_engines as usize;
         DdrController {
             ns_per_byte: 1e9 / cfg.ddr_bandwidth_bps,
             latency: Dur(cfg.ddr_latency_ns),
             turnaround: Dur(cfg.ddr_turnaround_ns),
-            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            weights: cfg.ddr_engine_weights.clone(),
+            mm2s: DmaClass::new(n, &cfg.ddr_engine_weights),
+            s2mm: DmaClass::new(n, &cfg.ddr_engine_weights),
+            cpu: VecDeque::new(),
             in_flight: None,
             last_dir: None,
             next_id: 0,
             contention_factor: 1.0,
-            stats: DdrStats::default(),
+            stats: DdrStats { bytes_by_engine: vec![[0; 2]; n], ..DdrStats::default() },
         }
-    }
-
-    fn queue_index(r: Requester) -> usize {
-        ALL.iter().position(|&x| x == r).unwrap()
     }
 
     /// Enqueue a burst and poke the arbiter.
@@ -120,12 +224,12 @@ impl DdrController {
         assert!(bytes > 0, "zero-byte DDR burst");
         let id = DdrReqId(self.next_id);
         self.next_id += 1;
-        self.queues[Self::queue_index(requester)].push_back(DdrRequest {
-            id,
-            dir,
-            bytes,
-            requester,
-        });
+        let req = DdrRequest { id, dir, bytes, requester };
+        match requester {
+            Requester::Mm2s(e) => self.mm2s.queues[e.index()].push_back(req),
+            Requester::S2mm(e) => self.s2mm.queues[e.index()].push_back(req),
+            Requester::Cpu => self.cpu.push_back(req),
+        }
         // Poke the arbiter only when it could actually grant: while a
         // burst is in flight, the completion path re-issues anyway
         // (§Perf: this removes ~1 calendar event per burst).
@@ -136,24 +240,20 @@ impl DdrController {
     }
 
     /// Arbiter step (handles `Event::DdrIssue`): grant the highest-priority
-    /// queued burst if the data bus is free.
+    /// queued burst if the data bus is free. Within the MM2S and S2MM
+    /// classes the engines share by weighted round-robin.
     pub fn issue(&mut self, eng: &mut Engine) {
         if self.in_flight.is_some() {
             return;
         }
-        let Some(req) = ALL
-            .iter()
-            .find_map(|&r| {
-                let q = &mut self.queues[Self::queue_index(r)];
-                if q.is_empty() {
-                    None
-                } else {
-                    q.pop_front()
-                }
-            })
-        else {
-            return;
+        let req = if !self.mm2s.is_empty() {
+            self.mm2s.grant(&self.weights)
+        } else if !self.s2mm.is_empty() {
+            self.s2mm.grant(&self.weights)
+        } else {
+            self.cpu.pop_front()
         };
+        let Some(req) = req else { return };
 
         let mut service =
             self.latency + Dur((req.bytes as f64 * self.ns_per_byte).ceil() as u64);
@@ -169,7 +269,11 @@ impl DdrController {
         self.last_dir = Some(req.dir);
         self.stats.bursts += 1;
         self.stats.bytes += req.bytes;
-        self.stats.bytes_by[Self::queue_index(req.requester)] += req.bytes;
+        let class = req.requester.class();
+        self.stats.bytes_by[class] += req.bytes;
+        if let Some(e) = req.requester.engine() {
+            self.stats.bytes_by_engine[e.index()][class] += req.bytes;
+        }
         self.stats.busy_ns += service.ns();
         self.in_flight = Some((req, eng.now()));
         eng.schedule(service, Event::DdrDone { req: req.id });
@@ -186,7 +290,7 @@ impl DdrController {
         assert_eq!(req.id, id, "DdrDone for a request that is not in flight");
         // Re-arm the arbiter only if work is queued; a submit arriving
         // later finds the bus idle and pokes it itself.
-        if !self.queues.iter().all(VecDeque::is_empty) {
+        if !(self.mm2s.is_empty() && self.s2mm.is_empty() && self.cpu.is_empty()) {
             eng.schedule_now(Event::DdrIssue);
         }
         DdrCompletion {
@@ -199,11 +303,18 @@ impl DdrController {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.in_flight.is_none() && self.queues.iter().all(VecDeque::is_empty)
+        self.in_flight.is_none()
+            && self.mm2s.is_empty()
+            && self.s2mm.is_empty()
+            && self.cpu.is_empty()
     }
 
     pub fn queued(&self, r: Requester) -> usize {
-        self.queues[Self::queue_index(r)].len()
+        match r {
+            Requester::Mm2s(e) => self.mm2s.queues[e.index()].len(),
+            Requester::S2mm(e) => self.s2mm.queues[e.index()].len(),
+            Requester::Cpu => self.cpu.len(),
+        }
     }
 }
 
@@ -211,6 +322,9 @@ impl DdrController {
 mod tests {
     use super::*;
     use crate::sim::time::SimTime;
+
+    const E0: EngineId = EngineId(0);
+    const E1: EngineId = EngineId(1);
 
     fn drive(ddr: &mut DdrController, eng: &mut Engine) -> Vec<(SimTime, DdrCompletion)> {
         let mut done = Vec::new();
@@ -232,11 +346,17 @@ mod tests {
         c
     }
 
+    fn cfg_engines(n: u64) -> SimConfig {
+        let mut c = cfg();
+        c.num_engines = n;
+        c
+    }
+
     #[test]
     fn single_burst_timing() {
         let mut eng = Engine::new();
         let mut ddr = DdrController::new(&cfg());
-        ddr.submit(&mut eng, DdrDir::Read, 1000, Requester::Mm2s);
+        ddr.submit(&mut eng, DdrDir::Read, 1000, Requester::Mm2s(E0));
         let done = drive(&mut ddr, &mut eng);
         assert_eq!(done.len(), 1);
         // latency 100 + 1000B @ 1B/ns = 1100 ns; no turnaround on first burst.
@@ -252,20 +372,20 @@ mod tests {
         // arbitration... but only for grants while both are *queued*. The
         // first DdrIssue fires before the MM2S submit exists, so seed both
         // before driving.
-        ddr.submit(&mut eng, DdrDir::Write, 100, Requester::S2mm);
-        ddr.submit(&mut eng, DdrDir::Read, 100, Requester::Mm2s);
+        ddr.submit(&mut eng, DdrDir::Write, 100, Requester::S2mm(E0));
+        ddr.submit(&mut eng, DdrDir::Read, 100, Requester::Mm2s(E0));
         let done = drive(&mut ddr, &mut eng);
-        assert_eq!(done[0].1.requester, Requester::Mm2s, "TX priority");
-        assert_eq!(done[1].1.requester, Requester::S2mm);
+        assert_eq!(done[0].1.requester, Requester::Mm2s(E0), "TX priority");
+        assert_eq!(done[1].1.requester, Requester::S2mm(E0));
     }
 
     #[test]
     fn turnaround_charged_on_direction_change() {
         let mut eng = Engine::new();
         let mut ddr = DdrController::new(&cfg());
-        ddr.submit(&mut eng, DdrDir::Read, 100, Requester::Mm2s);
-        ddr.submit(&mut eng, DdrDir::Write, 100, Requester::S2mm);
-        ddr.submit(&mut eng, DdrDir::Write, 100, Requester::S2mm);
+        ddr.submit(&mut eng, DdrDir::Read, 100, Requester::Mm2s(E0));
+        ddr.submit(&mut eng, DdrDir::Write, 100, Requester::S2mm(E0));
+        ddr.submit(&mut eng, DdrDir::Write, 100, Requester::S2mm(E0));
         let done = drive(&mut ddr, &mut eng);
         // Burst 1: 100+100 = 200. Burst 2: +50 turnaround = 250. Burst 3:
         // same direction = 200.
@@ -282,7 +402,7 @@ mod tests {
         let mut eng = Engine::new();
         let mut ddr = DdrController::new(&cfg());
         ddr.contention_factor = 2.0;
-        ddr.submit(&mut eng, DdrDir::Read, 1000, Requester::Mm2s);
+        ddr.submit(&mut eng, DdrDir::Read, 1000, Requester::Mm2s(E0));
         let done = drive(&mut ddr, &mut eng);
         assert_eq!(done[0].0, SimTime(2200));
     }
@@ -291,11 +411,64 @@ mod tests {
     fn fifo_within_one_requester() {
         let mut eng = Engine::new();
         let mut ddr = DdrController::new(&cfg());
-        let a = ddr.submit(&mut eng, DdrDir::Read, 8, Requester::Mm2s);
-        let b = ddr.submit(&mut eng, DdrDir::Read, 8, Requester::Mm2s);
+        let a = ddr.submit(&mut eng, DdrDir::Read, 8, Requester::Mm2s(E0));
+        let b = ddr.submit(&mut eng, DdrDir::Read, 8, Requester::Mm2s(E0));
         let done = drive(&mut ddr, &mut eng);
         assert_eq!(done[0].1.id, a);
         assert_eq!(done[1].1.id, b);
+    }
+
+    #[test]
+    fn equal_weights_interleave_engines() {
+        let mut eng = Engine::new();
+        let mut ddr = DdrController::new(&cfg_engines(2));
+        // Four reads queued on each engine before driving: grants must
+        // alternate engine 0 / engine 1 (weight 1 each).
+        for _ in 0..4 {
+            ddr.submit(&mut eng, DdrDir::Read, 8, Requester::Mm2s(E0));
+            ddr.submit(&mut eng, DdrDir::Read, 8, Requester::Mm2s(E1));
+        }
+        let done = drive(&mut ddr, &mut eng);
+        let engines: Vec<u8> =
+            done.iter().map(|(_, c)| c.requester.engine().unwrap().0).collect();
+        assert_eq!(engines, vec![0, 1, 0, 1, 0, 1, 0, 1], "round-robin violated");
+        assert_eq!(ddr.stats.bytes_by_engine[0][0], 32);
+        assert_eq!(ddr.stats.bytes_by_engine[1][0], 32);
+    }
+
+    #[test]
+    fn weights_skew_grant_shares() {
+        let mut eng = Engine::new();
+        let mut c = cfg_engines(2);
+        c.ddr_engine_weights = vec![3, 1];
+        let mut ddr = DdrController::new(&c);
+        for _ in 0..8 {
+            ddr.submit(&mut eng, DdrDir::Read, 8, Requester::Mm2s(E0));
+            ddr.submit(&mut eng, DdrDir::Read, 8, Requester::Mm2s(E1));
+        }
+        let done = drive(&mut ddr, &mut eng);
+        // First 8 grants: engine 0 gets 3 for every 1 of engine 1.
+        let first8: Vec<u8> =
+            done.iter().take(8).map(|(_, c)| c.requester.engine().unwrap().0).collect();
+        assert_eq!(first8.iter().filter(|&&e| e == 0).count(), 6, "{first8:?}");
+    }
+
+    #[test]
+    fn weighted_engine_does_not_starve_the_other() {
+        let mut eng = Engine::new();
+        let mut c = cfg_engines(2);
+        c.ddr_engine_weights = vec![4, 1];
+        let mut ddr = DdrController::new(&c);
+        for _ in 0..10 {
+            ddr.submit(&mut eng, DdrDir::Read, 8, Requester::Mm2s(E0));
+        }
+        ddr.submit(&mut eng, DdrDir::Read, 8, Requester::Mm2s(E1));
+        let done = drive(&mut ddr, &mut eng);
+        let pos = done
+            .iter()
+            .position(|(_, c)| c.requester.engine() == Some(E1))
+            .expect("engine 1 must be served");
+        assert!(pos <= 8, "engine 1 starved until grant {pos}");
     }
 
     #[test]
@@ -303,6 +476,6 @@ mod tests {
     fn zero_byte_burst_rejected() {
         let mut eng = Engine::new();
         let mut ddr = DdrController::new(&cfg());
-        ddr.submit(&mut eng, DdrDir::Read, 0, Requester::Mm2s);
+        ddr.submit(&mut eng, DdrDir::Read, 0, Requester::Mm2s(E0));
     }
 }

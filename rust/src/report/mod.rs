@@ -6,7 +6,9 @@ pub mod plot;
 use std::fmt::Write as _;
 use std::path::Path;
 
-use crate::coordinator::experiments::{AblationRow, SweepRow, Table1Row, VggAblation};
+use crate::coordinator::experiments::{
+    AblationRow, ScalingRow, SweepRow, Table1Row, VggAblation,
+};
 use crate::drivers::DriverKind;
 
 /// Distinct sizes present in a sweep, in ascending order.
@@ -217,6 +219,56 @@ pub fn vgg_text(ab: &VggAblation) -> String {
         ab.blocked,
         ab.kernel_layer_time.as_ms()
     )
+}
+
+/// The channel-count × pipeline-depth scaling table (post-paper
+/// extension: RoShamBo throughput over N engines with frames in flight).
+pub fn scaling_text(rows: &[ScalingRow]) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Scaling — RoShamBo frames/sec over channels x pipeline depth\n\
+         {:<26} {:>8} {:>6} | {:>10} {:>12} {:>9} | {:>12}",
+        "driver", "channels", "depth", "fps", "frame (ms)", "speedup", "CPU busy ms"
+    )
+    .unwrap();
+    writeln!(out, "{}", "-".repeat(94)).unwrap();
+    for r in rows {
+        writeln!(
+            out,
+            "{:<26} {:>8} {:>6} | {:>10.2} {:>12.2} {:>8.2}x | {:>12.2}",
+            r.driver.label(),
+            r.channels,
+            r.depth,
+            r.report.frames_per_sec(),
+            r.report.mean_frame_ms(),
+            r.speedup,
+            r.report.ledger.busy.as_ms()
+        )
+        .unwrap();
+    }
+    out
+}
+
+pub fn scaling_csv(rows: &[ScalingRow]) -> String {
+    let mut out =
+        String::from("driver,channels,depth,frames,fps,mean_frame_ms,speedup,total_ms\n");
+    for r in rows {
+        writeln!(
+            out,
+            "{},{},{},{},{},{},{},{}",
+            r.driver.label().replace(' ', "_"),
+            r.channels,
+            r.depth,
+            r.frames,
+            r.report.frames_per_sec(),
+            r.report.mean_frame_ms(),
+            r.speedup,
+            r.report.total_time.as_ms()
+        )
+        .unwrap();
+    }
+    out
 }
 
 /// Write the sweep as CSV (for external plotting).

@@ -12,6 +12,12 @@
 //! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the
 //! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
 //! (see /opt/xla-example/README.md and aot_recipe.md).
+//!
+//! The `xla` bindings are not vendorable in the offline sandbox, so the
+//! PJRT execution path is gated behind the `pjrt` cargo feature. Without
+//! it, manifest loading and shape plumbing still work (so error paths and
+//! planning code stay testable) but [`Runtime::execute`] returns an error
+//! directing the user to rebuild with `--features pjrt`.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -27,6 +33,7 @@ pub struct Artifact {
     /// Row-major input/output shapes as lowered (leading batch of 1).
     pub in_shape: Vec<usize>,
     pub out_shape: Vec<usize>,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -42,6 +49,7 @@ impl Artifact {
 
 /// The PJRT client plus every compiled model from `artifacts/`.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     #[allow(dead_code)]
     client: xla::PjRtClient,
     artifacts: BTreeMap<String, Artifact>,
@@ -76,8 +84,12 @@ impl Runtime {
             .as_obj()
             .ok_or_else(|| anyhow!("manifest.json lacks an \"artifacts\" object"))?;
 
+        #[cfg(feature = "pjrt")]
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        #[cfg(feature = "pjrt")]
         let platform = client.platform_name();
+        #[cfg(not(feature = "pjrt"))]
+        let platform = String::from("stub (built without the `pjrt` feature)");
 
         let mut artifacts = BTreeMap::new();
         for (name, spec) in arts {
@@ -90,20 +102,35 @@ impl Runtime {
                 .with_context(|| format!("artifact {name}: in_shape"))?;
             let out_shape = shape_from_json(spec.get("out_shape"))
                 .with_context(|| format!("artifact {name}: out_shape"))?;
-            let proto = xla::HloModuleProto::from_text_file(
-                file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .with_context(|| format!("parsing HLO text {}", file.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact {name}"))?;
+            #[cfg(feature = "pjrt")]
+            let exe = {
+                let proto = xla::HloModuleProto::from_text_file(
+                    file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .with_context(|| format!("parsing HLO text {}", file.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling artifact {name}"))?
+            };
             artifacts.insert(
                 name.clone(),
-                Artifact { name: name.clone(), file, in_shape, out_shape, exe },
+                Artifact {
+                    name: name.clone(),
+                    file,
+                    in_shape,
+                    out_shape,
+                    #[cfg(feature = "pjrt")]
+                    exe,
+                },
             );
         }
-        Ok(Runtime { client, artifacts, platform })
+        Ok(Runtime {
+            #[cfg(feature = "pjrt")]
+            client,
+            artifacts,
+            platform,
+        })
     }
 
     /// Default artifact directory (workspace-relative).
@@ -135,23 +162,34 @@ impl Runtime {
             art.in_shape,
             input.len()
         );
-        let dims: Vec<i64> = art.in_shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input)
-            .reshape(&dims)
-            .context("reshaping input literal")?;
-        let result = art.exe.execute::<xla::Literal>(&[lit])?[0][0]
-            .to_literal_sync()
-            .context("fetching result")?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        let values = out.to_vec::<f32>().context("reading f32 output")?;
-        anyhow::ensure!(
-            values.len() == art.out_elems(),
-            "artifact {name} produced {} elements, manifest says {:?}",
-            values.len(),
-            art.out_shape
-        );
-        Ok(values)
+        #[cfg(feature = "pjrt")]
+        {
+            let dims: Vec<i64> = art.in_shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(input)
+                .reshape(&dims)
+                .context("reshaping input literal")?;
+            let result = art.exe.execute::<xla::Literal>(&[lit])?[0][0]
+                .to_literal_sync()
+                .context("fetching result")?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result.to_tuple1().context("unwrapping result tuple")?;
+            let values = out.to_vec::<f32>().context("reading f32 output")?;
+            anyhow::ensure!(
+                values.len() == art.out_elems(),
+                "artifact {name} produced {} elements, manifest says {:?}",
+                values.len(),
+                art.out_shape
+            );
+            Ok(values)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            anyhow::bail!(
+                "artifact {name}: psoc-dma was built without the `pjrt` feature — \
+                 numerics are unavailable; rebuild with `--features pjrt` (requires \
+                 the xla bindings)"
+            )
+        }
     }
 }
 

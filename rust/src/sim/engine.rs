@@ -7,22 +7,32 @@
 //! binary heap) easy to benchmark and the components easy to unit-test with
 //! a bare `Engine`.
 
-use crate::sim::event::{Channel, Event, Scheduled};
+use crate::sim::event::{Channel, Event, Scheduled, MAX_ENGINES};
 use crate::sim::time::{Dur, SimTime};
+
+/// Number of same-timestamp dedup slots: one for `DdrIssue`, one
+/// `DevKick` per engine, two `DmaKick`s per engine.
+const DEDUP_SLOTS: usize = 1 + MAX_ENGINES * 3;
 
 /// Same-timestamp dedup slots for the idempotent "kick" events. Every
 /// producer liberally posts DevKick/DmaKick/DdrIssue notifications; two
 /// *pending* copies at the same instant are pure heap churn (the §Perf
 /// profile showed `BinaryHeap::pop` at 35% of the sweep). A kick that
 /// has already *popped* must not suppress a re-arm, so `pop` clears the
-/// slot — dropping only genuinely redundant duplicates.
+/// slot — dropping only genuinely redundant duplicates. Slots are keyed
+/// per engine so one engine's kick never shadows another's.
 #[inline]
 fn dedup_slot(ev: &Event) -> Option<usize> {
     match ev {
-        Event::DevKick => Some(0),
-        Event::DmaKick { ch: Channel::Mm2s } => Some(1),
-        Event::DmaKick { ch: Channel::S2mm } => Some(2),
-        Event::DdrIssue => Some(3),
+        Event::DdrIssue => Some(0),
+        Event::DevKick { eng } => Some(1 + eng.index()),
+        Event::DmaKick { eng, ch } => {
+            let c = match ch {
+                Channel::Mm2s => 0,
+                Channel::S2mm => 1,
+            };
+            Some(1 + MAX_ENGINES + eng.index() * 2 + c)
+        }
         _ => None,
     }
 }
@@ -41,7 +51,7 @@ pub struct Engine {
     seq: u64,
     queue: Vec<Scheduled>,
     /// Pending same-timestamp kick events (see [`dedup_slot`]).
-    kick_pending: [Option<SimTime>; 4],
+    kick_pending: [Option<SimTime>; DEDUP_SLOTS],
     /// Total events dispatched (for the §Perf hot-path benches and as a
     /// runaway-simulation guard).
     pub dispatched: u64,
@@ -61,7 +71,7 @@ impl Engine {
             // Pre-size: the steady state of a transfer keeps only a handful
             // of events in flight; 64 slots absorb any startup burst.
             queue: Vec::with_capacity(64),
-            kick_pending: [None; 4],
+            kick_pending: [None; DEDUP_SLOTS],
             dispatched: 0,
         }
     }
@@ -169,7 +179,7 @@ mod tests {
     #[test]
     fn clock_advances_monotonically() {
         let mut e = Engine::new();
-        e.schedule(Dur(50), Event::DevKick);
+        e.schedule(Dur(50), Event::DevKick { eng: crate::sim::event::EngineId::ZERO });
         e.schedule(Dur(10), Event::DdrIssue);
         e.schedule(Dur(10), Event::SchedTick);
 
@@ -180,7 +190,7 @@ mod tests {
         assert_eq!(e.now(), SimTime(10));
 
         // Scheduling relative to the advanced clock.
-        e.schedule(Dur(5), Event::DevKick);
+        e.schedule(Dur(5), Event::DevKick { eng: crate::sim::event::EngineId::ZERO });
         let (t3, _) = e.pop().unwrap();
         assert_eq!(t3, SimTime(15));
         let (t4, _) = e.pop().unwrap();
@@ -193,9 +203,9 @@ mod tests {
     fn schedule_now_is_fifo() {
         let mut e = Engine::new();
         e.schedule_now(Event::DdrIssue);
-        e.schedule_now(Event::DevKick);
+        e.schedule_now(Event::DevKick { eng: crate::sim::event::EngineId::ZERO });
         assert_eq!(e.pop().unwrap().1, Event::DdrIssue);
-        assert_eq!(e.pop().unwrap().1, Event::DevKick);
+        assert_eq!(e.pop().unwrap().1, Event::DevKick { eng: crate::sim::event::EngineId::ZERO });
     }
 
     #[test]

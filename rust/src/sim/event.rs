@@ -9,6 +9,26 @@
 
 use crate::sim::time::SimTime;
 
+/// Identifies one AXI-DMA engine instance (a MM2S/S2MM channel pair with
+/// its own datamover FIFOs, register block and IRQ lines). The seed
+/// modelled exactly one; a [`crate::system::System`] now owns
+/// `SimConfig::num_engines` of them, all arbitrating over the shared DDR.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct EngineId(pub u8);
+
+impl EngineId {
+    pub const ZERO: EngineId = EngineId(0);
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Upper bound on engines per system (sizes the kick-dedup table and the
+/// IRQ line space: two fabric interrupts per engine).
+pub const MAX_ENGINES: usize = 8;
+
 /// Identifies one of the two AXI-DMA channels.
 ///
 /// MM2S ("memory-mapped to stream") reads DDR and feeds the PL — the paper's
@@ -59,10 +79,10 @@ pub enum Event {
     DdrDone { req: DdrReqId },
     /// Advance a DMA channel's state machine (descriptor fetch complete,
     /// FIFO space freed, or a fresh kick after programming).
-    DmaKick { ch: Channel },
-    /// Advance the PL device (loop-back or NullHop): consume from its input
-    /// FIFO and/or produce into its output FIFO.
-    DevKick,
+    DmaKick { eng: EngineId, ch: Channel },
+    /// Advance engine `eng`'s PL device (loop-back or NullHop): consume
+    /// from its input FIFO and/or produce into its output FIFO.
+    DevKick { eng: EngineId },
     /// A peripheral raised an interrupt line (GIC input edge).
     IrqRaise { line: IrqLine },
     /// The GIC delivers the interrupt to the CPU (after controller latency).
@@ -118,14 +138,15 @@ mod tests {
     #[test]
     fn heap_pops_earliest_first_fifo_on_ties() {
         let mut h = BinaryHeap::new();
+        let dev = Event::DevKick { eng: EngineId::ZERO };
         h.push(Scheduled { at: SimTime(30), seq: 0, ev: Event::DdrIssue });
         h.push(Scheduled { at: SimTime(10), seq: 1, ev: Event::SchedTick });
-        h.push(Scheduled { at: SimTime(10), seq: 2, ev: Event::DevKick });
+        h.push(Scheduled { at: SimTime(10), seq: 2, ev: dev });
         h.push(Scheduled { at: SimTime(20), seq: 3, ev: Event::DdrIssue });
 
         let order: Vec<_> = std::iter::from_fn(|| h.pop()).collect();
         assert_eq!(order[0].ev, Event::SchedTick);
-        assert_eq!(order[1].ev, Event::DevKick, "FIFO among equal times");
+        assert_eq!(order[1].ev, dev, "FIFO among equal times");
         assert_eq!(order[2].at, SimTime(20));
         assert_eq!(order[3].at, SimTime(30));
     }

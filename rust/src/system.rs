@@ -2,6 +2,13 @@
 //! them, and exposes the *software-process facade* the drivers program
 //! against.
 //!
+//! The system owns **N independent AXI-DMA engines** ([`DmaPort`]:
+//! MM2S/S2MM channel state machines, datamover FIFOs, an AXI-Lite
+//! register block, a PL device instance and two fabric IRQ lines each),
+//! all arbitrating over the one shared [`DdrController`]. The seed's
+//! single-engine behaviour is the `num_engines = 1` special case and its
+//! timings are bit-identical.
+//!
 //! Hardware lives on the event calendar; software is modelled as a
 //! sequential process (exactly one runnable transfer "thread", as in the
 //! paper's measurement app) that interleaves with the calendar through
@@ -33,24 +40,52 @@ use crate::memory::ddr::{DdrController, Requester};
 use crate::os::costs::OsCosts;
 use crate::os::sched::Scheduler;
 use crate::sim::engine::Engine;
-use crate::sim::event::{Channel, Event, IrqLine};
+use crate::sim::event::{Channel, EngineId, Event, IrqLine};
 use crate::sim::time::{Dur, SimTime};
 use crate::sim::trace::Trace;
 
-/// IRQ line assignment (matches the Zynq's fabric interrupts F2P[0:1]).
+/// IRQ line assignment: engine `e` owns fabric interrupts `2e` (MM2S) and
+/// `2e + 1` (S2MM) — engine 0 matches the Zynq's F2P[0:1] of the seed.
 pub const IRQ_MM2S: IrqLine = IrqLine(0);
 pub const IRQ_S2MM: IrqLine = IrqLine(1);
 
+/// The fabric IRQ line of one engine channel.
+#[inline]
+pub fn irq_line(eng: EngineId, ch: Channel) -> IrqLine {
+    let c = match ch {
+        Channel::Mm2s => 0,
+        Channel::S2mm => 1,
+    };
+    IrqLine(eng.0 * 2 + c)
+}
+
+#[inline]
+fn irq_line_owner(line: IrqLine) -> (EngineId, Channel) {
+    let ch = if line.0 % 2 == 0 { Channel::Mm2s } else { Channel::S2mm };
+    (EngineId(line.0 / 2), ch)
+}
+
 /// Simulation-level failures that the paper treats as system behaviour
 /// (not bugs): a transfer that deadlocks because TX/RX are unbalanced.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SimError {
-    #[error(
-        "{ch} transfer blocked at t={at}ns: calendar drained while waiting \
-         (mm2s fifo {mm2s_level}B, s2mm fifo {s2mm_level}B) — unbalanced TX/RX management"
-    )]
-    Blocked { ch: &'static str, at: u64, mm2s_level: u64, s2mm_level: u64 },
+    Blocked { ch: &'static str, engine: u8, at: u64, mm2s_level: u64, s2mm_level: u64 },
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Blocked { ch, engine, at, mm2s_level, s2mm_level } => write!(
+                f,
+                "{ch} transfer blocked on engine {engine} at t={at}ns: calendar drained \
+                 while waiting (mm2s fifo {mm2s_level}B, s2mm fifo {s2mm_level}B) — \
+                 unbalanced TX/RX management"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// CPU-time ledger for one run: the paper's qualitative "CPU is freed for
 /// other tasks" argument, made quantitative.
@@ -70,43 +105,99 @@ pub struct CpuLedger {
     pub irqs: u64,
 }
 
-pub struct System {
-    pub cfg: SimConfig,
-    pub eng: Engine,
-    pub ddr: DdrController,
+/// One AXI-DMA engine instance plus everything private to it: channel
+/// state machines, datamover FIFOs, AXI-Lite registers, the PL device on
+/// its stream ports, and the delivered-IRQ latches of its two lines.
+pub struct DmaPort {
+    pub id: EngineId,
     pub mm2s: DmaChannelEngine,
     pub s2mm: DmaChannelEngine,
     pub mm2s_fifo: ByteFifo,
     pub s2mm_fifo: ByteFifo,
+    /// This engine's AXI-Lite register block (user-level drivers program
+    /// through it; the kernel driver's dmaengine uses `program_dma`).
+    pub regs: DmaRegFile,
     pub device: PlDevice,
+    irq_delivered: [bool; 2],
+}
+
+impl DmaPort {
+    fn new(id: EngineId, cfg: &SimConfig, device: PlDevice) -> Self {
+        DmaPort {
+            id,
+            mm2s: DmaChannelEngine::new(id, Channel::Mm2s, cfg),
+            s2mm: DmaChannelEngine::new(id, Channel::S2mm, cfg),
+            mm2s_fifo: ByteFifo::new(cfg.mm2s_fifo_bytes),
+            s2mm_fifo: ByteFifo::new(cfg.s2mm_fifo_bytes),
+            regs: DmaRegFile::new(),
+            device,
+            irq_delivered: [false; 2],
+        }
+    }
+
+    fn chan(&self, ch: Channel) -> &DmaChannelEngine {
+        match ch {
+            Channel::Mm2s => &self.mm2s,
+            Channel::S2mm => &self.s2mm,
+        }
+    }
+
+    fn chan_mut(&mut self, ch: Channel) -> &mut DmaChannelEngine {
+        match ch {
+            Channel::Mm2s => &mut self.mm2s,
+            Channel::S2mm => &mut self.s2mm,
+        }
+    }
+
+    fn is_active(&self) -> bool {
+        !self.mm2s.is_idle() || !self.s2mm.is_idle()
+    }
+}
+
+fn ch_index(ch: Channel) -> usize {
+    match ch {
+        Channel::Mm2s => 0,
+        Channel::S2mm => 1,
+    }
+}
+
+pub struct System {
+    pub cfg: SimConfig,
+    pub eng: Engine,
+    pub ddr: DdrController,
+    /// The AXI-DMA engines, index = `EngineId`.
+    pub ports: Vec<DmaPort>,
     pub costs: OsCosts,
     pub copy: CopyModel,
     pub sched: Scheduler,
-    /// The AXI DMA's AXI-Lite register block (user-level drivers program
-    /// through it; the kernel driver's dmaengine uses `program_dma`).
-    pub regs: DmaRegFile,
-    irq_delivered: [bool; 2],
     pub ledger: CpuLedger,
     /// Optional timeline recorder (see [`crate::sim::trace`]).
     pub trace: Option<Trace>,
 }
 
 impl System {
-    pub fn new(cfg: SimConfig, device: PlDevice) -> Self {
+    /// Build a system with one [`DmaPort`] per device in `devices`
+    /// (`devices.len()` must equal `cfg.num_engines`).
+    pub fn new(cfg: SimConfig, devices: Vec<PlDevice>) -> Self {
+        assert_eq!(
+            devices.len(),
+            cfg.num_engines as usize,
+            "one PL device per configured engine"
+        );
+        assert!(!devices.is_empty(), "at least one engine");
         let timeslice = Dur(cfg.timeslice_ns);
+        let ports = devices
+            .into_iter()
+            .enumerate()
+            .map(|(i, dev)| DmaPort::new(EngineId(i as u8), &cfg, dev))
+            .collect();
         let mut sys = System {
             eng: Engine::new(),
             ddr: DdrController::new(&cfg),
-            mm2s: DmaChannelEngine::new(Channel::Mm2s, &cfg),
-            s2mm: DmaChannelEngine::new(Channel::S2mm, &cfg),
-            mm2s_fifo: ByteFifo::new(cfg.mm2s_fifo_bytes),
-            s2mm_fifo: ByteFifo::new(cfg.s2mm_fifo_bytes),
-            device,
+            ports,
             costs: OsCosts::new(&cfg),
             copy: CopyModel::new(&cfg),
             sched: Scheduler::new(timeslice),
-            regs: DmaRegFile::new(),
-            irq_delivered: [false; 2],
             ledger: CpuLedger::default(),
             trace: None,
             cfg,
@@ -124,15 +215,20 @@ impl System {
         Dur::for_bytes(self.cfg.bg_burst_bytes, self.cfg.bg_mem_bps)
     }
 
-    /// Convenience constructors for the two paper scenarios.
+    /// Convenience constructors for the two paper scenarios: one device
+    /// instance per configured engine.
     pub fn loopback(cfg: SimConfig) -> Self {
-        let dev = PlDevice::Loopback(crate::accel::Loopback::new(&cfg));
-        System::new(cfg, dev)
+        let devs = (0..cfg.num_engines)
+            .map(|i| PlDevice::Loopback(crate::accel::Loopback::new(&cfg, EngineId(i as u8))))
+            .collect();
+        System::new(cfg, devs)
     }
 
     pub fn nullhop(cfg: SimConfig) -> Self {
-        let dev = PlDevice::NullHop(crate::accel::NullHopCore::new(&cfg));
-        System::new(cfg, dev)
+        let devs = (0..cfg.num_engines)
+            .map(|i| PlDevice::NullHop(crate::accel::NullHopCore::new(&cfg, EngineId(i as u8))))
+            .collect();
+        System::new(cfg, devs)
     }
 
     #[inline]
@@ -140,23 +236,52 @@ impl System {
         self.eng.now()
     }
 
-    fn chan(&self, ch: Channel) -> &DmaChannelEngine {
-        match ch {
-            Channel::Mm2s => &self.mm2s,
-            Channel::S2mm => &self.s2mm,
-        }
+    #[inline]
+    pub fn num_ports(&self) -> usize {
+        self.ports.len()
     }
 
-    fn irq_index(ch: Channel) -> usize {
-        match ch {
-            Channel::Mm2s => 0,
-            Channel::S2mm => 1,
-        }
+    #[inline]
+    pub fn port(&self, e: EngineId) -> &DmaPort {
+        &self.ports[e.index()]
     }
 
-    /// Is either DMA engine moving data? (memcpy contention input)
+    #[inline]
+    pub fn port_mut(&mut self, e: EngineId) -> &mut DmaPort {
+        &mut self.ports[e.index()]
+    }
+
+    // Port-0 convenience accessors (the single-engine experiments and the
+    // seed's tests all talk to engine 0).
+
+    #[inline]
+    pub fn mm2s(&self) -> &DmaChannelEngine {
+        &self.ports[0].mm2s
+    }
+
+    #[inline]
+    pub fn s2mm(&self) -> &DmaChannelEngine {
+        &self.ports[0].s2mm
+    }
+
+    #[inline]
+    pub fn mm2s_fifo(&self) -> &ByteFifo {
+        &self.ports[0].mm2s_fifo
+    }
+
+    #[inline]
+    pub fn s2mm_fifo(&self) -> &ByteFifo {
+        &self.ports[0].s2mm_fifo
+    }
+
+    #[inline]
+    pub fn device(&self) -> &PlDevice {
+        &self.ports[0].device
+    }
+
+    /// Is any DMA engine moving data? (memcpy contention input)
     pub fn dma_active(&self) -> bool {
-        !self.mm2s.is_idle() || !self.s2mm.is_idle()
+        self.ports.iter().any(DmaPort::is_active)
     }
 
     /// Start recording a timeline (chrome://tracing export via
@@ -179,10 +304,12 @@ impl System {
                 let c = self.ddr.complete(&mut self.eng, req);
                 if let Some(t) = &mut self.trace {
                     let now = self.eng.now();
-                    let (track, what): (&'static str, &str) = match c.requester {
-                        Requester::Mm2s => ("mm2s", "read"),
-                        Requester::S2mm => ("s2mm", "write"),
-                        Requester::Cpu => ("ddr", "bg write"),
+                    let (track, what): (&'static str, String) = match c.requester {
+                        Requester::Mm2s(e) if e.0 == 0 => ("mm2s", "read".into()),
+                        Requester::S2mm(e) if e.0 == 0 => ("s2mm", "write".into()),
+                        Requester::Mm2s(e) => ("mm2s", format!("eng{} read", e.0)),
+                        Requester::S2mm(e) => ("s2mm", format!("eng{} write", e.0)),
+                        Requester::Cpu => ("ddr", "bg write".into()),
                     };
                     t.span(
                         track,
@@ -192,54 +319,66 @@ impl System {
                     );
                 }
                 match c.requester {
-                    Requester::Mm2s => {
-                        let irq = self.mm2s.ddr_complete(
+                    Requester::Mm2s(e) => {
+                        let port = &mut self.ports[e.index()];
+                        let irq = port.mm2s.ddr_complete(
                             &mut self.eng,
                             &mut self.ddr,
-                            &mut self.mm2s_fifo,
+                            &mut port.mm2s_fifo,
                             c.bytes,
                         );
                         if irq {
-                            self.regs.latch_ioc(Channel::Mm2s);
-                            self.eng.schedule_now(Event::IrqRaise { line: IRQ_MM2S });
+                            port.regs.latch_ioc(Channel::Mm2s);
+                            let line = irq_line(e, Channel::Mm2s);
+                            self.eng.schedule_now(Event::IrqRaise { line });
                         }
                     }
-                    Requester::S2mm => {
-                        let irq = self.s2mm.ddr_complete(
+                    Requester::S2mm(e) => {
+                        let port = &mut self.ports[e.index()];
+                        let irq = port.s2mm.ddr_complete(
                             &mut self.eng,
                             &mut self.ddr,
-                            &mut self.s2mm_fifo,
+                            &mut port.s2mm_fifo,
                             c.bytes,
                         );
                         if irq {
-                            self.regs.latch_ioc(Channel::S2mm);
-                            self.eng.schedule_now(Event::IrqRaise { line: IRQ_S2MM });
+                            port.regs.latch_ioc(Channel::S2mm);
+                            let line = irq_line(e, Channel::S2mm);
+                            self.eng.schedule_now(Event::IrqRaise { line });
                         }
                     }
                     Requester::Cpu => {} // background traffic, fire-and-forget
                 }
             }
-            Event::DmaKick { ch } => match ch {
-                Channel::Mm2s => {
-                    self.mm2s.kick(&mut self.eng, &mut self.ddr, &mut self.mm2s_fifo)
+            Event::DmaKick { eng, ch } => {
+                let port = &mut self.ports[eng.index()];
+                match ch {
+                    Channel::Mm2s => {
+                        port.mm2s.kick(&mut self.eng, &mut self.ddr, &mut port.mm2s_fifo)
+                    }
+                    Channel::S2mm => {
+                        port.s2mm.kick(&mut self.eng, &mut self.ddr, &mut port.s2mm_fifo)
+                    }
                 }
-                Channel::S2mm => {
-                    self.s2mm.kick(&mut self.eng, &mut self.ddr, &mut self.s2mm_fifo)
-                }
-            },
-            Event::DevKick => {
-                self.device
-                    .advance(&mut self.eng, &mut self.mm2s_fifo, &mut self.s2mm_fifo)
+            }
+            Event::DevKick { eng } => {
+                let port = &mut self.ports[eng.index()];
+                port.device.advance(&mut self.eng, &mut port.mm2s_fifo, &mut port.s2mm_fifo)
             }
             Event::IrqRaise { line } => {
                 let gic = self.costs.gic_latency();
                 self.eng.schedule(gic, Event::IrqDispatch { line });
             }
             Event::IrqDispatch { line } => {
-                self.irq_delivered[line.0 as usize] = true;
+                let (e, ch) = irq_line_owner(line);
+                self.ports[e.index()].irq_delivered[ch_index(ch)] = true;
                 self.ledger.irqs += 1;
                 if let Some(t) = &mut self.trace {
-                    let name = if line == IRQ_MM2S { "MM2S IOC" } else { "S2MM IOC" };
+                    let name = if e.0 == 0 {
+                        format!("{} IOC", ch.name())
+                    } else {
+                        format!("eng{} {} IOC", e.0, ch.name())
+                    };
                     t.instant("irq", name, self.eng.now().ns());
                 }
             }
@@ -316,86 +455,123 @@ impl System {
         }
     }
 
-    /// Program a DMA channel. Register-write costs: simple mode writes
-    /// ADDR + LENGTH + CTRL; SG mode writes CURDESC + TAILDESC + CTRL
-    /// (the BD chain itself was built by the caller, who charged its
-    /// construction cost).
+    /// Program engine 0's DMA channel (seed-compatible single-engine API).
     pub fn program_dma(&mut self, ch: Channel, mode: DmaMode, descs: Vec<Descriptor>) {
-        let regs = 3;
-        self.cpu_exec(Dur(regs * self.cfg.reg_write_ns));
-        self.irq_delivered[Self::irq_index(ch)] = false;
-        match ch {
-            Channel::Mm2s => self.mm2s.program(&mut self.eng, mode, descs),
-            Channel::S2mm => self.s2mm.program(&mut self.eng, mode, descs),
-        }
+        self.program_dma_on(EngineId::ZERO, ch, mode, descs)
     }
 
-    /// MMIO write into the DMA's AXI-Lite register block: one uncached
+    /// Program a DMA channel of one engine. Register-write costs: simple
+    /// mode writes ADDR + LENGTH + CTRL; SG mode writes CURDESC +
+    /// TAILDESC + CTRL (the BD chain itself was built by the caller, who
+    /// charged its construction cost).
+    pub fn program_dma_on(
+        &mut self,
+        e: EngineId,
+        ch: Channel,
+        mode: DmaMode,
+        descs: Vec<Descriptor>,
+    ) {
+        let regs = 3;
+        self.cpu_exec(Dur(regs * self.cfg.reg_write_ns));
+        let port = &mut self.ports[e.index()];
+        port.irq_delivered[ch_index(ch)] = false;
+        port.chan_mut(ch).program(&mut self.eng, mode, descs);
+    }
+
+    /// MMIO write into engine 0's AXI-Lite register block.
+    pub fn mmio_write(&mut self, off: u32, val: u32) -> Result<(), RegError> {
+        self.mmio_write_on(EngineId::ZERO, off, val)
+    }
+
+    /// MMIO write into one engine's AXI-Lite register block: one uncached
     /// bus write plus the register-file side effect (a LENGTH write
     /// starts a simple-mode transfer). This is the path the user-level
     /// drivers take — exactly what their `mmap()` of the controller does.
-    pub fn mmio_write(&mut self, off: u32, val: u32) -> Result<(), RegError> {
+    pub fn mmio_write_on(&mut self, e: EngineId, off: u32, val: u32) -> Result<(), RegError> {
         self.cpu_exec(Dur(self.cfg.reg_write_ns));
+        let port = &mut self.ports[e.index()];
         if off == regs::MM2S_LENGTH {
-            self.irq_delivered[0] = false;
+            port.irq_delivered[0] = false;
         } else if off == regs::S2MM_LENGTH {
-            self.irq_delivered[1] = false;
+            port.irq_delivered[1] = false;
         }
-        self.regs.write(off, val, &mut self.eng, &mut self.mm2s, &mut self.s2mm)
+        port.regs.write(off, val, &mut self.eng, &mut port.mm2s, &mut port.s2mm)
+    }
+
+    /// MMIO read from engine 0 (status polling).
+    pub fn mmio_read(&mut self, off: u32) -> Result<u32, RegError> {
+        self.mmio_read_on(EngineId::ZERO, off)
     }
 
     /// MMIO read (status polling): one uncached, CPU-stalling bus read.
-    pub fn mmio_read(&mut self, off: u32) -> Result<u32, RegError> {
+    pub fn mmio_read_on(&mut self, e: EngineId, off: u32) -> Result<u32, RegError> {
         self.cpu_exec(Dur(self.cfg.reg_read_ns));
-        self.regs.read(off, &self.mm2s, &self.s2mm)
+        let port = &self.ports[e.index()];
+        port.regs.read(off, &port.mm2s, &port.s2mm)
+    }
+
+    /// Extend engine 0's running scatter-gather chain.
+    pub fn append_dma(&mut self, ch: Channel, descs: Vec<Descriptor>) {
+        self.append_dma_on(EngineId::ZERO, ch, descs)
     }
 
     /// Extend a running scatter-gather chain (kernel driver's pipelined
     /// submit: one TAILDESC register update).
-    pub fn append_dma(&mut self, ch: Channel, descs: Vec<Descriptor>) {
+    pub fn append_dma_on(&mut self, e: EngineId, ch: Channel, descs: Vec<Descriptor>) {
         self.cpu_exec(Dur(self.cfg.reg_write_ns));
-        match ch {
-            Channel::Mm2s => self.mm2s.append(&mut self.eng, descs),
-            Channel::S2mm => self.s2mm.append(&mut self.eng, descs),
-        }
+        let port = &mut self.ports[e.index()];
+        port.chan_mut(ch).append(&mut self.eng, descs);
     }
 
-    /// Configure the NullHop accelerator for its next layer (a short
-    /// burst of register writes through AXI-Lite, then the core's own
-    /// configuration latency).
+    /// Configure engine 0's NullHop core (seed-compatible API).
     pub fn configure_nullhop(&mut self, timing: LayerTiming) {
+        self.configure_nullhop_on(EngineId::ZERO, timing)
+    }
+
+    /// Configure one engine's NullHop accelerator for its next layer (a
+    /// short burst of register writes through AXI-Lite, then the core's
+    /// own configuration latency).
+    pub fn configure_nullhop_on(&mut self, e: EngineId, timing: LayerTiming) {
         self.cpu_exec(Dur(8 * self.cfg.reg_write_ns));
-        match &mut self.device {
+        match &mut self.ports[e.index()].device {
             PlDevice::NullHop(core) => core.configure_layer(&mut self.eng, timing),
-            _ => panic!("configure_nullhop without a NullHop device"),
+            _ => panic!("configure_nullhop without a NullHop device on engine {}", e.0),
         }
     }
 
-    fn blocked(&self, ch: Channel) -> SimError {
+    fn blocked(&self, e: EngineId, ch: Channel) -> SimError {
+        let port = &self.ports[e.index()];
         SimError::Blocked {
             ch: ch.paper_name(),
+            engine: e.0,
             at: self.eng.now().ns(),
-            mm2s_level: self.mm2s_fifo.level(),
-            s2mm_level: self.s2mm_fifo.level(),
+            mm2s_level: port.mm2s_fifo.level(),
+            s2mm_level: port.s2mm_fifo.level(),
         }
     }
 
-    /// User-level polling: spin on the status register until `ch`
-    /// completes. The whole wait is CPU-busy; the spin's uncached reads
-    /// slow DMA service by `polling_dma_penalty`. Completion is observed
-    /// at the first poll boundary after the hardware finished — we
-    /// compute that boundary arithmetically instead of emitting one event
-    /// per iteration, so the wait costs O(hardware events), not O(polls).
+    /// Poll-wait on engine 0 (seed-compatible API).
     pub fn poll_wait(&mut self, ch: Channel) -> Result<SimTime, SimError> {
+        self.poll_wait_on(EngineId::ZERO, ch)
+    }
+
+    /// User-level polling: spin on the status register until channel `ch`
+    /// of engine `e` completes. The whole wait is CPU-busy; the spin's
+    /// uncached reads slow DMA service by `polling_dma_penalty`.
+    /// Completion is observed at the first poll boundary after the
+    /// hardware finished — we compute that boundary arithmetically instead
+    /// of emitting one event per iteration, so the wait costs O(hardware
+    /// events), not O(polls).
+    pub fn poll_wait_on(&mut self, e: EngineId, ch: Channel) -> Result<SimTime, SimError> {
         let start = self.eng.now();
         let deadline = start + Dur(self.cfg.wait_deadline_ns);
         self.ddr.contention_factor = self.cfg.polling_dma_penalty;
-        while !self.chan(ch).is_done() {
+        while !self.ports[e.index()].chan(ch).is_done() {
             // Calendar drained, or only background traffic keeps it
             // alive past the watchdog: the transfer is blocked.
             if !self.step() || self.eng.now() > deadline {
                 self.ddr.contention_factor = 1.0;
-                return Err(self.blocked(ch));
+                return Err(self.blocked(e, ch));
             }
         }
         self.ddr.contention_factor = 1.0;
@@ -419,19 +595,24 @@ impl System {
         Ok(self.eng.now())
     }
 
+    /// Sleep-wait on engine 0 (seed-compatible API).
+    pub fn sleep_wait(&mut self, ch: Channel) -> Result<SimTime, SimError> {
+        self.sleep_wait_on(EngineId::ZERO, ch)
+    }
+
     /// Scheduled user-level: usleep-based wait. Each cycle = one status
     /// read (busy) + one usleep of `sched_poll_period_ns` (yielded, with
     /// the syscall + context-switch toll around it).
-    pub fn sleep_wait(&mut self, ch: Channel) -> Result<SimTime, SimError> {
+    pub fn sleep_wait_on(&mut self, e: EngineId, ch: Channel) -> Result<SimTime, SimError> {
         let deadline = self.eng.now() + Dur(self.cfg.wait_deadline_ns);
         loop {
             // Check the status register.
             self.cpu_exec(Dur(self.cfg.reg_read_ns));
-            if self.chan(ch).is_done() {
+            if self.ports[e.index()].chan(ch).is_done() {
                 return Ok(self.eng.now());
             }
             if self.eng.is_empty() || self.eng.now() > deadline {
-                return Err(self.blocked(ch));
+                return Err(self.blocked(e, ch));
             }
             // usleep(): trap in, switch away, sleep, switch back.
             let entry = self.costs.syscall_entry();
@@ -445,26 +626,29 @@ impl System {
         }
     }
 
+    /// IRQ-wait on engine 0 (seed-compatible API).
+    pub fn irq_wait(&mut self, ch: Channel) -> Result<SimTime, SimError> {
+        self.irq_wait_on(EngineId::ZERO, ch)
+    }
+
     /// Kernel-level: block until the channel's completion interrupt is
     /// delivered, then pay the ISR + wake path. The wait itself is
     /// yielded time.
-    pub fn irq_wait(&mut self, ch: Channel) -> Result<SimTime, SimError> {
-        let idx = Self::irq_index(ch);
+    pub fn irq_wait_on(&mut self, e: EngineId, ch: Channel) -> Result<SimTime, SimError> {
+        let idx = ch_index(ch);
         let start = self.eng.now();
         let deadline = start + Dur(self.cfg.wait_deadline_ns);
-        while !self.irq_delivered[idx] {
+        while !self.ports[e.index()].irq_delivered[idx] {
             if !self.step() || self.eng.now() > deadline {
-                return Err(self.blocked(ch));
+                return Err(self.blocked(e, ch));
             }
         }
         let waited = self.eng.now().since(start);
         self.ledger.freed += waited;
         self.ledger.used_by_tasks += self.sched.run_for(waited);
-        self.irq_delivered[idx] = false;
-        match ch {
-            Channel::Mm2s => self.mm2s.ack_irq(),
-            Channel::S2mm => self.s2mm.ack_irq(),
-        }
+        let port = &mut self.ports[e.index()];
+        port.irq_delivered[idx] = false;
+        port.chan_mut(ch).ack_irq();
         let isr = self.costs.isr();
         self.cpu_exec(isr);
         let wake = self.costs.wake_and_switch();
@@ -492,6 +676,12 @@ mod tests {
         c
     }
 
+    fn cfg_engines(n: u64) -> SimConfig {
+        let mut c = cfg();
+        c.num_engines = n;
+        c
+    }
+
     /// A full loop-back round trip through the real component stack:
     /// program both channels, poll TX then RX.
     #[test]
@@ -510,15 +700,15 @@ mod tests {
         );
         let tx_done = sys.poll_wait(Channel::Mm2s).unwrap();
         let rx_done = sys.poll_wait(Channel::S2mm).unwrap();
-        assert!(sys.mm2s.is_done() && sys.s2mm.is_done());
+        assert!(sys.mm2s().is_done() && sys.s2mm().is_done());
         assert!(tx_done <= rx_done, "TX completes before RX in a loop-back");
-        assert_eq!(sys.mm2s.stats.bytes, n);
-        assert_eq!(sys.s2mm.stats.bytes, n);
+        assert_eq!(sys.mm2s().stats.bytes, n);
+        assert_eq!(sys.s2mm().stats.bytes, n);
         // Everything was polled: no yielded time.
         assert_eq!(sys.ledger.freed, Dur::ZERO);
         assert!(sys.ledger.poll_reads > 0);
         // Stream conservation: device echoed every byte.
-        match &sys.device {
+        match sys.device() {
             PlDevice::Loopback(lb) => {
                 assert_eq!(lb.consumed, n);
                 assert_eq!(lb.produced, n);
@@ -688,9 +878,103 @@ mod tests {
         let rx = sys.poll_wait(Channel::S2mm).unwrap();
         // RX is compute-bound: must take at least the MAC time.
         assert!(rx.since(tx).ns() > 1_000_000, "RX not compute-bound: {}", rx.since(tx));
-        match &sys.device {
+        match sys.device() {
             PlDevice::NullHop(nh) => assert!(nh.layer_done()),
             _ => unreachable!(),
         }
+    }
+
+    /// Two engines carry independent loop-back round trips that both
+    /// complete, and the shared DDR serves both.
+    #[test]
+    fn two_engines_run_concurrent_round_trips() {
+        let mut sys = System::loopback(cfg_engines(2));
+        let n = 64 * 1024;
+        for e in [EngineId(0), EngineId(1)] {
+            sys.program_dma_on(
+                e,
+                Channel::S2mm,
+                DmaMode::Simple,
+                vec![Descriptor::new(PhysAddr(0x100000), n).with_irq()],
+            );
+            sys.program_dma_on(
+                e,
+                Channel::Mm2s,
+                DmaMode::Simple,
+                vec![Descriptor::new(PhysAddr(0), n).with_irq()],
+            );
+        }
+        for e in [EngineId(0), EngineId(1)] {
+            sys.poll_wait_on(e, Channel::Mm2s).unwrap();
+            sys.poll_wait_on(e, Channel::S2mm).unwrap();
+        }
+        for e in [EngineId(0), EngineId(1)] {
+            let p = sys.port(e);
+            assert!(p.mm2s.is_done() && p.s2mm.is_done(), "engine {}", e.0);
+            assert_eq!(p.mm2s.stats.bytes, n);
+            assert_eq!(p.s2mm.stats.bytes, n);
+        }
+        assert_eq!(sys.ddr.stats.bytes_by_engine[0][0], n);
+        assert_eq!(sys.ddr.stats.bytes_by_engine[1][0], n);
+    }
+
+    /// Two concurrent engines share DDR: together they finish later than
+    /// one alone (contention is real), but much sooner than twice the
+    /// single-engine time (parallelism is real too).
+    #[test]
+    fn two_engines_share_ddr_bandwidth() {
+        let n = 1 << 20;
+        let run = |engines: u64, program: &[u8]| {
+            let mut sys = System::loopback(cfg_engines(engines));
+            for &e in program {
+                let e = EngineId(e);
+                sys.program_dma_on(
+                    e,
+                    Channel::S2mm,
+                    DmaMode::Simple,
+                    vec![Descriptor::new(PhysAddr(0x100000), n).with_irq()],
+                );
+                sys.program_dma_on(
+                    e,
+                    Channel::Mm2s,
+                    DmaMode::Simple,
+                    vec![Descriptor::new(PhysAddr(0), n).with_irq()],
+                );
+            }
+            for &e in program {
+                let e = EngineId(e);
+                sys.poll_wait_on(e, Channel::Mm2s).unwrap();
+                sys.poll_wait_on(e, Channel::S2mm).unwrap();
+            }
+            sys.now().ns()
+        };
+        let one = run(1, &[0]);
+        let two = run(2, &[0, 1]);
+        assert!(two > one, "two concurrent transfers cannot be free: {two} vs {one}");
+        assert!(two < 2 * one, "two engines must overlap, not serialize: {two} vs 2x{one}");
+    }
+
+    /// Engine-0-only workloads must be bit-identical no matter how many
+    /// idle engines the system carries — the refactor's golden guarantee.
+    #[test]
+    fn idle_extra_engines_do_not_perturb_timing() {
+        let n = 256 * 1024;
+        let run = |engines: u64| {
+            let mut sys = System::loopback(cfg_engines(engines));
+            sys.program_dma(
+                Channel::S2mm,
+                DmaMode::Simple,
+                vec![Descriptor::new(PhysAddr(0x100000), n).with_irq()],
+            );
+            sys.program_dma(
+                Channel::Mm2s,
+                DmaMode::Simple,
+                vec![Descriptor::new(PhysAddr(0), n).with_irq()],
+            );
+            let tx = sys.poll_wait(Channel::Mm2s).unwrap();
+            let rx = sys.poll_wait(Channel::S2mm).unwrap();
+            (tx, rx, sys.eng.dispatched)
+        };
+        assert_eq!(run(1), run(4), "idle engines changed the timeline");
     }
 }

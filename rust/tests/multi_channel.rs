@@ -1,0 +1,163 @@
+//! Integration: the multi-engine refactor's two contracts.
+//!
+//! 1. **Golden stability** — single-channel results of the three paper
+//!    drivers are unchanged by the refactor: engine-0-only workloads are
+//!    bit-identical no matter how many engines exist, the split-phase
+//!    (`submit`/`complete`) path equals the blocking path, and a golden
+//!    file pins the absolute numbers across future PRs (bootstrap-once,
+//!    compare-forever).
+//! 2. **Scaling** — with 2+ channels and pipeline depth >= 2 the
+//!    RoShamBo workload pushes more frames/sec than the single-channel
+//!    baseline, for every paper driver (the acceptance bar).
+
+use std::path::PathBuf;
+
+use psoc_dma::cnn::roshambo::roshambo;
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::pipeline::{plan_from_estimates, run_batch, PipelineOpts};
+use psoc_dma::drivers::{Driver, DriverConfig, DriverKind};
+use psoc_dma::memory::buffer::CmaAllocator;
+use psoc_dma::sim::event::EngineId;
+use psoc_dma::system::System;
+use psoc_dma::util::json::Json;
+
+fn cfg_engines(n: u64) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.num_engines = n;
+    c
+}
+
+/// One blocking loop-back round trip on engine 0; returns (tx ns, rx ns).
+fn roundtrip(cfg: &SimConfig, kind: DriverKind, bytes: u64) -> (u64, u64) {
+    let mut sys = System::loopback(cfg.clone());
+    let mut cma = CmaAllocator::zynq_default();
+    let mut drv = Driver::new(DriverConfig::table1(kind), &mut cma, cfg, bytes).unwrap();
+    let r = drv.transfer(&mut sys, bytes, bytes).unwrap();
+    (r.tx_time.ns(), r.rx_time.ns())
+}
+
+#[test]
+fn single_channel_timing_invariant_under_engine_count() {
+    // The refactor's golden guarantee: adding idle engines must not move
+    // a single nanosecond of an engine-0 workload.
+    for kind in DriverKind::ALL {
+        for bytes in [4096u64, 256 * 1024, 2 << 20] {
+            let one = roundtrip(&cfg_engines(1), kind, bytes);
+            let four = roundtrip(&cfg_engines(4), kind, bytes);
+            assert_eq!(one, four, "{kind:?} at {bytes}B drifted with idle engines");
+        }
+    }
+}
+
+#[test]
+fn split_phase_equals_blocking_for_every_paper_driver() {
+    // The TransferScheme submit/complete pair is the same primitive
+    // sequence as the blocking Unique transfer; pin it per driver.
+    let cfg = SimConfig::default();
+    let bytes = 512 * 1024;
+    for kind in DriverKind::ALL {
+        let blocking = roundtrip(&cfg, kind, bytes);
+        let mut sys = System::loopback(cfg.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let mut drv = Driver::new(DriverConfig::table1(kind), &mut cma, &cfg, bytes).unwrap();
+        let tok = drv.submit(&mut sys, bytes, bytes).unwrap();
+        let split = drv.complete(&mut sys, tok).unwrap();
+        assert_eq!(
+            (split.tx_time.ns(), split.rx_time.ns()),
+            blocking,
+            "{kind:?}: split-phase drifted from blocking path"
+        );
+    }
+}
+
+/// Golden-file regression: absolute single-channel timings of the three
+/// paper drivers. On the first run (file absent) the current values are
+/// recorded; every later run — and every future PR — must reproduce them
+/// exactly. Delete the file deliberately to re-baseline.
+#[test]
+fn golden_single_channel_timings() {
+    let sizes: [u64; 3] = [4096, 256 * 1024, 2 << 20];
+    let cfg = SimConfig::default();
+    let mut obj: Vec<(String, Json)> = Vec::new();
+    for kind in DriverKind::ALL {
+        for &bytes in &sizes {
+            let (tx, rx) = roundtrip(&cfg, kind, bytes);
+            let key = format!("{}/{}", kind.label().replace(' ', "_"), bytes);
+            obj.push((format!("{key}/tx_ns"), Json::num(tx as f64)));
+            obj.push((format!("{key}/rx_ns"), Json::num(rx as f64)));
+        }
+    }
+    let current = Json::obj(obj.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+
+    let path: PathBuf =
+        [env!("CARGO_MANIFEST_DIR"), "rust", "tests", "golden", "single_channel.json"]
+            .iter()
+            .collect();
+    match std::fs::read_to_string(&path) {
+        Ok(text) => {
+            let golden = Json::parse(&text).expect("golden file must parse");
+            assert_eq!(
+                golden,
+                current,
+                "single-channel timings drifted from {} — if intentional, delete the \
+                 file to re-baseline",
+                path.display()
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, current.to_string_compact()).unwrap();
+            eprintln!(
+                "golden bootstrap: recorded {} — commit this file to pin the values",
+                path.display()
+            );
+        }
+    }
+}
+
+fn batch_fps(kind: DriverKind, channels: usize, depth: usize, frames: usize) -> f64 {
+    let cfg = cfg_engines(channels as u64);
+    let net = roshambo();
+    let plans = plan_from_estimates(&net, &cfg);
+    let max = plans.iter().map(|p| p.timing.tx_bytes.max(p.timing.rx_bytes)).max().unwrap();
+    let mut sys = System::nullhop(cfg.clone());
+    let mut cma = CmaAllocator::zynq_default();
+    let mut drivers: Vec<Driver> = (0..channels)
+        .map(|c| {
+            Driver::new_on(DriverConfig::table1(kind), &mut cma, &cfg, max, EngineId(c as u8))
+                .unwrap()
+        })
+        .collect();
+    run_batch(&mut sys, &mut drivers, &net, &plans, frames, PipelineOpts::new(channels, depth))
+        .unwrap()
+        .frames_per_sec()
+}
+
+#[test]
+fn acceptance_two_channels_depth_two_beat_single_channel() {
+    // ISSUE acceptance: with 2+ channels and pipeline depth >= 2,
+    // simulated frames/sec for RoShamBo exceeds the single-channel
+    // baseline — for all three paper drivers.
+    let frames = 6;
+    for kind in DriverKind::ALL {
+        let base = batch_fps(kind, 1, 1, frames);
+        let piped = batch_fps(kind, 2, 2, frames);
+        assert!(piped > base, "{kind:?}: {piped:.2} fps !> baseline {base:.2} fps");
+    }
+}
+
+#[test]
+fn four_channels_scale_further_than_two() {
+    let frames = 8;
+    let kind = DriverKind::UserPolling;
+    let two = batch_fps(kind, 2, 2, frames);
+    let four = batch_fps(kind, 4, 4, frames);
+    assert!(four > two, "4ch {four:.2} fps !> 2ch {two:.2} fps");
+}
+
+#[test]
+fn batch_scheduler_is_deterministic() {
+    let a = batch_fps(DriverKind::KernelIrq, 2, 2, 5);
+    let b = batch_fps(DriverKind::KernelIrq, 2, 2, 5);
+    assert_eq!(a.to_bits(), b.to_bits(), "same config must be bit-identical");
+}

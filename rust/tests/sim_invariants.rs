@@ -55,9 +55,9 @@ fn property_loopback_conserves_bytes_and_orders_tx_before_rx() {
             .unwrap_or_else(|e| panic!("case {case} {dcfg:?} {bytes}B: {e}"));
 
         // Byte conservation through the whole stack.
-        assert_eq!(sys.mm2s.stats.bytes, bytes, "case {case}: TX bytes");
-        assert_eq!(sys.s2mm.stats.bytes, bytes, "case {case}: RX bytes");
-        match &sys.device {
+        assert_eq!(sys.mm2s().stats.bytes, bytes, "case {case}: TX bytes");
+        assert_eq!(sys.s2mm().stats.bytes, bytes, "case {case}: RX bytes");
+        match sys.device() {
             PlDevice::Loopback(lb) => {
                 assert_eq!(lb.consumed, bytes, "case {case}");
                 assert_eq!(lb.produced, bytes, "case {case}");
@@ -67,8 +67,8 @@ fn property_loopback_conserves_bytes_and_orders_tx_before_rx() {
         // Causality: software cannot see RX before TX on a loop-back.
         assert!(r.tx_time <= r.rx_time, "case {case}: tx {} > rx {}", r.tx_time, r.rx_time);
         // FIFOs fully drained.
-        assert_eq!(sys.mm2s_fifo.level(), 0, "case {case}");
-        assert_eq!(sys.s2mm_fifo.level(), 0, "case {case}");
+        assert_eq!(sys.mm2s_fifo().level(), 0, "case {case}");
+        assert_eq!(sys.s2mm_fifo().level(), 0, "case {case}");
         // No CMA leaks.
         drv.release(&mut cma);
         assert_eq!(cma.free_bytes(), cma.capacity(), "case {case}");
@@ -160,7 +160,7 @@ fn property_nullhop_frames_conserve_layer_bytes() {
         assert_eq!(rep.tx_bytes, plans.iter().map(|p| p.timing.tx_bytes).sum::<u64>());
         assert_eq!(rep.rx_bytes, plans.iter().map(|p| p.timing.rx_bytes).sum::<u64>());
         assert!(rep.frame_time > Dur::ZERO);
-        match &sys.device {
+        match sys.device() {
             PlDevice::NullHop(nh) => assert_eq!(nh.layers_done, 5),
             _ => unreachable!(),
         }
