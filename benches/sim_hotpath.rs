@@ -1,23 +1,51 @@
 //! Bench PERF: microbenchmarks of the simulator's hot paths — the §Perf
 //! targets. The DES event loop (calendar push/pop + dispatch) dominates
 //! every experiment, so its per-event cost is the number to optimize.
+//!
+//! The headline comparison is the PR-2 acceptance gate: the hierarchical
+//! time-wheel calendar vs the binary-heap reference on a deep, wide-
+//! horizon churn — the wheel must deliver >= 25% more events/sec.
 
 mod common;
 
 use psoc_dma::axi::descriptor::Descriptor;
 use psoc_dma::axi::dma::DmaMode;
 use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::sweeps::calendar_churn;
 use psoc_dma::memory::buffer::PhysAddr;
-use psoc_dma::sim::engine::Engine;
+use psoc_dma::sim::engine::{CalendarKind, Engine};
 use psoc_dma::sim::event::{Channel, EngineId, Event};
 use psoc_dma::sim::time::Dur;
 use psoc_dma::system::System;
 
 fn main() {
-    // Raw calendar throughput: schedule/pop cycles.
-    let s = common::bench("hotpath/calendar_push_pop_1M", 1, 10, || {
+    const N: u64 = 1_000_000;
+    const DEPTH: u64 = 10_000;
+
+    // The tentpole number: wheel vs heap calendar throughput on the
+    // exact deep-churn workload CI's bench gate measures (~10k events
+    // in flight, deltas over a ~1 ms horizon — all five wheel levels).
+    let wheel = common::bench("hotpath/calendar_wheel_1M_deep", 1, 10, || {
+        calendar_churn(CalendarKind::Wheel, N, DEPTH);
+    });
+    let heap = common::bench("hotpath/calendar_heap_1M_deep", 1, 10, || {
+        calendar_churn(CalendarKind::Heap, N, DEPTH);
+    });
+    let ratio = heap.mean / wheel.mean;
+    println!(
+        "  -> wheel {:.1} ns/event vs heap {:.1} ns/event: {:.2}x events/sec \
+         (acceptance: >= 1.25x)",
+        wheel.mean * 1e6 / N as f64,
+        heap.mean * 1e6 / N as f64,
+        ratio
+    );
+
+    // Shallow churn: the single-transfer steady state (≤ ~8 events in
+    // flight), where the old linear-scan calendar used to win. Guards
+    // against the wheel regressing the common case.
+    let s = common::bench("hotpath/calendar_push_pop_1M_shallow", 1, 10, || {
         let mut eng = Engine::new();
-        for i in 0..1_000_000u64 {
+        for i in 0..N {
             eng.schedule(Dur(i % 977), Event::DevKick { eng: EngineId::ZERO });
             if i % 2 == 1 {
                 eng.pop();
@@ -25,9 +53,9 @@ fn main() {
             }
         }
         while eng.pop().is_some() {}
-        assert_eq!(eng.dispatched, 1_000_000);
+        assert_eq!(eng.dispatched, N);
     });
-    println!("  -> {:.1} ns/event", s.mean * 1e6 / 1_000_000.0);
+    println!("  -> {:.1} ns/event", s.mean * 1e6 / N as f64);
 
     // Full-system event cost: one 6 MB loop-back round trip, polled.
     let cfg = SimConfig::default();

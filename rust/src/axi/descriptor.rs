@@ -40,9 +40,19 @@ impl Descriptor {
 /// asserting IRQ on the final one. This is what both the kernel driver's
 /// SG path and the user-level *Blocks* mode use.
 pub fn chain(base: PhysAddr, total: u64, chunk: u64) -> Vec<Descriptor> {
+    let mut out = Vec::new();
+    chain_into(base, total, chunk, &mut out);
+    out
+}
+
+/// [`chain`], but building into a caller-provided buffer (cleared first)
+/// so per-transfer chains can recycle one allocation — pair it with
+/// [`crate::system::System::take_desc_scratch`].
+pub fn chain_into(base: PhysAddr, total: u64, chunk: u64, out: &mut Vec<Descriptor>) {
     assert!(total > 0 && chunk > 0);
     assert!(chunk <= MAX_DESC_LEN);
-    let mut out = Vec::with_capacity(total.div_ceil(chunk) as usize);
+    out.clear();
+    out.reserve(total.div_ceil(chunk) as usize);
     let mut off = 0;
     while off < total {
         let len = chunk.min(total - off);
@@ -50,7 +60,6 @@ pub fn chain(base: PhysAddr, total: u64, chunk: u64) -> Vec<Descriptor> {
         off += len;
     }
     out.last_mut().unwrap().irq_on_complete = true;
-    out
 }
 
 #[cfg(test)]
@@ -94,5 +103,20 @@ mod tests {
         let descs = chain(PhysAddr(0), 8192, 4096);
         assert_eq!(descs.len(), 2);
         assert_eq!(descs[1].len, 4096);
+    }
+
+    #[test]
+    fn chain_into_reuses_capacity_and_matches_chain() {
+        let mut buf = Vec::new();
+        chain_into(PhysAddr(0x1000), 10_000, 4096, &mut buf);
+        assert_eq!(buf, chain(PhysAddr(0x1000), 10_000, 4096));
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        // A smaller chain must not reallocate the buffer.
+        chain_into(PhysAddr(0), 4096, 4096, &mut buf);
+        assert_eq!(buf.len(), 1);
+        assert!(buf[0].irq_on_complete);
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf.as_ptr(), ptr);
     }
 }

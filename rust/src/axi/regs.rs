@@ -166,7 +166,7 @@ impl DmaRegFile {
                 if regs.cr & CR_IOC_IRQ_EN != 0 {
                     d = d.with_irq();
                 }
-                engine.program(eng, DmaMode::Simple, vec![d]);
+                engine.program(eng, DmaMode::Simple, &[d]);
                 Ok(())
             }
             _ => unreachable!(),

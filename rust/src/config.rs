@@ -10,6 +10,7 @@
 
 use std::path::Path;
 
+use crate::sim::engine::CalendarKind;
 use crate::util::json::Json;
 
 /// All model constants. Units are in the field names: `_ns` = nanoseconds,
@@ -160,6 +161,10 @@ pub struct SimConfig {
     /// Gaussian jitter applied to OS costs (stddev as a fraction of the
     /// mean); 0 disables jitter for bit-deterministic tests.
     pub os_jitter_frac: f64,
+    /// Event-calendar backend (`"wheel"` or `"heap"`). Both produce
+    /// bit-identical timelines (enforced by the equivalence gate); the
+    /// wheel is the fast default, the heap the reference.
+    pub calendar: CalendarKind,
 }
 
 impl Default for SimConfig {
@@ -226,6 +231,7 @@ impl Default for SimConfig {
 
             seed: 0xC0DE5EED,
             os_jitter_frac: 0.0,
+            calendar: CalendarKind::Wheel,
         }
     }
 }
@@ -280,11 +286,19 @@ macro_rules! config_fields {
             })
             .collect::<anyhow::Result<Vec<u64>>>()?;
     };
+    (@set $self:ident, $field:ident, calendar, $val:ident, $k:ident) => {
+        $self.$field = match $val.as_str() {
+            Some("wheel") => CalendarKind::Wheel,
+            Some("heap") => CalendarKind::Heap,
+            _ => anyhow::bail!("config key {} must be \"wheel\" or \"heap\"", $k),
+        };
+    };
     (@get $self:ident, $field:ident, f64) => { Json::num($self.$field) };
     (@get $self:ident, $field:ident, u64) => { Json::num($self.$field as f64) };
     (@get $self:ident, $field:ident, vec_u64) => {
         Json::Arr($self.$field.iter().map(|&x| Json::num(x as f64)).collect())
     };
+    (@get $self:ident, $field:ident, calendar) => { Json::str($self.$field.label()) };
 }
 
 config_fields! {
@@ -334,6 +348,7 @@ config_fields! {
     wait_deadline_ns: u64,
     seed: u64,
     os_jitter_frac: f64,
+    calendar: calendar,
 }
 
 impl SimConfig {
@@ -484,6 +499,21 @@ mod tests {
         let mut bad = SimConfig::default();
         bad.ddr_engine_weights = vec![0];
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn calendar_key_roundtrips_and_rejects_junk() {
+        let mut cfg = SimConfig::default();
+        assert_eq!(cfg.calendar, CalendarKind::Wheel);
+        cfg.apply_json(&Json::parse(r#"{"calendar": "heap"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.calendar, CalendarKind::Heap);
+        let json = cfg.to_json();
+        assert_eq!(json.get("calendar").as_str(), Some("heap"));
+        let mut cfg2 = SimConfig::default();
+        cfg2.apply_json(&json).unwrap();
+        assert_eq!(cfg, cfg2);
+        assert!(cfg.apply_json(&Json::parse(r#"{"calendar": "ring"}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"calendar": 3}"#).unwrap()).is_err());
     }
 
     #[test]

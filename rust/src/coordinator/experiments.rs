@@ -178,8 +178,9 @@ pub struct ScalingRow {
 }
 
 /// One cell of the grid: build a fresh system with `channels` engines
-/// and run `frames` frames at the given depth.
-fn scaling_cell(
+/// and run `frames` frames at the given depth. `pub(crate)` so the
+/// parallel executor ([`super::sweeps`]) shards the same cells.
+pub(crate) fn scaling_cell(
     cfg: &SimConfig,
     net: &NetDesc,
     kind: DriverKind,

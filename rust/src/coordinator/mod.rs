@@ -7,13 +7,22 @@
 //! * [`experiments`] — the runners behind every figure/table: the
 //!   loop-back size sweep (Fig. 4/5), the RoShamBo frame timing
 //!   (Table I), the channel-count × pipeline-depth scaling grid, and the
-//!   ablations (buffering, partitioning, VGG19 blocking).
+//!   ablations (buffering, partitioning, VGG19 blocking);
+//! * [`sweeps`] — the parallel grid executor: shards any experiment grid
+//!   across scoped worker threads with deterministic per-cell seeds and
+//!   grid-order merging, plus the `bench` harness behind CI's
+//!   perf-regression gate (`BENCH_sweeps.json`).
 
 pub mod calibrate;
 pub mod experiments;
 pub mod pipeline;
+pub mod sweeps;
 
 pub use experiments::{loopback_sweep, scaling_sweep, table1, ScalingRow, SweepRow, Table1Row};
+pub use sweeps::{
+    bench, cell_seed, loopback_sweep_parallel, run_cells, scaling_sweep_parallel, BenchOptions,
+    BenchReport, SweepStats,
+};
 pub use pipeline::{
     plan_from_estimates, plan_with_runtime, run_batch, run_frame, BatchReport, ChannelPolicy,
     FrameReport, LayerPlan, PipelineOpts,

@@ -1,0 +1,554 @@
+//! Parallel sweep executor + the `bench` harness behind CI's
+//! perf-regression gate.
+//!
+//! Every experiment in this repo is a *grid* of independent cells
+//! (transfer size × driver, channels × depth, the ablation matrix), and
+//! each cell builds its own [`System`] from scratch — embarrassingly
+//! parallel. [`run_cells`] shards any such grid across scoped worker
+//! threads with a work-stealing index counter, then merges results back
+//! **in grid order**, so the output is bit-identical for any worker
+//! count. Determinism inside a cell is preserved by deriving the cell's
+//! RNG seed from the base seed and the cell index ([`cell_seed`]) rather
+//! than from any shared mutable state. (The serial runners instead pass
+//! `cfg.seed` to every cell, so with `os_jitter_frac > 0` the parallel
+//! wrappers are deterministic but draw *different* jitter than serial;
+//! with jitter disabled — the default — rows are bit-identical to
+//! serial, which the tests pin.)
+//!
+//! [`bench`] packages two measurements into a machine-readable report
+//! (`BENCH_sweeps.json`) that CI archives and diffs against a committed
+//! baseline:
+//!
+//! * **calendar** — raw schedule/pop throughput of the time-wheel and
+//!   binary-heap backends on a deep, wide-horizon churn (events/sec);
+//! * **sweep** — wall time of a loop-back grid executed with 1 worker
+//!   and with N workers (cells/sec, events/sec, multi-thread speedup).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::config::SimConfig;
+use crate::drivers::{
+    BufferScheme, Driver, DriverConfig, DriverError, DriverKind, PartitionMode,
+};
+use crate::memory::buffer::CmaAllocator;
+use crate::sim::engine::{CalendarKind, Engine};
+use crate::sim::event::Event;
+use crate::sim::rng::Pcg32;
+use crate::sim::time::Dur;
+use crate::system::System;
+use crate::util::json::Json;
+
+use crate::cnn::roshambo::roshambo;
+
+use super::experiments::{scaling_cell, AblationRow, ScalingRow, SweepRow};
+
+/// Deterministic per-cell seed: splitmix64 over (base, cell index).
+/// Cells re-seed from this regardless of which worker executes them, so
+/// jittered runs are reproducible and independent of the worker count.
+pub fn cell_seed(base: u64, cell: usize) -> u64 {
+    let mut z = base ^ (cell as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Run `f` over every cell, sharded across `workers` scoped threads, and
+/// return the results in cell order. With `workers <= 1` the grid runs
+/// inline (no threads), which is also the fallback for 1-cell grids.
+pub fn run_cells<T, R, F>(cells: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = cells.len();
+    if workers <= 1 || n <= 1 {
+        return cells.iter().enumerate().map(|(i, c)| f(i, c)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i, &cells[i])));
+                }
+                if !local.is_empty() {
+                    done.lock().unwrap().extend(local);
+                }
+            });
+        }
+    });
+    let mut rows = done.into_inner().unwrap();
+    rows.sort_unstable_by_key(|&(i, _)| i);
+    rows.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Wall-clock statistics of one parallel grid execution.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepStats {
+    pub workers: usize,
+    pub cells: usize,
+    /// Simulator events dispatched, summed over cells.
+    pub events: u64,
+    pub wall: Duration,
+}
+
+impl SweepStats {
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    pub fn cells_per_sec(&self) -> f64 {
+        self.cells as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+/// One loop-back cell (the same driver configuration rules as the serial
+/// [`super::experiments::loopback_sweep`]), returning the row plus the
+/// cell's event count.
+fn loopback_cell(
+    cfg: &SimConfig,
+    bytes: u64,
+    kind: DriverKind,
+    seed: u64,
+) -> Result<(SweepRow, u64), DriverError> {
+    let mut c = cfg.clone();
+    c.seed = seed;
+    let dcfg = match kind {
+        DriverKind::KernelIrq => DriverConfig {
+            kind,
+            buffering: BufferScheme::Double,
+            partition: PartitionMode::Blocks,
+        },
+        _ => DriverConfig::table1(kind),
+    };
+    let mut sys = System::loopback(c.clone());
+    let mut cma = CmaAllocator::zynq_default();
+    let mut drv = Driver::new(dcfg, &mut cma, &c, bytes)?;
+    let r = drv.transfer(&mut sys, bytes, bytes)?;
+    drv.release(&mut cma);
+    Ok((SweepRow { bytes, driver: kind, tx: r.tx_time, rx: r.rx_time }, sys.eng.dispatched))
+}
+
+/// Parallel Fig. 4/5 grid: same cells and per-cell seeding for every
+/// worker count, merged in grid order (bit-identical to the serial
+/// [`super::experiments::loopback_sweep`] when jitter is disabled; see
+/// the module docs for the jittered-seed caveat). Returns the rows plus
+/// wall-clock stats for the bench harness.
+pub fn loopback_sweep_parallel(
+    cfg: &SimConfig,
+    sizes: &[u64],
+    drivers: &[DriverKind],
+    workers: usize,
+) -> Result<(Vec<SweepRow>, SweepStats), DriverError> {
+    let cells: Vec<(u64, DriverKind)> = sizes
+        .iter()
+        .flat_map(|&b| drivers.iter().map(move |&k| (b, k)))
+        .collect();
+    let t0 = Instant::now();
+    let results = run_cells(&cells, workers, |i, &(bytes, kind)| {
+        loopback_cell(cfg, bytes, kind, cell_seed(cfg.seed, i))
+    });
+    let wall = t0.elapsed();
+    let mut rows = Vec::with_capacity(results.len());
+    let mut events = 0u64;
+    for r in results {
+        let (row, ev) = r?;
+        events += ev;
+        rows.push(row);
+    }
+    let stats = SweepStats { workers, cells: cells.len(), events, wall };
+    Ok((rows, stats))
+}
+
+/// Parallel channel-count × pipeline-depth scaling grid: identical rows
+/// to [`super::experiments::scaling_sweep`] (same per-driver baseline
+/// normalisation), sharded across workers.
+pub fn scaling_sweep_parallel(
+    cfg: &SimConfig,
+    drivers: &[DriverKind],
+    channels_list: &[usize],
+    depths: &[usize],
+    frames: usize,
+    workers: usize,
+) -> Result<Vec<ScalingRow>, DriverError> {
+    let net = roshambo();
+    // Per-driver (1 channel, depth 1) baselines first — every grid cell
+    // normalises against them. Baselines take cell indices 0..N and the
+    // grid continues after them, so every cell's seed is unique and
+    // position-determined (same convention as the other wrappers).
+    let baselines: Vec<f64> = run_cells(drivers, workers, |i, &kind| {
+        let mut c = cfg.clone();
+        c.seed = cell_seed(cfg.seed, i);
+        scaling_cell(&c, &net, kind, 1, 1, frames).map(|r| r.frames_per_sec())
+    })
+    .into_iter()
+    .collect::<Result<Vec<_>, DriverError>>()?;
+
+    let cells: Vec<(usize, DriverKind, usize, usize)> = drivers
+        .iter()
+        .enumerate()
+        .flat_map(|(di, &kind)| {
+            channels_list.iter().flat_map(move |&channels| {
+                depths.iter().map(move |&depth| (di, kind, channels, depth))
+            })
+        })
+        .collect();
+    let base_cells = drivers.len();
+    let reports = run_cells(&cells, workers, |i, &(_, kind, channels, depth)| {
+        let mut c = cfg.clone();
+        c.seed = cell_seed(cfg.seed, base_cells + i);
+        scaling_cell(&c, &net, kind, channels, depth, frames)
+    });
+    let mut rows = Vec::with_capacity(cells.len());
+    for (&(di, kind, channels, depth), report) in cells.iter().zip(reports) {
+        let report = report?;
+        let speedup = report.frames_per_sec() / baselines[di];
+        rows.push(ScalingRow { driver: kind, channels, depth, frames, report, speedup });
+    }
+    Ok(rows)
+}
+
+/// Parallel §III.A ablation matrix: identical rows to
+/// [`super::experiments::ablation_matrix`], sharded across workers.
+pub fn ablation_matrix_parallel(
+    cfg: &SimConfig,
+    bytes: u64,
+    workers: usize,
+) -> Result<Vec<AblationRow>, DriverError> {
+    let mut cells: Vec<DriverConfig> = Vec::new();
+    for kind in DriverKind::ALL {
+        for buffering in [BufferScheme::Single, BufferScheme::Double] {
+            for partition in [PartitionMode::Unique, PartitionMode::Blocks] {
+                if kind == DriverKind::KernelIrq
+                    && (buffering, partition) != (BufferScheme::Single, PartitionMode::Unique)
+                {
+                    continue;
+                }
+                cells.push(DriverConfig { kind, buffering, partition });
+            }
+        }
+    }
+    let results = run_cells(&cells, workers, |i, dcfg| -> Result<AblationRow, DriverError> {
+        let mut c = cfg.clone();
+        c.seed = cell_seed(cfg.seed, i);
+        let mut sys = System::loopback(c.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let mut drv = Driver::new(*dcfg, &mut cma, &c, bytes)?;
+        let r = drv.transfer(&mut sys, bytes, bytes)?;
+        drv.release(&mut cma);
+        Ok(AblationRow { cfg: *dcfg, bytes, tx: r.tx_time, rx: r.rx_time })
+    });
+    results.into_iter().collect()
+}
+
+// ---------------------------------------------------------------------
+// Bench harness
+// ---------------------------------------------------------------------
+
+/// Options for [`bench`].
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOptions {
+    /// Smaller grids / fewer events (the CI smoke configuration).
+    pub quick: bool,
+    /// Worker count for the multi-threaded sweep leg. Values below 2
+    /// are raised to 2 — the leg exists to measure a speedup over the
+    /// 1-worker run, which is always measured anyway.
+    pub workers: usize,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions { quick: false, workers: 4 }
+    }
+}
+
+/// One calendar-backend measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct CalendarBench {
+    pub kind: CalendarKind,
+    pub events: u64,
+    pub wall: Duration,
+}
+
+impl CalendarBench {
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+/// The full bench report (serialised to `BENCH_sweeps.json`).
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub quick: bool,
+    pub calendar: Vec<CalendarBench>,
+    /// Sweep stats at 1 worker and at `BenchOptions::workers`.
+    pub sweeps: Vec<SweepStats>,
+}
+
+/// Deep-calendar churn: `events` schedule/pop cycles over a ~1 ms
+/// horizon with ~`depth` events in flight — the profile where queue
+/// asymptotics dominate. Deterministic (seeded deltas). Public so
+/// `benches/sim_hotpath.rs` measures the *same* workload CI gates on.
+pub fn calendar_churn(kind: CalendarKind, events: u64, depth: u64) -> CalendarBench {
+    let mut eng = Engine::with_calendar(kind);
+    let mut rng = Pcg32::new(0xbe7c);
+    let t0 = Instant::now();
+    for i in 0..events {
+        eng.schedule(Dur(rng.range_u64(0, 1 << 20)), Event::SchedTick);
+        if i >= depth {
+            eng.pop();
+        }
+    }
+    while eng.pop().is_some() {}
+    let wall = t0.elapsed();
+    assert_eq!(eng.dispatched, events);
+    CalendarBench { kind, events, wall }
+}
+
+/// Run the bench suite. The sweep grid replicates its size × driver
+/// cells over several rounds so the wall time is long enough to measure
+/// a stable multi-worker speedup.
+pub fn bench(cfg: &SimConfig, opts: BenchOptions) -> Result<BenchReport, DriverError> {
+    let (events, depth) = if opts.quick { (200_000, 4_096) } else { (1_000_000, 10_000) };
+    let calendar = vec![
+        calendar_churn(CalendarKind::Wheel, events, depth),
+        calendar_churn(CalendarKind::Heap, events, depth),
+    ];
+
+    let (sizes, rounds): (&[u64], usize) = if opts.quick {
+        (&[64 << 10, 512 << 10, 2 << 20], 6)
+    } else {
+        (&[16 << 10, 128 << 10, 1 << 20, 4 << 20], 12)
+    };
+    let mut grid: Vec<u64> = Vec::new();
+    for _ in 0..rounds {
+        grid.extend_from_slice(sizes);
+    }
+    let mut sweeps = Vec::new();
+    for workers in [1, opts.workers.max(2)] {
+        let (_rows, stats) =
+            loopback_sweep_parallel(cfg, &grid, &DriverKind::ALL, workers)?;
+        sweeps.push(stats);
+    }
+    Ok(BenchReport { quick: opts.quick, calendar, sweeps })
+}
+
+impl BenchReport {
+    fn calendar_eps(&self, kind: CalendarKind) -> f64 {
+        self.calendar
+            .iter()
+            .find(|c| c.kind == kind)
+            .map(|c| c.events_per_sec())
+            .unwrap_or(0.0)
+    }
+
+    pub fn wheel_events_per_sec(&self) -> f64 {
+        self.calendar_eps(CalendarKind::Wheel)
+    }
+
+    pub fn heap_events_per_sec(&self) -> f64 {
+        self.calendar_eps(CalendarKind::Heap)
+    }
+
+    /// Wheel calendar throughput relative to the heap reference.
+    pub fn wheel_speedup_over_heap(&self) -> f64 {
+        let heap = self.heap_events_per_sec();
+        if heap <= 0.0 {
+            return 0.0;
+        }
+        self.wheel_events_per_sec() / heap
+    }
+
+    /// Wall-time speedup of the multi-worker sweep leg over 1 worker.
+    pub fn sweep_speedup(&self) -> f64 {
+        match (self.sweeps.first(), self.sweeps.last()) {
+            (Some(one), Some(many)) if one.workers == 1 && many.workers > 1 => {
+                one.wall.as_secs_f64() / many.wall.as_secs_f64().max(1e-12)
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Single-worker sweep events/sec (the scalar CI tracks).
+    pub fn sweep_events_per_sec(&self) -> f64 {
+        self.sweeps.first().map(|s| s.events_per_sec()).unwrap_or(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let calendar = self
+            .calendar
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("kind", Json::str(c.kind.label())),
+                    ("events", Json::num(c.events as f64)),
+                    ("wall_ms", Json::num(c.wall.as_secs_f64() * 1e3)),
+                    ("events_per_sec", Json::num(c.events_per_sec())),
+                ])
+            })
+            .collect();
+        let sweeps = self
+            .sweeps
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("workers", Json::num(s.workers as f64)),
+                    ("cells", Json::num(s.cells as f64)),
+                    ("events", Json::num(s.events as f64)),
+                    ("wall_ms", Json::num(s.wall.as_secs_f64() * 1e3)),
+                    ("events_per_sec", Json::num(s.events_per_sec())),
+                    ("cells_per_sec", Json::num(s.cells_per_sec())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("quick", Json::Bool(self.quick)),
+            ("calendar", Json::Arr(calendar)),
+            ("wheel_speedup_over_heap", Json::num(self.wheel_speedup_over_heap())),
+            ("sweep", Json::Arr(sweeps)),
+            ("sweep_speedup", Json::num(self.sweep_speedup())),
+        ])
+    }
+
+    /// Compare this run's throughput scalars against a previously
+    /// committed baseline JSON. Returns one message per metric that
+    /// regressed by more than `tolerance` (e.g. `0.2` = 20%).
+    pub fn check_against(&self, baseline: &Json, tolerance: f64) -> Vec<String> {
+        let mut regressions = Vec::new();
+        let mut check = |name: &str, current: f64, base: f64| {
+            if base > 0.0 && current < base * (1.0 - tolerance) {
+                regressions.push(format!(
+                    "{name}: {current:.0} events/sec is {:.1}% below baseline {base:.0}",
+                    100.0 * (1.0 - current / base)
+                ));
+            }
+        };
+        let base_cal = |kind: &str| -> f64 {
+            baseline
+                .get("calendar")
+                .as_arr()
+                .and_then(|arr| {
+                    arr.iter()
+                        .find(|c| c.get("kind").as_str() == Some(kind))
+                        .and_then(|c| c.get("events_per_sec").as_f64())
+                })
+                .unwrap_or(0.0)
+        };
+        check("calendar/wheel", self.wheel_events_per_sec(), base_cal("wheel"));
+        let base_sweep = baseline
+            .get("sweep")
+            .idx(0)
+            .get("events_per_sec")
+            .as_f64()
+            .unwrap_or(0.0);
+        check("sweep/1-worker", self.sweep_events_per_sec(), base_sweep);
+        regressions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiments::loopback_sweep;
+
+    #[test]
+    fn cell_seed_is_deterministic_and_spread() {
+        assert_eq!(cell_seed(7, 3), cell_seed(7, 3));
+        assert_ne!(cell_seed(7, 3), cell_seed(7, 4));
+        assert_ne!(cell_seed(7, 3), cell_seed(8, 3));
+    }
+
+    #[test]
+    fn run_cells_merges_in_grid_order_any_worker_count() {
+        let cells: Vec<usize> = (0..37).collect();
+        let expect: Vec<usize> = cells.iter().map(|c| c * 10).collect();
+        for workers in [1, 2, 4, 8] {
+            let got = run_cells(&cells, workers, |i, &c| {
+                assert_eq!(i, c);
+                c * 10
+            });
+            assert_eq!(got, expect, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_and_is_worker_invariant() {
+        let cfg = SimConfig::default();
+        let sizes = [4096u64, 262_144];
+        let serial = loopback_sweep(&cfg, &sizes, &DriverKind::ALL).unwrap();
+        let (one, s1) = loopback_sweep_parallel(&cfg, &sizes, &DriverKind::ALL, 1).unwrap();
+        let (four, s4) = loopback_sweep_parallel(&cfg, &sizes, &DriverKind::ALL, 4).unwrap();
+        let key =
+            |rows: &[SweepRow]| -> Vec<(u64, u64, u64)> {
+                rows.iter().map(|r| (r.bytes, r.tx.ns(), r.rx.ns())).collect()
+            };
+        assert_eq!(key(&one), key(&four), "rows depend on worker count");
+        assert_eq!(key(&one), key(&serial), "parallel rows drifted from serial");
+        assert_eq!(s1.events, s4.events, "event totals depend on worker count");
+        assert_eq!(s1.cells, sizes.len() * 3);
+    }
+
+    #[test]
+    fn scaling_parallel_matches_serial() {
+        let cfg = SimConfig::default();
+        let drivers = [DriverKind::UserPolling];
+        let serial =
+            crate::coordinator::experiments::scaling_sweep(&cfg, &drivers, &[1, 2], &[1, 2], 3)
+                .unwrap();
+        let par = scaling_sweep_parallel(&cfg, &drivers, &[1, 2], &[1, 2], 3, 4).unwrap();
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(par.iter()) {
+            assert_eq!(
+                (a.channels, a.depth, a.report.total_time.ns()),
+                (b.channels, b.depth, b.report.total_time.ns())
+            );
+            assert_eq!(a.speedup.to_bits(), b.speedup.to_bits());
+        }
+    }
+
+    #[test]
+    fn ablation_parallel_matches_serial() {
+        let cfg = SimConfig::default();
+        let serial = crate::coordinator::experiments::ablation_matrix(&cfg, 1 << 20).unwrap();
+        let par = ablation_matrix_parallel(&cfg, 1 << 20, 4).unwrap();
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(par.iter()) {
+            assert_eq!((a.tx.ns(), a.rx.ns()), (b.tx.ns(), b.rx.ns()));
+        }
+    }
+
+    #[test]
+    fn bench_quick_produces_consistent_json() {
+        let cfg = SimConfig::default();
+        let rep = bench(&cfg, BenchOptions { quick: true, workers: 2 }).unwrap();
+        assert_eq!(rep.calendar.len(), 2);
+        assert_eq!(rep.sweeps.len(), 2);
+        assert!(rep.wheel_events_per_sec() > 0.0);
+        assert!(rep.sweep_speedup() > 0.0);
+        let json = rep.to_json();
+        assert_eq!(json.get("schema").as_u64(), Some(1));
+        assert_eq!(json.get("calendar").as_arr().unwrap().len(), 2);
+        // A report never regresses against itself.
+        assert!(rep.check_against(&json, 0.2).is_empty());
+        // A 10x-faster fake baseline must flag both metrics.
+        let mut fake = rep.clone();
+        for c in &mut fake.calendar {
+            c.wall = Duration::from_nanos((c.wall.as_nanos() as u64 / 10).max(1));
+        }
+        for s in &mut fake.sweeps {
+            s.wall = Duration::from_nanos((s.wall.as_nanos() as u64 / 10).max(1));
+        }
+        let flagged = rep.check_against(&fake.to_json(), 0.2);
+        assert_eq!(flagged.len(), 2, "{flagged:?}");
+    }
+}

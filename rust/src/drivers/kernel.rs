@@ -23,18 +23,18 @@
 //!   which is why the kernel row of Table I loses to user-level polling
 //!   at RoShamBo's ~100 KB transfer lengths.
 //!
-//! The blocking [`transfer`] is [`submit`] (arm + feed the engine)
-//! followed by [`complete`] (block on the IRQs, invalidate + copy out) —
+//! The blocking `transfer` is `submit` (arm + feed the engine)
+//! followed by `complete` (block on the IRQs, invalidate + copy out) —
 //! the split-phase pair the frame-pipelined coordinator drives directly.
 //!
-//! [`transfer_multiqueue`] is the multi-engine extension: the same
+//! `transfer_multiqueue` is the multi-engine extension: the same
 //! pipelined SG feed, but chunks are striped round-robin across *every*
 //! engine's MM2S queue (and the RX arms split proportionally), so a
 //! single payload exploits all PS–PL ports concurrently — NEURAghe's
 //! trick. The CPU-side copy+flush feed is still serial (one core), so
 //! striping pays exactly when the per-engine stream is the bottleneck.
 
-use crate::axi::descriptor::{chain, Descriptor};
+use crate::axi::descriptor::{chain_into, Descriptor};
 use crate::axi::dma::DmaMode;
 use crate::memory::copy::CopyKind;
 use crate::sim::event::{Channel, EngineId};
@@ -80,10 +80,14 @@ pub(super) fn submit(
 
     // Arm the whole RX chain up front (descriptor build per BD; the
     // buffer is invalidated before the copy-out instead — see below).
+    // Chains build into the system's recycled scratch buffer: no
+    // per-transfer allocation once warm.
     if rx_bytes > 0 {
-        let descs = chain(drv.rx_buf(0).addr, rx_bytes, sg_chunk);
+        let mut descs = sys.take_desc_scratch();
+        chain_into(drv.rx_buf(0).addr, rx_bytes, sg_chunk, &mut descs);
         sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
-        sys.program_dma_on(port, Channel::S2mm, DmaMode::ScatterGather, descs);
+        sys.program_dma_slice_on(port, Channel::S2mm, DmaMode::ScatterGather, &descs);
+        sys.put_desc_scratch(descs);
     }
 
     if worst_case {
@@ -91,9 +95,11 @@ pub(super) fn submit(
         sys.cpu_copy(tx_bytes, CopyKind::KernelCached);
         let fl = flush_time(sys, tx_bytes);
         sys.cpu_exec(fl);
-        let descs = chain(drv.tx_buf(0).addr, tx_bytes, sg_chunk);
+        let mut descs = sys.take_desc_scratch();
+        chain_into(drv.tx_buf(0).addr, tx_bytes, sg_chunk, &mut descs);
         sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
-        sys.program_dma_on(port, Channel::Mm2s, DmaMode::ScatterGather, descs);
+        sys.program_dma_slice_on(port, Channel::Mm2s, DmaMode::ScatterGather, &descs);
+        sys.put_desc_scratch(descs);
     } else {
         // Pipelined: copy/flush chunk i+1 while the engine DMAs chunk i.
         let mut off = 0u64;
@@ -111,10 +117,10 @@ pub(super) fn submit(
                 d = d.with_irq();
             }
             if !programmed {
-                sys.program_dma_on(port, Channel::Mm2s, DmaMode::ScatterGather, vec![d]);
+                sys.program_dma_slice_on(port, Channel::Mm2s, DmaMode::ScatterGather, &[d]);
                 programmed = true;
             } else {
-                sys.append_dma_on(port, Channel::Mm2s, vec![d]);
+                sys.append_dma_slice_on(port, Channel::Mm2s, &[d]);
             }
             off += len;
             i += 1;
@@ -215,15 +221,18 @@ pub(super) fn transfer_multiqueue(
     let engines_used = tx_share.iter().filter(|&&s| s > 0).count() as u64;
     sys.cpu_exec(Dur(engines_used.max(1) * sys.cfg.kernel_submit_ns));
 
-    // Arm every engine's RX chain up front.
+    // Arm every engine's RX chain up front (one recycled chain buffer
+    // reused across engines).
+    let mut descs = sys.take_desc_scratch();
     for p in 0..n {
         if rx_share[p] == 0 {
             continue;
         }
-        let descs = chain(drv.rx_buf(p).addr, rx_share[p], sg_chunk);
+        chain_into(drv.rx_buf(p).addr, rx_share[p], sg_chunk, &mut descs);
         sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
-        sys.program_dma_on(EngineId(p as u8), Channel::S2mm, DmaMode::ScatterGather, descs);
+        sys.program_dma_slice_on(EngineId(p as u8), Channel::S2mm, DmaMode::ScatterGather, &descs);
     }
+    sys.put_desc_scratch(descs);
 
     // Pipelined TX feed, round-robin across engines.
     let mut off = 0u64;
@@ -243,10 +252,10 @@ pub(super) fn transfer_multiqueue(
             d = d.with_irq();
         }
         if !programmed[p] {
-            sys.program_dma_on(EngineId(p as u8), Channel::Mm2s, DmaMode::ScatterGather, vec![d]);
+            sys.program_dma_slice_on(EngineId(p as u8), Channel::Mm2s, DmaMode::ScatterGather, &[d]);
             programmed[p] = true;
         } else {
-            sys.append_dma_on(EngineId(p as u8), Channel::Mm2s, vec![d]);
+            sys.append_dma_slice_on(EngineId(p as u8), Channel::Mm2s, &[d]);
         }
         fed[p] += 1;
         off += len;

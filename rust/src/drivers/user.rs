@@ -15,8 +15,8 @@
 //! precisely the overhead reduction §III.A claims for the double-buffer
 //! scheme.
 //!
-//! The Unique path is expressed as [`submit`] (stage + arm) followed by
-//! [`complete`] (wait + copy out) — the same split-phase pair the
+//! The Unique path is expressed as `submit` (stage + arm) followed by
+//! `complete` (wait + copy out) — the same split-phase pair the
 //! frame-pipelined coordinator drives directly, so the two entry shapes
 //! cannot drift apart.
 

@@ -9,11 +9,18 @@
 //! psoc-dma ablation-blocks   # Blocks chunk-size sweep
 //! psoc-dma ablation-vgg      # VGG19 failure modes
 //! psoc-dma scaling           # channel-count x pipeline-depth frame throughput
+//! psoc-dma bench             # simulator perf bench -> BENCH_sweeps.json
 //! psoc-dma all               # everything above (estimate plans)
 //! ```
 //!
 //! `--config <file.json>` overrides any `SimConfig` constant;
 //! `--csv <dir>` additionally writes machine-readable outputs.
+//!
+//! `bench` flags: `--quick` (CI smoke grid), `--workers <n>` (threads for
+//! the parallel leg, default 4), `--out <path>` (report destination,
+//! default `BENCH_sweeps.json`), `--check <baseline.json>` (exit non-zero
+//! if events/sec regressed >20% against the committed baseline; a missing
+//! baseline file is skipped with a warning so the gate can bootstrap).
 
 use std::path::Path;
 
@@ -34,6 +41,10 @@ struct Args {
     csv_dir: Option<String>,
     use_runtime: bool,
     frames: usize,
+    quick: bool,
+    workers: usize,
+    out: Option<String>,
+    check: Option<String>,
 }
 
 fn parse_args() -> Result<Args> {
@@ -43,6 +54,10 @@ fn parse_args() -> Result<Args> {
         csv_dir: None,
         use_runtime: false,
         frames: 3,
+        quick: false,
+        workers: 4,
+        out: None,
+        check: None,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -56,11 +71,25 @@ fn parse_args() -> Result<Args> {
                     Some(it.next().ok_or_else(|| anyhow::anyhow!("--csv needs a dir"))?)
             }
             "--runtime" => args.use_runtime = true,
+            "--quick" => args.quick = true,
             "--frames" => {
                 args.frames = it
                     .next()
                     .ok_or_else(|| anyhow::anyhow!("--frames needs a count"))?
                     .parse()?
+            }
+            "--workers" => {
+                args.workers = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--workers needs a count"))?
+                    .parse()?
+            }
+            "--out" => {
+                args.out = Some(it.next().ok_or_else(|| anyhow::anyhow!("--out needs a path"))?)
+            }
+            "--check" => {
+                args.check =
+                    Some(it.next().ok_or_else(|| anyhow::anyhow!("--check needs a path"))?)
             }
             "--version" => {
                 println!("psoc-dma {}", psoc_dma::version());
@@ -174,6 +203,45 @@ fn run_scaling(cfg: &SimConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Simulator perf bench: calendar backends + parallel sweep scaling.
+/// Writes `BENCH_sweeps.json` and optionally gates against a baseline.
+fn run_bench(cfg: &SimConfig, args: &Args) -> Result<()> {
+    use psoc_dma::coordinator::sweeps::{bench, BenchOptions};
+    // The parallel leg needs >= 2 workers to measure a speedup; `bench`
+    // clamps (the single policy site) and the report records the count
+    // actually used.
+    let opts = BenchOptions { quick: args.quick, workers: args.workers };
+    let rep = bench(cfg, opts)?;
+    print!("{}", report::bench_text(&rep));
+    let out = args.out.as_deref().unwrap_or("BENCH_sweeps.json");
+    report::save(out, &rep.to_json().to_string_pretty())?;
+    println!("wrote {out}");
+    if let Some(baseline_path) = &args.check {
+        match std::fs::read_to_string(baseline_path) {
+            Ok(text) => {
+                let baseline = psoc_dma::util::json::Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("parsing baseline {baseline_path}: {e}"))?;
+                let regressions = rep.check_against(&baseline, 0.20);
+                if !regressions.is_empty() {
+                    for r in &regressions {
+                        eprintln!("PERF REGRESSION: {r}");
+                    }
+                    bail!("{} perf regression(s) vs {baseline_path}", regressions.len());
+                }
+                println!("no regression >20% vs {baseline_path}");
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                eprintln!(
+                    "baseline {baseline_path} not found — skipping the regression gate \
+                     (commit this run's {out} as the baseline to arm it)"
+                );
+            }
+            Err(e) => bail!("reading baseline {baseline_path}: {e}"),
+        }
+    }
+    Ok(())
+}
+
 /// Fit report + knob sensitivities against the paper's Table I anchors.
 fn run_calibrate(cfg: &SimConfig) -> Result<()> {
     use psoc_dma::coordinator::calibrate;
@@ -254,6 +322,7 @@ fn main() -> Result<()> {
         "ablation-vgg" => run_ablation_vgg(&cfg)?,
         "ablation-load" => run_ablation_load(&cfg)?,
         "scaling" => run_scaling(&cfg, &args)?,
+        "bench" => run_bench(&cfg, &args)?,
         "trace" => run_trace(&cfg)?,
         "calibrate" => run_calibrate(&cfg)?,
         "all" => {

@@ -290,7 +290,7 @@ impl DdrController {
         assert_eq!(req.id, id, "DdrDone for a request that is not in flight");
         // Re-arm the arbiter only if work is queued; a submit arriving
         // later finds the bus idle and pokes it itself.
-        if !(self.mm2s.is_empty() && self.s2mm.is_empty() && self.cpu.is_empty()) {
+        if self.pending_requests().next().is_some() {
             eng.schedule_now(Event::DdrIssue);
         }
         DdrCompletion {
@@ -302,11 +302,27 @@ impl DdrController {
         }
     }
 
+    /// Every request awaiting grant, drained lazily in class-priority
+    /// order (MM2S engines, S2MM engines, CPU) without allocating — the
+    /// view behind the arbiter's emptiness checks and the blocked-
+    /// transfer diagnostic's [`DdrController::backlog_bytes`].
+    pub fn pending_requests(&self) -> impl Iterator<Item = &DdrRequest> + '_ {
+        self.mm2s
+            .queues
+            .iter()
+            .chain(self.s2mm.queues.iter())
+            .flat_map(|q| q.iter())
+            .chain(self.cpu.iter())
+    }
+
+    /// Total queued (not yet granted) bytes — reported by
+    /// [`crate::system::SimError::Blocked`].
+    pub fn backlog_bytes(&self) -> u64 {
+        self.pending_requests().map(|r| r.bytes).sum()
+    }
+
     pub fn is_idle(&self) -> bool {
-        self.in_flight.is_none()
-            && self.mm2s.is_empty()
-            && self.s2mm.is_empty()
-            && self.cpu.is_empty()
+        self.in_flight.is_none() && self.pending_requests().next().is_none()
     }
 
     pub fn queued(&self, r: Requester) -> usize {
@@ -477,5 +493,24 @@ mod tests {
         let mut eng = Engine::new();
         let mut ddr = DdrController::new(&cfg());
         ddr.submit(&mut eng, DdrDir::Read, 0, Requester::Mm2s(E0));
+    }
+
+    #[test]
+    fn pending_iterator_drains_in_priority_order() {
+        let mut eng = Engine::new();
+        let mut ddr = DdrController::new(&cfg_engines(2));
+        ddr.submit(&mut eng, DdrDir::Write, 1, Requester::Cpu);
+        ddr.submit(&mut eng, DdrDir::Write, 2, Requester::S2mm(E1));
+        ddr.submit(&mut eng, DdrDir::Read, 4, Requester::Mm2s(E0));
+        ddr.submit(&mut eng, DdrDir::Read, 8, Requester::Mm2s(E1));
+        let order: Vec<u64> = ddr.pending_requests().map(|r| r.bytes).collect();
+        // MM2S engine 0, MM2S engine 1, S2MM engine 1, CPU.
+        assert_eq!(order, vec![4, 8, 2, 1]);
+        assert_eq!(ddr.backlog_bytes(), 15);
+        assert!(!ddr.is_idle());
+        drive(&mut ddr, &mut eng);
+        assert_eq!(ddr.backlog_bytes(), 0);
+        assert!(ddr.is_idle());
+        assert_eq!(ddr.pending_requests().count(), 0);
     }
 }

@@ -9,6 +9,7 @@ use std::path::Path;
 use crate::coordinator::experiments::{
     AblationRow, ScalingRow, SweepRow, Table1Row, VggAblation,
 };
+use crate::coordinator::sweeps::BenchReport;
 use crate::drivers::DriverKind;
 
 /// Distinct sizes present in a sweep, in ascending order.
@@ -303,6 +304,55 @@ pub fn table1_csv(rows: &[Table1Row]) -> String {
         )
         .unwrap();
     }
+    out
+}
+
+/// The `bench` command's stdout table (the JSON twin goes to
+/// `BENCH_sweeps.json`).
+pub fn bench_text(rep: &BenchReport) -> String {
+    let mut out = String::new();
+    writeln!(out, "Simulator perf bench{}", if rep.quick { " (quick)" } else { "" }).unwrap();
+    writeln!(
+        out,
+        "{:<10} {:>12} {:>12} {:>14}",
+        "calendar", "events", "wall ms", "events/sec"
+    )
+    .unwrap();
+    writeln!(out, "{}", "-".repeat(52)).unwrap();
+    for c in &rep.calendar {
+        writeln!(
+            out,
+            "{:<10} {:>12} {:>12.3} {:>14.0}",
+            c.kind.label(),
+            c.events,
+            c.wall.as_secs_f64() * 1e3,
+            c.events_per_sec()
+        )
+        .unwrap();
+    }
+    writeln!(out, "wheel vs heap: {:.2}x events/sec", rep.wheel_speedup_over_heap()).unwrap();
+    writeln!(out).unwrap();
+    writeln!(
+        out,
+        "{:<10} {:>8} {:>8} {:>12} {:>14} {:>12}",
+        "sweep", "workers", "cells", "events", "events/sec", "cells/sec"
+    )
+    .unwrap();
+    writeln!(out, "{}", "-".repeat(70)).unwrap();
+    for s in &rep.sweeps {
+        writeln!(
+            out,
+            "{:<10} {:>8} {:>8} {:>12} {:>14.0} {:>12.1}",
+            "loopback",
+            s.workers,
+            s.cells,
+            s.events,
+            s.events_per_sec(),
+            s.cells_per_sec()
+        )
+        .unwrap();
+    }
+    writeln!(out, "multi-worker sweep speedup: {:.2}x", rep.sweep_speedup()).unwrap();
     out
 }
 

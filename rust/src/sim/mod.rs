@@ -5,7 +5,9 @@ pub mod event;
 pub mod rng;
 pub mod time;
 pub mod trace;
+pub mod wheel;
 
-pub use engine::Engine;
+pub use engine::{CalendarKind, Engine};
 pub use event::{Channel, Event};
 pub use time::{Dur, SimTime};
+pub use wheel::TimeWheel;

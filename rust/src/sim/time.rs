@@ -61,6 +61,19 @@ impl Dur {
         Dur((ms * 1_000_000.0).round() as u64)
     }
 
+    /// Simulated duration corresponding to `secs` wall-style seconds
+    /// (bench/report conversions).
+    #[inline]
+    pub fn from_secs(secs: f64) -> Dur {
+        Dur((secs * 1e9).round() as u64)
+    }
+
+    /// This duration expressed in (fractional) seconds.
+    #[inline]
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 * 1e-9
+    }
+
     /// Time to move `bytes` at `bytes_per_sec`, rounded up to whole ns.
     #[inline]
     pub fn for_bytes(bytes: u64, bytes_per_sec: f64) -> Dur {
@@ -205,6 +218,8 @@ mod tests {
         assert_eq!(Dur::from_ms(1.0).as_us(), 1000.0);
         assert_eq!(Dur::from_us(1.0).ns(), 1000);
         assert!((Dur(1_234_567).as_ms() - 1.234567).abs() < 1e-12);
+        assert_eq!(Dur::from_secs(1.5).ns(), 1_500_000_000);
+        assert!((Dur::from_ms(250.0).as_secs() - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,630 @@
+//! Hierarchical time wheel: the calendar's hot-path priority queue.
+//!
+//! A classic hashed-and-hierarchical timing wheel (Varghese & Lauck)
+//! adapted to discrete-event-simulation semantics: `pop` returns events
+//! in exact `(timestamp, sequence)` order — bit-identical to a
+//! `BinaryHeap<Scheduled>` min-queue — rather than firing ticks. Five
+//! levels of 64 slots give O(1) insertion for any event within
+//! [`WHEEL_HORIZON_NS`] (~1.07 s of simulated time) of the cursor;
+//! rarer, further-out events overflow into a plain binary heap.
+//!
+//! Slot lists live in a pooled [`EventSlab`] with free-list recycling,
+//! so the steady-state schedule/pop cycle performs no heap allocation —
+//! the §Perf property the `sim_hotpath` bench pins.
+//!
+//! ## Ordering contract
+//!
+//! The wheel is *behaviour-identical* to the heap calendar: for any
+//! interleaving of `schedule`/`pop`, the pop order is the unique total
+//! order by `(at, seq)`. `rust/tests/wheel_property.rs` drives randomized
+//! interleavings (including cancellations) against a reference model,
+//! and `rust/tests/engine_equivalence.rs` pins bit-identical timings on
+//! the full experiment suite.
+//!
+//! ## Layout
+//!
+//! Level `l` spans `64^(l+1)` ns with `64^l` ns granularity; an event at
+//! delta `d` from the cursor is stored at level `floor(log64 d)` in slot
+//! `(at >> 6l) & 63` — absolute-time indexing, so slots stay valid as
+//! the cursor advances. Finding the next event scans one occupancy `u64`
+//! per level (`rotate_right` + `trailing_zeros`), bounding each level by
+//! its earliest slot's window start — except the cursor's own slot,
+//! whose short list is scanned exactly (it is the one slot window
+//! arithmetic cannot classify; see `level_candidate`). When
+//! the earliest candidate sits above level 0 its slot is *cascaded*: the
+//! cursor jumps to the slot's bound and the list is relinked, moving at
+//! least its minimal node to a strictly finer level, so cascades
+//! terminate. A level-0 slot is popped lowest-`(at, seq)`-first.
+
+use std::collections::BinaryHeap;
+
+use crate::sim::event::{EventSlab, Scheduled, NIL};
+use crate::sim::time::SimTime;
+
+/// log2 of the slots per level. 6 bits = 64 slots, exactly one `u64`
+/// occupancy bitmap per level.
+pub const WHEEL_BITS: u32 = 6;
+/// Slots per level.
+pub const WHEEL_SLOTS: usize = 1 << WHEEL_BITS;
+/// Wheel levels; level `WHEEL_LEVELS - 1` is the coarsest.
+pub const WHEEL_LEVELS: usize = 5;
+/// First delta (ns ahead of the cursor) that no longer fits any level:
+/// such events go to the overflow heap instead.
+pub const WHEEL_HORIZON_NS: u64 = 1 << (WHEEL_BITS * WHEEL_LEVELS as u32);
+
+const SLOT_MASK: u64 = WHEEL_SLOTS as u64 - 1;
+
+pub struct TimeWheel {
+    slab: EventSlab,
+    /// Head node of each slot's singly-linked list.
+    slots: [[u32; WHEEL_SLOTS]; WHEEL_LEVELS],
+    /// Per-level occupancy bitmap: bit `s` set ⇔ `slots[l][s]` non-empty.
+    occupied: [u64; WHEEL_LEVELS],
+    /// All events stored in the wheel levels satisfy `at >= cursor`
+    /// (overflow events may drift behind it; they are compared at pop).
+    cursor: u64,
+    /// Events stored in the wheel levels (excluding overflow).
+    in_wheel: usize,
+    /// Events scheduled beyond the horizon. `Scheduled`'s reversed `Ord`
+    /// makes this max-heap pop earliest-first.
+    overflow: BinaryHeap<Scheduled>,
+}
+
+impl Default for TimeWheel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TimeWheel {
+    pub fn new() -> Self {
+        TimeWheel {
+            slab: EventSlab::with_capacity(64),
+            slots: [[NIL; WHEEL_SLOTS]; WHEEL_LEVELS],
+            occupied: [0; WHEEL_LEVELS],
+            cursor: 0,
+            in_wheel: 0,
+            overflow: BinaryHeap::new(),
+        }
+    }
+
+    /// Level for an event `delta` ns ahead of the cursor (caller has
+    /// already excluded the overflow range).
+    #[inline]
+    fn level_for(delta: u64) -> usize {
+        debug_assert!(delta < WHEEL_HORIZON_NS);
+        if delta == 0 {
+            0
+        } else {
+            ((63 - delta.leading_zeros()) / WHEEL_BITS) as usize
+        }
+    }
+
+    /// Slot of absolute time `t` at `level` (absolute-bit indexing).
+    #[inline]
+    fn slot_of(level: usize, t: u64) -> usize {
+        ((t >> (WHEEL_BITS * level as u32)) & SLOT_MASK) as usize
+    }
+
+    /// Window-start time of `slots[level][slot]` given the current
+    /// cursor. Only valid for slots *other than* the cursor's own
+    /// position at this level (those are unambiguous: every live event
+    /// is `>= cursor`, so a slot strictly ahead of the in-window
+    /// position holds this wrap's window and a slot behind it holds the
+    /// next wrap's). Exact event time at level 0; a lower bound above.
+    fn slot_start(&self, level: usize, slot: usize) -> u64 {
+        let shift = WHEEL_BITS * level as u32;
+        let cur = self.cursor >> shift;
+        let pos = cur & SLOT_MASK;
+        debug_assert!(slot as u64 != pos, "slot_start on the ambiguous cursor slot");
+        let high = cur >> WHEEL_BITS;
+        let epoch = if slot as u64 > pos { high } else { high + 1 };
+        ((epoch << WHEEL_BITS) | slot as u64) << shift
+    }
+
+    /// Minimum timestamp stored in `slots[level][slot]` (list scan).
+    fn slot_list_min(&self, level: usize, slot: usize) -> u64 {
+        let mut idx = self.slots[level][slot];
+        debug_assert!(idx != NIL);
+        let mut best = self.slab.node(idx).sched.at.ns();
+        idx = self.slab.next_of(idx);
+        while idx != NIL {
+            let at = self.slab.node(idx).sched.at.ns();
+            if at < best {
+                best = at;
+            }
+            idx = self.slab.next_of(idx);
+        }
+        best
+    }
+
+    /// This level's earliest candidate: `(lower bound, slot)`. The
+    /// cursor's own slot is the one slot window arithmetic cannot
+    /// classify — it may mix events of the current window (stale
+    /// placements the cursor caught up with) and events one full wrap
+    /// ahead — so its bound comes from scanning its (short) list; every
+    /// other slot's window start is exact per the epoch rule in
+    /// [`TimeWheel::slot_start`]. At level 0 the returned bound is the
+    /// slot's exact minimum timestamp either way.
+    fn level_candidate(&self, level: usize) -> Option<(u64, usize)> {
+        let bits = self.occupied[level];
+        if bits == 0 {
+            return None;
+        }
+        let pos = ((self.cursor >> (WHEEL_BITS * level as u32)) & SLOT_MASK) as u32;
+        let pos_min = if bits & (1u64 << pos) != 0 {
+            Some((self.slot_list_min(level, pos as usize), pos as usize))
+        } else {
+            None
+        };
+        let rest = bits & !(1u64 << pos);
+        let rest_min = if rest == 0 {
+            None
+        } else {
+            // First occupied non-cursor slot in circular order strictly
+            // after `pos` has the smallest window start.
+            let first = (pos + 1) & (WHEEL_SLOTS as u32 - 1);
+            let off = rest.rotate_right(first).trailing_zeros();
+            let slot = ((first + off) & (WHEEL_SLOTS as u32 - 1)) as usize;
+            Some((self.slot_start(level, slot), slot))
+        };
+        match (pos_min, rest_min) {
+            (None, r) => r,
+            (p, None) => p,
+            (Some(p), Some(r)) => Some(if p.0 <= r.0 { p } else { r }),
+        }
+    }
+
+    /// Re-link an existing node according to the current cursor (used by
+    /// cascades; never allocates).
+    fn relink(&mut self, idx: u32) {
+        let at = self.slab.node(idx).sched.at.ns();
+        let delta = at.saturating_sub(self.cursor);
+        let level = Self::level_for(delta);
+        let slot = Self::slot_of(level, at.max(self.cursor));
+        self.slab.set_next(idx, self.slots[level][slot]);
+        self.slots[level][slot] = idx;
+        self.occupied[level] |= 1 << slot;
+    }
+
+    /// Cascade until the wheel's minimum sits in a level-0 slot; returns
+    /// that slot (`None` when the wheel levels are empty). Leaves every
+    /// event in place.
+    ///
+    /// Safety of the cursor jump: the chosen bound is the minimum over
+    /// every level's lower bound, so no live wheel event is earlier than
+    /// it (overflow events may be — they are compared at pop, and
+    /// [`TimeWheel::schedule`] clamps placements behind the cursor).
+    /// Progress: cascading a non-cursor slot moves *all* its nodes to a
+    /// strictly finer level (their deltas drop below the level's span);
+    /// cascading the cursor slot advances the cursor to the slot's true
+    /// minimum, so at least the minimal node re-links at delta 0 —
+    /// level 0. Either way each iteration strictly shrinks the total
+    /// level mass, so the loop terminates.
+    fn settle(&mut self) -> Option<usize> {
+        if self.in_wheel == 0 {
+            return None;
+        }
+        loop {
+            let mut best: Option<(u64, usize, usize)> = None; // (bound, level, slot)
+            for level in 0..WHEEL_LEVELS {
+                if let Some((bound, slot)) = self.level_candidate(level) {
+                    // Strictly earlier bound wins. On equal bounds prefer
+                    // the *coarser* level: it may hide an event at the
+                    // same instant with a lower sequence number, so it
+                    // must cascade before level 0 is popped. (Level-0
+                    // bounds are exact minima, so a coarser slot whose
+                    // bound exceeds the level-0 bound cannot contain an
+                    // earlier or tied event.)
+                    let better = match best {
+                        None => true,
+                        Some((bb, bl, _)) => bound < bb || (bound == bb && level > bl),
+                    };
+                    if better {
+                        best = Some((bound, level, slot));
+                    }
+                }
+            }
+            let (bound, level, slot) = best.expect("in_wheel > 0 but no occupied slot");
+            if level == 0 {
+                return Some(slot);
+            }
+            self.cursor = self.cursor.max(bound);
+            self.occupied[level] &= !(1u64 << slot);
+            let mut head = std::mem::replace(&mut self.slots[level][slot], NIL);
+            while head != NIL {
+                let next = self.slab.next_of(head);
+                self.relink(head);
+                head = next;
+            }
+        }
+    }
+
+    /// `(at, seq)` of the minimal event in a level-0 slot.
+    fn slot_min(&self, slot: usize) -> (SimTime, u64) {
+        let mut idx = self.slots[0][slot];
+        debug_assert!(idx != NIL);
+        let first = &self.slab.node(idx).sched;
+        let mut best = (first.at, first.seq);
+        idx = self.slab.next_of(idx);
+        while idx != NIL {
+            let s = &self.slab.node(idx).sched;
+            if (s.at, s.seq) < best {
+                best = (s.at, s.seq);
+            }
+            idx = self.slab.next_of(idx);
+        }
+        best
+    }
+
+    /// Unlink and return the minimal event of a level-0 slot.
+    fn take_min(&mut self, slot: usize) -> Scheduled {
+        let head = self.slots[0][slot];
+        debug_assert!(head != NIL);
+        let first = &self.slab.node(head).sched;
+        let mut best_key = (first.at, first.seq);
+        let mut best = head;
+        let mut best_prev = NIL;
+        let mut prev = head;
+        let mut idx = self.slab.next_of(head);
+        while idx != NIL {
+            let s = &self.slab.node(idx).sched;
+            let key = (s.at, s.seq);
+            if key < best_key {
+                best_key = key;
+                best = idx;
+                best_prev = prev;
+            }
+            prev = idx;
+            idx = self.slab.next_of(idx);
+        }
+        let next = self.slab.next_of(best);
+        if best_prev == NIL {
+            self.slots[0][slot] = next;
+        } else {
+            self.slab.set_next(best_prev, next);
+        }
+        if self.slots[0][slot] == NIL {
+            self.occupied[0] &= !(1u64 << slot);
+        }
+        self.in_wheel -= 1;
+        self.slab.release(best)
+    }
+
+    /// Insert an event. O(1); allocation-free once the slab is warm.
+    pub fn schedule(&mut self, sched: Scheduled) {
+        let at = sched.at.ns();
+        // `at < cursor` is legal when an overflow pop left the clock
+        // behind an already-advanced cursor; place the node in the
+        // cursor's own level-0 slot (its true `at` still orders it).
+        let delta = at.saturating_sub(self.cursor);
+        if delta >= WHEEL_HORIZON_NS {
+            self.overflow.push(sched);
+            return;
+        }
+        let level = Self::level_for(delta);
+        let slot = Self::slot_of(level, at.max(self.cursor));
+        let head = self.slots[level][slot];
+        let idx = self.slab.alloc(sched, head);
+        self.slots[level][slot] = idx;
+        self.occupied[level] |= 1 << slot;
+        self.in_wheel += 1;
+    }
+
+    /// Pop the earliest event by `(at, seq)`.
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        let slot = self.settle();
+        let take_wheel = match (slot, self.overflow.peek()) {
+            (None, None) => return None,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some(s), Some(top)) => self.slot_min(s) < (top.at, top.seq),
+        };
+        let sched = if take_wheel {
+            self.take_min(slot.expect("wheel side chosen"))
+        } else {
+            self.overflow.pop().expect("overflow side chosen")
+        };
+        self.cursor = self.cursor.max(sched.at.ns());
+        Some(sched)
+    }
+
+    /// Timestamp of the earliest pending event. `&mut` because finding
+    /// the minimum may cascade slots (events are only re-linked, never
+    /// removed).
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        let wheel = self.settle().map(|s| self.slot_min(s).0);
+        let over = self.overflow.peek().map(|s| s.at);
+        match (wheel, over) {
+            (None, None) => None,
+            (Some(a), None) | (None, Some(a)) => Some(a),
+            (Some(a), Some(b)) => Some(a.min(b)),
+        }
+    }
+
+    /// Remove the event with exactly this `(at, seq)`. Returns whether it
+    /// was found. Not on the simulator hot path (the engine never
+    /// cancels); exercised by the property-test gate. The scan covers
+    /// every occupied slot rather than just the slot `at` hashes to,
+    /// because events scheduled behind the cursor (see
+    /// [`TimeWheel::schedule`]) sit in the cursor's slot of their insert
+    /// instant, which later cursor movement makes unpredictable.
+    pub fn cancel(&mut self, at: SimTime, seq: u64) -> bool {
+        for level in 0..WHEEL_LEVELS {
+            let mut bits = self.occupied[level];
+            while bits != 0 {
+                let slot = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let mut prev = NIL;
+                let mut idx = self.slots[level][slot];
+                while idx != NIL {
+                    let s = self.slab.node(idx).sched;
+                    if (s.at, s.seq) == (at, seq) {
+                        let next = self.slab.next_of(idx);
+                        if prev == NIL {
+                            self.slots[level][slot] = next;
+                        } else {
+                            self.slab.set_next(prev, next);
+                        }
+                        if self.slots[level][slot] == NIL {
+                            self.occupied[level] &= !(1u64 << slot);
+                        }
+                        self.in_wheel -= 1;
+                        self.slab.release(idx);
+                        return true;
+                    }
+                    prev = idx;
+                    idx = self.slab.next_of(idx);
+                }
+            }
+        }
+        if !self.overflow.is_empty() {
+            let before = self.overflow.len();
+            let kept: Vec<Scheduled> = self
+                .overflow
+                .drain()
+                .filter(|s| s.at != at || s.seq != seq)
+                .collect();
+            let found = kept.len() != before;
+            self.overflow = BinaryHeap::from(kept);
+            return found;
+        }
+        false
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.in_wheel + self.overflow.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.in_wheel == 0 && self.overflow.is_empty()
+    }
+
+    /// Pool high-water mark (for the §Perf steady-state-allocation bench).
+    pub fn pool_high_water(&self) -> usize {
+        self.slab.high_water()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::event::Event;
+
+    fn s(at: u64, seq: u64) -> Scheduled {
+        Scheduled { at: SimTime(at), seq, ev: Event::DdrIssue }
+    }
+
+    fn drain(w: &mut TimeWheel) -> Vec<(u64, u64)> {
+        std::iter::from_fn(|| w.pop()).map(|x| (x.at.ns(), x.seq)).collect()
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut w = TimeWheel::new();
+        w.schedule(s(30, 0));
+        w.schedule(s(10, 1));
+        w.schedule(s(10, 2));
+        w.schedule(s(20, 3));
+        assert_eq!(w.len(), 4);
+        assert_eq!(drain(&mut w), vec![(10, 1), (10, 2), (20, 3), (30, 0)]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn same_instant_fifo_across_slots_and_levels() {
+        let mut w = TimeWheel::new();
+        // 100 sits at level 1 from cursor 0; schedule a same-time event
+        // after popping an earlier one so it lands at level 0 directly.
+        w.schedule(s(100, 0));
+        w.schedule(s(90, 1));
+        assert_eq!(w.pop().unwrap().seq, 1); // cursor now 90
+        w.schedule(s(100, 2)); // delta 10 → level 0, same instant as seq 0
+        assert_eq!(drain(&mut w), vec![(100, 0), (100, 2)], "older seq first");
+    }
+
+    #[test]
+    fn wrapped_level0_slot_is_found() {
+        let mut w = TimeWheel::new();
+        // Advance the cursor to 62 first.
+        w.schedule(s(62, 0));
+        assert_eq!(w.pop().unwrap().at.ns(), 62);
+        // 65 & 63 == 1 < pos 62: stored "behind" the cursor position in
+        // the next wrap of level 0.
+        w.schedule(s(65, 1));
+        w.schedule(s(63, 2));
+        assert_eq!(drain(&mut w), vec![(63, 2), (65, 1)]);
+    }
+
+    #[test]
+    fn cascades_through_all_levels() {
+        let mut w = TimeWheel::new();
+        // One event per level, plus overflow.
+        let times = [3u64, 70, 5_000, 300_000, 20_000_000, WHEEL_HORIZON_NS + 7];
+        for (i, &t) in times.iter().enumerate() {
+            w.schedule(s(t, i as u64));
+        }
+        assert_eq!(w.len(), times.len());
+        let order = drain(&mut w);
+        let got: Vec<u64> = order.iter().map(|&(t, _)| t).collect();
+        assert_eq!(got, times.to_vec());
+    }
+
+    #[test]
+    fn interleaved_schedule_pop_matches_model() {
+        // Deterministic pseudo-random interleaving against an ordered-set
+        // model: every pop must return exactly the minimal pending
+        // (at, seq). The standalone property test widens this to
+        // cancellations and a heap model; this is the in-tree smoke gate.
+        use std::collections::BTreeSet;
+        let mut w = TimeWheel::new();
+        let mut model: BTreeSet<(u64, u64)> = BTreeSet::new();
+        let mut rng = crate::sim::rng::Pcg32::new(0x57ee1);
+        let mut now = 0u64;
+        let mut seq = 0u64;
+        for _ in 0..5_000 {
+            if rng.chance(0.6) || w.is_empty() {
+                // Mix of same-instant, near, mid and overflow-range deltas.
+                let delta = match rng.next_bounded(4) {
+                    0 => 0,
+                    1 => rng.range_u64(1, 63),
+                    2 => rng.range_u64(64, 100_000),
+                    _ => rng.range_u64(100_000, WHEEL_HORIZON_NS + 1000),
+                };
+                let at = now + delta;
+                w.schedule(s(at, seq));
+                model.insert((at, seq));
+                seq += 1;
+            } else {
+                let p = w.pop().unwrap();
+                let want = model.pop_first().unwrap();
+                assert_eq!((p.at.ns(), p.seq), want, "pop diverged from model");
+                assert!(p.at.ns() >= now, "clock went backwards");
+                now = p.at.ns();
+            }
+        }
+        while let Some(p) = w.pop() {
+            let want = model.pop_first().unwrap();
+            assert_eq!((p.at.ns(), p.seq), want, "drain diverged from model");
+        }
+        assert!(model.is_empty());
+    }
+
+    #[test]
+    fn next_wrap_event_in_cursor_slot_does_not_livelock() {
+        // Regression: with an unaligned cursor, a delta just under a
+        // level boundary hashes into the cursor's own slot at that level
+        // (e.g. cursor 65, at 65 + 4095 = 4160: level 1, slot 1 == pos).
+        // Window arithmetic used to misread that slot as current-epoch
+        // and cascade it back onto itself forever.
+        let mut w = TimeWheel::new();
+        w.schedule(s(65, 0));
+        assert_eq!(w.pop().unwrap().at.ns(), 65); // cursor now 65
+        w.schedule(s(65 + 4095, 1));
+        assert_eq!(w.peek_time(), Some(SimTime(4160)));
+        assert_eq!(drain(&mut w), vec![(4160, 1)]);
+        // Same shape one level up (cursor unaligned at level 2).
+        let mut w = TimeWheel::new();
+        w.schedule(s(5000, 0));
+        w.pop().unwrap(); // cursor 5000
+        let at = 5000 + (1 << 18) - 1; // level-2 delta, slot == pos
+        w.schedule(s(at, 1));
+        w.schedule(s(at + 3, 2));
+        assert_eq!(drain(&mut w), vec![(at, 1), (at + 3, 2)]);
+    }
+
+    #[test]
+    fn next_wrap_cursor_slot_orders_against_nearer_events() {
+        // Build the ambiguous state deliberately: pop to an unaligned
+        // cursor (74), then schedule a delta-4095 event that hashes into
+        // the cursor's own level-1 slot as a *next-wrap* entry, plus two
+        // nearer level-0 events. The scan-based bound must keep the
+        // far entry behind both near ones.
+        let mut w = TimeWheel::new();
+        w.schedule(s(74, 0)); // level 1 slot 1
+        w.schedule(s(114, 1)); // level 1 slot 1 (cascades to level 0)
+        assert_eq!(w.pop().unwrap(), s(74, 0)); // cursor 74, unaligned
+        w.schedule(s(74 + 4095, 2)); // level 1, slot 1 == pos, next wrap
+        w.schedule(s(80, 3)); // level 0
+        assert_eq!(drain(&mut w), vec![(80, 3), (114, 1), (4169, 2)]);
+    }
+
+    #[test]
+    fn overflow_interleaves_correctly_with_wheel() {
+        let mut w = TimeWheel::new();
+        let far = WHEEL_HORIZON_NS + 5;
+        w.schedule(s(WHEEL_HORIZON_NS - 10, 0)); // top wheel level
+        w.schedule(s(far, 1)); // overflow
+        assert_eq!(w.pop().unwrap().seq, 0);
+        // Cursor is now near the horizon; a mid event fits the wheel.
+        w.schedule(s(far + 2000, 2));
+        // Overflow event (far) must still pop before the wheel event.
+        assert_eq!(w.pop().unwrap(), s(far, 1));
+        assert_eq!(w.pop().unwrap().seq, 2);
+        assert!(w.pop().is_none());
+    }
+
+    #[test]
+    fn schedule_behind_cursor_still_orders_by_timestamp() {
+        let mut w = TimeWheel::new();
+        let far = WHEEL_HORIZON_NS + 5;
+        w.schedule(s(WHEEL_HORIZON_NS - 10, 0));
+        w.schedule(s(far, 1));
+        w.pop().unwrap(); // seq 0; cursor ≈ horizon - 10
+        w.schedule(s(far + 2000, 2)); // wheel; settling advances the cursor past `far`
+        assert_eq!(w.peek_time(), Some(SimTime(far)));
+        assert_eq!(w.pop().unwrap().seq, 1); // overflow pops; clock = far < cursor
+        // An event between the popped overflow time and the cursor: legal
+        // (the engine schedules relative to its clock) and must pop first.
+        w.schedule(s(far + 10, 3));
+        assert_eq!(drain(&mut w), vec![(far + 10, 3), (far + 2000, 2)]);
+    }
+
+    #[test]
+    fn peek_matches_pop_without_consuming() {
+        let mut w = TimeWheel::new();
+        w.schedule(s(500, 0));
+        w.schedule(s(400, 1));
+        assert_eq!(w.peek_time(), Some(SimTime(400)));
+        assert_eq!(w.len(), 2, "peek must not consume");
+        assert_eq!(w.pop().unwrap().seq, 1);
+        assert_eq!(w.peek_time(), Some(SimTime(500)));
+    }
+
+    #[test]
+    fn cancel_removes_wheel_and_overflow_events() {
+        let mut w = TimeWheel::new();
+        let far = WHEEL_HORIZON_NS + 99;
+        w.schedule(s(100, 0));
+        w.schedule(s(100, 1));
+        w.schedule(s(5_000, 2));
+        w.schedule(s(far, 3));
+        assert!(w.cancel(SimTime(100), 0));
+        assert!(!w.cancel(SimTime(100), 0), "double cancel");
+        assert!(!w.cancel(SimTime(77), 9), "never scheduled");
+        assert!(w.cancel(SimTime(far), 3), "overflow cancel");
+        assert_eq!(drain(&mut w), vec![(100, 1), (5_000, 2)]);
+    }
+
+    #[test]
+    fn slab_is_recycled_in_steady_state() {
+        let mut w = TimeWheel::new();
+        // Warm up: 32 events in flight.
+        for i in 0..32u64 {
+            w.schedule(s(i * 10, i));
+        }
+        let mut seq = 32u64;
+        for _ in 0..10_000 {
+            let p = w.pop().unwrap();
+            w.schedule(s(p.at.ns() + 320, seq));
+            seq += 1;
+        }
+        assert!(
+            w.pool_high_water() <= 64,
+            "steady-state churn grew the pool: {}",
+            w.pool_high_water()
+        );
+    }
+}

@@ -69,17 +69,27 @@ fn irq_line_owner(line: IrqLine) -> (EngineId, Channel) {
 /// (not bugs): a transfer that deadlocks because TX/RX are unbalanced.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SimError {
-    Blocked { ch: &'static str, engine: u8, at: u64, mm2s_level: u64, s2mm_level: u64 },
+    Blocked {
+        ch: &'static str,
+        engine: u8,
+        at: u64,
+        mm2s_level: u64,
+        s2mm_level: u64,
+        /// Bytes still queued at the DDR arbiter when the calendar
+        /// drained — distinguishes "stalled behind memory" from "nobody
+        /// produced anything" in the blocked diagnostic.
+        ddr_backlog: u64,
+    },
 }
 
 impl std::fmt::Display for SimError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SimError::Blocked { ch, engine, at, mm2s_level, s2mm_level } => write!(
+            SimError::Blocked { ch, engine, at, mm2s_level, s2mm_level, ddr_backlog } => write!(
                 f,
                 "{ch} transfer blocked on engine {engine} at t={at}ns: calendar drained \
-                 while waiting (mm2s fifo {mm2s_level}B, s2mm fifo {s2mm_level}B) — \
-                 unbalanced TX/RX management"
+                 while waiting (mm2s fifo {mm2s_level}B, s2mm fifo {s2mm_level}B, ddr \
+                 backlog {ddr_backlog}B) — unbalanced TX/RX management"
             ),
         }
     }
@@ -173,6 +183,10 @@ pub struct System {
     pub ledger: CpuLedger,
     /// Optional timeline recorder (see [`crate::sim::trace`]).
     pub trace: Option<Trace>,
+    /// Reusable descriptor-chain buffer: drivers building per-transfer BD
+    /// chains borrow it via [`System::take_desc_scratch`] so the per-
+    /// transfer `Vec<Descriptor>` allocation disappears after warm-up.
+    desc_scratch: Vec<Descriptor>,
 }
 
 impl System {
@@ -192,7 +206,7 @@ impl System {
             .map(|(i, dev)| DmaPort::new(EngineId(i as u8), &cfg, dev))
             .collect();
         let mut sys = System {
-            eng: Engine::new(),
+            eng: Engine::with_calendar(cfg.calendar),
             ddr: DdrController::new(&cfg),
             ports,
             costs: OsCosts::new(&cfg),
@@ -200,6 +214,7 @@ impl System {
             sched: Scheduler::new(timeslice),
             ledger: CpuLedger::default(),
             trace: None,
+            desc_scratch: Vec::new(),
             cfg,
         };
         // Background memory traffic from other processes: a periodic
@@ -455,21 +470,55 @@ impl System {
         }
     }
 
-    /// Program engine 0's DMA channel (seed-compatible single-engine API).
-    pub fn program_dma(&mut self, ch: Channel, mode: DmaMode, descs: Vec<Descriptor>) {
-        self.program_dma_on(EngineId::ZERO, ch, mode, descs)
+    /// Borrow the reusable descriptor-chain buffer. The returned `Vec` is
+    /// empty but keeps its grown capacity; hand it back with
+    /// [`System::put_desc_scratch`] once the chain has been programmed so
+    /// the next transfer reuses the allocation.
+    pub fn take_desc_scratch(&mut self) -> Vec<Descriptor> {
+        let mut buf = std::mem::take(&mut self.desc_scratch);
+        buf.clear();
+        buf
     }
 
-    /// Program a DMA channel of one engine. Register-write costs: simple
-    /// mode writes ADDR + LENGTH + CTRL; SG mode writes CURDESC +
-    /// TAILDESC + CTRL (the BD chain itself was built by the caller, who
-    /// charged its construction cost).
+    /// Return the scratch buffer taken with [`System::take_desc_scratch`].
+    pub fn put_desc_scratch(&mut self, mut buf: Vec<Descriptor>) {
+        buf.clear();
+        // Keep whichever allocation is larger (a put while another take is
+        // outstanding simply drops the smaller one).
+        if buf.capacity() > self.desc_scratch.capacity() {
+            self.desc_scratch = buf;
+        }
+    }
+
+    /// Program engine 0's DMA channel (seed-compatible single-engine API).
+    pub fn program_dma(&mut self, ch: Channel, mode: DmaMode, descs: Vec<Descriptor>) {
+        self.program_dma_slice_on(EngineId::ZERO, ch, mode, &descs)
+    }
+
+    /// Program a DMA channel of one engine (owned-chain convenience over
+    /// [`System::program_dma_slice_on`]).
     pub fn program_dma_on(
         &mut self,
         e: EngineId,
         ch: Channel,
         mode: DmaMode,
         descs: Vec<Descriptor>,
+    ) {
+        self.program_dma_slice_on(e, ch, mode, &descs)
+    }
+
+    /// Program a DMA channel of one engine from a borrowed chain — the
+    /// allocation-free path (the engine copies the BDs into its recycled
+    /// internal queue). Register-write costs: simple mode writes ADDR +
+    /// LENGTH + CTRL; SG mode writes CURDESC + TAILDESC + CTRL (the BD
+    /// chain itself was built by the caller, who charged its construction
+    /// cost).
+    pub fn program_dma_slice_on(
+        &mut self,
+        e: EngineId,
+        ch: Channel,
+        mode: DmaMode,
+        descs: &[Descriptor],
     ) {
         let regs = 3;
         self.cpu_exec(Dur(regs * self.cfg.reg_write_ns));
@@ -512,12 +561,17 @@ impl System {
 
     /// Extend engine 0's running scatter-gather chain.
     pub fn append_dma(&mut self, ch: Channel, descs: Vec<Descriptor>) {
-        self.append_dma_on(EngineId::ZERO, ch, descs)
+        self.append_dma_slice_on(EngineId::ZERO, ch, &descs)
     }
 
     /// Extend a running scatter-gather chain (kernel driver's pipelined
     /// submit: one TAILDESC register update).
     pub fn append_dma_on(&mut self, e: EngineId, ch: Channel, descs: Vec<Descriptor>) {
+        self.append_dma_slice_on(e, ch, &descs)
+    }
+
+    /// Borrowed-chain variant of [`System::append_dma_on`].
+    pub fn append_dma_slice_on(&mut self, e: EngineId, ch: Channel, descs: &[Descriptor]) {
         self.cpu_exec(Dur(self.cfg.reg_write_ns));
         let port = &mut self.ports[e.index()];
         port.chan_mut(ch).append(&mut self.eng, descs);
@@ -547,6 +601,7 @@ impl System {
             at: self.eng.now().ns(),
             mm2s_level: port.mm2s_fifo.level(),
             s2mm_level: port.s2mm_fifo.level(),
+            ddr_backlog: self.ddr.backlog_bytes(),
         }
     }
 

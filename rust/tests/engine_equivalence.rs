@@ -1,0 +1,116 @@
+//! Equivalence gate: the time-wheel calendar must be *bit-identical* to
+//! the binary-heap reference on every experiment class — same transfer
+//! timings, same event ordering for same-timestamp ties, same dispatched
+//! event counts. This is the contract that lets the wheel replace the
+//! heap as the default hot path.
+
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::{
+    ablation_matrix, loopback_sweep, scaling_sweep, table1,
+};
+use psoc_dma::drivers::{Driver, DriverConfig, DriverKind};
+use psoc_dma::memory::buffer::CmaAllocator;
+use psoc_dma::sim::engine::CalendarKind;
+use psoc_dma::system::System;
+
+fn cfg_with(kind: CalendarKind) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.calendar = kind;
+    c
+}
+
+/// One blocking loop-back round trip; returns (tx ns, rx ns, events).
+fn roundtrip(cfg: &SimConfig, kind: DriverKind, bytes: u64) -> (u64, u64, u64) {
+    let mut sys = System::loopback(cfg.clone());
+    let mut cma = CmaAllocator::zynq_default();
+    let mut drv = Driver::new(DriverConfig::table1(kind), &mut cma, cfg, bytes).unwrap();
+    let r = drv.transfer(&mut sys, bytes, bytes).unwrap();
+    (r.tx_time.ns(), r.rx_time.ns(), sys.eng.dispatched)
+}
+
+#[test]
+fn loopback_transfers_identical_across_backends() {
+    for kind in DriverKind::ALL {
+        for bytes in [64u64, 4096, 256 * 1024, 2 << 20, 6 << 20] {
+            let wheel = roundtrip(&cfg_with(CalendarKind::Wheel), kind, bytes);
+            let heap = roundtrip(&cfg_with(CalendarKind::Heap), kind, bytes);
+            assert_eq!(wheel, heap, "{kind:?} at {bytes}B diverged (tx, rx, events)");
+        }
+    }
+}
+
+#[test]
+fn loopback_sweep_identical_across_backends() {
+    let sizes = [8u64, 512, 65_536, 1 << 20];
+    let sweep = |k: CalendarKind| -> Vec<(u64, u64, u64)> {
+        loopback_sweep(&cfg_with(k), &sizes, &DriverKind::ALL)
+            .unwrap()
+            .iter()
+            .map(|r| (r.bytes, r.tx.ns(), r.rx.ns()))
+            .collect()
+    };
+    assert_eq!(sweep(CalendarKind::Wheel), sweep(CalendarKind::Heap));
+}
+
+#[test]
+fn table1_identical_across_backends() {
+    let run = |k: CalendarKind| -> Vec<(u64, u64, u64)> {
+        table1(&cfg_with(k), 2)
+            .unwrap()
+            .iter()
+            .map(|r| {
+                (
+                    r.report.frame_time.ns(),
+                    r.report.tx_time.ns(),
+                    r.report.rx_time.ns(),
+                )
+            })
+            .collect()
+    };
+    assert_eq!(run(CalendarKind::Wheel), run(CalendarKind::Heap));
+}
+
+#[test]
+fn scaling_grid_identical_across_backends() {
+    let drivers = [DriverKind::UserPolling, DriverKind::KernelIrq];
+    let run = |k: CalendarKind| -> Vec<(usize, usize, u64, u64)> {
+        scaling_sweep(&cfg_with(k), &drivers, &[1, 2], &[1, 2], 3)
+            .unwrap()
+            .iter()
+            .map(|r| (r.channels, r.depth, r.report.total_time.ns(), r.speedup.to_bits()))
+            .collect()
+    };
+    assert_eq!(run(CalendarKind::Wheel), run(CalendarKind::Heap));
+}
+
+#[test]
+fn ablation_matrix_identical_across_backends() {
+    let run = |k: CalendarKind| -> Vec<(u64, u64)> {
+        ablation_matrix(&cfg_with(k), 1 << 20)
+            .unwrap()
+            .iter()
+            .map(|r| (r.tx.ns(), r.rx.ns()))
+            .collect()
+    };
+    assert_eq!(run(CalendarKind::Wheel), run(CalendarKind::Heap));
+}
+
+#[test]
+fn jittered_runs_identical_across_backends() {
+    // With OS jitter enabled the RNG draw *order* matters: identical
+    // timelines prove the backends dispatch events in the same order,
+    // not merely at the same instants.
+    let mut base = SimConfig::default();
+    base.os_jitter_frac = 0.05;
+    base.seed = 0x1234_5678;
+    let run = |k: CalendarKind| {
+        let mut c = base.clone();
+        c.calendar = k;
+        let mut out = Vec::new();
+        for kind in DriverKind::ALL {
+            out.push(roundtrip(&c, kind, 512 * 1024));
+        }
+        out
+    };
+    assert_eq!(run(CalendarKind::Wheel), run(CalendarKind::Heap));
+}

@@ -74,6 +74,10 @@ fn split_phase_equals_blocking_for_every_paper_driver() {
 /// paper drivers. On the first run (file absent) the current values are
 /// recorded; every later run — and every future PR — must reproduce them
 /// exactly. Delete the file deliberately to re-baseline.
+///
+/// In CI (the `CI` env var is set, as on GitHub Actions) a missing file
+/// is a **hard failure** instead of a silent re-record: a bootstrap that
+/// runs where nobody commits the result would pin nothing.
 #[test]
 fn golden_single_channel_timings() {
     let sizes: [u64; 3] = [4096, 256 * 1024, 2 << 20];
@@ -105,6 +109,12 @@ fn golden_single_channel_timings() {
             );
         }
         Err(_) => {
+            assert!(
+                std::env::var_os("CI").is_none(),
+                "golden file {} is missing in CI — bootstrap it locally \
+                 (`cargo test -q golden_single_channel_timings`) and commit it",
+                path.display()
+            );
             std::fs::create_dir_all(path.parent().unwrap()).unwrap();
             std::fs::write(&path, current.to_string_compact()).unwrap();
             eprintln!(

@@ -1,0 +1,189 @@
+//! Property test: the hierarchical time wheel against a reference
+//! `BinaryHeap` model under randomized interleavings of schedule /
+//! cancel / pop — including same-timestamp tie-breaking.
+//!
+//! The model is deliberately naive (a heap with lazy cancellation); the
+//! wheel must reproduce its pop sequence *exactly* — the same event
+//! identity at every step, not just the same timestamps. Seeds come from
+//! the crate's deterministic PRNG ([`psoc_dma::sim::rng::Pcg32`]), so a
+//! failure reproduces from the printed seed.
+
+use std::collections::BinaryHeap;
+use std::collections::HashSet;
+
+use psoc_dma::sim::event::{Event, Scheduled};
+use psoc_dma::sim::rng::Pcg32;
+use psoc_dma::sim::time::SimTime;
+use psoc_dma::sim::wheel::{TimeWheel, WHEEL_HORIZON_NS};
+
+/// Reference model: a min-queue (via `Scheduled`'s reversed `Ord`) with
+/// lazy cancellation.
+struct HeapModel {
+    heap: BinaryHeap<Scheduled>,
+    cancelled: HashSet<u64>, // by seq (globally unique)
+    live: usize,
+}
+
+impl HeapModel {
+    fn new() -> Self {
+        HeapModel { heap: BinaryHeap::new(), cancelled: HashSet::new(), live: 0 }
+    }
+
+    fn schedule(&mut self, s: Scheduled) {
+        self.heap.push(s);
+        self.live += 1;
+    }
+
+    /// Cancel by (at, seq); returns whether the event was live.
+    fn cancel(&mut self, seq: u64) -> bool {
+        let live = self.heap.iter().any(|s| s.seq == seq) && !self.cancelled.contains(&seq);
+        if live {
+            self.cancelled.insert(seq);
+            self.live -= 1;
+        }
+        live
+    }
+
+    fn pop(&mut self) -> Option<Scheduled> {
+        while let Some(s) = self.heap.pop() {
+            if self.cancelled.remove(&s.seq) {
+                continue;
+            }
+            self.live -= 1;
+            return Some(s);
+        }
+        None
+    }
+
+    /// A uniformly-chosen live event (for picking cancellation targets).
+    fn pick_live(&self, rng: &mut Pcg32) -> Option<Scheduled> {
+        let live: Vec<&Scheduled> =
+            self.heap.iter().filter(|s| !self.cancelled.contains(&s.seq)).collect();
+        if live.is_empty() {
+            return None;
+        }
+        Some(*live[rng.next_bounded(live.len() as u32) as usize])
+    }
+}
+
+fn ev() -> Event {
+    Event::SchedTick
+}
+
+/// One randomized episode: `steps` interleaved operations, then a full
+/// drain, comparing every pop.
+fn episode(seed: u64, steps: usize) {
+    let mut rng = Pcg32::new(seed);
+    let mut wheel = TimeWheel::new();
+    let mut model = HeapModel::new();
+    let mut now = 0u64;
+    let mut seq = 0u64;
+    let mut pops = 0u64;
+    for step in 0..steps {
+        match rng.next_bounded(10) {
+            // 60%: schedule with a delta profile covering same-instant,
+            // level-0, mid-level and overflow ranges.
+            0..=5 => {
+                let delta = match rng.next_bounded(5) {
+                    0 => 0,
+                    1 => rng.range_u64(1, 63),
+                    2 => rng.range_u64(64, 4095),
+                    3 => rng.range_u64(4096, 10_000_000),
+                    _ => rng.range_u64(10_000_000, WHEEL_HORIZON_NS + 50_000),
+                };
+                let s = Scheduled { at: SimTime(now + delta), seq, ev: ev() };
+                seq += 1;
+                wheel.schedule(s);
+                model.schedule(s);
+            }
+            // 10%: cancel a random live event (when one exists).
+            6 => {
+                if let Some(target) = model.pick_live(&mut rng) {
+                    let w = wheel.cancel(target.at, target.seq);
+                    let m = model.cancel(target.seq);
+                    assert_eq!(w, m, "seed {seed} step {step}: cancel divergence");
+                    // Cancelling again must fail on both.
+                    assert!(!wheel.cancel(target.at, target.seq));
+                }
+            }
+            // 30%: pop.
+            _ => {
+                let w = wheel.pop();
+                let m = model.pop();
+                match (w, m) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        assert_eq!(
+                            (a.at, a.seq),
+                            (b.at, b.seq),
+                            "seed {seed} step {step}: pop order divergence"
+                        );
+                        assert!(a.at.ns() >= now, "seed {seed}: clock went backwards");
+                        now = a.at.ns();
+                        pops += 1;
+                    }
+                    (a, b) => panic!("seed {seed} step {step}: emptiness divergence {a:?} vs {b:?}"),
+                }
+                assert_eq!(wheel.len(), model.live, "seed {seed} step {step}: len divergence");
+            }
+        }
+    }
+    // Drain both completely.
+    loop {
+        let w = wheel.pop();
+        let m = model.pop();
+        assert_eq!(
+            w.map(|s| (s.at, s.seq)),
+            m.map(|s| (s.at, s.seq)),
+            "seed {seed}: drain divergence"
+        );
+        if w.is_none() {
+            break;
+        }
+        pops += 1;
+    }
+    assert!(wheel.is_empty());
+    assert!(pops > 0, "seed {seed}: episode never popped anything");
+}
+
+#[test]
+fn wheel_matches_heap_model_under_interleaved_ops() {
+    for seed in 0..40u64 {
+        episode(0xD15C0 + seed, 4_000);
+    }
+}
+
+#[test]
+fn wheel_matches_heap_model_on_dense_ties() {
+    // A tie-heavy profile: many events at identical instants, popped
+    // FIFO by sequence number.
+    let mut rng = Pcg32::new(0x71e5);
+    let mut wheel = TimeWheel::new();
+    let mut model = HeapModel::new();
+    let mut seq = 0u64;
+    for burst in 0..200u64 {
+        let at = burst * 37; // clusters, same instant within a cluster
+        for _ in 0..rng.range_u64(1, 8) {
+            let s = Scheduled { at: SimTime(at), seq, ev: ev() };
+            seq += 1;
+            wheel.schedule(s);
+            model.schedule(s);
+        }
+        if rng.chance(0.5) {
+            // Interleave partial pops so clusters drain across bursts.
+            for _ in 0..rng.range_u64(0, 4) {
+                let w = wheel.pop();
+                let m = model.pop();
+                assert_eq!(w.map(|s| s.seq), m.map(|s| s.seq));
+            }
+        }
+    }
+    loop {
+        let w = wheel.pop();
+        let m = model.pop();
+        assert_eq!(w.map(|s| (s.at, s.seq)), m.map(|s| (s.at, s.seq)));
+        if w.is_none() {
+            break;
+        }
+    }
+}
