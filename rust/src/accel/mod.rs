@@ -59,4 +59,17 @@ impl PlDevice {
             PlDevice::NullHop(d) => d.is_idle(),
         }
     }
+
+    /// Return the device to its power-on state (the fault-recovery
+    /// harness's last-resort cleanup after a failed transfer). A NullHop
+    /// core mid-layer has no safe reset short of reconfiguration, so it
+    /// is left untouched — the loop-back core is the fault sweep's
+    /// workload.
+    pub fn reset(&mut self) {
+        match self {
+            PlDevice::Sink(_) => {}
+            PlDevice::Loopback(d) => d.reset(),
+            PlDevice::NullHop(_) => {}
+        }
+    }
 }

@@ -23,6 +23,15 @@
 //! DDR for MM2S, written to DDR for S2MM); descriptors flagged
 //! `irq_on_complete` latch an interrupt request the [`crate::system`]
 //! dispatcher forwards to the GIC model.
+//!
+//! Error semantics also follow the IP: an injected transfer error
+//! ([`crate::sim::fault`]) **halts** the channel — the in-service chain
+//! is abandoned, `DMASR` latches the error condition, and an error
+//! interrupt is requested. Errors are injected at burst-*issue* /
+//! descriptor-fetch points, before any byte or FIFO token moves, so the
+//! engine-reported [`DmaChannelEngine::residue`] is exact and a driver
+//! can recover by soft-resetting the channel and re-arming precisely the
+//! unfinished tail.
 
 use std::collections::VecDeque;
 
@@ -32,6 +41,7 @@ use crate::config::SimConfig;
 use crate::memory::ddr::{DdrController, DdrDir, Requester};
 use crate::sim::engine::Engine;
 use crate::sim::event::{Channel, EngineId, Event};
+use crate::sim::fault::{DmaErrorKind, FaultPlan};
 use crate::sim::time::{Dur, SimTime};
 
 /// How the channel was programmed.
@@ -61,6 +71,21 @@ pub struct DmaStats {
     /// Kicks that could not issue a burst because the FIFO blocked them
     /// (full for MM2S, empty for S2MM) — FIFO pressure indicator.
     pub fifo_stalls: u64,
+    /// Injected transfer errors this channel halted on.
+    pub errors: u64,
+}
+
+/// Interrupt request raised by a completed/failed DDR burst or kick —
+/// the dispatcher latches the matching `DMASR` condition and pulses the
+/// channel's fabric IRQ line.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DmaIrq {
+    None,
+    /// Final descriptor of the chain finished and requested IOC.
+    Complete,
+    /// The channel halted on a transfer error (see
+    /// [`DmaChannelEngine::error`]).
+    Error,
 }
 
 /// One direction of one AXI-DMA IP instance.
@@ -84,6 +109,19 @@ pub struct DmaChannelEngine {
     done: bool,
     /// Latched interrupt request (cleared by the ISR model).
     irq_pending: bool,
+    /// Halted-on-error condition (cleared only by [`DmaChannelEngine::reset`]).
+    error: Option<DmaErrorKind>,
+    /// Latched error-interrupt request.
+    err_irq_pending: bool,
+    /// Error-interrupt enable (`DMACR[14]` for register-programmed
+    /// channels; the kernel dmaengine always enables it). A disabled
+    /// channel still latches the error condition and halts — only the
+    /// fabric edge is suppressed, as on the real IP.
+    err_irq_enabled: bool,
+    /// Bytes of the chain that had not finished when the channel halted
+    /// on error (exact: faults fire before any byte moves). Appending to
+    /// a halted channel grows this — see [`DmaChannelEngine::residue`].
+    faulted_residue: u64,
     pub stats: DmaStats,
 }
 
@@ -101,6 +139,10 @@ impl DmaChannelEngine {
             in_flight: 0,
             done: true,
             irq_pending: false,
+            error: None,
+            err_irq_pending: false,
+            err_irq_enabled: false,
+            faulted_residue: 0,
             stats: DmaStats::default(),
         }
     }
@@ -127,6 +169,70 @@ impl DmaChannelEngine {
         self.irq_pending = false;
     }
 
+    /// Halted-on-error condition, if any (the `DMASR` error bits).
+    pub fn error(&self) -> Option<DmaErrorKind> {
+        self.error
+    }
+
+    pub fn err_irq_pending(&self) -> bool {
+        self.err_irq_pending
+    }
+
+    /// ISR model acknowledges the error interrupt (W1C of `DMASR[14]`).
+    pub fn ack_err_irq(&mut self) {
+        self.err_irq_pending = false;
+    }
+
+    /// Error-interrupt enable (`DMACR[14]`): set by CR writes through the
+    /// register file, and by the kernel dmaengine path on every program.
+    pub fn set_err_irq_enabled(&mut self, on: bool) {
+        self.err_irq_enabled = on;
+    }
+
+    pub fn err_irq_enabled(&self) -> bool {
+        self.err_irq_enabled
+    }
+
+    /// Bytes of the programmed chain that had not completed when the
+    /// channel halted on an error (plus anything appended afterwards,
+    /// which a halted channel ignores). This is the recovery contract:
+    /// reset the channel, re-arm exactly `residue()` from the matching
+    /// buffer offset, and the stream stays bit-conserved.
+    pub fn residue(&self) -> u64 {
+        self.faulted_residue + self.backlog()
+    }
+
+    /// Soft reset (`DMACR.Reset`): abandon all state, clear the error
+    /// and interrupt latches, return to the idle/done reset state. Any
+    /// DDR burst still physically in flight is dropped on completion
+    /// (see the guard in [`DmaChannelEngine::ddr_complete`]).
+    pub fn reset(&mut self) {
+        self.queue.clear();
+        self.cur = None;
+        self.fetch_done_at = None;
+        self.in_flight = 0;
+        self.done = true;
+        self.irq_pending = false;
+        self.error = None;
+        self.err_irq_pending = false;
+        self.err_irq_enabled = false;
+        self.faulted_residue = 0;
+    }
+
+    /// Halt the channel on an injected error: the chain is abandoned
+    /// (its unfinished byte count preserved in [`DmaChannelEngine::residue`]),
+    /// the error condition latches, and an error IRQ is requested.
+    fn halt_with(&mut self, kind: DmaErrorKind) {
+        self.faulted_residue = self.backlog();
+        self.queue.clear();
+        self.cur = None;
+        self.fetch_done_at = None;
+        self.done = false;
+        self.error = Some(kind);
+        self.err_irq_pending = true;
+        self.stats.errors += 1;
+    }
+
     /// Total bytes not yet moved (queued + current), excluding in-flight.
     pub fn backlog(&self) -> u64 {
         self.queue.iter().map(|d| d.len).sum::<u64>()
@@ -141,6 +247,11 @@ impl DmaChannelEngine {
     /// sweep profile).
     pub fn program(&mut self, eng: &mut Engine, mode: DmaMode, descs: &[Descriptor]) {
         assert!(self.is_idle(), "programming a busy {} channel", self.ch.name());
+        assert!(
+            self.error.is_none(),
+            "programming an errored {} channel without a reset",
+            self.ch.name()
+        );
         assert!(!descs.is_empty(), "programming an empty descriptor chain");
         if mode == DmaMode::Simple {
             assert_eq!(descs.len(), 1, "simple mode takes exactly one descriptor");
@@ -172,12 +283,25 @@ impl DmaChannelEngine {
 
     /// Advance the state machine (handles `Event::DmaKick`). `fifo` is
     /// this channel's datamover FIFO (MM2S: engine pushes / S2MM: engine
-    /// pops).
-    pub fn kick(&mut self, eng: &mut Engine, ddr: &mut DdrController, fifo: &mut ByteFifo) {
+    /// pops). Returns the error kind when an injected fault from
+    /// `faults` halts the channel here (descriptor corruption on fetch,
+    /// or a transfer error on burst issue).
+    pub fn kick(
+        &mut self,
+        eng: &mut Engine,
+        ddr: &mut DdrController,
+        fifo: &mut ByteFifo,
+        faults: &mut FaultPlan,
+    ) -> Option<DmaErrorKind> {
+        if self.error.is_some() {
+            // A halted channel ignores kicks (and appended work) until a
+            // reset — exactly the real IP's error-halt behaviour.
+            return None;
+        }
         // Bring up the next descriptor if none is in service.
         if self.cur.is_none() {
             if self.queue.is_empty() {
-                return;
+                return None;
             }
             match (self.mode, self.fetch_done_at) {
                 (DmaMode::ScatterGather, None) => {
@@ -186,29 +310,45 @@ impl DmaChannelEngine {
                     self.stats.desc_fetches += 1;
                     let kick = Event::DmaKick { eng: self.id, ch: self.ch };
                     eng.schedule(self.desc_fetch, kick);
-                    return;
+                    return None;
                 }
                 (DmaMode::ScatterGather, Some(t)) if eng.now() < t => {
                     // A stray kick (FIFO notification) landed mid-fetch;
                     // the fetch-completion kick is already scheduled.
-                    return;
+                    return None;
                 }
                 (DmaMode::ScatterGather, Some(_)) | (DmaMode::Simple, _) => {
+                    let fetched = self.mode == DmaMode::ScatterGather;
                     self.fetch_done_at = None;
                     let d = self.queue.pop_front().unwrap();
                     self.cur = Some(Current { desc: d, remaining: d.len });
+                    if fetched {
+                        if let Some(kind) = faults.desc_fetch_fault(self.id, self.ch) {
+                            // The fetched BD is corrupt: decode error
+                            // before any of its bytes move.
+                            self.halt_with(kind);
+                            return Some(kind);
+                        }
+                    }
                 }
             }
         }
-        self.try_issue(eng, ddr, fifo);
+        self.try_issue(eng, ddr, fifo, faults)
     }
 
     /// Issue the next DDR burst if the pipeline and FIFO allow it.
-    fn try_issue(&mut self, eng: &mut Engine, ddr: &mut DdrController, fifo: &mut ByteFifo) {
+    /// Returns the error kind when the fault plan errors the burst.
+    fn try_issue(
+        &mut self,
+        eng: &mut Engine,
+        ddr: &mut DdrController,
+        fifo: &mut ByteFifo,
+        faults: &mut FaultPlan,
+    ) -> Option<DmaErrorKind> {
         if self.in_flight > 0 {
-            return; // address pipeline busy
+            return None; // address pipeline busy
         }
-        let Some(cur) = self.cur else { return };
+        let Some(cur) = self.cur else { return None };
         let burst = match self.ch {
             // MM2S: read at most what the FIFO can absorb.
             Channel::Mm2s => self.max_burst.min(cur.remaining).min(fifo.free()),
@@ -217,7 +357,13 @@ impl DmaChannelEngine {
         };
         if burst == 0 {
             self.stats.fifo_stalls += 1;
-            return; // blocked on FIFO; device activity will re-kick us
+            return None; // blocked on FIFO; device activity will re-kick us
+        }
+        // Fault-injection point: the burst errors *before* any byte or
+        // FIFO token moves, so the channel residue stays exact.
+        if let Some(kind) = faults.dma_burst_fault(self.id, self.ch) {
+            self.halt_with(kind);
+            return Some(kind);
         }
         match self.ch {
             Channel::Mm2s => {
@@ -234,18 +380,26 @@ impl DmaChannelEngine {
         self.in_flight = burst;
         self.stats.bursts += 1;
         self.stats.bytes += burst;
+        None
     }
 
-    /// A DDR burst belonging to this channel completed. Returns `true` if
-    /// the *final* descriptor of the chain finished and it requested an
-    /// interrupt (the dispatcher then raises the channel's IRQ line).
+    /// A DDR burst belonging to this channel completed. Returns which
+    /// interrupt (if any) the dispatcher should raise: `Complete` when
+    /// the *final* descriptor finished with IOC requested, `Error` when
+    /// advancing the pipeline tripped an injected fault.
     pub fn ddr_complete(
         &mut self,
         eng: &mut Engine,
         ddr: &mut DdrController,
         fifo: &mut ByteFifo,
         bytes: u64,
-    ) -> bool {
+        faults: &mut FaultPlan,
+    ) -> DmaIrq {
+        if self.in_flight == 0 && self.cur.is_none() {
+            // A completion raced a channel soft reset (recovery path):
+            // the burst's state is gone; drop the straggler.
+            return DmaIrq::None;
+        }
         assert_eq!(bytes, self.in_flight, "completion does not match in-flight burst");
         self.in_flight = 0;
         let cur = self.cur.as_mut().expect("DDR completion with no descriptor in service");
@@ -271,8 +425,14 @@ impl DmaChannelEngine {
             }
         }
         // Keep the pipeline moving (next burst or next descriptor).
-        self.kick(eng, ddr, fifo);
-        want_irq
+        if self.kick(eng, ddr, fifo, faults).is_some() {
+            return DmaIrq::Error;
+        }
+        if want_irq {
+            DmaIrq::Complete
+        } else {
+            DmaIrq::None
+        }
     }
 }
 
@@ -295,6 +455,7 @@ mod tests {
         greedy_drain: bool,
         source_bytes: u64,
         irq_at: Option<SimTime>,
+        faults: FaultPlan,
     }
 
     impl Rig {
@@ -307,6 +468,7 @@ mod tests {
                 greedy_drain: true,
                 source_bytes: 0,
                 irq_at: None,
+                faults: FaultPlan::none(),
             }
         }
 
@@ -319,6 +481,7 @@ mod tests {
                 greedy_drain: false,
                 source_bytes: source,
                 irq_at: None,
+                faults: FaultPlan::none(),
             }
         }
 
@@ -339,13 +502,14 @@ mod tests {
                             &mut self.ddr,
                             &mut self.fifo,
                             c.bytes,
+                            &mut self.faults,
                         );
-                        if irq {
+                        if irq == DmaIrq::Complete {
                             self.irq_at = Some(t);
                         }
                     }
                     Event::DmaKick { .. } => {
-                        self.ch.kick(&mut self.eng, &mut self.ddr, &mut self.fifo)
+                        self.ch.kick(&mut self.eng, &mut self.ddr, &mut self.fifo, &mut self.faults);
                     }
                     Event::DevKick { .. } => {
                         if self.greedy_drain {
@@ -520,6 +684,108 @@ mod tests {
         assert!(rig.ch.is_done());
         assert_eq!(rig.ch.stats.bytes, 2048);
         assert!(rig.irq_at.is_some());
+    }
+
+    #[test]
+    fn injected_burst_fault_halts_with_exact_residue() {
+        use crate::sim::fault::FaultSpec;
+        let c = cfg();
+        let mut rig = Rig::mm2s(&c);
+        // Error the 3rd burst of a 4-burst transfer.
+        rig.faults.schedule(FaultSpec::DmaError {
+            eng: EngineId::ZERO,
+            ch: Channel::Mm2s,
+            nth: 3,
+            kind: DmaErrorKind::Internal,
+        });
+        rig.ch.program(
+            &mut rig.eng,
+            DmaMode::Simple,
+            &[Descriptor::new(PhysAddr(0), 4096).with_irq()],
+        );
+        rig.run();
+        assert_eq!(rig.ch.error(), Some(DmaErrorKind::Internal));
+        assert!(rig.ch.err_irq_pending());
+        assert!(!rig.ch.is_done());
+        assert_eq!(rig.irq_at, None, "no completion IRQ on an errored chain");
+        // Two 1024 B bursts landed; the faulted burst moved nothing.
+        assert_eq!(rig.ch.stats.bytes, 2048);
+        assert_eq!(rig.ch.stats.errors, 1);
+        assert_eq!(rig.ch.residue(), 4096 - 2048, "residue is exact");
+    }
+
+    #[test]
+    fn reset_clears_error_and_allows_reprogramming() {
+        use crate::sim::fault::FaultSpec;
+        let c = cfg();
+        let mut rig = Rig::mm2s(&c);
+        rig.faults.schedule(FaultSpec::DmaError {
+            eng: EngineId::ZERO,
+            ch: Channel::Mm2s,
+            nth: 1,
+            kind: DmaErrorKind::Slave,
+        });
+        rig.ch.program(
+            &mut rig.eng,
+            DmaMode::Simple,
+            &[Descriptor::new(PhysAddr(0), 2048).with_irq()],
+        );
+        rig.run();
+        let residue = rig.ch.residue();
+        assert_eq!(residue, 2048);
+        rig.ch.reset();
+        assert!(rig.ch.error().is_none());
+        assert!(rig.ch.is_idle() && rig.ch.is_done());
+        assert_eq!(rig.ch.residue(), 0);
+        // Recovery: re-arm exactly the residue; the retry completes.
+        rig.ch.program(
+            &mut rig.eng,
+            DmaMode::Simple,
+            &[Descriptor::new(PhysAddr(0), residue).with_irq()],
+        );
+        rig.run();
+        assert!(rig.ch.is_done());
+        assert!(rig.irq_at.is_some());
+    }
+
+    #[test]
+    fn corrupt_descriptor_fetch_decodes_errors_the_chain() {
+        use crate::sim::fault::FaultSpec;
+        let c = cfg();
+        let mut rig = Rig::mm2s(&c);
+        rig.faults.schedule(FaultSpec::DescCorrupt {
+            eng: EngineId::ZERO,
+            ch: Channel::Mm2s,
+            nth: 2,
+        });
+        rig.ch.program(&mut rig.eng, DmaMode::ScatterGather, &chain(PhysAddr(0), 3072, 1024));
+        rig.run();
+        assert_eq!(rig.ch.error(), Some(DmaErrorKind::Decode));
+        // BD 1 moved its 1024 B; BDs 2 and 3 are the residue.
+        assert_eq!(rig.ch.stats.bytes, 1024);
+        assert_eq!(rig.ch.residue(), 2048);
+    }
+
+    #[test]
+    fn halted_channel_ignores_appends_but_residue_tracks_them() {
+        use crate::sim::fault::FaultSpec;
+        let c = cfg();
+        let mut rig = Rig::mm2s(&c);
+        rig.faults.schedule(FaultSpec::DmaError {
+            eng: EngineId::ZERO,
+            ch: Channel::Mm2s,
+            nth: 1,
+            kind: DmaErrorKind::Decode,
+        });
+        rig.ch.program(&mut rig.eng, DmaMode::ScatterGather, &[Descriptor::new(PhysAddr(0), 512)]);
+        rig.run();
+        assert_eq!(rig.ch.error(), Some(DmaErrorKind::Decode));
+        // A driver that has not yet noticed the halt appends more work.
+        rig.ch.append(&mut rig.eng, &[Descriptor::new(PhysAddr(512), 256).with_irq()]);
+        rig.run();
+        assert_eq!(rig.ch.error(), Some(DmaErrorKind::Decode), "still halted");
+        assert_eq!(rig.ch.stats.bytes, 0, "halted channel moved nothing");
+        assert_eq!(rig.ch.residue(), 512 + 256, "appended bytes join the residue");
     }
 
     #[test]

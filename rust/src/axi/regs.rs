@@ -19,6 +19,7 @@ use crate::axi::dma::{DmaChannelEngine, DmaMode};
 use crate::memory::buffer::PhysAddr;
 use crate::sim::engine::Engine;
 use crate::sim::event::Channel;
+use crate::sim::fault::DmaErrorKind;
 
 // ---- Register offsets (PG021). ------------------------------------------
 pub const MM2S_DMACR: u32 = 0x00;
@@ -37,14 +38,51 @@ pub const CR_RS: u32 = 1 << 0;
 pub const CR_RESET: u32 = 1 << 2;
 /// Interrupt on complete enable.
 pub const CR_IOC_IRQ_EN: u32 = 1 << 12;
+/// Error interrupt enable.
+pub const CR_ERR_IRQ_EN: u32 = 1 << 14;
 
 // ---- DMASR bits. ----------------------------------------------------------
-/// Channel halted (RS clear or reset).
+/// Channel halted (RS clear, reset, or halted on error).
 pub const SR_HALTED: u32 = 1 << 0;
 /// Channel idle (no transfer in flight).
 pub const SR_IDLE: u32 = 1 << 1;
+/// DMA internal (datamover) error. Latched until reset.
+pub const SR_DMA_INT_ERR: u32 = 1 << 4;
+/// AXI slave response error. Latched until reset.
+pub const SR_DMA_SLV_ERR: u32 = 1 << 5;
+/// Address decode error. Latched until reset.
+pub const SR_DMA_DEC_ERR: u32 = 1 << 6;
 /// Interrupt-on-complete latched (write-1-to-clear).
 pub const SR_IOC_IRQ: u32 = 1 << 12;
+/// Error interrupt latched (write-1-to-clear; the error *condition*
+/// bits 4–6 clear only on reset).
+pub const SR_ERR_IRQ: u32 = 1 << 14;
+
+/// The SR condition bit for one error kind.
+pub fn sr_error_bit(kind: DmaErrorKind) -> u32 {
+    match kind {
+        DmaErrorKind::Internal => SR_DMA_INT_ERR,
+        DmaErrorKind::Slave => SR_DMA_SLV_ERR,
+        DmaErrorKind::Decode => SR_DMA_DEC_ERR,
+    }
+}
+
+/// The DMACR offset of one channel (recovery paths soft-reset through it).
+pub fn dmacr_offset(ch: Channel) -> u32 {
+    match ch {
+        Channel::Mm2s => MM2S_DMACR,
+        Channel::S2mm => S2MM_DMACR,
+    }
+}
+
+/// The DMASR offset of one channel (watchdog-rescue paths W1C the stale
+/// IOC latch through it).
+pub fn dmasr_offset(ch: Channel) -> u32 {
+    match ch {
+        Channel::Mm2s => MM2S_DMASR,
+        Channel::S2mm => S2MM_DMASR,
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RegError {
@@ -77,12 +115,17 @@ struct ChannelRegs {
     addr: u32,
     /// IOC latched bit (cleared by writing 1 to DMASR[12]).
     ioc_latched: bool,
+    /// Latched error-condition bits (SR[4..6]). Reading SR must *not*
+    /// clear these; only `DMACR.Reset` does.
+    err: u32,
+    /// Error-interrupt latched bit (cleared by writing 1 to DMASR[14]).
+    err_irq_latched: bool,
 }
 
 impl Default for ChannelRegs {
     fn default() -> Self {
-        // Reset state: halted, no IRQs enabled.
-        ChannelRegs { cr: 0, addr: 0, ioc_latched: false }
+        // Reset state: halted, no IRQs enabled, no errors latched.
+        ChannelRegs { cr: 0, addr: 0, ioc_latched: false, err: 0, err_irq_latched: false }
     }
 }
 
@@ -111,6 +154,17 @@ impl DmaRegFile {
         self.regs(ch).ioc_latched = true;
     }
 
+    /// Latch an error condition (dispatcher calls this when the channel
+    /// engine halts on an injected fault): the matching SR error bit and
+    /// the error-IRQ latch set, and the channel halts (RS clears), as on
+    /// the real IP.
+    pub fn latch_error(&mut self, ch: Channel, kind: DmaErrorKind) {
+        let regs = self.regs(ch);
+        regs.err |= sr_error_bit(kind);
+        regs.err_irq_latched = true;
+        regs.cr &= !CR_RS;
+    }
+
     /// MMIO write. Returns `Some(descriptor)` when the write is a
     /// LENGTH write that starts a simple-mode transfer — the caller
     /// programs the channel engine with it (and charges the bus cost).
@@ -134,17 +188,29 @@ impl DmaRegFile {
         match off {
             MM2S_DMACR | S2MM_DMACR => {
                 if val & CR_RESET != 0 {
+                    // Soft reset clears the latched error bits and
+                    // de-halts the channel engine (the fix for the seed's
+                    // happy-path assumption: before the error model there
+                    // was nothing to clear, so reset never touched the
+                    // engine).
                     *regs = ChannelRegs::default();
+                    engine.reset();
                 } else {
-                    regs.cr = val & (CR_RS | CR_IOC_IRQ_EN);
+                    regs.cr = val & (CR_RS | CR_IOC_IRQ_EN | CR_ERR_IRQ_EN);
+                    engine.set_err_irq_enabled(regs.cr & CR_ERR_IRQ_EN != 0);
                 }
                 Ok(())
             }
             MM2S_DMASR | S2MM_DMASR => {
-                // Write-1-to-clear on the IRQ bit; other bits read-only.
+                // Write-1-to-clear on the IRQ latches; the error
+                // *condition* bits (4–6) and everything else read-only.
                 if val & SR_IOC_IRQ != 0 {
                     regs.ioc_latched = false;
                     engine.ack_irq();
+                }
+                if val & SR_ERR_IRQ != 0 {
+                    regs.err_irq_latched = false;
+                    engine.ack_err_irq();
                 }
                 Ok(())
             }
@@ -199,6 +265,12 @@ impl DmaRegFile {
                 if regs.ioc_latched {
                     sr |= SR_IOC_IRQ;
                 }
+                // Reads are pure: the latched error bits survive any
+                // number of SR reads and clear only on DMACR.Reset.
+                sr |= regs.err;
+                if regs.err_irq_latched {
+                    sr |= SR_ERR_IRQ;
+                }
                 sr
             }
             _ => unreachable!(),
@@ -221,6 +293,7 @@ mod tests {
         s2mm: DmaChannelEngine,
         mm2s_fifo: ByteFifo,
         regs: DmaRegFile,
+        faults: crate::sim::fault::FaultPlan,
     }
 
     fn rig() -> Rig {
@@ -232,6 +305,7 @@ mod tests {
             s2mm: DmaChannelEngine::new(EngineId::ZERO, Channel::S2mm, &cfg),
             mm2s_fifo: ByteFifo::new(cfg.mm2s_fifo_bytes),
             regs: DmaRegFile::new(),
+            faults: crate::sim::fault::FaultPlan::none(),
         }
     }
 
@@ -248,13 +322,28 @@ mod tests {
                             &mut self.ddr,
                             &mut self.mm2s_fifo,
                             c.bytes,
+                            &mut self.faults,
                         );
-                        if irq {
-                            self.regs.latch_ioc(Channel::Mm2s);
+                        match irq {
+                            crate::axi::dma::DmaIrq::Complete => {
+                                self.regs.latch_ioc(Channel::Mm2s)
+                            }
+                            crate::axi::dma::DmaIrq::Error => {
+                                let kind = self.mm2s.error().unwrap();
+                                self.regs.latch_error(Channel::Mm2s, kind);
+                            }
+                            crate::axi::dma::DmaIrq::None => {}
                         }
                     }
                     Event::DmaKick { ch: Channel::Mm2s, .. } => {
-                        self.mm2s.kick(&mut self.eng, &mut self.ddr, &mut self.mm2s_fifo)
+                        if let Some(kind) = self.mm2s.kick(
+                            &mut self.eng,
+                            &mut self.ddr,
+                            &mut self.mm2s_fifo,
+                            &mut self.faults,
+                        ) {
+                            self.regs.latch_error(Channel::Mm2s, kind);
+                        }
                     }
                     Event::DmaKick { .. } => {}
                     Event::DevKick { .. } => {
@@ -358,5 +447,73 @@ mod tests {
         let mut r = rig();
         r.write(MM2S_DMACR, CR_RS).unwrap();
         assert!(r.read(S2MM_DMASR) & SR_HALTED != 0, "S2MM unaffected by MM2S CR");
+    }
+
+    /// Run a transfer that faults on its 2nd burst; the register file
+    /// must show the halted + error state.
+    fn faulted_rig() -> Rig {
+        let mut r = rig();
+        r.faults.schedule(crate::sim::fault::FaultSpec::DmaError {
+            eng: EngineId::ZERO,
+            ch: Channel::Mm2s,
+            nth: 2,
+            kind: DmaErrorKind::Slave,
+        });
+        r.write(MM2S_DMACR, CR_RS | CR_IOC_IRQ_EN | CR_ERR_IRQ_EN).unwrap();
+        r.write(MM2S_SA, 0).unwrap();
+        r.write(MM2S_LENGTH, 8192).unwrap();
+        r.run();
+        r
+    }
+
+    #[test]
+    fn sr_reads_do_not_clear_latched_error_bits() {
+        let mut r = faulted_rig();
+        let sr1 = r.read(MM2S_DMASR);
+        assert!(sr1 & SR_DMA_SLV_ERR != 0, "slave error latched: {sr1:#x}");
+        assert!(sr1 & SR_ERR_IRQ != 0, "error IRQ latched");
+        assert!(sr1 & SR_HALTED != 0, "channel halts on error");
+        assert_eq!(sr1 & SR_IOC_IRQ, 0, "no completion on an errored chain");
+        // The latent happy-path bug this pins: reading SR is pure — the
+        // error condition must survive any number of reads.
+        for _ in 0..3 {
+            assert_eq!(r.read(MM2S_DMASR), sr1);
+        }
+        // W1C clears the error *IRQ* latch but never the condition bits.
+        r.write(MM2S_DMASR, SR_ERR_IRQ).unwrap();
+        let sr2 = r.read(MM2S_DMASR);
+        assert_eq!(sr2 & SR_ERR_IRQ, 0);
+        assert!(sr2 & SR_DMA_SLV_ERR != 0, "condition bits clear only on reset");
+        assert!(!r.mm2s.err_irq_pending(), "engine latch acked through W1C");
+    }
+
+    #[test]
+    fn cr_reset_clears_error_state_and_dehalts_the_engine() {
+        let mut r = faulted_rig();
+        assert!(r.mm2s.error().is_some());
+        let residue = r.mm2s.residue();
+        assert!(residue > 0 && residue < 8192);
+        r.write(MM2S_DMACR, CR_RESET).unwrap();
+        // Register file clean...
+        let sr = r.read(MM2S_DMASR);
+        assert_eq!(sr & (SR_DMA_INT_ERR | SR_DMA_SLV_ERR | SR_DMA_DEC_ERR), 0);
+        assert_eq!(sr & SR_ERR_IRQ, 0);
+        // ...and the engine itself de-halted (reset reaches the channel).
+        assert!(r.mm2s.error().is_none());
+        assert!(r.mm2s.is_idle());
+        // The recovery sequence now works: RS + address + residue length.
+        r.write(MM2S_DMACR, CR_RS | CR_IOC_IRQ_EN).unwrap();
+        r.write(MM2S_SA, (8192 - residue) as u32).unwrap();
+        r.write(MM2S_LENGTH, residue as u32).unwrap();
+        r.run();
+        assert!(r.mm2s.is_done());
+        assert!(r.read(MM2S_DMASR) & SR_IOC_IRQ != 0, "retry completes");
+    }
+
+    #[test]
+    fn err_irq_enable_bit_round_trips_through_cr() {
+        let mut r = rig();
+        r.write(MM2S_DMACR, CR_RS | CR_ERR_IRQ_EN).unwrap();
+        assert_eq!(r.read(MM2S_DMACR), CR_RS | CR_ERR_IRQ_EN);
     }
 }

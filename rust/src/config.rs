@@ -11,6 +11,7 @@
 use std::path::Path;
 
 use crate::sim::engine::CalendarKind;
+use crate::sim::fault::FaultConfig;
 use crate::util::json::Json;
 
 /// All model constants. Units are in the field names: `_ns` = nanoseconds,
@@ -165,6 +166,11 @@ pub struct SimConfig {
     /// bit-identical timelines (enforced by the equivalence gate); the
     /// wheel is the fast default, the heap the reference.
     pub calendar: CalendarKind,
+    /// Fault-injection rates + recovery knobs (see [`crate::sim::fault`]).
+    /// All rates default to zero, which keeps the whole subsystem inert:
+    /// the fault-free timeline is bit-identical with or without it
+    /// (enforced by `rust/tests/engine_equivalence.rs`).
+    pub faults: FaultConfig,
 }
 
 impl Default for SimConfig {
@@ -232,6 +238,7 @@ impl Default for SimConfig {
             seed: 0xC0DE5EED,
             os_jitter_frac: 0.0,
             calendar: CalendarKind::Wheel,
+            faults: FaultConfig::none(),
         }
     }
 }
@@ -293,8 +300,12 @@ macro_rules! config_fields {
             _ => anyhow::bail!("config key {} must be \"wheel\" or \"heap\"", $k),
         };
     };
+    (@set $self:ident, $field:ident, faults, $val:ident, $k:ident) => {
+        $self.$field.apply_json($val)?;
+    };
     (@get $self:ident, $field:ident, f64) => { Json::num($self.$field) };
     (@get $self:ident, $field:ident, u64) => { Json::num($self.$field as f64) };
+    (@get $self:ident, $field:ident, faults) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, vec_u64) => {
         Json::Arr($self.$field.iter().map(|&x| Json::num(x as f64)).collect())
     };
@@ -349,6 +360,7 @@ config_fields! {
     seed: u64,
     os_jitter_frac: f64,
     calendar: calendar,
+    faults: faults,
 }
 
 impl SimConfig {
@@ -419,6 +431,7 @@ impl SimConfig {
             (0.0..=0.5).contains(&self.os_jitter_frac),
             "os_jitter_frac must be in [0, 0.5]"
         );
+        self.faults.validate()?;
         Ok(())
     }
 }
@@ -514,6 +527,28 @@ mod tests {
         assert_eq!(cfg, cfg2);
         assert!(cfg.apply_json(&Json::parse(r#"{"calendar": "ring"}"#).unwrap()).is_err());
         assert!(cfg.apply_json(&Json::parse(r#"{"calendar": 3}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn faults_key_roundtrips_and_validates() {
+        let mut cfg = SimConfig::default();
+        cfg.apply_json(
+            &Json::parse(r#"{"faults": {"dma_error_rate": 0.01, "retry_limit": 5}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.faults.dma_error_rate, 0.01);
+        assert_eq!(cfg.faults.retry_limit, 5);
+        cfg.validate().unwrap();
+        let json = cfg.to_json();
+        let mut cfg2 = SimConfig::default();
+        cfg2.apply_json(&json).unwrap();
+        assert_eq!(cfg, cfg2);
+        // Unknown nested key and out-of-range rate both rejected.
+        let mut cfg = SimConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"faults": {"bogus": 1}}"#).unwrap()).is_err());
+        let mut cfg = SimConfig::default();
+        cfg.faults.dma_error_rate = 2.0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -36,13 +36,16 @@
 
 use crate::axi::descriptor::{chain_into, Descriptor};
 use crate::axi::dma::DmaMode;
+use crate::axi::regs;
+use crate::memory::buffer::PhysAddr;
 use crate::memory::copy::CopyKind;
 use crate::sim::event::{Channel, EngineId};
+use crate::sim::fault::DmaErrorKind;
 use crate::sim::time::Dur;
-use crate::system::{CpuLedger, System};
+use crate::system::{CpuLedger, System, WaitVerdict};
 
 use super::scheme::SubmitToken;
-use super::{BufferScheme, Driver, DriverError, PartitionMode, TransferReport};
+use super::{BufferScheme, Driver, DriverError, PartitionMode, TransferOutcome, TransferReport};
 
 /// dma_map_single cache-maintenance time for `bytes`.
 fn flush_time(sys: &System, bytes: u64) -> Dur {
@@ -59,44 +62,37 @@ pub(super) fn transfer(
     complete(drv, sys, token)
 }
 
-/// Split-phase entry: ioctl entry, RX chain arm, TX copy/flush/feed.
-/// Everything up to (not including) the completion waits.
-pub(super) fn submit(
-    drv: &mut Driver,
-    sys: &mut System,
-    tx_bytes: u64,
-    rx_bytes: u64,
-) -> Result<SubmitToken, DriverError> {
-    let worst_case = drv.cfg.buffering == BufferScheme::Single
-        && drv.cfg.partition == PartitionMode::Unique;
+/// Arm the RX scatter-gather chain for `bytes` starting `offset` into
+/// the RX bounce window (descriptor build per BD; the buffer is
+/// invalidated before the copy-out instead — see [`complete`]). Chains
+/// build into the system's recycled scratch buffer: no per-transfer
+/// allocation once warm. `offset == 0` is the normal submit; recovery
+/// re-arms the engine-reported residue at its offset.
+fn arm_rx_chain(drv: &Driver, sys: &mut System, offset: u64, bytes: u64) {
+    let sg_chunk = sys.cfg.kernel_sg_chunk_bytes;
+    let mut descs = sys.take_desc_scratch();
+    chain_into(PhysAddr(drv.rx_buf(0).addr.0 + offset), bytes, sg_chunk, &mut descs);
+    sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
+    sys.program_dma_slice_on(drv.port, Channel::S2mm, DmaMode::ScatterGather, &descs);
+    sys.put_desc_scratch(descs);
+}
+
+/// Copy/flush/feed `bytes` of TX payload starting `offset` into the
+/// stream, in the driver's configured shape (worst case: whole payload
+/// copied + cleaned, then one chain; pipelined: per-chunk overlap).
+/// Recovery re-feeds the residue with fresh copies — the bounce ring
+/// only holds the last two chunks, so a resubmission re-stages from
+/// user memory exactly like the real driver's retried request.
+fn feed_tx(drv: &Driver, sys: &mut System, offset: u64, bytes: u64, worst_case: bool) {
     let sg_chunk = sys.cfg.kernel_sg_chunk_bytes;
     let port = drv.port;
-    let t0 = sys.now();
-
-    // ioctl entry + argument marshalling + dmaengine channel setup.
-    let entry = sys.costs.syscall_entry();
-    sys.cpu_exec(entry);
-    sys.cpu_exec(Dur(sys.cfg.kernel_submit_ns));
-
-    // Arm the whole RX chain up front (descriptor build per BD; the
-    // buffer is invalidated before the copy-out instead — see below).
-    // Chains build into the system's recycled scratch buffer: no
-    // per-transfer allocation once warm.
-    if rx_bytes > 0 {
-        let mut descs = sys.take_desc_scratch();
-        chain_into(drv.rx_buf(0).addr, rx_bytes, sg_chunk, &mut descs);
-        sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
-        sys.program_dma_slice_on(port, Channel::S2mm, DmaMode::ScatterGather, &descs);
-        sys.put_desc_scratch(descs);
-    }
-
     if worst_case {
         // Copy + clean the whole payload, then submit the chain.
-        sys.cpu_copy(tx_bytes, CopyKind::KernelCached);
-        let fl = flush_time(sys, tx_bytes);
+        sys.cpu_copy(bytes, CopyKind::KernelCached);
+        let fl = flush_time(sys, bytes);
         sys.cpu_exec(fl);
         let mut descs = sys.take_desc_scratch();
-        chain_into(drv.tx_buf(0).addr, tx_bytes, sg_chunk, &mut descs);
+        chain_into(PhysAddr(drv.tx_buf(0).addr.0 + offset), bytes, sg_chunk, &mut descs);
         sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
         sys.program_dma_slice_on(port, Channel::Mm2s, DmaMode::ScatterGather, &descs);
         sys.put_desc_scratch(descs);
@@ -105,13 +101,13 @@ pub(super) fn submit(
         let mut off = 0u64;
         let mut i = 0usize;
         let mut programmed = false;
-        while off < tx_bytes {
-            let len = sg_chunk.min(tx_bytes - off);
+        while off < bytes {
+            let len = sg_chunk.min(bytes - off);
             sys.cpu_copy(len, CopyKind::KernelCached);
             let fl = flush_time(sys, len);
             sys.cpu_exec(fl);
             sys.cpu_exec(Dur(sys.cfg.kernel_desc_build_ns));
-            let last = off + len == tx_bytes;
+            let last = off + len == bytes;
             let mut d = Descriptor::new(drv.tx_buf(i).addr, len);
             if last {
                 d = d.with_irq();
@@ -126,16 +122,176 @@ pub(super) fn submit(
             i += 1;
         }
     }
+}
+
+/// Split-phase entry: ioctl entry, RX chain arm, TX copy/flush/feed.
+/// Everything up to (not including) the completion waits.
+pub(super) fn submit(
+    drv: &mut Driver,
+    sys: &mut System,
+    tx_bytes: u64,
+    rx_bytes: u64,
+) -> Result<SubmitToken, DriverError> {
+    let worst_case = drv.cfg.buffering == BufferScheme::Single
+        && drv.cfg.partition == PartitionMode::Unique;
+    let t0 = sys.now();
+
+    // ioctl entry + argument marshalling + dmaengine channel setup.
+    let entry = sys.costs.syscall_entry();
+    sys.cpu_exec(entry);
+    sys.cpu_exec(Dur(sys.cfg.kernel_submit_ns));
+
+    // Arm the whole RX chain up front, then feed the TX side.
+    if rx_bytes > 0 {
+        arm_rx_chain(drv, sys, 0, rx_bytes);
+    }
+    feed_tx(drv, sys, 0, tx_bytes, worst_case);
     Ok(SubmitToken { t0, tx_bytes, rx_bytes })
 }
 
+/// Bounded re-submission after a channel error: dmaengine terminates
+/// the descriptor ring (modelled as the `DMACR.Reset` write), then the
+/// unfinished residue is rebuilt and resubmitted at its offset.
+#[allow(clippy::too_many_arguments)]
+fn kernel_recover(
+    drv: &Driver,
+    sys: &mut System,
+    ch: Channel,
+    kind: DmaErrorKind,
+    tx_bytes: u64,
+    rx_bytes: u64,
+    worst_case: bool,
+    retries: &mut u32,
+    recovery_ns: &mut u64,
+) -> Result<(), DriverError> {
+    let limit = sys.cfg.faults.retry_limit_u32();
+    if *retries >= limit {
+        return Err(DriverError::Faulted {
+            ch: ch.paper_name(),
+            retries: *retries,
+            kind: Some(kind),
+        });
+    }
+    let t0 = sys.now();
+    let total = match ch {
+        Channel::Mm2s => tx_bytes,
+        Channel::S2mm => rx_bytes,
+    };
+    let residue = sys.port(drv.port).chan(ch).residue();
+    debug_assert!(residue > 0 && residue <= total, "residue {residue} of {total}");
+    let done = total - residue;
+    sys.mmio_write_on(drv.port, regs::dmacr_offset(ch), regs::CR_RESET)
+        .expect("CR_RESET write");
+    match ch {
+        Channel::S2mm => arm_rx_chain(drv, sys, done, residue),
+        Channel::Mm2s => feed_tx(drv, sys, done, residue, worst_case),
+    }
+    *retries += 1;
+    *recovery_ns += sys.now().since(t0).ns();
+    Ok(())
+}
+
+/// Watchdog rescue of a lost completion interrupt: the driver reads the
+/// engine state directly and, if the chain is done, W1C-clears both the
+/// engine latch and the register file's `SR_IOC_IRQ` (which the
+/// dispatcher latched before the edge was dropped). Returns `true` when
+/// the channel was indeed complete; shared by the single- and
+/// multi-queue waits so the rescue protocol cannot drift.
+fn try_rescue_lost_ioc(sys: &mut System, e: EngineId, ch: Channel) -> bool {
+    sys.cpu_exec(Dur(sys.cfg.reg_read_ns));
+    if !sys.port(e).chan(ch).is_done() {
+        return false;
+    }
+    sys.mmio_write_on(e, regs::dmasr_offset(ch), regs::SR_IOC_IRQ).expect("SR W1C write");
+    true
+}
+
+/// Interrupt wait with the kernel's recovery machinery: the error-IRQ
+/// path resubmits the residue (bounded by `faults.retry_limit`), and a
+/// `wait_event_timeout` expiry lets the driver inspect the engine
+/// directly — rescuing lost completion interrupts and reviving a wait
+/// starved by the peer channel's death, the two cases user space cannot
+/// handle safely (the paper's §V safety argument, made executable).
+#[allow(clippy::too_many_arguments)]
+fn kernel_wait(
+    drv: &Driver,
+    sys: &mut System,
+    ch: Channel,
+    tx_bytes: u64,
+    rx_bytes: u64,
+    worst_case: bool,
+    retries: &mut u32,
+    recovery_ns: &mut u64,
+) -> Result<(), DriverError> {
+    let limit = sys.cfg.faults.retry_limit_u32();
+    let timeout = Dur(sys.cfg.faults.timeout_ns);
+    let port = drv.port;
+    loop {
+        match sys.irq_wait_timeout_on(port, ch, timeout)? {
+            WaitVerdict::Done => return Ok(()),
+            WaitVerdict::Fault(kind) => {
+                kernel_recover(
+                    drv, sys, ch, kind, tx_bytes, rx_bytes, worst_case, retries, recovery_ns,
+                )?;
+            }
+            WaitVerdict::TimedOut => {
+                // The ISR never ran: inspect the engine directly.
+                let t_rescue = sys.now();
+                if try_rescue_lost_ioc(sys, port, ch) {
+                    // Completion IRQ lost; rescued by the watchdog. The
+                    // recovery latency is the watchdog window the task
+                    // sat wedged, plus the rescue actions themselves.
+                    *retries += 1;
+                    *recovery_ns += timeout.ns() + sys.now().since(t_rescue).ns();
+                    return Ok(());
+                }
+                if let Some(kind) = sys.port(port).chan(ch).error() {
+                    // Error IRQ lost; recover as if it had been delivered.
+                    sys.port_mut(port).chan_mut(ch).ack_err_irq();
+                    kernel_recover(
+                        drv, sys, ch, kind, tx_bytes, rx_bytes, worst_case, retries,
+                        recovery_ns,
+                    )?;
+                    continue;
+                }
+                let peer = match ch {
+                    Channel::Mm2s => Channel::S2mm,
+                    Channel::S2mm => Channel::Mm2s,
+                };
+                if let Some(kind) = sys.port(port).chan(peer).error() {
+                    // The peer channel died and starved this one.
+                    kernel_recover(
+                        drv, sys, peer, kind, tx_bytes, rx_bytes, worst_case, retries,
+                        recovery_ns,
+                    )?;
+                } else if *retries >= limit {
+                    return Err(DriverError::Faulted {
+                        ch: ch.paper_name(),
+                        retries: *retries,
+                        kind: None,
+                    });
+                } else {
+                    // Nothing attributable: burn one bounded watchdog
+                    // round and keep waiting.
+                    *retries += 1;
+                }
+            }
+        }
+    }
+}
+
 /// Split-phase completion: block on the TX then RX interrupts, then
-/// invalidate + copy the payload out and return to user space.
+/// invalidate + copy the payload out and return to user space. With an
+/// active fault plan the waits run through [`kernel_wait`]'s error-IRQ +
+/// watchdog recovery; otherwise this is exactly the seed's code path.
 pub(super) fn complete(
     drv: &mut Driver,
     sys: &mut System,
     token: SubmitToken,
 ) -> Result<TransferReport, DriverError> {
+    if sys.faults.is_active() {
+        return complete_recover(drv, sys, token);
+    }
     let SubmitToken { t0, tx_bytes, rx_bytes } = token;
     let sg_chunk = sys.cfg.kernel_sg_chunk_bytes;
     let port = drv.port;
@@ -164,7 +320,112 @@ pub(super) fn complete(
         Dur::ZERO
     };
 
-    Ok(TransferReport { tx_bytes, rx_bytes, tx_time, rx_time, ledger: CpuLedger::default() })
+    Ok(TransferReport {
+        tx_bytes,
+        rx_bytes,
+        tx_time,
+        rx_time,
+        ledger: CpuLedger::default(),
+        outcome: TransferOutcome::Completed,
+    })
+}
+
+/// [`complete`] with the error-IRQ handler + watchdog recovery engaged.
+fn complete_recover(
+    drv: &mut Driver,
+    sys: &mut System,
+    token: SubmitToken,
+) -> Result<TransferReport, DriverError> {
+    let SubmitToken { t0, tx_bytes, rx_bytes } = token;
+    let worst_case = drv.cfg.buffering == BufferScheme::Single
+        && drv.cfg.partition == PartitionMode::Unique;
+    let sg_chunk = sys.cfg.kernel_sg_chunk_bytes;
+    let mut retries = 0u32;
+    let mut recovery_ns = 0u64;
+
+    kernel_wait(
+        drv,
+        sys,
+        Channel::Mm2s,
+        tx_bytes,
+        rx_bytes,
+        worst_case,
+        &mut retries,
+        &mut recovery_ns,
+    )?;
+    let tx_time = sys.now().since(t0);
+
+    let rx_time = if rx_bytes > 0 {
+        kernel_wait(
+            drv,
+            sys,
+            Channel::S2mm,
+            tx_bytes,
+            rx_bytes,
+            worst_case,
+            &mut retries,
+            &mut recovery_ns,
+        )?;
+        let mut left = rx_bytes;
+        while left > 0 {
+            let len = sg_chunk.min(left);
+            let fl = flush_time(sys, len);
+            sys.cpu_exec(fl); // dma_unmap invalidate
+            sys.cpu_copy(len, CopyKind::KernelCached);
+            left -= len;
+        }
+        let exit = sys.costs.syscall_exit();
+        sys.cpu_exec(exit);
+        sys.now().since(t0)
+    } else {
+        let exit = sys.costs.syscall_exit();
+        sys.cpu_exec(exit);
+        Dur::ZERO
+    };
+
+    let outcome = if retries == 0 {
+        TransferOutcome::Completed
+    } else {
+        TransferOutcome::Recovered { retries, recovery_ns }
+    };
+    Ok(TransferReport { tx_bytes, rx_bytes, tx_time, rx_time, ledger: CpuLedger::default(), outcome })
+}
+
+/// Multi-queue completion wait: legacy blocking wait when the fault
+/// plan is inactive; with faults active, fail fast on an error or an
+/// unattributable timeout, and rescue lost completion IRQs through the
+/// watchdog (full residue re-submission across stripes is future work —
+/// the single-queue kernel scheme is the recovery reference).
+fn mq_wait(
+    sys: &mut System,
+    e: EngineId,
+    ch: Channel,
+    rescues: &mut u32,
+    recovery_ns: &mut u64,
+) -> Result<(), DriverError> {
+    if !sys.faults.is_active() {
+        sys.irq_wait_on(e, ch)?;
+        return Ok(());
+    }
+    let timeout = Dur(sys.cfg.faults.timeout_ns);
+    match sys.irq_wait_timeout_on(e, ch, timeout)? {
+        WaitVerdict::Done => Ok(()),
+        WaitVerdict::Fault(kind) => Err(DriverError::Faulted {
+            ch: ch.paper_name(),
+            retries: *rescues,
+            kind: Some(kind),
+        }),
+        WaitVerdict::TimedOut => {
+            let t_rescue = sys.now();
+            if try_rescue_lost_ioc(sys, e, ch) {
+                *rescues += 1;
+                *recovery_ns += timeout.ns() + sys.now().since(t_rescue).ns();
+                return Ok(());
+            }
+            let kind = sys.port(e).chan(ch).error();
+            Err(DriverError::Faulted { ch: ch.paper_name(), retries: *rescues, kind })
+        }
+    }
 }
 
 /// Multi-queue kernel transfer: stripe the SG chunks across every
@@ -263,9 +524,11 @@ pub(super) fn transfer_multiqueue(
     }
 
     // Collect every TX completion, then every RX completion.
+    let mut rescues = 0u32;
+    let mut recovery_ns = 0u64;
     for p in 0..n {
         if tx_share[p] > 0 {
-            sys.irq_wait_on(EngineId(p as u8), Channel::Mm2s)?;
+            mq_wait(sys, EngineId(p as u8), Channel::Mm2s, &mut rescues, &mut recovery_ns)?;
         }
     }
     let tx_time = sys.now().since(t0);
@@ -275,7 +538,7 @@ pub(super) fn transfer_multiqueue(
             if rx_share[p] == 0 {
                 continue;
             }
-            sys.irq_wait_on(EngineId(p as u8), Channel::S2mm)?;
+            mq_wait(sys, EngineId(p as u8), Channel::S2mm, &mut rescues, &mut recovery_ns)?;
             let mut left = rx_share[p];
             while left > 0 {
                 let len = sg_chunk.min(left);
@@ -294,7 +557,12 @@ pub(super) fn transfer_multiqueue(
         Dur::ZERO
     };
 
-    Ok(TransferReport { tx_bytes, rx_bytes, tx_time, rx_time, ledger: CpuLedger::default() })
+    let outcome = if rescues == 0 {
+        TransferOutcome::Completed
+    } else {
+        TransferOutcome::Recovered { retries: rescues, recovery_ns }
+    };
+    Ok(TransferReport { tx_bytes, rx_bytes, tx_time, rx_time, ledger: CpuLedger::default(), outcome })
 }
 
 #[cfg(test)]

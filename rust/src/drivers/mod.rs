@@ -47,6 +47,7 @@ pub use scheme::{scheme_for, SubmitToken, TransferScheme};
 use crate::axi::descriptor::MAX_DESC_LEN;
 use crate::memory::buffer::{AllocError, CmaAllocator, DmaBuffer};
 use crate::sim::event::EngineId;
+use crate::sim::fault::DmaErrorKind;
 use crate::sim::time::Dur;
 use crate::system::{CpuLedger, SimError, System};
 
@@ -111,6 +112,10 @@ pub enum DriverError {
     Sim(SimError),
     Alloc(AllocError),
     TooLarge { bytes: u64 },
+    /// The transfer failed under fault injection: recovery was exhausted
+    /// (`retries` attempts) or impossible. `kind` is the last latched
+    /// DMA error, or `None` when the failure was a bare wait timeout.
+    Faulted { ch: &'static str, retries: u32, kind: Option<DmaErrorKind> },
 }
 
 impl std::fmt::Display for DriverError {
@@ -123,6 +128,17 @@ impl std::fmt::Display for DriverError {
                 "transfer of {bytes} bytes exceeds the user-level 8 MB AXI-DMA limit \
                  ({MAX_DESC_LEN} bytes per descriptor) in Unique mode"
             ),
+            DriverError::Faulted { ch, retries, kind } => match kind {
+                Some(k) => write!(
+                    f,
+                    "{ch} transfer failed after {retries} recovery attempt(s): {}",
+                    k.label()
+                ),
+                None => write!(
+                    f,
+                    "{ch} transfer failed after {retries} recovery attempt(s): wait timeout"
+                ),
+            },
         }
     }
 }
@@ -136,6 +152,7 @@ impl std::error::Error for DriverError {
             DriverError::Sim(_) => None,
             DriverError::Alloc(e) => Some(e),
             DriverError::TooLarge { .. } => None,
+            DriverError::Faulted { .. } => None,
         }
     }
 }
@@ -150,6 +167,20 @@ impl From<AllocError> for DriverError {
     fn from(e: AllocError) -> Self {
         DriverError::Alloc(e)
     }
+}
+
+/// How a *successful* transfer concluded with respect to fault
+/// injection. The third leg of the outcome space — recovery exhausted,
+/// payload dropped — is [`DriverError::Faulted`], which the
+/// coordinator's reliability sweep tallies as `FaultCell::failed`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransferOutcome {
+    /// No fault touched this transfer.
+    Completed,
+    /// Faults were detected and recovered: `retries` reset/re-arm (or
+    /// watchdog-rescue) rounds, `recovery_ns` spent inside recovery
+    /// actions (the reliability sweep's recovery-latency metric).
+    Recovered { retries: u32, recovery_ns: u64 },
 }
 
 /// Software-observed timing of one TX/RX round trip. All durations are
@@ -167,6 +198,9 @@ pub struct TransferReport {
     pub rx_time: Dur,
     /// CPU accounting over the transfer window.
     pub ledger: CpuLedger,
+    /// Fault/recovery story of this transfer (always `Completed` when
+    /// the fault plan is inactive).
+    pub outcome: TransferOutcome,
 }
 
 impl TransferReport {
@@ -385,6 +419,7 @@ mod tests {
             tx_time: Dur::from_us(10.0),
             rx_time: Dur::from_us(20.0),
             ledger: CpuLedger::default(),
+            outcome: TransferOutcome::Completed,
         };
         assert!((r.tx_us_per_byte() - 0.01).abs() < 1e-12);
         assert!((r.rx_us_per_byte() - 0.04).abs() < 1e-12);

@@ -17,6 +17,15 @@
 //!   engines — that interleave is what keeps multiple frames in flight.
 //!   Split-phase arms are always Unique-shaped (one arm per direction),
 //!   matching the per-layer payloads of the CNN pipeline.
+//!
+//! Every successful transfer additionally reports a
+//! [`super::TransferOutcome`]: `Completed` (untouched by faults) or
+//! `Recovered { retries, .. }` (the scheme's recovery machinery reset and
+//! re-armed after injected DMA errors / lost IRQs). Exhausted recovery
+//! surfaces as [`super::DriverError::Faulted`], which the coordinator's
+//! reliability sweep tallies as a dropped frame. Recovery paths engage
+//! only while the system's fault plan is active, so fault-free timings
+//! are bit-identical to the seed.
 
 use crate::sim::time::SimTime;
 use crate::system::System;

@@ -19,17 +19,30 @@
 //! `complete` (wait + copy out) — the same split-phase pair the
 //! frame-pipelined coordinator drives directly, so the two entry shapes
 //! cannot drift apart.
+//!
+//! **Fault recovery** (engaged only while the system's
+//! [`crate::sim::fault::FaultPlan`] is active, so the fault-free timeline
+//! is untouched): waits run with the watchdog timeout, and a latched DMA
+//! error is recovered by soft-resetting the channel through `DMACR.Reset`
+//! and re-arming exactly the engine-reported residue — bounded by
+//! `faults.retry_limit`. A *bare* timeout is recovered only when the
+//! peer channel shows a latched error (the RX-death-starves-TX coupling);
+//! otherwise the driver fails fast: user space cannot tell a wedged
+//! engine from a slow one and has no safe way to quiesce a live channel
+//! — exactly the safety gap (§V) that makes the kernel driver, which
+//! *can* rescue such timeouts, the paper's "safer solution".
 
 use crate::axi::descriptor::MAX_DESC_LEN;
 use crate::axi::regs;
 use crate::memory::buffer::PhysAddr;
 use crate::memory::copy::CopyKind;
 use crate::sim::event::{Channel, EngineId};
+use crate::sim::fault::DmaErrorKind;
 use crate::sim::time::Dur;
-use crate::system::{CpuLedger, System};
+use crate::system::{CpuLedger, System, WaitVerdict};
 
 use super::scheme::SubmitToken;
-use super::{BufferScheme, Driver, DriverError, PartitionMode, TransferReport};
+use super::{BufferScheme, Driver, DriverError, PartitionMode, TransferOutcome, TransferReport};
 
 /// How the user-level driver waits for channel completion.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -110,12 +123,17 @@ pub(super) fn submit(
 }
 
 /// Split-phase completion: wait TX, wait RX, copy the RX payload out.
+/// With an active fault plan the waits carry the watchdog + reset/retry
+/// recovery machinery; otherwise this is exactly the seed's code path.
 pub(super) fn complete(
     drv: &mut Driver,
     sys: &mut System,
     token: SubmitToken,
     mode: WaitMode,
 ) -> Result<TransferReport, DriverError> {
+    if sys.faults.is_active() {
+        return complete_recover(drv, sys, token, mode);
+    }
     let SubmitToken { t0, tx_bytes, rx_bytes } = token;
     let port = drv.port;
     let tx_done = wait(sys, port, Channel::Mm2s, mode)?;
@@ -129,7 +147,157 @@ pub(super) fn complete(
         Dur::ZERO
     };
 
-    Ok(TransferReport { tx_bytes, rx_bytes, tx_time, rx_time, ledger: CpuLedger::default() })
+    Ok(TransferReport {
+        tx_bytes,
+        rx_bytes,
+        tx_time,
+        rx_time,
+        ledger: CpuLedger::default(),
+        outcome: TransferOutcome::Completed,
+    })
+}
+
+/// Timeout-aware wait dispatch (fault plan active).
+fn wait_verdict(
+    sys: &mut System,
+    port: EngineId,
+    ch: Channel,
+    mode: WaitMode,
+) -> Result<WaitVerdict, crate::system::SimError> {
+    let timeout = Dur(sys.cfg.faults.timeout_ns);
+    match mode {
+        WaitMode::Poll => sys.poll_wait_timeout_on(port, ch, timeout),
+        WaitMode::Sleep => sys.sleep_wait_timeout_on(port, ch, timeout),
+    }
+}
+
+/// Recover one errored channel: soft-reset through `DMACR.Reset`, then
+/// re-arm exactly the engine-reported residue at the matching buffer
+/// offset. Counts against `faults.retry_limit`.
+#[allow(clippy::too_many_arguments)]
+fn recover_channel(
+    drv: &Driver,
+    sys: &mut System,
+    ch: Channel,
+    base: PhysAddr,
+    armed_len: u64,
+    kind: DmaErrorKind,
+    retries: &mut u32,
+    recovery_ns: &mut u64,
+) -> Result<(), DriverError> {
+    let limit = sys.cfg.faults.retry_limit_u32();
+    if *retries >= limit {
+        return Err(DriverError::Faulted {
+            ch: ch.paper_name(),
+            retries: *retries,
+            kind: Some(kind),
+        });
+    }
+    let t0 = sys.now();
+    let residue = sys.port(drv.port).chan(ch).residue();
+    debug_assert!(residue > 0 && residue <= armed_len, "residue {residue} of {armed_len}");
+    sys.mmio_write_on(drv.port, regs::dmacr_offset(ch), regs::CR_RESET)
+        .expect("CR_RESET write");
+    arm_simple(sys, drv.port, ch, PhysAddr(base.0 + (armed_len - residue)), residue);
+    *retries += 1;
+    *recovery_ns += sys.now().since(t0).ns();
+    Ok(())
+}
+
+/// Wait for `ch` with recovery. `peer` is the other armed channel of the
+/// round trip: a wait that times out because a dead peer starved the
+/// stream revives the peer instead of failing.
+#[allow(clippy::too_many_arguments)]
+fn wait_recover(
+    drv: &Driver,
+    sys: &mut System,
+    mode: WaitMode,
+    ch: Channel,
+    base: PhysAddr,
+    armed_len: u64,
+    peer: Option<(Channel, PhysAddr, u64)>,
+    retries: &mut u32,
+    recovery_ns: &mut u64,
+) -> Result<(), DriverError> {
+    loop {
+        match wait_verdict(sys, drv.port, ch, mode)? {
+            WaitVerdict::Done => return Ok(()),
+            WaitVerdict::Fault(kind) => {
+                recover_channel(drv, sys, ch, base, armed_len, kind, retries, recovery_ns)?;
+            }
+            WaitVerdict::TimedOut => {
+                let peer_err = peer
+                    .and_then(|(pch, ..)| sys.port(drv.port).chan(pch).error().map(|k| (pch, k)));
+                match (peer_err, peer) {
+                    (Some((pch, kind)), Some((_, pbase, plen))) => {
+                        recover_channel(
+                            drv, sys, pch, pbase, plen, kind, retries, recovery_ns,
+                        )?;
+                    }
+                    _ => {
+                        // No attributable error: fail fast (see module doc).
+                        return Err(DriverError::Faulted {
+                            ch: ch.paper_name(),
+                            retries: *retries,
+                            kind: None,
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// [`complete`] with the watchdog + reset/retry recovery machinery.
+fn complete_recover(
+    drv: &mut Driver,
+    sys: &mut System,
+    token: SubmitToken,
+    mode: WaitMode,
+) -> Result<TransferReport, DriverError> {
+    let SubmitToken { t0, tx_bytes, rx_bytes } = token;
+    let tx_base = drv.tx_buf(0).addr;
+    let rx_base = drv.rx_buf(0).addr;
+    let mut retries = 0u32;
+    let mut recovery_ns = 0u64;
+    let rx_peer = (rx_bytes > 0).then_some((Channel::S2mm, rx_base, rx_bytes));
+    wait_recover(
+        drv,
+        sys,
+        mode,
+        Channel::Mm2s,
+        tx_base,
+        tx_bytes,
+        rx_peer,
+        &mut retries,
+        &mut recovery_ns,
+    )?;
+    let tx_time = sys.now().since(t0);
+
+    let rx_time = if rx_bytes > 0 {
+        wait_recover(
+            drv,
+            sys,
+            mode,
+            Channel::S2mm,
+            rx_base,
+            rx_bytes,
+            None,
+            &mut retries,
+            &mut recovery_ns,
+        )?;
+        sys.cpu_copy(rx_bytes, CopyKind::UserUncached);
+        sys.now().since(t0)
+    } else {
+        Dur::ZERO
+    };
+
+    let outcome = if retries == 0 {
+        TransferOutcome::Completed
+    } else {
+        TransferOutcome::Recovered { retries, recovery_ns }
+    };
+    Ok(TransferReport { tx_bytes, rx_bytes, tx_time, rx_time, ledger: CpuLedger::default(), outcome })
 }
 
 /// Unique mode: one staging copy, one simple-mode transfer per direction
@@ -166,6 +334,9 @@ fn blocks(
     }
     let t0 = sys.now();
     let port = drv.port;
+    let recovering = sys.faults.is_active();
+    let mut retries = 0u32;
+    let mut recovery_ns = 0u64;
 
     let n = tx_bytes.div_ceil(chunk).max(1);
     let tx_cut = cuts(tx_bytes, n);
@@ -173,9 +344,11 @@ fn blocks(
     sys.cpu_exec(Dur(sys.cfg.user_setup_ns));
 
     // Arm the whole RX payload up front.
+    let rx_base = drv.rx_buf(0).addr;
     if rx_bytes > 0 {
-        arm_simple(sys, port, Channel::S2mm, drv.rx_buf(0).addr, rx_bytes);
+        arm_simple(sys, port, Channel::S2mm, rx_base, rx_bytes);
     }
+    let rx_peer = (rx_bytes > 0).then_some((Channel::S2mm, rx_base, rx_bytes));
 
     // TX pipeline: stage chunk 0, then overlap.
     sys.cpu_copy(tx_cut[0], CopyKind::UserUncached);
@@ -189,7 +362,22 @@ fn blocks(
         if staged_ahead {
             sys.cpu_copy(tx_cut[i + 1], CopyKind::UserUncached);
         }
-        tx_done = wait(sys, port, Channel::Mm2s, mode)?;
+        tx_done = if recovering {
+            wait_recover(
+                drv,
+                sys,
+                mode,
+                Channel::Mm2s,
+                drv.tx_buf(i).addr,
+                tx_cut[i],
+                rx_peer,
+                &mut retries,
+                &mut recovery_ns,
+            )?;
+            sys.now()
+        } else {
+            wait(sys, port, Channel::Mm2s, mode)?
+        };
         if i + 1 < n as usize {
             if !staged_ahead {
                 // Single buffer: stage into the just-freed buffer (no
@@ -202,13 +390,32 @@ fn blocks(
     let tx_time = tx_done.since(t0);
 
     let rx_time = if rx_bytes > 0 {
-        wait(sys, port, Channel::S2mm, mode)?;
+        if recovering {
+            wait_recover(
+                drv,
+                sys,
+                mode,
+                Channel::S2mm,
+                rx_base,
+                rx_bytes,
+                None,
+                &mut retries,
+                &mut recovery_ns,
+            )?;
+        } else {
+            wait(sys, port, Channel::S2mm, mode)?;
+        }
         sys.cpu_copy(rx_bytes, CopyKind::UserUncached);
         sys.now().since(t0)
     } else {
         Dur::ZERO
     };
-    Ok(TransferReport { tx_bytes, rx_bytes, tx_time, rx_time, ledger: CpuLedger::default() })
+    let outcome = if retries == 0 {
+        TransferOutcome::Completed
+    } else {
+        TransferOutcome::Recovered { retries, recovery_ns }
+    };
+    Ok(TransferReport { tx_bytes, rx_bytes, tx_time, rx_time, ledger: CpuLedger::default(), outcome })
 }
 
 /// Split `total` into `n` chunk lengths (first chunks take the

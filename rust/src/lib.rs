@@ -14,7 +14,11 @@
 //! We do not have the hardware, so the whole platform is rebuilt as a
 //! calibrated **discrete-event simulator** (see `DESIGN.md`):
 //!
-//! * [`sim`] — event calendar, virtual ns clock, deterministic PRNG;
+//! * [`sim`] — event calendar, virtual ns clock, deterministic PRNG,
+//!   and the seeded fault-injection plan ([`sim::fault`]) that stress-
+//!   tests the drivers with DMA errors, descriptor corruption, lost/
+//!   delayed IRQs and DDR contention bursts — every failure replayable
+//!   from its seed (DESIGN.md §10);
 //! * [`memory`] — DDR3 controller + arbitration, CMA bounce-buffer
 //!   allocator, CPU memcpy cost model;
 //! * [`axi`] — AXI4-Stream FIFOs, scatter-gather descriptors, and the

@@ -9,6 +9,7 @@
 //! psoc-dma ablation-blocks   # Blocks chunk-size sweep
 //! psoc-dma ablation-vgg      # VGG19 failure modes
 //! psoc-dma scaling           # channel-count x pipeline-depth frame throughput
+//! psoc-dma faults            # fault-injection reliability sweep + safety demo
 //! psoc-dma bench             # simulator perf bench -> BENCH_sweeps.json
 //! psoc-dma all               # everything above (estimate plans)
 //! ```
@@ -28,8 +29,8 @@ use anyhow::{bail, Result};
 
 use psoc_dma::config::SimConfig;
 use psoc_dma::coordinator::experiments::{
-    ablation_chunk_sweep, ablation_load, ablation_matrix, ablation_vgg, fig45_sizes,
-    loopback_sweep, scaling_sweep, table1, table1_runtime,
+    ablation_chunk_sweep, ablation_load, ablation_matrix, ablation_vgg, fault_safety_demo,
+    fault_sweep, fig45_sizes, loopback_sweep, scaling_sweep, table1, table1_runtime,
 };
 use psoc_dma::drivers::DriverKind;
 use psoc_dma::report;
@@ -203,6 +204,34 @@ fn run_scaling(cfg: &SimConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Fault-injection reliability sweep: both driver families × a grid of
+/// per-burst DMA error rates (plus descriptor corruption and IRQ loss —
+/// see `fault_sweep`), every run seeded and bit-reproducible, followed
+/// by the deterministic safety demonstration.
+fn run_faults(cfg: &SimConfig, args: &Args) -> Result<()> {
+    let drivers = [DriverKind::UserPolling, DriverKind::KernelIrq];
+    let rates = [0.0, 1e-3, 5e-3, 2e-2];
+    let transfers = if args.quick { 8 } else { 24 };
+    let rows = fault_sweep(cfg, &drivers, &rates, transfers, 256 << 10)?;
+    print!("{}", report::faults_text(&rows));
+    for kind in drivers {
+        let (rec, fail, inj) = report::fault_totals(&rows, kind);
+        println!(
+            "{:<26} totals: {} transfers recovered, {} dropped, {} faults injected",
+            kind.label(),
+            rec,
+            fail,
+            inj
+        );
+    }
+    let demo = fault_safety_demo(cfg)?;
+    print!("{}", report::faults_demo_text(&demo));
+    if let Some(dir) = &args.csv_dir {
+        report::save(&format!("{dir}/faults.csv"), &report::faults_csv(&rows))?;
+    }
+    Ok(())
+}
+
 /// Simulator perf bench: calendar backends + parallel sweep scaling.
 /// Writes `BENCH_sweeps.json` and optionally gates against a baseline.
 fn run_bench(cfg: &SimConfig, args: &Args) -> Result<()> {
@@ -322,6 +351,7 @@ fn main() -> Result<()> {
         "ablation-vgg" => run_ablation_vgg(&cfg)?,
         "ablation-load" => run_ablation_load(&cfg)?,
         "scaling" => run_scaling(&cfg, &args)?,
+        "faults" => run_faults(&cfg, &args)?,
         "bench" => run_bench(&cfg, &args)?,
         "trace" => run_trace(&cfg)?,
         "calibrate" => run_calibrate(&cfg)?,
@@ -340,6 +370,8 @@ fn main() -> Result<()> {
             run_ablation_load(&cfg)?;
             println!();
             run_scaling(&cfg, &args)?;
+            println!();
+            run_faults(&cfg, &args)?;
         }
         other => bail!("unknown command {other}; see the README"),
     }

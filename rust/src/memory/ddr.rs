@@ -191,6 +191,12 @@ pub struct DdrController {
     /// Service-time multiplier >= 1; raised while the CPU spins on the DMA
     /// status register (see `SimConfig::polling_dma_penalty`).
     pub contention_factor: f64,
+    /// Fault-injection hook: extra service-time multiplier applied while
+    /// the simulated clock is before `fault_until` (a modelled burst of
+    /// DDR contention from other masters). Composes multiplicatively
+    /// with `contention_factor`. See [`DdrController::set_fault_window`].
+    fault_factor: f64,
+    fault_until: crate::sim::time::SimTime,
     pub stats: DdrStats,
 }
 
@@ -209,8 +215,18 @@ impl DdrController {
             last_dir: None,
             next_id: 0,
             contention_factor: 1.0,
+            fault_factor: 1.0,
+            fault_until: crate::sim::time::SimTime::ZERO,
             stats: DdrStats { bytes_by_engine: vec![[0; 2]; n], ..DdrStats::default() },
         }
+    }
+
+    /// Open a contention window: bursts granted before `until` are served
+    /// `factor`× slower (fault-injection hook; see [`crate::sim::fault`]).
+    pub fn set_fault_window(&mut self, factor: f64, until: crate::sim::time::SimTime) {
+        debug_assert!(factor >= 1.0);
+        self.fault_factor = factor;
+        self.fault_until = until;
     }
 
     /// Enqueue a burst and poke the arbiter.
@@ -263,8 +279,12 @@ impl DdrController {
                 self.stats.turnarounds += 1;
             }
         }
-        if self.contention_factor > 1.0 {
-            service = service.scaled(self.contention_factor);
+        let mut factor = self.contention_factor;
+        if eng.now() < self.fault_until {
+            factor *= self.fault_factor;
+        }
+        if factor > 1.0 {
+            service = service.scaled(factor);
         }
         self.last_dir = Some(req.dir);
         self.stats.bursts += 1;
@@ -485,6 +505,21 @@ mod tests {
             .position(|(_, c)| c.requester.engine() == Some(E1))
             .expect("engine 1 must be served");
         assert!(pos <= 8, "engine 1 starved until grant {pos}");
+    }
+
+    #[test]
+    fn fault_window_slows_service_until_expiry() {
+        let mut eng = Engine::new();
+        let mut ddr = DdrController::new(&cfg());
+        ddr.set_fault_window(3.0, SimTime(500));
+        // Granted at t=0, inside the window: (100 + 100) × 3 = 600 ns.
+        ddr.submit(&mut eng, DdrDir::Read, 100, Requester::Mm2s(E0));
+        let done = drive(&mut ddr, &mut eng);
+        assert_eq!(done[0].0, SimTime(600));
+        // Granted at t=600, past the window: normal 200 ns service.
+        ddr.submit(&mut eng, DdrDir::Read, 100, Requester::Mm2s(E0));
+        let done = drive(&mut ddr, &mut eng);
+        assert_eq!(done[0].0, SimTime(800));
     }
 
     #[test]

@@ -1,0 +1,596 @@
+//! Fault-injection subsystem: a seeded, deterministic plan of hardware
+//! misbehaviour threaded through the whole transfer stack.
+//!
+//! The paper's headline claim — kernel-level IRQ drivers are "safer
+//! solutions" than user-level polling — is asserted, never stress-tested.
+//! This module supplies the stress: a [`FaultPlan`] injects DMA transfer
+//! errors (the real AXI-DMA DMAIntErr/DMASlvErr/DMADecErr conditions),
+//! descriptor corruption, IRQ edge loss and latency spikes, DDR
+//! contention bursts and sensor frame jitter — either **scheduled** (the
+//! Nth opportunity at a given injection site, for scenario tests) or
+//! **probabilistic** (a per-opportunity rate drawn from seeded PCG32
+//! streams, for sweeps).
+//!
+//! Determinism contract:
+//!
+//! * Every decision depends only on (a) the per-site opportunity counters,
+//!   which advance in event-dispatch order — identical across the wheel
+//!   and heap calendar backends — and (b) per-category PCG32 streams
+//!   derived from [`FaultConfig::seed`]. A run is therefore bit-replayable
+//!   from its seed, and wheel/heap timelines stay bit-identical under
+//!   faults (enforced by `rust/tests/fault_property.rs`).
+//! * An **inactive** plan ([`FaultPlan::none`], or all rates zero with no
+//!   scheduled specs) does no work at any hook: no counter advances, no
+//!   RNG draw, no timing change. The fault-free timeline is bit-identical
+//!   to the pre-subsystem simulator (enforced by
+//!   `rust/tests/engine_equivalence.rs`).
+//!
+//! Injection sites (all called by [`crate::system::System`] or the
+//! channel state machine in [`crate::axi::dma`]):
+//!
+//! | hook                  | opportunity                               |
+//! |-----------------------|-------------------------------------------|
+//! | [`FaultPlan::dma_burst_fault`]  | a DMA burst about to issue to DDR |
+//! | [`FaultPlan::desc_fetch_fault`] | an SG descriptor fetch completing |
+//! | [`FaultPlan::irq_edge`]         | a fabric IRQ edge entering the GIC|
+//! | [`FaultPlan::ddr_window`]       | a DDR burst completing            |
+//! | [`FaultPlan::frame_delay`]      | a sensor frame being handed over  |
+//!
+//! Injecting DMA errors at burst-*issue* time (before any byte or FIFO
+//! token moves) keeps the stream bit-conserved, so a driver can recover
+//! by resetting the channel and re-arming exactly the engine-reported
+//! residue — the same "read the residue, resume from there" contract the
+//! real Xilinx driver uses.
+
+use crate::sim::event::{Channel, EngineId, MAX_ENGINES};
+use crate::sim::rng::Pcg32;
+use crate::sim::time::Dur;
+use crate::util::json::Json;
+
+/// The three DMASR error conditions of the Xilinx AXI-DMA IP (PG021):
+/// internal datamover error, AXI slave response error, address decode
+/// error. [`crate::axi::regs`] maps these onto SR bits 4–6.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DmaErrorKind {
+    Internal,
+    Slave,
+    Decode,
+}
+
+impl DmaErrorKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            DmaErrorKind::Internal => "DMAIntErr",
+            DmaErrorKind::Slave => "DMASlvErr",
+            DmaErrorKind::Decode => "DMADecErr",
+        }
+    }
+}
+
+/// A fault pinned to the Nth opportunity at one injection site —
+/// the scenario-test DSL's "inject X at point T".
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultSpec {
+    /// Error the Nth burst this channel would issue (1-based).
+    DmaError { eng: EngineId, ch: Channel, nth: u64, kind: DmaErrorKind },
+    /// Corrupt the Nth SG descriptor this channel fetches (1-based);
+    /// surfaces as a decode error.
+    DescCorrupt { eng: EngineId, ch: Channel, nth: u64 },
+    /// Drop the Nth fabric IRQ edge (1-based, counted across all lines).
+    IrqLoss { nth: u64 },
+    /// Stretch the Nth fabric IRQ edge's GIC latency by `extra_ns`.
+    IrqSpike { nth: u64, extra_ns: u64 },
+    /// Slow DDR service by `factor` for `dur_ns` starting at the Nth
+    /// completed DDR burst (a background contention burst).
+    DdrBurst { nth: u64, factor: f64, dur_ns: u64 },
+}
+
+/// Probabilistic fault rates + recovery knobs, JSON-configurable under
+/// the `faults` key of [`crate::config::SimConfig`]. All rates are
+/// per-opportunity probabilities in `[0, 1]`; zero disables the class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Seed of the plan's PCG32 streams (independent of the simulator's
+    /// main seed so fault placement can be varied in isolation).
+    pub seed: u64,
+    /// Per-burst probability of a DMA transfer error (kind drawn
+    /// uniformly from the three SR conditions).
+    pub dma_error_rate: f64,
+    /// Per-descriptor-fetch probability of a corrupt BD (decode error).
+    pub desc_corrupt_rate: f64,
+    /// Per-edge probability that a fabric IRQ is lost before the GIC.
+    pub irq_loss_rate: f64,
+    /// Per-edge probability of a GIC latency spike of `irq_spike_ns`.
+    pub irq_spike_rate: f64,
+    pub irq_spike_ns: u64,
+    /// Per-DDR-burst probability of a contention window: service slowed
+    /// by `ddr_burst_factor` for `ddr_burst_ns`.
+    pub ddr_burst_rate: f64,
+    pub ddr_burst_factor: f64,
+    pub ddr_burst_ns: u64,
+    /// Max extra delay per sensor frame (uniform in `[0, n]`; 0 disables).
+    pub frame_jitter_ns: u64,
+    /// Recovery: how many reset/re-arm (or watchdog-rescue) rounds a
+    /// driver may attempt per transfer before failing it.
+    pub retry_limit: u64,
+    /// Recovery: wait watchdog. A poll/sleep/IRQ wait that sees no
+    /// completion within this window reports a timeout to the driver.
+    pub timeout_ns: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0xFA17_5EED,
+            dma_error_rate: 0.0,
+            desc_corrupt_rate: 0.0,
+            irq_loss_rate: 0.0,
+            irq_spike_rate: 0.0,
+            irq_spike_ns: 500_000,
+            ddr_burst_rate: 0.0,
+            ddr_burst_factor: 4.0,
+            ddr_burst_ns: 200_000,
+            frame_jitter_ns: 0,
+            retry_limit: 3,
+            timeout_ns: 500_000_000, // 500 ms of simulated time
+        }
+    }
+}
+
+macro_rules! fault_keys {
+    ($($field:ident : $kind:ident),* $(,)?) => {
+        impl FaultConfig {
+            /// Apply overrides from the nested `faults` JSON object;
+            /// unknown keys are an error.
+            pub fn apply_json(&mut self, v: &Json) -> anyhow::Result<()> {
+                let obj = v
+                    .as_obj()
+                    .ok_or_else(|| anyhow::anyhow!("faults must be a JSON object"))?;
+                for (k, val) in obj {
+                    match k.as_str() {
+                        $(stringify!($field) => {
+                            fault_keys!(@set self, $field, $kind, val, k);
+                        })*
+                        _ => anyhow::bail!("unknown faults key: {k}"),
+                    }
+                }
+                Ok(())
+            }
+
+            pub fn to_json(&self) -> Json {
+                Json::obj(vec![
+                    $((stringify!($field), fault_keys!(@get self, $field, $kind)),)*
+                ])
+            }
+        }
+    };
+    (@set $self:ident, $field:ident, f64, $val:ident, $k:ident) => {
+        $self.$field = $val
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("faults key {} must be a number", $k))?;
+    };
+    (@set $self:ident, $field:ident, u64, $val:ident, $k:ident) => {
+        $self.$field = $val
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("faults key {} must be a non-negative integer", $k))?;
+    };
+    (@get $self:ident, $field:ident, f64) => { Json::num($self.$field) };
+    (@get $self:ident, $field:ident, u64) => { Json::num($self.$field as f64) };
+}
+
+fault_keys! {
+    seed: u64,
+    dma_error_rate: f64,
+    desc_corrupt_rate: f64,
+    irq_loss_rate: f64,
+    irq_spike_rate: f64,
+    irq_spike_ns: u64,
+    ddr_burst_rate: f64,
+    ddr_burst_factor: f64,
+    ddr_burst_ns: u64,
+    frame_jitter_ns: u64,
+    retry_limit: u64,
+    timeout_ns: u64,
+}
+
+impl FaultConfig {
+    /// The disabled configuration (all rates zero).
+    pub fn none() -> Self {
+        FaultConfig::default()
+    }
+
+    /// `retry_limit` clamped into `u32` (the drivers' counter width), so
+    /// an "effectively unlimited" configured value saturates instead of
+    /// truncating to zero.
+    pub fn retry_limit_u32(&self) -> u32 {
+        self.retry_limit.min(u32::MAX as u64) as u32
+    }
+
+    /// Does this configuration ever inject anything probabilistically?
+    pub fn is_active(&self) -> bool {
+        self.dma_error_rate > 0.0
+            || self.desc_corrupt_rate > 0.0
+            || self.irq_loss_rate > 0.0
+            || self.irq_spike_rate > 0.0
+            || self.ddr_burst_rate > 0.0
+            || self.frame_jitter_ns > 0
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, r) in [
+            ("faults.dma_error_rate", self.dma_error_rate),
+            ("faults.desc_corrupt_rate", self.desc_corrupt_rate),
+            ("faults.irq_loss_rate", self.irq_loss_rate),
+            ("faults.irq_spike_rate", self.irq_spike_rate),
+            ("faults.ddr_burst_rate", self.ddr_burst_rate),
+        ] {
+            anyhow::ensure!((0.0..=1.0).contains(&r), "{name} must be in [0, 1]");
+        }
+        anyhow::ensure!(
+            self.ddr_burst_factor >= 1.0,
+            "faults.ddr_burst_factor is a slowdown, must be >= 1"
+        );
+        anyhow::ensure!(self.timeout_ns > 0, "faults.timeout_ns must be > 0");
+        Ok(())
+    }
+}
+
+/// What the plan actually injected (per run). Scenario tests assert on
+/// these; the `faults` CLI reports injected vs recovered.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub dma_errors: u64,
+    pub desc_corruptions: u64,
+    pub irqs_lost: u64,
+    pub irq_spikes: u64,
+    pub ddr_bursts: u64,
+    pub frame_jitters: u64,
+}
+
+impl FaultStats {
+    /// Total faults injected (jitter excluded: it perturbs, not breaks).
+    pub fn total(&self) -> u64 {
+        self.dma_errors + self.desc_corruptions + self.irqs_lost + self.irq_spikes
+            + self.ddr_bursts
+    }
+}
+
+/// Disturbance applied to one fabric IRQ edge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IrqDisturbance {
+    /// The edge is dropped before the GIC ever sees it.
+    pub lost: bool,
+    /// Extra distributor latency (zero when unaffected).
+    pub extra: Dur,
+}
+
+impl IrqDisturbance {
+    const CLEAN: IrqDisturbance = IrqDisturbance { lost: false, extra: Dur::ZERO };
+}
+
+#[inline]
+fn ch_idx(ch: Channel) -> usize {
+    match ch {
+        Channel::Mm2s => 0,
+        Channel::S2mm => 1,
+    }
+}
+
+/// The runtime plan: configuration + scheduled specs + per-site
+/// opportunity counters + seeded RNG streams + injection stats.
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    scheduled: Vec<FaultSpec>,
+    active: bool,
+    burst_count: [[u64; 2]; MAX_ENGINES],
+    fetch_count: [[u64; 2]; MAX_ENGINES],
+    irq_count: u64,
+    ddr_count: u64,
+    frame_count: u64,
+    rng_dma: Pcg32,
+    rng_desc: Pcg32,
+    rng_irq: Pcg32,
+    rng_ddr: Pcg32,
+    rng_frame: Pcg32,
+    pub stats: FaultStats,
+}
+
+impl FaultPlan {
+    /// The inert plan: never injects, never draws, never counts.
+    pub fn none() -> Self {
+        FaultPlan::from_config(&FaultConfig::none())
+    }
+
+    pub fn from_config(cfg: &FaultConfig) -> Self {
+        FaultPlan {
+            active: cfg.is_active(),
+            scheduled: Vec::new(),
+            burst_count: [[0; 2]; MAX_ENGINES],
+            fetch_count: [[0; 2]; MAX_ENGINES],
+            irq_count: 0,
+            ddr_count: 0,
+            frame_count: 0,
+            rng_dma: Pcg32::with_stream(cfg.seed, 0xD3A),
+            rng_desc: Pcg32::with_stream(cfg.seed, 0xDE5C),
+            rng_irq: Pcg32::with_stream(cfg.seed, 0x129),
+            rng_ddr: Pcg32::with_stream(cfg.seed, 0xDD2),
+            rng_frame: Pcg32::with_stream(cfg.seed, 0xF2A),
+            stats: FaultStats::default(),
+            cfg: cfg.clone(),
+        }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Pin a fault to a specific opportunity (scenario tests).
+    pub fn schedule(&mut self, spec: FaultSpec) {
+        self.scheduled.push(spec);
+        self.active = true;
+    }
+
+    /// Force the plan active without scheduling anything: engages the
+    /// drivers' timeout/recovery paths with zero injections (used by the
+    /// zero-cost regression guard and the bare poll-timeout scenario).
+    pub fn arm(&mut self) {
+        self.active = true;
+    }
+
+    /// Is any fault class armed? Drivers switch to their recovery-aware
+    /// wait paths exactly when this is true, so a disabled plan is
+    /// provably timing-neutral.
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// A burst is about to issue on `(eng, ch)`. `Some(kind)` halts the
+    /// channel before any byte or FIFO token moves.
+    pub fn dma_burst_fault(&mut self, eng: EngineId, ch: Channel) -> Option<DmaErrorKind> {
+        if !self.active {
+            return None;
+        }
+        self.burst_count[eng.index()][ch_idx(ch)] += 1;
+        let nth = self.burst_count[eng.index()][ch_idx(ch)];
+        for s in &self.scheduled {
+            if let FaultSpec::DmaError { eng: se, ch: sc, nth: sn, kind } = *s {
+                if se == eng && sc == ch && sn == nth {
+                    self.stats.dma_errors += 1;
+                    return Some(kind);
+                }
+            }
+        }
+        if self.cfg.dma_error_rate > 0.0 && self.rng_dma.chance(self.cfg.dma_error_rate) {
+            self.stats.dma_errors += 1;
+            let kind = match self.rng_dma.next_bounded(3) {
+                0 => DmaErrorKind::Internal,
+                1 => DmaErrorKind::Slave,
+                _ => DmaErrorKind::Decode,
+            };
+            return Some(kind);
+        }
+        None
+    }
+
+    /// An SG descriptor fetch on `(eng, ch)` just completed. `Some` means
+    /// the fetched BD is corrupt: the channel halts with a decode error.
+    pub fn desc_fetch_fault(&mut self, eng: EngineId, ch: Channel) -> Option<DmaErrorKind> {
+        if !self.active {
+            return None;
+        }
+        self.fetch_count[eng.index()][ch_idx(ch)] += 1;
+        let nth = self.fetch_count[eng.index()][ch_idx(ch)];
+        for s in &self.scheduled {
+            if let FaultSpec::DescCorrupt { eng: se, ch: sc, nth: sn } = *s {
+                if se == eng && sc == ch && sn == nth {
+                    self.stats.desc_corruptions += 1;
+                    return Some(DmaErrorKind::Decode);
+                }
+            }
+        }
+        if self.cfg.desc_corrupt_rate > 0.0 && self.rng_desc.chance(self.cfg.desc_corrupt_rate)
+        {
+            self.stats.desc_corruptions += 1;
+            return Some(DmaErrorKind::Decode);
+        }
+        None
+    }
+
+    /// A fabric IRQ edge is entering the GIC: dropped, delayed, or clean.
+    pub fn irq_edge(&mut self) -> IrqDisturbance {
+        if !self.active {
+            return IrqDisturbance::CLEAN;
+        }
+        self.irq_count += 1;
+        let nth = self.irq_count;
+        let mut lost = false;
+        let mut extra = Dur::ZERO;
+        for s in &self.scheduled {
+            match *s {
+                FaultSpec::IrqLoss { nth: sn } if sn == nth => lost = true,
+                FaultSpec::IrqSpike { nth: sn, extra_ns } if sn == nth => {
+                    extra = Dur(extra_ns)
+                }
+                _ => {}
+            }
+        }
+        if !lost && self.cfg.irq_loss_rate > 0.0 && self.rng_irq.chance(self.cfg.irq_loss_rate)
+        {
+            lost = true;
+        }
+        if !lost
+            && extra == Dur::ZERO
+            && self.cfg.irq_spike_rate > 0.0
+            && self.rng_irq.chance(self.cfg.irq_spike_rate)
+        {
+            extra = Dur(self.cfg.irq_spike_ns);
+        }
+        if lost {
+            self.stats.irqs_lost += 1;
+        } else if extra > Dur::ZERO {
+            self.stats.irq_spikes += 1;
+        }
+        IrqDisturbance { lost, extra }
+    }
+
+    /// A DDR burst completed; should a contention window open?
+    /// Returns `(service factor, window duration)`.
+    pub fn ddr_window(&mut self) -> Option<(f64, Dur)> {
+        if !self.active {
+            return None;
+        }
+        self.ddr_count += 1;
+        let nth = self.ddr_count;
+        for s in &self.scheduled {
+            if let FaultSpec::DdrBurst { nth: sn, factor, dur_ns } = *s {
+                if sn == nth {
+                    self.stats.ddr_bursts += 1;
+                    return Some((factor, Dur(dur_ns)));
+                }
+            }
+        }
+        if self.cfg.ddr_burst_rate > 0.0 && self.rng_ddr.chance(self.cfg.ddr_burst_rate) {
+            self.stats.ddr_bursts += 1;
+            return Some((self.cfg.ddr_burst_factor, Dur(self.cfg.ddr_burst_ns)));
+        }
+        None
+    }
+
+    /// Sensor-side frame jitter: extra delay before the next frame is
+    /// handed to the transfer path (uniform in `[0, frame_jitter_ns]`).
+    pub fn frame_delay(&mut self) -> Dur {
+        if !self.active || self.cfg.frame_jitter_ns == 0 {
+            return Dur::ZERO;
+        }
+        self.frame_count += 1;
+        let d = self.rng_frame.range_u64(0, self.cfg.frame_jitter_ns);
+        if d > 0 {
+            self.stats.frame_jitters += 1;
+        }
+        Dur(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const E0: EngineId = EngineId(0);
+
+    #[test]
+    fn inactive_plan_never_counts_or_injects() {
+        let mut p = FaultPlan::none();
+        assert!(!p.is_active());
+        for _ in 0..100 {
+            assert_eq!(p.dma_burst_fault(E0, Channel::Mm2s), None);
+            assert_eq!(p.desc_fetch_fault(E0, Channel::S2mm), None);
+            assert_eq!(p.irq_edge(), IrqDisturbance::CLEAN);
+            assert_eq!(p.ddr_window(), None);
+            assert_eq!(p.frame_delay(), Dur::ZERO);
+        }
+        assert_eq!(p.stats, FaultStats::default());
+        assert_eq!(p.burst_count[0][0], 0, "inactive plan must not even count");
+    }
+
+    #[test]
+    fn scheduled_fault_fires_on_exact_opportunity() {
+        let mut p = FaultPlan::none();
+        p.schedule(FaultSpec::DmaError {
+            eng: E0,
+            ch: Channel::S2mm,
+            nth: 3,
+            kind: DmaErrorKind::Slave,
+        });
+        assert!(p.is_active());
+        // Other channel unaffected.
+        assert_eq!(p.dma_burst_fault(E0, Channel::Mm2s), None);
+        assert_eq!(p.dma_burst_fault(E0, Channel::S2mm), None);
+        assert_eq!(p.dma_burst_fault(E0, Channel::S2mm), None);
+        assert_eq!(p.dma_burst_fault(E0, Channel::S2mm), Some(DmaErrorKind::Slave));
+        assert_eq!(p.dma_burst_fault(E0, Channel::S2mm), None, "fires exactly once");
+        assert_eq!(p.stats.dma_errors, 1);
+    }
+
+    #[test]
+    fn probabilistic_plan_replays_from_seed() {
+        let mut cfg = FaultConfig::default();
+        cfg.dma_error_rate = 0.1;
+        cfg.irq_loss_rate = 0.05;
+        cfg.ddr_burst_rate = 0.02;
+        let run = |cfg: &FaultConfig| {
+            let mut p = FaultPlan::from_config(cfg);
+            let mut log = Vec::new();
+            for _ in 0..500u64 {
+                log.push((
+                    p.dma_burst_fault(E0, Channel::Mm2s),
+                    p.irq_edge(),
+                    p.ddr_window().map(|(f, d)| (f.to_bits(), d)),
+                ));
+            }
+            (log, p.stats)
+        };
+        assert_eq!(run(&cfg), run(&cfg));
+        let mut other = cfg.clone();
+        other.seed ^= 1;
+        assert_ne!(run(&cfg).0, run(&other).0, "different seed, different story");
+    }
+
+    #[test]
+    fn rates_actually_fire_roughly_proportionally() {
+        let mut cfg = FaultConfig::default();
+        cfg.dma_error_rate = 0.2;
+        let mut p = FaultPlan::from_config(&cfg);
+        let mut hits = 0;
+        for _ in 0..2_000 {
+            if p.dma_burst_fault(E0, Channel::Mm2s).is_some() {
+                hits += 1;
+            }
+        }
+        assert!((300..=500).contains(&hits), "0.2 rate fired {hits}/2000");
+        assert_eq!(p.stats.dma_errors, hits);
+    }
+
+    #[test]
+    fn scheduled_irq_spike_and_loss() {
+        let mut p = FaultPlan::none();
+        p.schedule(FaultSpec::IrqLoss { nth: 1 });
+        p.schedule(FaultSpec::IrqSpike { nth: 2, extra_ns: 777 });
+        assert!(p.irq_edge().lost);
+        let d = p.irq_edge();
+        assert!(!d.lost);
+        assert_eq!(d.extra, Dur(777));
+        assert_eq!(p.irq_edge(), IrqDisturbance::CLEAN);
+        assert_eq!(p.stats.irqs_lost, 1);
+        assert_eq!(p.stats.irq_spikes, 1);
+    }
+
+    #[test]
+    fn config_json_roundtrip_and_unknown_key() {
+        let mut cfg = FaultConfig::default();
+        cfg.dma_error_rate = 0.25;
+        cfg.retry_limit = 7;
+        let json = cfg.to_json();
+        let mut back = FaultConfig::default();
+        back.apply_json(&json).unwrap();
+        assert_eq!(cfg, back);
+        let mut bad = FaultConfig::default();
+        assert!(bad
+            .apply_json(&Json::parse(r#"{"dma_errorrate": 0.5}"#).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let mut cfg = FaultConfig::default();
+        cfg.dma_error_rate = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = FaultConfig::default();
+        cfg.ddr_burst_factor = 0.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = FaultConfig::default();
+        cfg.timeout_ns = 0;
+        assert!(cfg.validate().is_err());
+        FaultConfig::default().validate().unwrap();
+    }
+}

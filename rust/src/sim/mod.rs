@@ -2,6 +2,7 @@
 
 pub mod engine;
 pub mod event;
+pub mod fault;
 pub mod rng;
 pub mod time;
 pub mod trace;
@@ -9,5 +10,6 @@ pub mod wheel;
 
 pub use engine::{CalendarKind, Engine};
 pub use event::{Channel, Event};
+pub use fault::{DmaErrorKind, FaultConfig, FaultPlan, FaultSpec, FaultStats};
 pub use time::{Dur, SimTime};
 pub use wheel::TimeWheel;

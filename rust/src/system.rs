@@ -31,7 +31,7 @@
 
 use crate::accel::{LayerTiming, PlDevice};
 use crate::axi::descriptor::Descriptor;
-use crate::axi::dma::{DmaChannelEngine, DmaMode};
+use crate::axi::dma::{DmaChannelEngine, DmaIrq, DmaMode};
 use crate::axi::regs::{self, DmaRegFile, RegError};
 use crate::axi::stream::ByteFifo;
 use crate::config::SimConfig;
@@ -41,6 +41,7 @@ use crate::os::costs::OsCosts;
 use crate::os::sched::Scheduler;
 use crate::sim::engine::Engine;
 use crate::sim::event::{Channel, EngineId, Event, IrqLine};
+use crate::sim::fault::{DmaErrorKind, FaultPlan};
 use crate::sim::time::{Dur, SimTime};
 use crate::sim::trace::Trace;
 
@@ -97,6 +98,21 @@ impl std::fmt::Display for SimError {
 
 impl std::error::Error for SimError {}
 
+/// What a timeout-aware wait observed (the recovery-path primitives
+/// [`System::poll_wait_timeout_on`], [`System::sleep_wait_timeout_on`]
+/// and [`System::irq_wait_timeout_on`]). These waits engage only while a
+/// fault plan is active; the legacy waits keep their exact semantics.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum WaitVerdict {
+    /// The channel completed normally.
+    Done,
+    /// The channel halted on a latched DMA error.
+    Fault(DmaErrorKind),
+    /// Nothing observable happened within the wait watchdog
+    /// (`SimConfig::faults.timeout_ns`).
+    TimedOut,
+}
+
 /// CPU-time ledger for one run: the paper's qualitative "CPU is freed for
 /// other tasks" argument, made quantitative.
 #[derive(Clone, Copy, Debug, Default)]
@@ -145,14 +161,14 @@ impl DmaPort {
         }
     }
 
-    fn chan(&self, ch: Channel) -> &DmaChannelEngine {
+    pub fn chan(&self, ch: Channel) -> &DmaChannelEngine {
         match ch {
             Channel::Mm2s => &self.mm2s,
             Channel::S2mm => &self.s2mm,
         }
     }
 
-    fn chan_mut(&mut self, ch: Channel) -> &mut DmaChannelEngine {
+    pub fn chan_mut(&mut self, ch: Channel) -> &mut DmaChannelEngine {
         match ch {
             Channel::Mm2s => &mut self.mm2s,
             Channel::S2mm => &mut self.s2mm,
@@ -181,6 +197,10 @@ pub struct System {
     pub copy: CopyModel,
     pub sched: Scheduler,
     pub ledger: CpuLedger,
+    /// Fault-injection plan (built from `SimConfig::faults`; inert by
+    /// default). Scenario tests pin extra faults with
+    /// [`crate::sim::fault::FaultPlan::schedule`] before running.
+    pub faults: FaultPlan,
     /// Optional timeline recorder (see [`crate::sim::trace`]).
     pub trace: Option<Trace>,
     /// Reusable descriptor-chain buffer: drivers building per-transfer BD
@@ -213,6 +233,7 @@ impl System {
             copy: CopyModel::new(&cfg),
             sched: Scheduler::new(timeslice),
             ledger: CpuLedger::default(),
+            faults: FaultPlan::from_config(&cfg.faults),
             trace: None,
             desc_scratch: Vec::new(),
             cfg,
@@ -316,6 +337,13 @@ impl System {
         match ev {
             Event::DdrIssue => self.ddr.issue(&mut self.eng),
             Event::DdrDone { req } => {
+                // Fault hook: a completed burst may open a DDR
+                // contention window (other masters hammering the
+                // controller) that slows subsequent service.
+                if let Some((factor, dur)) = self.faults.ddr_window() {
+                    let until = self.eng.now() + dur;
+                    self.ddr.set_fault_window(factor, until);
+                }
                 let c = self.ddr.complete(&mut self.eng, req);
                 if let Some(t) = &mut self.trace {
                     let now = self.eng.now();
@@ -341,12 +369,9 @@ impl System {
                             &mut self.ddr,
                             &mut port.mm2s_fifo,
                             c.bytes,
+                            &mut self.faults,
                         );
-                        if irq {
-                            port.regs.latch_ioc(Channel::Mm2s);
-                            let line = irq_line(e, Channel::Mm2s);
-                            self.eng.schedule_now(Event::IrqRaise { line });
-                        }
+                        self.route_dma_irq(e, Channel::Mm2s, irq);
                     }
                     Requester::S2mm(e) => {
                         let port = &mut self.ports[e.index()];
@@ -355,25 +380,35 @@ impl System {
                             &mut self.ddr,
                             &mut port.s2mm_fifo,
                             c.bytes,
+                            &mut self.faults,
                         );
-                        if irq {
-                            port.regs.latch_ioc(Channel::S2mm);
-                            let line = irq_line(e, Channel::S2mm);
-                            self.eng.schedule_now(Event::IrqRaise { line });
-                        }
+                        self.route_dma_irq(e, Channel::S2mm, irq);
                     }
                     Requester::Cpu => {} // background traffic, fire-and-forget
                 }
             }
             Event::DmaKick { eng, ch } => {
                 let port = &mut self.ports[eng.index()];
-                match ch {
+                let err = match ch {
                     Channel::Mm2s => {
-                        port.mm2s.kick(&mut self.eng, &mut self.ddr, &mut port.mm2s_fifo)
+                        port.mm2s.kick(
+                            &mut self.eng,
+                            &mut self.ddr,
+                            &mut port.mm2s_fifo,
+                            &mut self.faults,
+                        )
                     }
                     Channel::S2mm => {
-                        port.s2mm.kick(&mut self.eng, &mut self.ddr, &mut port.s2mm_fifo)
+                        port.s2mm.kick(
+                            &mut self.eng,
+                            &mut self.ddr,
+                            &mut port.s2mm_fifo,
+                            &mut self.faults,
+                        )
                     }
+                };
+                if err.is_some() {
+                    self.route_dma_irq(eng, ch, DmaIrq::Error);
                 }
             }
             Event::DevKick { eng } => {
@@ -381,8 +416,17 @@ impl System {
                 port.device.advance(&mut self.eng, &mut port.mm2s_fifo, &mut port.s2mm_fifo)
             }
             Event::IrqRaise { line } => {
-                let gic = self.costs.gic_latency();
-                self.eng.schedule(gic, Event::IrqDispatch { line });
+                // Fault hooks: the edge may be dropped before the GIC
+                // sees it, or its distributor latency stretched.
+                let d = self.faults.irq_edge();
+                if d.lost {
+                    if let Some(t) = &mut self.trace {
+                        t.instant("irq", format!("line {} edge LOST", line.0), self.eng.now().ns());
+                    }
+                } else {
+                    let gic = self.costs.gic_latency() + d.extra;
+                    self.eng.schedule(gic, Event::IrqDispatch { line });
+                }
             }
             Event::IrqDispatch { line } => {
                 let (e, ch) = irq_line_owner(line);
@@ -416,6 +460,38 @@ impl System {
             }
         }
         true
+    }
+
+    /// Latch the register-file condition for a channel interrupt and
+    /// pulse its fabric IRQ line.
+    fn route_dma_irq(&mut self, e: EngineId, ch: Channel, irq: DmaIrq) {
+        match irq {
+            DmaIrq::None => {}
+            DmaIrq::Complete => {
+                let port = &mut self.ports[e.index()];
+                port.regs.latch_ioc(ch);
+                let line = irq_line(e, ch);
+                self.eng.schedule_now(Event::IrqRaise { line });
+            }
+            DmaIrq::Error => {
+                let port = &mut self.ports[e.index()];
+                let kind = port.chan(ch).error().expect("error IRQ without error state");
+                port.regs.latch_error(ch, kind);
+                // The condition always latches; the fabric edge fires
+                // only when the channel has error interrupts enabled
+                // (DMACR[14] / the kernel dmaengine contract) — a
+                // polling-driver channel generates no edge, as on the
+                // real IP.
+                if port.chan(ch).err_irq_enabled() {
+                    let line = irq_line(e, ch);
+                    self.eng.schedule_now(Event::IrqRaise { line });
+                }
+                if let Some(t) = &mut self.trace {
+                    let name = format!("eng{} {} {}", e.0, ch.name(), kind.label());
+                    t.instant("irq", name, self.eng.now().ns());
+                }
+            }
+        }
     }
 
     /// Drain the calendar completely (hardware settles).
@@ -524,6 +600,9 @@ impl System {
         self.cpu_exec(Dur(regs * self.cfg.reg_write_ns));
         let port = &mut self.ports[e.index()];
         port.irq_delivered[ch_index(ch)] = false;
+        // The kernel dmaengine always runs with error interrupts enabled
+        // (register-file-programmed channels set this from DMACR[14]).
+        port.chan_mut(ch).set_err_irq_enabled(true);
         port.chan_mut(ch).program(&mut self.eng, mode, descs);
     }
 
@@ -717,6 +796,197 @@ impl System {
             );
         }
         Ok(self.eng.now())
+    }
+
+    // ------------------------------------------------------------------
+    // Timeout-aware waits (fault-recovery primitives)
+    // ------------------------------------------------------------------
+    //
+    // These mirror the legacy waits bit-for-bit on the completion path —
+    // same stepping order, same poll-boundary quantization, same jitter
+    // draws — and add two extra outcomes: a latched channel error, and a
+    // watchdog timeout after `SimConfig::faults.timeout_ns`. Drivers use
+    // them only while the fault plan is active, which is what makes the
+    // disabled subsystem provably timing-neutral.
+
+    /// [`System::poll_wait_on`] with error/timeout detection: spin on the
+    /// status register until the channel completes, halts on an error, or
+    /// the watchdog expires.
+    pub fn poll_wait_timeout_on(
+        &mut self,
+        e: EngineId,
+        ch: Channel,
+        timeout: Dur,
+    ) -> Result<WaitVerdict, SimError> {
+        let start = self.eng.now();
+        let soft = start + timeout;
+        let hard = start + Dur(self.cfg.wait_deadline_ns);
+        self.ddr.contention_factor = self.cfg.polling_dma_penalty;
+        let verdict = loop {
+            let chan = self.ports[e.index()].chan(ch);
+            if let Some(kind) = chan.error() {
+                break WaitVerdict::Fault(kind);
+            }
+            if chan.is_done() {
+                break WaitVerdict::Done;
+            }
+            if self.eng.now() >= soft {
+                break WaitVerdict::TimedOut;
+            }
+            match self.eng.peek_time() {
+                Some(t) if t <= soft => {
+                    if !self.step() || self.eng.now() > hard {
+                        self.ddr.contention_factor = 1.0;
+                        return Err(self.blocked(e, ch));
+                    }
+                }
+                _ => {
+                    // Nothing can change before the watchdog: the spin
+                    // runs it out observing a frozen status register.
+                    self.drain_to(soft);
+                    break WaitVerdict::TimedOut;
+                }
+            }
+        };
+        self.ddr.contention_factor = 1.0;
+        // The observation lands on the next poll boundary, exactly like
+        // the legacy poll wait.
+        let done_at = self.eng.now();
+        let period = self.cfg.reg_read_ns + self.cfg.poll_loop_overhead_ns;
+        let elapsed = done_at.since(start).ns();
+        let iters = elapsed.div_ceil(period).max(1);
+        let observed = start + Dur(iters * period);
+        self.drain_to(observed.max(done_at));
+        self.ledger.busy += self.eng.now().since(start);
+        self.ledger.poll_reads += iters;
+        Ok(verdict)
+    }
+
+    /// [`System::sleep_wait_on`] with error/timeout detection.
+    pub fn sleep_wait_timeout_on(
+        &mut self,
+        e: EngineId,
+        ch: Channel,
+        timeout: Dur,
+    ) -> Result<WaitVerdict, SimError> {
+        let start = self.eng.now();
+        let soft = start + timeout;
+        let hard = start + Dur(self.cfg.wait_deadline_ns);
+        loop {
+            // Check the status register.
+            self.cpu_exec(Dur(self.cfg.reg_read_ns));
+            let chan = self.ports[e.index()].chan(ch);
+            if let Some(kind) = chan.error() {
+                return Ok(WaitVerdict::Fault(kind));
+            }
+            if chan.is_done() {
+                return Ok(WaitVerdict::Done);
+            }
+            if self.eng.now() >= soft {
+                return Ok(WaitVerdict::TimedOut);
+            }
+            if self.eng.now() > hard {
+                return Err(self.blocked(e, ch));
+            }
+            // usleep(): trap in, switch away, sleep, switch back.
+            let entry = self.costs.syscall_entry();
+            self.cpu_exec(entry);
+            let cs = self.costs.ctx_switch();
+            self.cpu_exec(cs);
+            self.cpu_yield(Dur(self.cfg.sched_poll_period_ns));
+            let back = self.costs.ctx_switch() + self.costs.syscall_exit();
+            self.cpu_exec(back);
+            self.ledger.sleep_cycles += 1;
+        }
+    }
+
+    /// [`System::irq_wait_on`] with a `wait_event_timeout`-style watchdog:
+    /// block until the channel's interrupt is delivered (then pay the
+    /// ISR + wake path and report `Done` or the latched `Fault`), or wake
+    /// on the timer after `timeout` with `TimedOut`.
+    pub fn irq_wait_timeout_on(
+        &mut self,
+        e: EngineId,
+        ch: Channel,
+        timeout: Dur,
+    ) -> Result<WaitVerdict, SimError> {
+        let idx = ch_index(ch);
+        let start = self.eng.now();
+        let soft = start + timeout;
+        let hard = start + Dur(self.cfg.wait_deadline_ns);
+        loop {
+            let mut timed_out = false;
+            let wait_from = self.eng.now();
+            while !self.ports[e.index()].irq_delivered[idx] {
+                match self.eng.peek_time() {
+                    Some(t) if t <= soft => {
+                        if !self.step() || self.eng.now() > hard {
+                            return Err(self.blocked(e, ch));
+                        }
+                    }
+                    _ => {
+                        // Clamp: a spurious wakeup's ISR costs may have
+                        // pushed the clock past the watchdog already.
+                        let target = soft.max(self.eng.now());
+                        self.drain_to(target);
+                        timed_out = true;
+                        break;
+                    }
+                }
+            }
+            let waited = self.eng.now().since(wait_from);
+            self.ledger.freed += waited;
+            self.ledger.used_by_tasks += self.sched.run_for(waited);
+            if timed_out {
+                // The sleep timer fired instead of the ISR: wake + switch in.
+                let wake = self.costs.wake_and_switch();
+                self.cpu_exec(wake);
+                return Ok(WaitVerdict::TimedOut);
+            }
+            let port = &mut self.ports[e.index()];
+            port.irq_delivered[idx] = false;
+            port.chan_mut(ch).ack_irq();
+            let isr = self.costs.isr();
+            self.cpu_exec(isr);
+            let wake = self.costs.wake_and_switch();
+            self.cpu_exec(wake);
+            if let Some(kind) = self.ports[e.index()].chan(ch).error() {
+                // The ISR read SR and found an error condition.
+                self.ports[e.index()].chan_mut(ch).ack_err_irq();
+                return Ok(WaitVerdict::Fault(kind));
+            }
+            if self.ports[e.index()].chan(ch).is_done() {
+                return Ok(WaitVerdict::Done);
+            }
+            // Spurious wakeup: a stale dispatch raced a recovery reset.
+            // The ISR finds neither completion nor error and goes back to
+            // sleep (never taken on the fault-free path, where a
+            // delivered completion IRQ implies the chain is done).
+        }
+    }
+
+    /// Experiment-harness cleanup after a *failed* transfer: drain the
+    /// calendar (bounded by the watchdog when background traffic keeps it
+    /// alive), soft-reset both channels through the register file, drop
+    /// any FIFO residue and reset the PL device, so the next transfer
+    /// starts from clean hardware.
+    pub fn hard_reset_port(&mut self, e: EngineId) {
+        let deadline = self.eng.now() + Dur(self.cfg.wait_deadline_ns);
+        while !self.eng.is_empty() && self.eng.now() < deadline {
+            self.step();
+        }
+        for off in [regs::MM2S_DMACR, regs::S2MM_DMACR] {
+            self.mmio_write_on(e, off, regs::CR_RESET).expect("CR_RESET write");
+        }
+        let port = &mut self.ports[e.index()];
+        for fifo in [&mut port.mm2s_fifo, &mut port.s2mm_fifo] {
+            let lvl = fifo.level();
+            if lvl > 0 {
+                fifo.pop(lvl);
+            }
+        }
+        port.device.reset();
+        port.irq_delivered = [false; 2];
     }
 }
 

@@ -95,6 +95,63 @@ fn ablation_matrix_identical_across_backends() {
     assert_eq!(run(CalendarKind::Wheel), run(CalendarKind::Heap));
 }
 
+/// Zero-cost guard for the fault subsystem: an *armed* fault plan that
+/// never injects anything must leave every timing bit-identical to the
+/// default (inert-plan) run — even though arming switches the drivers
+/// onto their recovery-aware wait paths. With `FaultPlan::none()` the
+/// paths are literally the seed's code, so this is the strong form of
+/// "provably zero-cost when disabled".
+#[test]
+fn armed_but_quiet_fault_plan_is_timing_neutral() {
+    let roundtrip_armed = |kind: DriverKind, bytes: u64| {
+        let cfg = SimConfig::default();
+        let mut sys = System::loopback(cfg.clone());
+        sys.faults.arm(); // active, zero rates, nothing scheduled
+        let mut cma = CmaAllocator::zynq_default();
+        let mut drv = Driver::new(DriverConfig::table1(kind), &mut cma, &cfg, bytes).unwrap();
+        let r = drv.transfer(&mut sys, bytes, bytes).unwrap();
+        (r.tx_time.ns(), r.rx_time.ns(), sys.eng.dispatched)
+    };
+    for kind in DriverKind::ALL {
+        for bytes in [4096u64, 256 * 1024, 2 << 20] {
+            let baseline = roundtrip(&SimConfig::default(), kind, bytes);
+            let armed = roundtrip_armed(kind, bytes);
+            assert_eq!(armed, baseline, "{kind:?} at {bytes}B: armed quiet plan perturbed timing");
+        }
+    }
+}
+
+/// Scheduled faults dispatch identically on both calendar backends (the
+/// broader randomized form lives in `rust/tests/fault_property.rs`).
+#[test]
+fn faulted_run_identical_across_backends() {
+    use psoc_dma::sim::event::{Channel, EngineId};
+    use psoc_dma::sim::fault::{DmaErrorKind, FaultSpec};
+    let run = |kind: CalendarKind| {
+        let mut cfg = cfg_with(kind);
+        cfg.faults.timeout_ns = 5_000_000;
+        let mut sys = System::loopback(cfg.clone());
+        sys.faults.schedule(FaultSpec::DmaError {
+            eng: EngineId::ZERO,
+            ch: Channel::S2mm,
+            nth: 2,
+            kind: DmaErrorKind::Slave,
+        });
+        let mut cma = CmaAllocator::zynq_default();
+        let bytes = 256 * 1024;
+        let mut drv = Driver::new(
+            DriverConfig::table1(DriverKind::UserPolling),
+            &mut cma,
+            &cfg,
+            bytes,
+        )
+        .unwrap();
+        let r = drv.transfer(&mut sys, bytes, bytes).unwrap();
+        (r.tx_time.ns(), r.rx_time.ns(), sys.eng.dispatched, sys.faults.stats.dma_errors)
+    };
+    assert_eq!(run(CalendarKind::Wheel), run(CalendarKind::Heap));
+}
+
 #[test]
 fn jittered_runs_identical_across_backends() {
     // With OS jitter enabled the RNG draw *order* matters: identical
