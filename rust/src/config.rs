@@ -13,6 +13,7 @@ use std::path::Path;
 use crate::sim::engine::CalendarKind;
 use crate::sim::fault::FaultConfig;
 use crate::util::json::Json;
+use crate::workload::WorkloadConfig;
 
 /// All model constants. Units are in the field names: `_ns` = nanoseconds,
 /// `_bps` = bytes/second, `_bytes` = bytes, `_hz` = Hertz.
@@ -171,6 +172,11 @@ pub struct SimConfig {
     /// the fault-free timeline is bit-identical with or without it
     /// (enforced by `rust/tests/engine_equivalence.rs`).
     pub faults: FaultConfig,
+    /// Multi-tenant serving workload (see [`crate::workload`]): tenant
+    /// count, arrival processes, rates, deadlines, queue bounds, shed
+    /// and QoS policies. Only the `serve`/`serve-sweep` paths read it;
+    /// every other experiment is unaffected by these knobs.
+    pub workload: WorkloadConfig,
 }
 
 impl Default for SimConfig {
@@ -239,6 +245,7 @@ impl Default for SimConfig {
             os_jitter_frac: 0.0,
             calendar: CalendarKind::Wheel,
             faults: FaultConfig::none(),
+            workload: WorkloadConfig::default(),
         }
     }
 }
@@ -303,9 +310,13 @@ macro_rules! config_fields {
     (@set $self:ident, $field:ident, faults, $val:ident, $k:ident) => {
         $self.$field.apply_json($val)?;
     };
+    (@set $self:ident, $field:ident, workload, $val:ident, $k:ident) => {
+        $self.$field.apply_json($val)?;
+    };
     (@get $self:ident, $field:ident, f64) => { Json::num($self.$field) };
     (@get $self:ident, $field:ident, u64) => { Json::num($self.$field as f64) };
     (@get $self:ident, $field:ident, faults) => { $self.$field.to_json() };
+    (@get $self:ident, $field:ident, workload) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, vec_u64) => {
         Json::Arr($self.$field.iter().map(|&x| Json::num(x as f64)).collect())
     };
@@ -361,6 +372,7 @@ config_fields! {
     os_jitter_frac: f64,
     calendar: calendar,
     faults: faults,
+    workload: workload,
 }
 
 impl SimConfig {
@@ -432,6 +444,7 @@ impl SimConfig {
             "os_jitter_frac must be in [0, 0.5]"
         );
         self.faults.validate()?;
+        self.workload.validate()?;
         Ok(())
     }
 }
@@ -548,6 +561,29 @@ mod tests {
         assert!(cfg.apply_json(&Json::parse(r#"{"faults": {"bogus": 1}}"#).unwrap()).is_err());
         let mut cfg = SimConfig::default();
         cfg.faults.dma_error_rate = 2.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn workload_key_roundtrips_and_validates() {
+        let mut cfg = SimConfig::default();
+        cfg.apply_json(
+            &Json::parse(r#"{"workload": {"tenants": 6, "policy": "edf", "queue_cap": 3}}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.tenants, 6);
+        assert_eq!(cfg.workload.queue_cap, 3);
+        cfg.validate().unwrap();
+        let json = cfg.to_json();
+        let mut cfg2 = SimConfig::default();
+        cfg2.apply_json(&json).unwrap();
+        assert_eq!(cfg, cfg2);
+        // Unknown nested key and out-of-range value both rejected.
+        let mut cfg = SimConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"workload": {"bogus": 1}}"#).unwrap()).is_err());
+        let mut cfg = SimConfig::default();
+        cfg.workload.queue_cap = 0;
         assert!(cfg.validate().is_err());
     }
 

@@ -196,11 +196,7 @@ pub(crate) fn scaling_cell(
         .map(|p| p.timing.tx_bytes.max(p.timing.rx_bytes))
         .max()
         .expect("empty plan");
-    let mut sys = System::nullhop(c.clone());
-    let mut cma = CmaAllocator::zynq_default();
-    let mut drvs: Vec<Driver> = (0..channels)
-        .map(|i| Driver::new_on(DriverConfig::table1(kind), &mut cma, &c, max, EngineId(i as u8)))
-        .collect::<Result<_, _>>()?;
+    let (mut sys, mut cma, mut drvs) = pipeline::nullhop_pool(&c, kind, max)?;
     let report = run_batch(
         &mut sys,
         &mut drvs,
@@ -209,9 +205,7 @@ pub(crate) fn scaling_cell(
         frames,
         PipelineOpts::new(channels, depth),
     )?;
-    for d in drvs {
-        d.release(&mut cma);
-    }
+    pipeline::release_pool(&mut cma, drvs);
     Ok(report)
 }
 

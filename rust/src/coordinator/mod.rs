@@ -8,20 +8,26 @@
 //!   loop-back size sweep (Fig. 4/5), the RoShamBo frame timing
 //!   (Table I), the channel-count × pipeline-depth scaling grid, and the
 //!   ablations (buffering, partitioning, VGG19 blocking);
+//! * [`serve`] — the multi-tenant serving loop: workload generators →
+//!   admission → QoS policy → the split-phase frame pipeline, the
+//!   execution mode behind the `serve` CLI command (DESIGN.md §11);
 //! * [`sweeps`] — the parallel grid executor: shards any experiment grid
 //!   across scoped worker threads with deterministic per-cell seeds and
-//!   grid-order merging, plus the `bench` harness behind CI's
-//!   perf-regression gate (`BENCH_sweeps.json`).
+//!   grid-order merging, the `serve_sweep` capacity-planning grid, plus
+//!   the `bench` harness behind CI's perf-regression gate
+//!   (`BENCH_sweeps.json`).
 
 pub mod calibrate;
 pub mod experiments;
 pub mod pipeline;
+pub mod serve;
 pub mod sweeps;
 
 pub use experiments::{loopback_sweep, scaling_sweep, table1, ScalingRow, SweepRow, Table1Row};
+pub use serve::serve;
 pub use sweeps::{
-    bench, cell_seed, loopback_sweep_parallel, run_cells, scaling_sweep_parallel, BenchOptions,
-    BenchReport, SweepStats,
+    bench, cell_seed, loopback_sweep_parallel, run_cells, scaling_sweep_parallel, serve_sweep,
+    BenchOptions, BenchReport, ServeSweepRow, SweepStats,
 };
 pub use pipeline::{
     plan_from_estimates, plan_with_runtime, run_batch, run_frame, BatchReport, ChannelPolicy,

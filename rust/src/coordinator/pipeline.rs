@@ -34,7 +34,8 @@ use crate::accel::nullhop::LayerTiming;
 use crate::cnn::encoding::{encoded_len, quantize_q88, sparsity};
 use crate::cnn::layer::NetDesc;
 use crate::config::SimConfig;
-use crate::drivers::{Driver, DriverError, DriverKind, TransferReport};
+use crate::drivers::{Driver, DriverConfig, DriverError, DriverKind, TransferReport};
+use crate::memory::buffer::CmaAllocator;
 use crate::runtime::Runtime;
 use crate::sim::event::EngineId;
 use crate::sim::time::{Dur, SimTime};
@@ -163,7 +164,8 @@ impl FrameReport {
 
 /// CPU cost of the FC head on the PS (simple dot-product model: ~2 ops
 /// per weight on the A9 at ~2 ops/cycle → ~1 weight/cycle @ 666 MHz).
-fn fc_cpu_cost(net: &NetDesc) -> Dur {
+/// `pub(crate)`: the serving loop pays the same per-frame head cost.
+pub(crate) fn fc_cpu_cost(net: &NetDesc) -> Dur {
     let weights = (net.fc_in * net.fc_out) as u64;
     Dur((weights as f64 / 0.666).ceil() as u64)
 }
@@ -205,6 +207,33 @@ pub fn run_frame(
         per_layer,
         frame_time,
     })
+}
+
+/// Build the NullHop engine pool every multi-engine runner consumes: a
+/// system with `cfg.num_engines` NullHop ports plus one Table-I
+/// configured driver bound to each engine, bounce buffers sized for
+/// `max_bytes`. Tear down with [`release_pool`].
+pub fn nullhop_pool(
+    cfg: &SimConfig,
+    kind: DriverKind,
+    max_bytes: u64,
+) -> Result<(System, CmaAllocator, Vec<Driver>), DriverError> {
+    let engines = cfg.num_engines as usize;
+    let sys = System::nullhop(cfg.clone());
+    let mut cma = CmaAllocator::zynq_default();
+    let drivers = (0..engines)
+        .map(|e| {
+            Driver::new_on(DriverConfig::table1(kind), &mut cma, cfg, max_bytes, EngineId(e as u8))
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok((sys, cma, drivers))
+}
+
+/// Return a pool's bounce buffers to the CMA allocator.
+pub fn release_pool(cma: &mut CmaAllocator, drivers: Vec<Driver>) {
+    for d in drivers {
+        d.release(cma);
+    }
 }
 
 // ---------------------------------------------------------------------

@@ -41,8 +41,10 @@ use crate::system::System;
 use crate::util::json::Json;
 
 use crate::cnn::roshambo::roshambo;
+use crate::workload::{QosPolicyKind, ServeReport};
 
 use super::experiments::{scaling_cell, AblationRow, ScalingRow, SweepRow};
+use super::serve::serve;
 
 /// Deterministic per-cell seed: splitmix64 over (base, cell index).
 /// Cells re-seed from this regardless of which worker executes them, so
@@ -251,6 +253,89 @@ pub fn ablation_matrix_parallel(
 }
 
 // ---------------------------------------------------------------------
+// Serve capacity-planning sweep
+// ---------------------------------------------------------------------
+
+/// One cell of the serve sweep: an offered-load level (as a fraction of
+/// the engine pool's measured capacity) × QoS policy × engine count.
+#[derive(Clone, Debug)]
+pub struct ServeSweepRow {
+    /// Offered load as a fraction of `capacity_fps` (the knee shows
+    /// around 1.0).
+    pub load: f64,
+    /// Absolute aggregate offered rate of the cell, frames/sec.
+    pub offered_fps: f64,
+    pub policy: QosPolicyKind,
+    pub engines: usize,
+    /// Back-to-back pipeline capacity of this engine count, frames/sec
+    /// (the denominator of `load`).
+    pub capacity_fps: f64,
+    pub report: ServeReport,
+}
+
+/// Measured saturation throughput of `engines` engines under `kind`: a
+/// short back-to-back `run_batch` burst, the 100%-duty ceiling the sweep
+/// normalises offered load against.
+pub fn capacity_fps(
+    cfg: &SimConfig,
+    kind: DriverKind,
+    engines: usize,
+) -> Result<f64, DriverError> {
+    let net = roshambo();
+    Ok(scaling_cell(cfg, &net, kind, engines, engines, 4 * engines)?.frames_per_sec())
+}
+
+/// The capacity-planning grid behind the `serve-sweep` CLI command:
+/// offered load × policy × engine count, sharded across `workers`
+/// threads in grid order. Every cell reuses the *same* workload seed, so
+/// policies at the same load level face the identical arrival timeline —
+/// that is what makes per-policy fairness/tail columns comparable — and
+/// rows are bit-identical for any worker count (each cell's config is a
+/// pure function of its grid coordinates; the serve loop itself is
+/// deterministic).
+pub fn serve_sweep(
+    cfg: &SimConfig,
+    kind: DriverKind,
+    loads: &[f64],
+    policies: &[QosPolicyKind],
+    engines_list: &[usize],
+    workers: usize,
+) -> Result<Vec<ServeSweepRow>, DriverError> {
+    // Capacities first (cheap, serial): one per engine count.
+    let mut caps = Vec::with_capacity(engines_list.len());
+    for &e in engines_list {
+        caps.push(capacity_fps(cfg, kind, e)?);
+    }
+    let cells: Vec<(usize, f64, QosPolicyKind)> = engines_list
+        .iter()
+        .enumerate()
+        .flat_map(|(ei, _)| {
+            loads.iter().flat_map(move |&load| {
+                policies.iter().map(move |&p| (ei, load, p))
+            })
+        })
+        .collect();
+    let results = run_cells(&cells, workers, |_, &(ei, load, policy)| {
+        let mut c = cfg.clone();
+        c.workload.policy = policy;
+        c.workload.offered_fps = load * caps[ei];
+        serve(&c, kind, engines_list[ei])
+    });
+    let mut rows = Vec::with_capacity(cells.len());
+    for (&(ei, load, policy), rep) in cells.iter().zip(results) {
+        rows.push(ServeSweepRow {
+            load,
+            offered_fps: load * caps[ei],
+            policy,
+            engines: engines_list[ei],
+            capacity_fps: caps[ei],
+            report: rep?,
+        });
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------
 // Bench harness
 // ---------------------------------------------------------------------
 
@@ -292,6 +377,9 @@ pub struct BenchReport {
     pub calendar: Vec<CalendarBench>,
     /// Sweep stats at 1 worker and at `BenchOptions::workers`.
     pub sweeps: Vec<SweepStats>,
+    /// Serving-loop leg: one fixed multi-tenant serve scenario, measured
+    /// as simulator events/sec (the regression gate's third scalar).
+    pub serve: SweepStats,
 }
 
 /// Deep-calendar churn: `events` schedule/pop cycles over a ~1 ms
@@ -339,7 +427,20 @@ pub fn bench(cfg: &SimConfig, opts: BenchOptions) -> Result<BenchReport, DriverE
             loopback_sweep_parallel(cfg, &grid, &DriverKind::ALL, workers)?;
         sweeps.push(stats);
     }
-    Ok(BenchReport { quick: opts.quick, calendar, sweeps })
+
+    // Serving-loop leg: a fixed 4-tenant overload scenario on 2 engines.
+    // Deterministic workload, so the event count is stable and only the
+    // wall time (events/sec) varies run to run.
+    let serve_stats = {
+        let mut c = cfg.clone();
+        c.workload.duration_ns = if opts.quick { 150_000_000 } else { 500_000_000 };
+        c.workload.offered_fps = 240.0;
+        c.workload.tenants = 4;
+        let t0 = Instant::now();
+        let rep = serve(&c, DriverKind::KernelIrq, 2)?;
+        SweepStats { workers: 1, cells: 1, events: rep.events, wall: t0.elapsed() }
+    };
+    Ok(BenchReport { quick: opts.quick, calendar, sweeps, serve: serve_stats })
 }
 
 impl BenchReport {
@@ -383,6 +484,11 @@ impl BenchReport {
         self.sweeps.first().map(|s| s.events_per_sec()).unwrap_or(0.0)
     }
 
+    /// Serving-loop events/sec (the third gated scalar).
+    pub fn serve_events_per_sec(&self) -> f64 {
+        self.serve.events_per_sec()
+    }
+
     pub fn to_json(&self) -> Json {
         let calendar = self
             .calendar
@@ -410,13 +516,19 @@ impl BenchReport {
                 ])
             })
             .collect();
+        let serve = Json::obj(vec![
+            ("events", Json::num(self.serve.events as f64)),
+            ("wall_ms", Json::num(self.serve.wall.as_secs_f64() * 1e3)),
+            ("events_per_sec", Json::num(self.serve.events_per_sec())),
+        ]);
         Json::obj(vec![
-            ("schema", Json::num(1.0)),
+            ("schema", Json::num(2.0)),
             ("quick", Json::Bool(self.quick)),
             ("calendar", Json::Arr(calendar)),
             ("wheel_speedup_over_heap", Json::num(self.wheel_speedup_over_heap())),
             ("sweep", Json::Arr(sweeps)),
             ("sweep_speedup", Json::num(self.sweep_speedup())),
+            ("serve", serve),
         ])
     }
 
@@ -452,6 +564,14 @@ impl BenchReport {
             .as_f64()
             .unwrap_or(0.0);
         check("sweep/1-worker", self.sweep_events_per_sec(), base_sweep);
+        // Schema-1 baselines have no serve leg: `base` stays 0 and the
+        // check self-skips (bootstrap-once, like the whole gate).
+        let base_serve = baseline
+            .get("serve")
+            .get("events_per_sec")
+            .as_f64()
+            .unwrap_or(0.0);
+        check("serve/events", self.serve_events_per_sec(), base_serve);
         regressions
     }
 }
@@ -535,12 +655,14 @@ mod tests {
         assert_eq!(rep.sweeps.len(), 2);
         assert!(rep.wheel_events_per_sec() > 0.0);
         assert!(rep.sweep_speedup() > 0.0);
+        assert!(rep.serve_events_per_sec() > 0.0);
         let json = rep.to_json();
-        assert_eq!(json.get("schema").as_u64(), Some(1));
+        assert_eq!(json.get("schema").as_u64(), Some(2));
         assert_eq!(json.get("calendar").as_arr().unwrap().len(), 2);
+        assert!(json.get("serve").get("events").as_u64().unwrap() > 0);
         // A report never regresses against itself.
         assert!(rep.check_against(&json, 0.2).is_empty());
-        // A 10x-faster fake baseline must flag both metrics.
+        // A 10x-faster fake baseline must flag all three metrics.
         let mut fake = rep.clone();
         for c in &mut fake.calendar {
             c.wall = Duration::from_nanos((c.wall.as_nanos() as u64 / 10).max(1));
@@ -548,7 +670,38 @@ mod tests {
         for s in &mut fake.sweeps {
             s.wall = Duration::from_nanos((s.wall.as_nanos() as u64 / 10).max(1));
         }
+        fake.serve.wall = Duration::from_nanos((fake.serve.wall.as_nanos() as u64 / 10).max(1));
         let flagged = rep.check_against(&fake.to_json(), 0.2);
-        assert_eq!(flagged.len(), 2, "{flagged:?}");
+        assert_eq!(flagged.len(), 3, "{flagged:?}");
+        // A schema-1 baseline (no serve key) self-skips the serve gate.
+        let old = Json::parse(
+            &json.to_string_compact().replace("\"serve\"", "\"serve_unused\""),
+        );
+        if let Ok(old) = old {
+            assert!(rep.check_against(&old, 0.2).is_empty());
+        }
+    }
+
+    #[test]
+    fn serve_sweep_rows_cover_grid_and_are_worker_invariant() {
+        let mut cfg = SimConfig::default();
+        cfg.workload.tenants = 2;
+        cfg.workload.duration_ns = 80_000_000;
+        let loads = [0.5, 2.0];
+        let policies = [QosPolicyKind::Fifo, QosPolicyKind::Drr];
+        let one =
+            serve_sweep(&cfg, DriverKind::UserPolling, &loads, &policies, &[1], 1).unwrap();
+        let four =
+            serve_sweep(&cfg, DriverKind::UserPolling, &loads, &policies, &[1], 4).unwrap();
+        assert_eq!(one.len(), 4);
+        let key = |rows: &[ServeSweepRow]| -> Vec<String> {
+            rows.iter().map(|r| r.report.to_json().to_string_compact()).collect()
+        };
+        assert_eq!(key(&one), key(&four), "serve sweep rows depend on worker count");
+        for r in &one {
+            assert!(r.capacity_fps > 0.0);
+            assert!((r.offered_fps - r.load * r.capacity_fps).abs() < 1e-9);
+            assert!(r.report.total_offered() > 0);
+        }
     }
 }

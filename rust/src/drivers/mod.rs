@@ -75,6 +75,18 @@ impl DriverKind {
     /// post-paper extension and is exercised by the scaling experiments).
     pub const ALL: [DriverKind; 3] =
         [DriverKind::UserPolling, DriverKind::UserScheduled, DriverKind::KernelIrq];
+
+    /// Parse a CLI/config spelling (`serve --driver <s>`). Accepts the
+    /// short forms and the hyphenated full labels.
+    pub fn parse(s: &str) -> Option<DriverKind> {
+        match s {
+            "polling" | "user-polling" => Some(DriverKind::UserPolling),
+            "scheduled" | "user-scheduled" => Some(DriverKind::UserScheduled),
+            "kernel" | "kernel-irq" => Some(DriverKind::KernelIrq),
+            "multiqueue" | "kernel-multiqueue" => Some(DriverKind::KernelMultiQueue),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -345,7 +357,9 @@ impl Driver {
     }
 }
 
-fn diff_ledger(before: CpuLedger, after: CpuLedger) -> CpuLedger {
+/// Ledger delta `after − before` (`pub(crate)`: the serve loop reports
+/// the same six-field delta over a whole run).
+pub(crate) fn diff_ledger(before: CpuLedger, after: CpuLedger) -> CpuLedger {
     CpuLedger {
         busy: after.busy.saturating_sub(before.busy),
         freed: after.freed.saturating_sub(before.freed),
@@ -409,6 +423,15 @@ mod tests {
         let (mut sys, _cma, mut drv) = setup(cfg, 16 << 20);
         let r = drv.transfer(&mut sys, 9 << 20, 9 << 20).unwrap();
         assert_eq!(r.tx_bytes, 9 << 20);
+    }
+
+    #[test]
+    fn parse_accepts_short_and_full_labels() {
+        assert_eq!(DriverKind::parse("polling"), Some(DriverKind::UserPolling));
+        assert_eq!(DriverKind::parse("user-scheduled"), Some(DriverKind::UserScheduled));
+        assert_eq!(DriverKind::parse("kernel"), Some(DriverKind::KernelIrq));
+        assert_eq!(DriverKind::parse("multiqueue"), Some(DriverKind::KernelMultiQueue));
+        assert_eq!(DriverKind::parse("dpdk"), None);
     }
 
     #[test]

@@ -48,10 +48,17 @@
 //!   CNN (HLO text in `artifacts/`) and executes the *numerics* that the
 //!   simulator only times;
 //! * [`coordinator`] — the per-layer pipeline fusing simulated transfer
-//!   timing with real accelerator numerics, plus metrics. Two execution
-//!   modes: the paper's sequential [`coordinator::run_frame`] and the
+//!   timing with real accelerator numerics, plus metrics. Three execution
+//!   modes: the paper's sequential [`coordinator::run_frame`], the
 //!   frame-pipelined [`coordinator::run_batch`] batch scheduler that
-//!   keeps up to `depth` frames in flight across the engines;
+//!   keeps up to `depth` frames in flight across the engines, and the
+//!   multi-tenant [`coordinator::serve`] loop that multiplexes tenant
+//!   streams onto the engine pool under a QoS policy;
+//! * [`workload`] — the serving workload model behind `serve`: seeded
+//!   open-/closed-loop stream generators, bounded admission queues with
+//!   shed policies, pluggable QoS scheduling (FIFO / weighted DRR /
+//!   priority-with-aging / EDF) and per-tenant SLO accounting
+//!   (DESIGN.md §11);
 //! * [`report`] — figure/table regeneration (Fig. 4, Fig. 5, Table I,
 //!   the scaling grid, ablations).
 //!
@@ -79,6 +86,7 @@ pub mod sensor;
 pub mod sim;
 pub mod system;
 pub mod util;
+pub mod workload;
 
 /// Crate version (for `--version` and experiment provenance).
 pub fn version() -> &'static str {

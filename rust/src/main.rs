@@ -10,12 +10,18 @@
 //! psoc-dma ablation-vgg      # VGG19 failure modes
 //! psoc-dma scaling           # channel-count x pipeline-depth frame throughput
 //! psoc-dma faults            # fault-injection reliability sweep + safety demo
+//! psoc-dma serve             # multi-tenant serving run (workload config)
+//! psoc-dma serve-sweep       # capacity planning: load x policy x engines
 //! psoc-dma bench             # simulator perf bench -> BENCH_sweeps.json
 //! psoc-dma all               # everything above (estimate plans)
 //! ```
 //!
 //! `--config <file.json>` overrides any `SimConfig` constant;
 //! `--csv <dir>` additionally writes machine-readable outputs.
+//!
+//! `serve` flags: `--driver polling|scheduled|kernel` (default kernel),
+//! `--engines <n>` (default 2), `--quick` (short horizon). `serve-sweep`
+//! adds `--workers <n>` for the sharded grid.
 //!
 //! `bench` flags: `--quick` (CI smoke grid), `--workers <n>` (threads for
 //! the parallel leg, default 4), `--out <path>` (report destination,
@@ -46,6 +52,8 @@ struct Args {
     workers: usize,
     out: Option<String>,
     check: Option<String>,
+    driver: Option<String>,
+    engines: usize,
 }
 
 fn parse_args() -> Result<Args> {
@@ -59,6 +67,8 @@ fn parse_args() -> Result<Args> {
         workers: 4,
         out: None,
         check: None,
+        driver: None,
+        engines: 2,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -91,6 +101,16 @@ fn parse_args() -> Result<Args> {
             "--check" => {
                 args.check =
                     Some(it.next().ok_or_else(|| anyhow::anyhow!("--check needs a path"))?)
+            }
+            "--driver" => {
+                args.driver =
+                    Some(it.next().ok_or_else(|| anyhow::anyhow!("--driver needs a name"))?)
+            }
+            "--engines" => {
+                args.engines = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--engines needs a count"))?
+                    .parse()?
             }
             "--version" => {
                 println!("psoc-dma {}", psoc_dma::version());
@@ -232,6 +252,72 @@ fn run_faults(cfg: &SimConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the `--driver`/`--engines` flags for the serving commands
+/// (default driver: kernel — the scheme the serving argument is about,
+/// since it frees the CPU under load). The multi-queue scheme manages
+/// every engine itself and cannot back per-engine serving; flag values
+/// are rejected here so `serve` never panics on CLI input.
+fn serve_driver(args: &Args) -> Result<DriverKind> {
+    let kind = match &args.driver {
+        None => DriverKind::KernelIrq,
+        Some(s) => DriverKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown --driver {s}; see the README"))?,
+    };
+    if kind == DriverKind::KernelMultiQueue {
+        bail!("serve binds one driver per engine; --driver multiqueue is not supported");
+    }
+    let max = psoc_dma::sim::event::MAX_ENGINES;
+    if args.engines < 1 || args.engines > max {
+        bail!("--engines must be in 1..={max}, got {}", args.engines);
+    }
+    Ok(kind)
+}
+
+/// Multi-tenant serving run: the `workload` config key shapes the tenant
+/// streams; this prints the per-tenant SLO table.
+fn run_serve(cfg: &SimConfig, args: &Args) -> Result<()> {
+    use psoc_dma::coordinator::serve::serve;
+    let mut c = cfg.clone();
+    if args.quick {
+        c.workload.duration_ns = c.workload.duration_ns.min(200_000_000);
+    }
+    let kind = serve_driver(args)?;
+    let rep = serve(&c, kind, args.engines)?;
+    print!("{}", report::serve_text(&rep));
+    if let Some(dir) = &args.csv_dir {
+        report::save(&format!("{dir}/serve.csv"), &report::serve_csv(&rep))?;
+        report::save(&format!("{dir}/serve.json"), &rep.to_json().to_string_pretty())?;
+    }
+    Ok(())
+}
+
+/// Capacity-planning sweep: offered load x QoS policy x engine count,
+/// sharded across worker threads. The knee shows as the goodput column
+/// flattening at load ≈ 1.0 while the p99 column explodes.
+fn run_serve_sweep(cfg: &SimConfig, args: &Args) -> Result<()> {
+    use psoc_dma::coordinator::sweeps::serve_sweep;
+    use psoc_dma::workload::QosPolicyKind;
+    let mut c = cfg.clone();
+    let (loads, engines_list): (&[f64], Vec<usize>) = if args.quick {
+        c.workload.duration_ns = c.workload.duration_ns.min(150_000_000);
+        (&[0.5, 1.0, 2.0], vec![args.engines])
+    } else {
+        // A 1-engine reference leg plus the requested pool size (just
+        // the one leg when --engines 1 was asked for explicitly).
+        let mut engines_list = vec![1, args.engines];
+        engines_list.dedup();
+        (&[0.2, 0.5, 0.8, 1.0, 1.2, 1.6, 2.4], engines_list)
+    };
+    let policies = [QosPolicyKind::Fifo, QosPolicyKind::Drr, QosPolicyKind::Edf];
+    let kind = serve_driver(args)?;
+    let rows = serve_sweep(&c, kind, loads, &policies, &engines_list, args.workers)?;
+    print!("{}", report::serve_sweep_text(&rows));
+    if let Some(dir) = &args.csv_dir {
+        report::save(&format!("{dir}/serve_sweep.csv"), &report::serve_sweep_csv(&rows))?;
+    }
+    Ok(())
+}
+
 /// Simulator perf bench: calendar backends + parallel sweep scaling.
 /// Writes `BENCH_sweeps.json` and optionally gates against a baseline.
 fn run_bench(cfg: &SimConfig, args: &Args) -> Result<()> {
@@ -352,6 +438,8 @@ fn main() -> Result<()> {
         "ablation-load" => run_ablation_load(&cfg)?,
         "scaling" => run_scaling(&cfg, &args)?,
         "faults" => run_faults(&cfg, &args)?,
+        "serve" => run_serve(&cfg, &args)?,
+        "serve-sweep" | "serve_sweep" => run_serve_sweep(&cfg, &args)?,
         "bench" => run_bench(&cfg, &args)?,
         "trace" => run_trace(&cfg)?,
         "calibrate" => run_calibrate(&cfg)?,
@@ -372,6 +460,8 @@ fn main() -> Result<()> {
             run_scaling(&cfg, &args)?;
             println!();
             run_faults(&cfg, &args)?;
+            println!();
+            run_serve(&cfg, &args)?;
         }
         other => bail!("unknown command {other}; see the README"),
     }

@@ -24,7 +24,7 @@ pub enum TaskState {
 
 #[derive(Clone, Debug)]
 struct Task {
-    name: &'static str,
+    name: String,
     state: TaskState,
     /// CPU time this task still wants.
     demand: Dur,
@@ -51,9 +51,11 @@ impl Scheduler {
     }
 
     /// Register a task; returns its id. Tasks start idle (no demand).
-    pub fn spawn(&mut self, name: &'static str) -> TaskId {
+    /// Names may be dynamic (the serving subsystem spawns one
+    /// normalization task per tenant).
+    pub fn spawn(&mut self, name: impl Into<String>) -> TaskId {
         self.tasks.push(Task {
-            name,
+            name: name.into(),
             state: TaskState::Idle,
             demand: Dur::ZERO,
             pub_received: Dur::ZERO,
@@ -78,8 +80,8 @@ impl Scheduler {
         self.tasks[tid.0 as usize].pub_received
     }
 
-    pub fn name(&self, tid: TaskId) -> &'static str {
-        self.tasks[tid.0 as usize].name
+    pub fn name(&self, tid: TaskId) -> &str {
+        &self.tasks[tid.0 as usize].name
     }
 
     /// Outstanding demand across all tasks.
@@ -182,5 +184,12 @@ mod tests {
         s.add_work(a, Dur::from_us(5.0));
         s.add_work(a, Dur::from_us(5.0));
         assert_eq!(s.run_for(Dur::from_ms(1.0)), Dur::from_us(10.0));
+    }
+
+    #[test]
+    fn dynamic_task_names_round_trip() {
+        let mut s = Scheduler::new(Dur::from_us(10.0));
+        let a = s.spawn(format!("normalize-{}", 3));
+        assert_eq!(s.name(a), "normalize-3");
     }
 }

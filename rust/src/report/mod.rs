@@ -9,8 +9,9 @@ use std::path::Path;
 use crate::coordinator::experiments::{
     AblationRow, FaultCell, FaultSafetyDemo, ScalingRow, SweepRow, Table1Row, VggAblation,
 };
-use crate::coordinator::sweeps::BenchReport;
+use crate::coordinator::sweeps::{BenchReport, ServeSweepRow};
 use crate::drivers::DriverKind;
+use crate::workload::ServeReport;
 
 /// Distinct sizes present in a sweep, in ascending order.
 fn sizes_of(rows: &[SweepRow]) -> Vec<u64> {
@@ -387,6 +388,187 @@ pub fn faults_csv(rows: &[FaultCell]) -> String {
     out
 }
 
+/// Milliseconds string for an optional ns percentile; `"-"` when the
+/// tenant completed nothing (the dropped-row contract of
+/// `util::stats`).
+fn opt_ms(v: Option<f64>) -> String {
+    match v {
+        Some(ns) => format!("{:.2}", ns / 1e6),
+        None => "-".into(),
+    }
+}
+
+/// Per-tenant table of one serve run (`serve` CLI command).
+pub fn serve_text(rep: &ServeReport) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Serve — {} tenants x {} engines, {} / policy {} / shed {} / arrivals {}",
+        rep.tenants.len(),
+        rep.engines,
+        rep.driver,
+        rep.policy,
+        rep.shed,
+        rep.arrival,
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:<7} {:>7} {:>6} {:>6} {:>6} {:>6} {:>6} | {:>9} {:>8} {:>8} {:>8} | {:>6} {:>9}",
+        "tenant", "offered", "done", "drop", "coal", "unsrv", "miss", "goodput/s", "p50 ms",
+        "p99 ms", "p99.9ms", "SLO%", "norm ms"
+    )
+    .unwrap();
+    writeln!(out, "{}", "-".repeat(115)).unwrap();
+    for (i, t) in rep.tenants.iter().enumerate() {
+        writeln!(
+            out,
+            "{:<7} {:>7} {:>6} {:>6} {:>6} {:>6} {:>6} | {:>9.2} {:>8} {:>8} {:>8} | {:>5.1}% \
+             {:>9.2}",
+            i,
+            t.offered,
+            t.completed,
+            t.dropped,
+            t.coalesced,
+            t.unserved,
+            t.missed,
+            t.goodput_fps(rep.duration),
+            opt_ms(t.latency.percentile(50.0)),
+            opt_ms(t.latency.percentile(99.0)),
+            opt_ms(t.latency.percentile(99.9)),
+            100.0 * t.slo_attainment(),
+            t.normalize_cpu.as_ms(),
+        )
+        .unwrap();
+    }
+    let merged = rep.merged_latency();
+    writeln!(
+        out,
+        "total: {:.1} ms simulated | offered {:.1}/s, goodput {:.1}/s, SLO {:.1}%, \
+         fairness max/min {:.2} | p99 {} ms",
+        rep.duration.as_ms(),
+        rep.offered_fps(),
+        rep.goodput_fps(),
+        100.0 * rep.slo_attainment(),
+        rep.fairness_ratio(),
+        opt_ms(merged.percentile(99.0)),
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "CPU: busy {:.2} ms, freed {:.2} ms, of which normalization tasks ran {:.2} ms",
+        rep.ledger.busy.as_ms(),
+        rep.ledger.freed.as_ms(),
+        rep.ledger.used_by_tasks.as_ms(),
+    )
+    .unwrap();
+    out
+}
+
+/// CSV twin of [`serve_text`] (one row per tenant).
+pub fn serve_csv(rep: &ServeReport) -> String {
+    let mut out = String::from(
+        "tenant,offered,admitted,dropped,coalesced,unserved,completed,missed,goodput_fps,\
+         latency_p50_ns,latency_p99_ns,latency_p999_ns,slo_attainment,normalize_cpu_ns,\
+         max_queue\n",
+    );
+    for (i, t) in rep.tenants.iter().enumerate() {
+        writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            i,
+            t.offered,
+            t.admitted,
+            t.dropped,
+            t.coalesced,
+            t.unserved,
+            t.completed,
+            t.missed,
+            t.goodput_fps(rep.duration),
+            t.latency.percentile(50.0).unwrap_or(0.0),
+            t.latency.percentile(99.0).unwrap_or(0.0),
+            t.latency.percentile(99.9).unwrap_or(0.0),
+            t.slo_attainment(),
+            t.normalize_cpu.ns(),
+            t.max_queue,
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// The capacity-planning table (`serve-sweep` CLI command): per
+/// engines × policy, goodput and tails across offered-load levels — the
+/// saturation knee reads straight off the goodput column flattening
+/// while p99 explodes.
+pub fn serve_sweep_text(rows: &[ServeSweepRow]) -> String {
+    let mut out = String::new();
+    writeln!(out, "Serve sweep — offered load x policy x engines (load 1.0 = pool capacity)")
+        .unwrap();
+    writeln!(
+        out,
+        "{:>7} {:<9} {:>5} | {:>9} {:>9} {:>7} | {:>8} {:>8} | {:>6} {:>8}",
+        "engines", "policy", "load", "offered/s", "goodput/s", "shed%", "p50 ms", "p99 ms",
+        "SLO%", "fairness"
+    )
+    .unwrap();
+    writeln!(out, "{}", "-".repeat(96)).unwrap();
+    for r in rows {
+        let rep = &r.report;
+        let merged = rep.merged_latency();
+        let offered = rep.total_offered().max(1);
+        let fairness = rep.fairness_ratio();
+        writeln!(
+            out,
+            "{:>7} {:<9} {:>5.2} | {:>9.1} {:>9.1} {:>6.1}% | {:>8} {:>8} | {:>5.1}% {:>8}",
+            r.engines,
+            r.policy.label(),
+            r.load,
+            rep.offered_fps(),
+            rep.goodput_fps(),
+            100.0 * rep.total_shed() as f64 / offered as f64,
+            opt_ms(merged.percentile(50.0)),
+            opt_ms(merged.percentile(99.0)),
+            100.0 * rep.slo_attainment(),
+            if fairness.is_finite() { format!("{fairness:.2}") } else { "inf".into() },
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// CSV twin of [`serve_sweep_text`].
+pub fn serve_sweep_csv(rows: &[ServeSweepRow]) -> String {
+    let mut out = String::from(
+        "engines,policy,load,capacity_fps,offered_fps,goodput_fps,shed,unserved,missed,\
+         latency_p50_ns,latency_p99_ns,latency_p999_ns,slo_attainment,fairness_ratio\n",
+    );
+    for r in rows {
+        let rep = &r.report;
+        let merged = rep.merged_latency();
+        writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            r.engines,
+            r.policy.label(),
+            r.load,
+            r.capacity_fps,
+            rep.offered_fps(),
+            rep.goodput_fps(),
+            rep.total_shed(),
+            rep.total_unserved(),
+            rep.total_missed(),
+            merged.percentile(50.0).unwrap_or(0.0),
+            merged.percentile(99.0).unwrap_or(0.0),
+            merged.percentile(99.9).unwrap_or(0.0),
+            rep.slo_attainment(),
+            rep.fairness_ratio(),
+        )
+        .unwrap();
+    }
+    out
+}
+
 /// The `bench` command's stdout table (the JSON twin goes to
 /// `BENCH_sweeps.json`).
 pub fn bench_text(rep: &BenchReport) -> String {
@@ -433,6 +615,14 @@ pub fn bench_text(rep: &BenchReport) -> String {
         .unwrap();
     }
     writeln!(out, "multi-worker sweep speedup: {:.2}x", rep.sweep_speedup()).unwrap();
+    writeln!(
+        out,
+        "serve loop: {} events in {:.3} ms = {:.0} events/sec",
+        rep.serve.events,
+        rep.serve.wall.as_secs_f64() * 1e3,
+        rep.serve_events_per_sec()
+    )
+    .unwrap();
     out
 }
 
@@ -490,6 +680,49 @@ mod tests {
         assert_eq!(size_label(8), "8B");
         assert_eq!(size_label(2048), "2KB");
         assert_eq!(size_label(6 << 20), "6MB");
+    }
+
+    #[test]
+    fn serve_report_renders_starved_tenant_as_dashes() {
+        use crate::sim::time::{Dur, SimTime};
+        use crate::system::CpuLedger;
+        use crate::workload::TenantSlo;
+        let mut served = TenantSlo::default();
+        served.offered = 5;
+        served.admitted = 5;
+        for i in 0..5u64 {
+            served.complete(
+                SimTime(i * 1000),
+                SimTime(i * 1000 + 10),
+                SimTime(i * 1000 + 500),
+                SimTime(i * 1000 + 50_000),
+            );
+        }
+        let mut starved = TenantSlo::default();
+        starved.offered = 7;
+        starved.dropped = 7;
+        let rep = ServeReport {
+            driver: "kernel-level drv",
+            policy: "fifo",
+            shed: "tail-drop",
+            arrival: "poisson",
+            engines: 2,
+            duration: Dur::from_secs(1.0),
+            tenants: vec![served, starved],
+            ledger: CpuLedger::default(),
+            events: 99,
+        };
+        let t = serve_text(&rep);
+        // The starved tenant renders as a dropped row ("-" latencies),
+        // not a crash.
+        assert!(
+            t.lines().any(|l| l.starts_with('1') && l.contains('-')),
+            "{t}"
+        );
+        assert!(t.contains("fairness"), "{t}");
+        let c = serve_csv(&rep);
+        assert_eq!(c.lines().count(), 3);
+        assert!(c.starts_with("tenant,"));
     }
 
     #[test]

@@ -12,11 +12,17 @@ pub struct Summary {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    pub p999: f64,
 }
 
 impl Summary {
-    pub fn of(samples: &[f64]) -> Summary {
-        assert!(!samples.is_empty(), "Summary::of on empty sample");
+    /// Empty-safe constructor: `None` for an empty sample. Report
+    /// printers use this so a tenant (or cell) with zero completions
+    /// renders as a dropped row instead of crashing the whole table.
+    pub fn try_of(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
@@ -26,7 +32,7 @@ impl Summary {
         };
         let mut sorted = samples.to_vec();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Summary {
+        Some(Summary {
             n,
             mean,
             stddev: var.sqrt(),
@@ -35,7 +41,113 @@ impl Summary {
             p50: percentile_sorted(&sorted, 50.0),
             p95: percentile_sorted(&sorted, 95.0),
             p99: percentile_sorted(&sorted, 99.0),
+            p999: percentile_sorted(&sorted, 99.9),
+        })
+    }
+
+    pub fn of(samples: &[f64]) -> Summary {
+        Summary::try_of(samples).expect("Summary::of on empty sample")
+    }
+}
+
+/// Log-bucketed latency histogram: bucket `i > 0` covers `[2^(i-1), 2^i)`
+/// nanoseconds, bucket 0 holds zeros. 64 buckets span the whole `u64`
+/// range, so recording can never overflow the bucket table. Cheap to
+/// record into, cheap to merge across tenants or sweep shards, and good
+/// enough (half-bucket relative error with interpolation) for the tail
+/// percentiles the serving reports print.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogHistogram {
+    counts: [u64; 64],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+// Hand-rolled: `[u64; 64]` has no derived `Default` (std stops at 32).
+#[allow(clippy::derivable_impls)]
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { counts: [0; 64], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
         }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket(v).min(63)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram in (per-tenant → aggregate tail reporting;
+    /// sweep-shard → global).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate percentile (`p` in `[0, 100]`), linearly interpolated
+    /// inside the covering bucket. Empty histogram → `None`.
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        assert!((0.0..=100.0).contains(&p));
+        if self.count == 0 {
+            return None;
+        }
+        let rank = p / 100.0 * self.count as f64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen as f64 + c as f64 >= rank {
+                let lo = if i == 0 { 0u64 } else { 1u64 << (i - 1) };
+                let hi = if i == 0 { 1u64 } else { (1u64 << (i - 1)).saturating_mul(2) };
+                let within = ((rank - seen as f64) / c as f64).clamp(0.0, 1.0);
+                let v = lo as f64 + within * (hi - lo) as f64;
+                // Never report past the observed maximum (the top bucket
+                // is wide; the max is exact).
+                return Some(v.min(self.max as f64).max(0.0));
+            }
+            seen += c;
+        }
+        Some(self.max as f64)
     }
 }
 
@@ -100,6 +212,61 @@ mod tests {
         let s = Summary::of(&[7.0]);
         assert_eq!(s.stddev, 0.0);
         assert_eq!(s.p99, 7.0);
+        assert_eq!(s.p999, 7.0);
+    }
+
+    #[test]
+    fn summary_empty_is_none_not_panic() {
+        assert!(Summary::try_of(&[]).is_none());
+        assert!(Summary::try_of(&[1.0]).is_some());
+    }
+
+    #[test]
+    fn summary_p999_tracks_extreme_tail() {
+        // 999 fast samples + one slow outlier: p99 stays low, p99.9 sees it.
+        let mut v = vec![1.0; 999];
+        v.push(1000.0);
+        let s = Summary::of(&v);
+        assert!(s.p99 < 2.0, "p99 {}", s.p99);
+        assert!(s.p999 > 2.0, "p999 {}", s.p999);
+    }
+
+    #[test]
+    fn histogram_records_and_bounds_percentiles() {
+        let mut h = LogHistogram::new();
+        for v in [0u64, 1, 100, 1000, 1000, 1000, 10_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.max(), 10_000);
+        let p50 = h.percentile(50.0).unwrap();
+        assert!(p50 >= 100.0 && p50 <= 2048.0, "p50 {p50}");
+        let p100 = h.percentile(100.0).unwrap();
+        assert!(p100 <= 10_000.0);
+        assert!(h.percentile(0.0).is_some());
+        assert!((h.mean() - 13101.0 / 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_empty_and_merge() {
+        let mut a = LogHistogram::new();
+        assert!(a.percentile(99.0).is_none());
+        assert!(a.is_empty());
+        let mut b = LogHistogram::new();
+        a.record(10);
+        b.record(1 << 40);
+        b.record(1 << 40);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 1 << 40);
+        // Merged tail dominated by b's slow samples.
+        assert!(a.percentile(99.0).unwrap() > 1e9);
+        // Merge is count-exact: same as recording everything into one.
+        let mut c = LogHistogram::new();
+        for v in [10u64, 1 << 40, 1 << 40] {
+            c.record(v);
+        }
+        assert_eq!(a, c);
     }
 
     #[test]

@@ -1,0 +1,342 @@
+//! Bounded per-tenant admission queues with shed policies.
+//!
+//! Every tenant owns one FIFO of at most `WorkloadConfig::queue_cap`
+//! frames. When a frame arrives to a full queue the shed policy decides
+//! what gives:
+//!
+//! * **TailDrop** — the newcomer is rejected (classic router behaviour:
+//!   cheapest, but under sustained overload the queue holds the *stalest*
+//!   frames);
+//! * **DropOldest** — the head is evicted and the newcomer admitted
+//!   (bounded staleness: the sensor's freshest data wins);
+//! * **Coalesce** — the newcomer *replaces* the newest queued frame,
+//!   folding into one entry — exactly what a neuromorphic pipeline does
+//!   when it falls behind: accumulate events into the pending histogram
+//!   frame instead of growing a backlog. The superseded payload is
+//!   accounted as `coalesced`, not dropped.
+//!
+//! Accounting contract (asserted by `rust/tests/serve_property.rs`):
+//! every offered frame ends in exactly one of {admitted-and-served,
+//! dropped, coalesced}, and a queue's depth never exceeds its bound.
+
+use std::collections::VecDeque;
+
+use crate::sim::time::SimTime;
+
+use super::generator::FrameArrival;
+use super::WorkloadConfig;
+
+/// Shed policy selector (JSON: `workload.shed`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ShedPolicy {
+    TailDrop,
+    DropOldest,
+    Coalesce,
+}
+
+impl ShedPolicy {
+    pub fn parse(s: &str) -> Option<ShedPolicy> {
+        match s {
+            "tail-drop" => Some(ShedPolicy::TailDrop),
+            "drop-oldest" => Some(ShedPolicy::DropOldest),
+            "coalesce" => Some(ShedPolicy::Coalesce),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ShedPolicy::TailDrop => "tail-drop",
+            ShedPolicy::DropOldest => "drop-oldest",
+            ShedPolicy::Coalesce => "coalesce",
+        }
+    }
+}
+
+/// A frame sitting in an admission queue.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct QueuedFrame {
+    pub tenant: usize,
+    pub seq: u64,
+    /// Sensor timestamp (latency measured from here).
+    pub arrived: SimTime,
+    pub deadline: SimTime,
+    /// How many earlier frames were folded into this one (Coalesce).
+    pub coalesced: u64,
+}
+
+/// What happened to an offered frame at the front door.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AdmitOutcome {
+    /// Entered the queue as a new entry.
+    Admitted,
+    /// Rejected outright (TailDrop on a full queue).
+    DroppedNew,
+    /// Admitted, but the queue's oldest frame was evicted to make room
+    /// (DropOldest). The payload is the evicted frame.
+    DroppedOldest(QueuedFrame),
+    /// Folded into the newest queued entry (Coalesce): the queued
+    /// payload was superseded, the entry now carries this frame's data
+    /// and deadline.
+    Coalesced,
+}
+
+/// One tenant's bounded queue plus its lifetime counters.
+#[derive(Clone, Debug)]
+pub struct TenantQueue {
+    cap: usize,
+    q: VecDeque<QueuedFrame>,
+    /// Frames that reached the front door.
+    pub offered: u64,
+    /// Frames that entered the queue as a new entry.
+    pub admitted: u64,
+    /// Frames shed (TailDrop rejections + DropOldest evictions).
+    pub dropped: u64,
+    /// Frames folded into a queued entry (Coalesce).
+    pub coalesced: u64,
+    /// High-water mark of the queue depth.
+    pub max_depth: usize,
+}
+
+impl TenantQueue {
+    fn new(cap: usize) -> TenantQueue {
+        TenantQueue {
+            cap,
+            q: VecDeque::with_capacity(cap),
+            offered: 0,
+            admitted: 0,
+            dropped: 0,
+            coalesced: 0,
+            max_depth: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn head(&self) -> Option<&QueuedFrame> {
+        self.q.front()
+    }
+
+    fn push(&mut self, f: QueuedFrame) {
+        self.q.push_back(f);
+        self.admitted += 1;
+        self.max_depth = self.max_depth.max(self.q.len());
+    }
+
+    fn offer(&mut self, a: FrameArrival, shed: ShedPolicy) -> AdmitOutcome {
+        self.offered += 1;
+        let f = QueuedFrame {
+            tenant: a.tenant,
+            seq: a.seq,
+            arrived: a.at,
+            deadline: a.deadline,
+            coalesced: 0,
+        };
+        if self.q.len() < self.cap {
+            self.push(f);
+            return AdmitOutcome::Admitted;
+        }
+        match shed {
+            ShedPolicy::TailDrop => {
+                self.dropped += 1;
+                AdmitOutcome::DroppedNew
+            }
+            ShedPolicy::DropOldest => {
+                let old = self.q.pop_front().expect("full queue has a head");
+                self.dropped += 1;
+                self.push(f);
+                AdmitOutcome::DroppedOldest(old)
+            }
+            ShedPolicy::Coalesce => {
+                let tail = self.q.back_mut().expect("full queue has a tail");
+                // The merged entry delivers the *newest* sensor data: it
+                // takes the newcomer's seq/timestamp/deadline and counts
+                // the superseded payload.
+                tail.seq = f.seq;
+                tail.arrived = f.arrived;
+                tail.deadline = f.deadline;
+                tail.coalesced += 1;
+                self.coalesced += 1;
+                AdmitOutcome::Coalesced
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<QueuedFrame> {
+        self.q.pop_front()
+    }
+}
+
+/// The admission stage: all tenant queues plus the shed policy.
+pub struct Admission {
+    queues: Vec<TenantQueue>,
+    shed: ShedPolicy,
+}
+
+impl Admission {
+    pub fn new(wl: &WorkloadConfig) -> Admission {
+        Admission {
+            queues: (0..wl.tenants as usize)
+                .map(|_| TenantQueue::new(wl.queue_cap as usize))
+                .collect(),
+            shed: wl.shed,
+        }
+    }
+
+    pub fn num_tenants(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn tenant(&self, t: usize) -> &TenantQueue {
+        &self.queues[t]
+    }
+
+    pub fn shed(&self) -> ShedPolicy {
+        self.shed
+    }
+
+    /// Offer one arrival to its tenant's queue.
+    pub fn offer(&mut self, a: FrameArrival) -> AdmitOutcome {
+        let shed = self.shed;
+        self.queues[a.tenant].offer(a, shed)
+    }
+
+    /// Head frame of tenant `t`'s queue (what a policy would serve next).
+    pub fn head(&self, t: usize) -> Option<&QueuedFrame> {
+        self.queues[t].head()
+    }
+
+    pub fn backlogged(&self, t: usize) -> bool {
+        !self.queues[t].is_empty()
+    }
+
+    /// Dequeue tenant `t`'s head for service.
+    pub fn pop(&mut self, t: usize) -> Option<QueuedFrame> {
+        self.queues[t].pop()
+    }
+
+    /// Frames currently queued across all tenants.
+    pub fn total_queued(&self) -> usize {
+        self.queues.iter().map(TenantQueue::len).sum()
+    }
+
+    pub fn any_backlog(&self) -> bool {
+        self.queues.iter().any(|q| !q.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arrival(tenant: usize, seq: u64, at: u64) -> FrameArrival {
+        FrameArrival { at: SimTime(at), tenant, seq, deadline: SimTime(at + 100) }
+    }
+
+    fn adm(cap: u64, shed: ShedPolicy) -> Admission {
+        let mut wl = WorkloadConfig::default();
+        wl.tenants = 2;
+        wl.queue_cap = cap;
+        wl.shed = shed;
+        Admission::new(&wl)
+    }
+
+    #[test]
+    fn tail_drop_rejects_newcomer_at_cap() {
+        let mut a = adm(2, ShedPolicy::TailDrop);
+        assert_eq!(a.offer(arrival(0, 0, 10)), AdmitOutcome::Admitted);
+        assert_eq!(a.offer(arrival(0, 1, 20)), AdmitOutcome::Admitted);
+        assert_eq!(a.offer(arrival(0, 2, 30)), AdmitOutcome::DroppedNew);
+        assert_eq!(a.tenant(0).len(), 2);
+        assert_eq!(a.tenant(0).dropped, 1);
+        // The stale head survived (tail-drop keeps the oldest data).
+        assert_eq!(a.head(0).unwrap().seq, 0);
+        // Other tenants unaffected.
+        assert_eq!(a.offer(arrival(1, 0, 40)), AdmitOutcome::Admitted);
+    }
+
+    #[test]
+    fn drop_oldest_evicts_head_and_admits() {
+        let mut a = adm(2, ShedPolicy::DropOldest);
+        a.offer(arrival(0, 0, 10));
+        a.offer(arrival(0, 1, 20));
+        match a.offer(arrival(0, 2, 30)) {
+            AdmitOutcome::DroppedOldest(old) => assert_eq!(old.seq, 0),
+            other => panic!("expected DroppedOldest, got {other:?}"),
+        }
+        assert_eq!(a.tenant(0).len(), 2);
+        assert_eq!(a.head(0).unwrap().seq, 1, "freshest data wins");
+        assert_eq!(a.tenant(0).dropped, 1);
+        assert_eq!(a.tenant(0).admitted, 3);
+    }
+
+    #[test]
+    fn coalesce_folds_into_tail_and_keeps_bound() {
+        let mut a = adm(2, ShedPolicy::Coalesce);
+        a.offer(arrival(0, 0, 10));
+        a.offer(arrival(0, 1, 20));
+        assert_eq!(a.offer(arrival(0, 2, 30)), AdmitOutcome::Coalesced);
+        assert_eq!(a.offer(arrival(0, 3, 40)), AdmitOutcome::Coalesced);
+        assert_eq!(a.tenant(0).len(), 2, "bound held");
+        assert_eq!(a.tenant(0).coalesced, 2);
+        assert_eq!(a.tenant(0).dropped, 0);
+        // Head untouched; tail carries the newest payload + fold count.
+        assert_eq!(a.head(0).unwrap().seq, 0);
+        a.pop(0);
+        let tail = a.head(0).unwrap();
+        assert_eq!(tail.seq, 3);
+        assert_eq!(tail.arrived, SimTime(40));
+        assert_eq!(tail.coalesced, 2);
+    }
+
+    #[test]
+    fn counters_balance_for_every_policy() {
+        for shed in [ShedPolicy::TailDrop, ShedPolicy::DropOldest, ShedPolicy::Coalesce] {
+            let mut a = adm(3, shed);
+            let mut served = 0u64;
+            for i in 0..20 {
+                a.offer(arrival(0, i, 10 * i));
+                if i % 3 == 0 && a.pop(0).is_some() {
+                    served += 1;
+                }
+            }
+            let q = a.tenant(0);
+            assert!(q.len() <= q.cap());
+            assert_eq!(q.offered, 20);
+            // Every offered frame is served, queued, dropped or coalesced.
+            assert_eq!(
+                served + q.len() as u64 + q.dropped + q.coalesced,
+                q.offered,
+                "{shed:?}"
+            );
+            assert!(q.max_depth <= q.cap());
+        }
+    }
+
+    #[test]
+    fn queue_cap_one_edge_case() {
+        // Coalesce with cap 1: the single slot keeps absorbing frames.
+        let mut a = adm(1, ShedPolicy::Coalesce);
+        a.offer(arrival(0, 0, 10));
+        for i in 1..5 {
+            assert_eq!(a.offer(arrival(0, i, 10 + i)), AdmitOutcome::Coalesced);
+        }
+        assert_eq!(a.tenant(0).len(), 1);
+        assert_eq!(a.head(0).unwrap().seq, 4);
+        assert_eq!(a.head(0).unwrap().coalesced, 4);
+        assert_eq!(a.total_queued(), 1);
+        assert!(a.any_backlog());
+        a.pop(0);
+        assert!(!a.any_backlog());
+    }
+}

@@ -1,0 +1,442 @@
+//! Seeded tenant stream generators.
+//!
+//! Every tenant draws from its **own** PCG32 stream, selected from
+//! `(WorkloadConfig::seed, tenant index)`, and every draw happens in a
+//! fixed per-tenant order independent of how the serve loop interleaves
+//! service. Open-loop arrivals are therefore a pure function of the
+//! config — the determinism guarantee DESIGN.md §11 states: same seed +
+//! config → the same arrival timeline, bit for bit, on every rerun and
+//! under any sweep worker count.
+//!
+//! Arrival processes:
+//!
+//! * **Poisson** — exponential inter-arrival times at the tenant's rate;
+//! * **Bursty** — a 2-phase MMPP: the rate alternates between
+//!   `hi = 2b/(b+1) · r` and `lo = 2/(b+1) · r` (mean stays `r`) with
+//!   exponentially distributed phase dwell — the clumpy traffic a
+//!   motion-triggered DVS sensor actually produces;
+//! * **Ramp** — a non-homogeneous Poisson process whose rate climbs
+//!   linearly from `r/2` to `3r/2` over the horizon (mean `r`),
+//!   generated exactly by inverting the cumulative intensity;
+//! * **Closed** — closed-loop: each tenant keeps one frame outstanding
+//!   and thinks for `Exp(think_ns)` after every completion, the classic
+//!   self-paced sensor pipeline.
+
+use std::collections::BinaryHeap;
+
+use crate::sim::rng::Pcg32;
+use crate::sim::time::SimTime;
+
+use super::WorkloadConfig;
+
+/// Arrival-process selector (JSON: `workload.arrival`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ArrivalKind {
+    Poisson,
+    Bursty,
+    Ramp,
+    Closed,
+}
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> Option<ArrivalKind> {
+        match s {
+            "poisson" => Some(ArrivalKind::Poisson),
+            "bursty" => Some(ArrivalKind::Bursty),
+            "ramp" => Some(ArrivalKind::Ramp),
+            "closed" => Some(ArrivalKind::Closed),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Bursty => "bursty",
+            ArrivalKind::Ramp => "ramp",
+            ArrivalKind::Closed => "closed",
+        }
+    }
+}
+
+/// One frame hitting the serving front door.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct FrameArrival {
+    /// Sensor timestamp (latency is measured from here). Field order
+    /// matters: the derived `Ord` keys on `(at, tenant, seq)`, which is
+    /// the deterministic tie-break the arrival queue relies on.
+    pub at: SimTime,
+    pub tenant: usize,
+    pub seq: u64,
+    pub deadline: SimTime,
+}
+
+/// Time-ordered arrival source feeding the serve loop. Open-loop streams
+/// are fully materialised up front; closed-loop tenants push their next
+/// frame on completion.
+#[derive(Default)]
+pub struct ArrivalQueue {
+    heap: BinaryHeap<std::cmp::Reverse<FrameArrival>>,
+}
+
+impl ArrivalQueue {
+    pub fn new() -> ArrivalQueue {
+        ArrivalQueue::default()
+    }
+
+    pub fn push(&mut self, a: FrameArrival) {
+        self.heap.push(std::cmp::Reverse(a));
+    }
+
+    /// Earliest pending arrival instant.
+    pub fn peek_at(&self) -> Option<SimTime> {
+        self.heap.peek().map(|r| r.0.at)
+    }
+
+    /// Pop the earliest arrival if it has happened by `now`.
+    pub fn pop_due(&mut self, now: SimTime) -> Option<FrameArrival> {
+        if self.heap.peek().is_some_and(|r| r.0.at <= now) {
+            self.heap.pop().map(|r| r.0)
+        } else {
+            None
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// Per-tenant stream generator set.
+pub struct StreamGenerator {
+    kind: ArrivalKind,
+    duration_ns: u64,
+    deadline_ns: u64,
+    think_ns: u64,
+    burst_factor: f64,
+    burst_dwell_ns: u64,
+    rates: Vec<f64>,
+    rngs: Vec<Pcg32>,
+    seqs: Vec<u64>,
+}
+
+impl StreamGenerator {
+    pub fn new(wl: &WorkloadConfig) -> StreamGenerator {
+        let n = wl.tenants as usize;
+        StreamGenerator {
+            kind: wl.arrival,
+            duration_ns: wl.duration_ns,
+            deadline_ns: wl.deadline_ns,
+            think_ns: wl.think_ns,
+            burst_factor: wl.burst_factor,
+            burst_dwell_ns: wl.burst_dwell_ns,
+            rates: (0..n).map(|i| wl.tenant_fps(i)).collect(),
+            // One independent PCG32 stream per tenant: stream selection
+            // keeps tenants uncorrelated even under the same seed.
+            rngs: (0..n)
+                .map(|i| Pcg32::with_stream(wl.seed, 0x7E4A_7000 + i as u64))
+                .collect(),
+            seqs: vec![0; n],
+        }
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.rates.len()
+    }
+
+    pub fn tenant_rate(&self, t: usize) -> f64 {
+        self.rates[t]
+    }
+
+    fn frame(&mut self, tenant: usize, at_ns: u64) -> FrameArrival {
+        let seq = self.seqs[tenant];
+        self.seqs[tenant] += 1;
+        FrameArrival {
+            at: SimTime(at_ns),
+            tenant,
+            seq,
+            deadline: SimTime(at_ns + self.deadline_ns),
+        }
+    }
+
+    /// Materialise the initial arrival set into `q`: the whole horizon
+    /// for open-loop kinds, the first frame per tenant for closed-loop.
+    /// Returns the number of arrivals pushed.
+    pub fn initial(&mut self, q: &mut ArrivalQueue) -> usize {
+        let mut pushed = 0;
+        for t in 0..self.tenants() {
+            match self.kind {
+                ArrivalKind::Poisson => pushed += self.gen_poisson(t, q),
+                ArrivalKind::Bursty => pushed += self.gen_bursty(t, q),
+                ArrivalKind::Ramp => pushed += self.gen_ramp(t, q),
+                ArrivalKind::Closed => {
+                    let think = self.rngs[t].next_exp(self.think_ns as f64).max(1.0) as u64;
+                    if think < self.duration_ns {
+                        let f = self.frame(t, think);
+                        q.push(f);
+                        pushed += 1;
+                    }
+                }
+            }
+        }
+        pushed
+    }
+
+    /// Closed-loop pacing: called by the serve loop when tenant `t`'s
+    /// frame completes at `now`. Open-loop streams return `None` (their
+    /// arrivals were materialised up front).
+    pub fn on_complete(&mut self, t: usize, now: SimTime) -> Option<FrameArrival> {
+        if self.kind != ArrivalKind::Closed {
+            return None;
+        }
+        let think = self.rngs[t].next_exp(self.think_ns as f64).max(1.0) as u64;
+        let at = now.ns() + think;
+        if at >= self.duration_ns {
+            return None;
+        }
+        Some(self.frame(t, at))
+    }
+
+    fn gen_poisson(&mut self, t: usize, q: &mut ArrivalQueue) -> usize {
+        let mean_ns = 1e9 / self.rates[t];
+        let mut at = 0f64;
+        let mut pushed = 0;
+        loop {
+            at += self.rngs[t].next_exp(mean_ns).max(1.0);
+            if at >= self.duration_ns as f64 {
+                return pushed;
+            }
+            let f = self.frame(t, at as u64);
+            q.push(f);
+            pushed += 1;
+        }
+    }
+
+    fn gen_bursty(&mut self, t: usize, q: &mut ArrivalQueue) -> usize {
+        let r = self.rates[t];
+        let b = self.burst_factor;
+        let hi = 2.0 * b / (b + 1.0) * r;
+        let lo = 2.0 / (b + 1.0) * r;
+        let mut in_hi = true;
+        let mut at = 0f64;
+        let mut phase_end = self.rngs[t].next_exp(self.burst_dwell_ns as f64);
+        let mut pushed = 0;
+        while at < self.duration_ns as f64 {
+            let rate = if in_hi { hi } else { lo };
+            let dt = self.rngs[t].next_exp(1e9 / rate).max(1.0);
+            if at + dt >= phase_end {
+                // The exponential is memoryless: restarting the draw at
+                // the phase boundary keeps the process exact.
+                at = phase_end;
+                in_hi = !in_hi;
+                phase_end = at + self.rngs[t].next_exp(self.burst_dwell_ns as f64);
+                continue;
+            }
+            at += dt;
+            if at >= self.duration_ns as f64 {
+                break;
+            }
+            let f = self.frame(t, at as u64);
+            q.push(f);
+            pushed += 1;
+        }
+        pushed
+    }
+
+    fn gen_ramp(&mut self, t: usize, q: &mut ArrivalQueue) -> usize {
+        // rate(u) = r·(0.5 + u/D) for u in [0, D] seconds: inversion of
+        // the cumulative intensity Λ gives exact event times.
+        let r = self.rates[t];
+        let dur_s = self.duration_ns as f64 * 1e-9;
+        let a = r / (2.0 * dur_s); // d(rate)/du / 2
+        let mut at_s = 0f64;
+        let mut pushed = 0;
+        loop {
+            let e = self.rngs[t].next_exp(1.0);
+            let b = r * (0.5 + at_s / dur_s);
+            // Solve a·Δ² + b·Δ − e = 0 for the next inter-arrival Δ.
+            let delta = if a > 0.0 {
+                (-b + (b * b + 4.0 * a * e).sqrt()) / (2.0 * a)
+            } else {
+                e / b
+            };
+            at_s += delta.max(1e-9);
+            if at_s >= dur_s {
+                return pushed;
+            }
+            let f = self.frame(t, (at_s * 1e9) as u64);
+            q.push(f);
+            pushed += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl(kind: ArrivalKind) -> WorkloadConfig {
+        let mut w = WorkloadConfig::default();
+        w.arrival = kind;
+        w.tenants = 3;
+        w.offered_fps = 300.0;
+        w.duration_ns = 500_000_000;
+        w
+    }
+
+    fn drain(q: &mut ArrivalQueue) -> Vec<FrameArrival> {
+        let mut v = Vec::new();
+        while let Some(a) = q.pop_due(SimTime(u64::MAX)) {
+            v.push(a);
+        }
+        v
+    }
+
+    #[test]
+    fn open_loop_kinds_are_deterministic_and_in_horizon() {
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Ramp] {
+            let run = || {
+                let w = wl(kind);
+                let mut g = StreamGenerator::new(&w);
+                let mut q = ArrivalQueue::new();
+                g.initial(&mut q);
+                drain(&mut q)
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a, b, "{kind:?} not reproducible");
+            assert!(!a.is_empty(), "{kind:?} generated nothing");
+            for f in &a {
+                assert!(f.at.ns() < 500_000_000, "{kind:?} arrival past horizon");
+                assert_eq!(f.deadline.ns(), f.at.ns() + wl(kind).deadline_ns);
+            }
+            // Queue pops in global time order.
+            for w2 in a.windows(2) {
+                assert!(w2[0].at <= w2[1].at);
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let mut w = wl(ArrivalKind::Poisson);
+        w.tenants = 1;
+        w.offered_fps = 2000.0;
+        w.duration_ns = 1_000_000_000;
+        let mut g = StreamGenerator::new(&w);
+        let mut q = ArrivalQueue::new();
+        let n = g.initial(&mut q);
+        let expect = 2000.0;
+        assert!(
+            (n as f64 - expect).abs() / expect < 0.10,
+            "poisson count {n} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn skewed_rates_generate_skewed_counts() {
+        let mut w = wl(ArrivalKind::Poisson);
+        w.skew = 6.0;
+        w.offered_fps = 1000.0;
+        w.duration_ns = 1_000_000_000;
+        let mut g = StreamGenerator::new(&w);
+        let mut q = ArrivalQueue::new();
+        g.initial(&mut q);
+        let mut per = [0usize; 3];
+        for a in drain(&mut q) {
+            per[a.tenant] += 1;
+        }
+        assert!(per[2] > 8 * per[0], "skew not visible: {per:?}");
+    }
+
+    #[test]
+    fn bursty_is_clumpier_than_poisson() {
+        // Coefficient of variation of inter-arrival times: MMPP > 1,
+        // Poisson ≈ 1.
+        let cv = |kind| {
+            let mut w = wl(kind);
+            w.tenants = 1;
+            w.offered_fps = 1000.0;
+            w.duration_ns = 2_000_000_000;
+            w.burst_factor = 8.0;
+            let mut g = StreamGenerator::new(&w);
+            let mut q = ArrivalQueue::new();
+            g.initial(&mut q);
+            let at: Vec<f64> = drain(&mut q).iter().map(|a| a.at.ns() as f64).collect();
+            let gaps: Vec<f64> = at.windows(2).map(|w2| w2[1] - w2[0]).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var = gaps.iter().map(|g2| (g2 - mean).powi(2)).sum::<f64>()
+                / (gaps.len() - 1) as f64;
+            var.sqrt() / mean
+        };
+        let poisson = cv(ArrivalKind::Poisson);
+        let bursty = cv(ArrivalKind::Bursty);
+        assert!(bursty > poisson * 1.15, "bursty cv {bursty} !> poisson cv {poisson}");
+    }
+
+    #[test]
+    fn ramp_back_half_denser_than_front_half() {
+        let mut w = wl(ArrivalKind::Ramp);
+        w.tenants = 1;
+        w.offered_fps = 2000.0;
+        w.duration_ns = 1_000_000_000;
+        let mut g = StreamGenerator::new(&w);
+        let mut q = ArrivalQueue::new();
+        g.initial(&mut q);
+        let half = w.duration_ns / 2;
+        let (mut front, mut back) = (0usize, 0usize);
+        for a in drain(&mut q) {
+            if a.at.ns() < half {
+                front += 1;
+            } else {
+                back += 1;
+            }
+        }
+        // Expected 3:5 split (integral of the ramp) — require a clear gap.
+        assert!(back as f64 > front as f64 * 1.3, "front {front} back {back}");
+    }
+
+    #[test]
+    fn closed_loop_paces_on_completions() {
+        let mut w = wl(ArrivalKind::Closed);
+        w.tenants = 2;
+        let mut g = StreamGenerator::new(&w);
+        let mut q = ArrivalQueue::new();
+        assert_eq!(g.initial(&mut q), 2, "one seed frame per tenant");
+        let first = q.pop_due(SimTime(u64::MAX)).unwrap();
+        let next = g.on_complete(first.tenant, SimTime(10_000_000)).unwrap();
+        assert!(next.at.ns() > 10_000_000);
+        assert_eq!(next.seq, first.seq + 1);
+        // Past the horizon no new frame is issued.
+        assert!(g.on_complete(first.tenant, SimTime(w.duration_ns)).is_none());
+        // Open-loop generators never emit on completion.
+        let mut g2 = StreamGenerator::new(&wl(ArrivalKind::Poisson));
+        assert!(g2.on_complete(0, SimTime(0)).is_none());
+    }
+
+    #[test]
+    fn arrival_queue_orders_and_gates_on_time() {
+        let mut q = ArrivalQueue::new();
+        let f = |at, tenant, seq| FrameArrival {
+            at: SimTime(at),
+            tenant,
+            seq,
+            deadline: SimTime(at + 1),
+        };
+        q.push(f(50, 1, 0));
+        q.push(f(10, 0, 0));
+        q.push(f(10, 2, 0));
+        assert_eq!(q.peek_at(), Some(SimTime(10)));
+        assert!(q.pop_due(SimTime(5)).is_none(), "future arrivals stay queued");
+        assert_eq!(q.pop_due(SimTime(10)).unwrap().tenant, 0, "ties break by tenant");
+        assert_eq!(q.pop_due(SimTime(10)).unwrap().tenant, 2);
+        assert!(q.pop_due(SimTime(10)).is_none());
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop_due(SimTime(100)).unwrap().tenant, 1);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,413 @@
+//! Multi-tenant serving workload model: stream generators, admission
+//! control and QoS scheduling over the multi-engine DMA pool.
+//!
+//! The paper's closing argument is that the kernel-level driver wins not
+//! on raw latency but because it frees the OS "to manage other important
+//! processes" — a claim that only has teeth once the accelerator is a
+//! *shared service* under concurrent load. This subsystem supplies that
+//! load: `N` tenants, each a DAVIS-style frame stream with its own
+//! arrival process, rate, deadline and priority, multiplexed onto the
+//! engine pool through bounded admission queues and a pluggable QoS
+//! policy.
+//!
+//! * [`generator`] — seeded open-loop (Poisson, bursty/MMPP, linear
+//!   ramp) and closed-loop sensor-stream generators. Every arrival is a
+//!   pure function of [`WorkloadConfig::seed`], so serve runs are
+//!   bit-replayable;
+//! * [`admission`] — bounded per-tenant queues with shed policies
+//!   (tail-drop, drop-oldest, frame-coalescing — the merge a real
+//!   neuromorphic pipeline performs when it falls behind the sensor);
+//! * [`qos`] — the scheduling policies over the engine pool: global
+//!   FIFO, weighted deficit-round-robin, strict priority with aging,
+//!   and earliest-deadline-first;
+//! * [`slo`] — per-tenant accounting: log-bucketed latency histograms
+//!   ([`crate::util::stats::LogHistogram`]), goodput, drop/coalesce
+//!   rates and SLO attainment.
+//!
+//! The execution loop that wires these onto the simulator lives in
+//! [`crate::coordinator::serve`]; the knobs live under the `workload`
+//! key of the JSON config (same override mechanism as `faults`). See
+//! DESIGN.md §11 for the policy contracts and the determinism guarantee.
+
+pub mod admission;
+pub mod generator;
+pub mod qos;
+pub mod slo;
+
+pub use admission::{Admission, AdmitOutcome, QueuedFrame, ShedPolicy};
+pub use generator::{ArrivalKind, ArrivalQueue, FrameArrival, StreamGenerator};
+pub use qos::{QosPolicyKind, QosState};
+pub use slo::{ServeReport, TenantSlo};
+
+use crate::util::json::Json;
+
+/// All serving-workload knobs, JSON-configurable under the `workload`
+/// key of [`crate::config::SimConfig`]. Per-tenant vectors follow the
+/// `ddr_engine_weights` convention: tenants beyond the list inherit the
+/// last entry, so `[1]` means "all equal".
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    /// Seed of the generators' PCG32 streams (independent of the main
+    /// simulator seed so arrival patterns can be varied in isolation).
+    pub seed: u64,
+    /// Number of tenant streams.
+    pub tenants: u64,
+    /// Aggregate offered load across all tenants, frames/second
+    /// (open-loop kinds; closed-loop paces itself via `think_ns`).
+    pub offered_fps: f64,
+    /// Per-tenant rate skew: tenant `i`'s share is proportional to
+    /// `skew^i`. `1.0` = uniform; `4.0` with 3 tenants = 1:4:16.
+    pub skew: f64,
+    /// Arrival process (`"poisson"`, `"bursty"`, `"ramp"`, `"closed"`).
+    pub arrival: ArrivalKind,
+    /// Bursty (MMPP-2): peak-to-trough rate ratio (mean stays
+    /// `offered_fps`).
+    pub burst_factor: f64,
+    /// Bursty: mean dwell time per phase.
+    pub burst_dwell_ns: u64,
+    /// Closed-loop: mean think time between a completion and the
+    /// tenant's next frame.
+    pub think_ns: u64,
+    /// Generation horizon; queued frames admitted before it still drain.
+    pub duration_ns: u64,
+    /// Per-frame deadline, from sensor timestamp to result delivered.
+    pub deadline_ns: u64,
+    /// Bound of each tenant's admission queue.
+    pub queue_cap: u64,
+    /// What to shed when a queue is full (`"tail-drop"`,
+    /// `"drop-oldest"`, `"coalesce"`).
+    pub shed: ShedPolicy,
+    /// Engine-pool scheduling policy (`"fifo"`, `"drr"`, `"priority"`,
+    /// `"edf"`).
+    pub policy: QosPolicyKind,
+    /// DRR: frames of credit added per round (scaled by the tenant's
+    /// weight).
+    pub drr_quantum: u64,
+    /// DRR service weights per tenant (inherit-last).
+    pub weights: Vec<u64>,
+    /// Strict-priority levels per tenant, lower = more urgent
+    /// (inherit-last).
+    pub priorities: Vec<u64>,
+    /// Priority aging: a waiting head frame gains one priority level per
+    /// this much queueing delay, so low-priority tenants cannot starve.
+    pub aging_ns: u64,
+    /// CPU demand per admitted frame for the PS-side collection +
+    /// normalization task — the "other important processes" of §V,
+    /// scheduled onto whatever CPU the driver frees.
+    pub normalize_ns: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            seed: 0x5E21_F00D,
+            tenants: 4,
+            offered_fps: 60.0,
+            skew: 1.0,
+            arrival: ArrivalKind::Poisson,
+            burst_factor: 4.0,
+            burst_dwell_ns: 50_000_000,
+            think_ns: 5_000_000,
+            duration_ns: 1_000_000_000,
+            deadline_ns: 50_000_000,
+            queue_cap: 8,
+            shed: ShedPolicy::TailDrop,
+            policy: QosPolicyKind::Drr,
+            drr_quantum: 1,
+            weights: vec![1],
+            priorities: vec![0],
+            aging_ns: 20_000_000,
+            normalize_ns: 300_000,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    /// Tenant `i`'s entry of an inherit-last per-tenant vector.
+    fn inherit_last(v: &[u64], i: usize) -> u64 {
+        *v.get(i).or_else(|| v.last()).expect("validated non-empty")
+    }
+
+    /// DRR weight of tenant `i`.
+    pub fn weight(&self, i: usize) -> u64 {
+        Self::inherit_last(&self.weights, i)
+    }
+
+    /// Priority level of tenant `i` (lower = more urgent).
+    pub fn priority(&self, i: usize) -> u64 {
+        Self::inherit_last(&self.priorities, i)
+    }
+
+    /// Tenant `i`'s offered rate in frames/sec (skew-weighted share of
+    /// the aggregate).
+    pub fn tenant_fps(&self, i: usize) -> f64 {
+        let n = self.tenants as usize;
+        let total: f64 = (0..n).map(|j| self.skew.powi(j as i32)).sum();
+        self.offered_fps * self.skew.powi(i as i32) / total
+    }
+
+    /// Apply overrides from a parsed JSON object; unknown keys are an
+    /// error (same contract as the top-level config).
+    pub fn apply_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("workload config must be a JSON object"))?;
+        for (k, val) in obj {
+            let need_u64 = || {
+                val.as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("workload.{k} must be a non-negative integer"))
+            };
+            let need_f64 =
+                || val.as_f64().ok_or_else(|| anyhow::anyhow!("workload.{k} must be a number"));
+            let need_str =
+                || val.as_str().ok_or_else(|| anyhow::anyhow!("workload.{k} must be a string"));
+            match k.as_str() {
+                "seed" => self.seed = need_u64()?,
+                "tenants" => self.tenants = need_u64()?,
+                "offered_fps" => self.offered_fps = need_f64()?,
+                "skew" => self.skew = need_f64()?,
+                "arrival" => {
+                    self.arrival = ArrivalKind::parse(need_str()?).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "workload.arrival must be \"poisson\", \"bursty\", \"ramp\" or \
+                             \"closed\""
+                        )
+                    })?
+                }
+                "burst_factor" => self.burst_factor = need_f64()?,
+                "burst_dwell_ns" => self.burst_dwell_ns = need_u64()?,
+                "think_ns" => self.think_ns = need_u64()?,
+                "duration_ns" => self.duration_ns = need_u64()?,
+                "deadline_ns" => self.deadline_ns = need_u64()?,
+                "queue_cap" => self.queue_cap = need_u64()?,
+                "shed" => {
+                    self.shed = ShedPolicy::parse(need_str()?).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "workload.shed must be \"tail-drop\", \"drop-oldest\" or \"coalesce\""
+                        )
+                    })?
+                }
+                "policy" => {
+                    self.policy = QosPolicyKind::parse(need_str()?).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "workload.policy must be \"fifo\", \"drr\", \"priority\" or \"edf\""
+                        )
+                    })?
+                }
+                "drr_quantum" => self.drr_quantum = need_u64()?,
+                "weights" => self.weights = parse_u64_vec(val, k)?,
+                "priorities" => self.priorities = parse_u64_vec(val, k)?,
+                "aging_ns" => self.aging_ns = need_u64()?,
+                "normalize_ns" => self.normalize_ns = need_u64()?,
+                _ => anyhow::bail!("unknown workload config key: {k}"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("tenants", Json::num(self.tenants as f64)),
+            ("offered_fps", Json::num(self.offered_fps)),
+            ("skew", Json::num(self.skew)),
+            ("arrival", Json::str(self.arrival.label())),
+            ("burst_factor", Json::num(self.burst_factor)),
+            ("burst_dwell_ns", Json::num(self.burst_dwell_ns as f64)),
+            ("think_ns", Json::num(self.think_ns as f64)),
+            ("duration_ns", Json::num(self.duration_ns as f64)),
+            ("deadline_ns", Json::num(self.deadline_ns as f64)),
+            ("queue_cap", Json::num(self.queue_cap as f64)),
+            ("shed", Json::str(self.shed.label())),
+            ("policy", Json::str(self.policy.label())),
+            ("drr_quantum", Json::num(self.drr_quantum as f64)),
+            (
+                "weights",
+                Json::Arr(self.weights.iter().map(|&w| Json::num(w as f64)).collect()),
+            ),
+            (
+                "priorities",
+                Json::Arr(self.priorities.iter().map(|&p| Json::num(p as f64)).collect()),
+            ),
+            ("aging_ns", Json::num(self.aging_ns as f64)),
+            ("normalize_ns", Json::num(self.normalize_ns as f64)),
+        ])
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.tenants >= 1 && self.tenants <= 64,
+            "workload.tenants must be in [1, 64]"
+        );
+        // Upper bounds keep the open-loop generators from materialising
+        // absurd arrival sets (offered_fps × duration frames are built
+        // up front); finiteness guards NaN/inf from JSON like `1e999`.
+        anyhow::ensure!(
+            self.offered_fps.is_finite() && self.offered_fps > 0.0
+                && self.offered_fps <= 100_000.0,
+            "workload.offered_fps must be in (0, 1e5]"
+        );
+        anyhow::ensure!(
+            self.skew.is_finite() && self.skew > 0.0 && self.skew <= 64.0,
+            "workload.skew must be in (0, 64]"
+        );
+        anyhow::ensure!(
+            self.burst_factor.is_finite() && (1.0..=1000.0).contains(&self.burst_factor),
+            "workload.burst_factor must be in [1, 1000]"
+        );
+        anyhow::ensure!(
+            self.burst_dwell_ns >= 1 && self.burst_dwell_ns <= 60_000_000_000,
+            "workload.burst_dwell_ns must be in [1, 60e9]"
+        );
+        anyhow::ensure!(
+            self.think_ns >= 1 && self.think_ns <= 60_000_000_000,
+            "workload.think_ns must be in [1, 60e9]"
+        );
+        anyhow::ensure!(
+            self.duration_ns >= 1 && self.duration_ns <= 30_000_000_000,
+            "workload.duration_ns must be in [1, 30e9] (a 30 s horizon bounds the \
+             materialised arrival set)"
+        );
+        // Upper bounds on the integer knobs keep u64 arithmetic off the
+        // overflow cliff (quantum × weight deficit credit, timestamp +
+        // deadline/think sums).
+        anyhow::ensure!(
+            self.deadline_ns >= 1 && self.deadline_ns <= 1_000_000_000_000,
+            "workload.deadline_ns must be in [1, 1e12]"
+        );
+        anyhow::ensure!(
+            self.queue_cap >= 1 && self.queue_cap <= 1_000_000,
+            "workload.queue_cap must be in [1, 1e6]"
+        );
+        anyhow::ensure!(
+            self.drr_quantum >= 1 && self.drr_quantum <= 1_000,
+            "workload.drr_quantum must be in [1, 1000]"
+        );
+        anyhow::ensure!(
+            !self.weights.is_empty()
+                && self.weights.iter().all(|&w| (1..=1_000).contains(&w)),
+            "workload.weights must be non-empty with every weight in [1, 1000]"
+        );
+        anyhow::ensure!(
+            !self.priorities.is_empty()
+                && self.priorities.iter().all(|&p| p <= 1_000_000),
+            "workload.priorities must be non-empty with every level <= 1e6"
+        );
+        anyhow::ensure!(
+            self.aging_ns >= 1 && self.aging_ns <= 1_000_000_000_000,
+            "workload.aging_ns must be in [1, 1e12]"
+        );
+        anyhow::ensure!(
+            self.normalize_ns <= 1_000_000_000,
+            "workload.normalize_ns must be <= 1e9"
+        );
+        Ok(())
+    }
+}
+
+fn parse_u64_vec(val: &Json, key: &str) -> anyhow::Result<Vec<u64>> {
+    val.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("workload.{key} must be an array"))?
+        .iter()
+        .map(|x| {
+            x.as_u64().ok_or_else(|| {
+                anyhow::anyhow!("workload.{key} must hold non-negative integers")
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        WorkloadConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_identity() {
+        let mut wl = WorkloadConfig::default();
+        wl.tenants = 6;
+        wl.arrival = ArrivalKind::Bursty;
+        wl.shed = ShedPolicy::Coalesce;
+        wl.policy = QosPolicyKind::Edf;
+        wl.weights = vec![3, 1];
+        wl.priorities = vec![0, 2];
+        let json = wl.to_json();
+        let mut back = WorkloadConfig::default();
+        back.apply_json(&json).unwrap();
+        assert_eq!(wl, back);
+    }
+
+    #[test]
+    fn unknown_and_bad_keys_rejected() {
+        let mut wl = WorkloadConfig::default();
+        assert!(wl.apply_json(&Json::parse(r#"{"tenant_count": 3}"#).unwrap()).is_err());
+        assert!(wl.apply_json(&Json::parse(r#"{"policy": "lottery"}"#).unwrap()).is_err());
+        assert!(wl.apply_json(&Json::parse(r#"{"arrival": 7}"#).unwrap()).is_err());
+        assert!(wl.apply_json(&Json::parse(r#"{"weights": [1, "x"]}"#).unwrap()).is_err());
+        // Valid override applies.
+        wl.apply_json(&Json::parse(r#"{"policy": "edf", "queue_cap": 3}"#).unwrap()).unwrap();
+        assert_eq!(wl.policy, QosPolicyKind::Edf);
+        assert_eq!(wl.queue_cap, 3);
+    }
+
+    #[test]
+    fn validation_bounds() {
+        let mut wl = WorkloadConfig::default();
+        wl.tenants = 0;
+        assert!(wl.validate().is_err());
+        let mut wl = WorkloadConfig::default();
+        wl.queue_cap = 0;
+        assert!(wl.validate().is_err());
+        let mut wl = WorkloadConfig::default();
+        wl.weights = vec![0];
+        assert!(wl.validate().is_err());
+        let mut wl = WorkloadConfig::default();
+        wl.burst_factor = 0.5;
+        assert!(wl.validate().is_err());
+        // OOM guards: absurd rates, infinities and multi-minute horizons
+        // are rejected before the generators materialise arrivals.
+        let mut wl = WorkloadConfig::default();
+        wl.offered_fps = 1e12;
+        assert!(wl.validate().is_err());
+        let mut wl = WorkloadConfig::default();
+        wl.offered_fps = f64::INFINITY;
+        assert!(wl.validate().is_err());
+        let mut wl = WorkloadConfig::default();
+        wl.skew = f64::NAN;
+        assert!(wl.validate().is_err());
+        let mut wl = WorkloadConfig::default();
+        wl.duration_ns = 120_000_000_000;
+        assert!(wl.validate().is_err());
+    }
+
+    #[test]
+    fn tenant_rates_split_the_aggregate() {
+        let mut wl = WorkloadConfig::default();
+        wl.tenants = 3;
+        wl.offered_fps = 70.0;
+        wl.skew = 1.0;
+        for i in 0..3 {
+            assert!((wl.tenant_fps(i) - 70.0 / 3.0).abs() < 1e-9);
+        }
+        wl.skew = 6.0;
+        let total: f64 = (0..3).map(|i| wl.tenant_fps(i)).sum();
+        assert!((total - 70.0).abs() < 1e-9);
+        assert!(wl.tenant_fps(2) / wl.tenant_fps(0) > 35.0, "skew^2 = 36x spread");
+    }
+
+    #[test]
+    fn inherit_last_vectors() {
+        let mut wl = WorkloadConfig::default();
+        wl.tenants = 4;
+        wl.weights = vec![4, 2];
+        wl.priorities = vec![0, 1, 3];
+        assert_eq!(wl.weight(0), 4);
+        assert_eq!(wl.weight(3), 2);
+        assert_eq!(wl.priority(2), 3);
+        assert_eq!(wl.priority(3), 3);
+    }
+}

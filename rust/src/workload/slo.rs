@@ -1,0 +1,322 @@
+//! Per-tenant service-level accounting for serve runs.
+//!
+//! Latency is end-to-end: sensor timestamp of the (possibly coalesced)
+//! frame → FC-head result delivered. Histograms are log-bucketed
+//! ([`crate::util::stats::LogHistogram`]) so tails are cheap to keep and
+//! cheap to merge across tenants (aggregate p99/p99.9) or sweep cells.
+//! A tenant with zero completions renders as a dropped row (`None`
+//! percentiles), never a crash — the `util::stats` empty-sample contract.
+
+use crate::sim::time::{Dur, SimTime};
+use crate::system::CpuLedger;
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+
+/// One tenant's lifetime counters over a serve run.
+#[derive(Clone, Debug, Default)]
+pub struct TenantSlo {
+    /// Frames that reached admission.
+    pub offered: u64,
+    /// Frames that entered a queue as a new entry.
+    pub admitted: u64,
+    /// Frames shed (tail-drop rejections + drop-oldest evictions).
+    pub dropped: u64,
+    /// Frames folded into a queued entry (coalesce).
+    pub coalesced: u64,
+    /// Frames whose result was delivered.
+    pub completed: u64,
+    /// Frames still queued when the serving horizon closed (admitted,
+    /// never dispatched — a shutdown abandons its backlog).
+    pub unserved: u64,
+    /// Of `completed`, frames delivered past their deadline.
+    pub missed: u64,
+    /// End-to-end latency of completed frames, ns.
+    pub latency: LogHistogram,
+    /// Queueing delay component (admission → service start), ns.
+    pub queueing: LogHistogram,
+    /// CPU time the OS scheduler granted this tenant's collection +
+    /// normalization task.
+    pub normalize_cpu: Dur,
+    /// High-water mark of the tenant's admission queue.
+    pub max_queue: usize,
+}
+
+impl TenantSlo {
+    /// Record one completion.
+    pub fn complete(&mut self, arrived: SimTime, started: SimTime, done: SimTime, deadline: SimTime) {
+        self.completed += 1;
+        if done > deadline {
+            self.missed += 1;
+        }
+        self.latency.record(done.since(arrived).ns());
+        self.queueing.record(started.since(arrived).ns());
+    }
+
+    /// Delivered frames per second of serve-run wall time.
+    pub fn goodput_fps(&self, duration: Dur) -> f64 {
+        if duration == Dur::ZERO {
+            return 0.0;
+        }
+        self.completed as f64 / duration.as_secs()
+    }
+
+    /// Fraction of *offered* frames delivered within deadline. Sheds and
+    /// misses both count against attainment — the tenant's user saw
+    /// neither frame.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.offered == 0 {
+            return 1.0;
+        }
+        (self.completed - self.missed) as f64 / self.offered as f64
+    }
+
+    pub fn drop_rate(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        (self.dropped + self.coalesced) as f64 / self.offered as f64
+    }
+
+    fn to_json(&self, duration: Dur) -> Json {
+        let pct = |h: &LogHistogram, p: f64| Json::num(h.percentile(p).unwrap_or(0.0));
+        Json::obj(vec![
+            ("offered", Json::num(self.offered as f64)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("coalesced", Json::num(self.coalesced as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("unserved", Json::num(self.unserved as f64)),
+            ("missed", Json::num(self.missed as f64)),
+            ("goodput_fps", Json::num(self.goodput_fps(duration))),
+            ("slo_attainment", Json::num(self.slo_attainment())),
+            ("latency_mean_ns", Json::num(self.latency.mean())),
+            ("latency_p50_ns", pct(&self.latency, 50.0)),
+            ("latency_p99_ns", pct(&self.latency, 99.0)),
+            ("latency_p999_ns", pct(&self.latency, 99.9)),
+            ("latency_max_ns", Json::num(self.latency.max() as f64)),
+            ("queueing_p99_ns", pct(&self.queueing, 99.0)),
+            ("normalize_cpu_ns", Json::num(self.normalize_cpu.ns() as f64)),
+            ("max_queue", Json::num(self.max_queue as f64)),
+        ])
+    }
+}
+
+/// The full outcome of one serve run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Self-description (labels, not config dumps — the config is the
+    /// run's provenance).
+    pub driver: &'static str,
+    pub policy: &'static str,
+    pub shed: &'static str,
+    pub arrival: &'static str,
+    pub engines: usize,
+    /// First arrival generated → last frame drained.
+    pub duration: Dur,
+    pub tenants: Vec<TenantSlo>,
+    /// CPU ledger delta over the run.
+    pub ledger: CpuLedger,
+    /// Simulator events dispatched (the bench harness's throughput
+    /// denominator).
+    pub events: u64,
+}
+
+impl ServeReport {
+    pub fn total_offered(&self) -> u64 {
+        self.tenants.iter().map(|t| t.offered).sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.completed).sum()
+    }
+
+    pub fn total_shed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.dropped + t.coalesced).sum()
+    }
+
+    pub fn total_unserved(&self) -> u64 {
+        self.tenants.iter().map(|t| t.unserved).sum()
+    }
+
+    pub fn total_missed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.missed).sum()
+    }
+
+    /// Aggregate delivered frames/sec.
+    pub fn goodput_fps(&self) -> f64 {
+        if self.duration == Dur::ZERO {
+            return 0.0;
+        }
+        self.total_completed() as f64 / self.duration.as_secs()
+    }
+
+    /// Aggregate offered frames/sec.
+    pub fn offered_fps(&self) -> f64 {
+        if self.duration == Dur::ZERO {
+            return 0.0;
+        }
+        self.total_offered() as f64 / self.duration.as_secs()
+    }
+
+    /// Merged latency histogram across tenants (aggregate tail).
+    pub fn merged_latency(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for t in &self.tenants {
+            h.merge(&t.latency);
+        }
+        h
+    }
+
+    /// Aggregate SLO attainment over offered frames.
+    pub fn slo_attainment(&self) -> f64 {
+        let offered = self.total_offered();
+        if offered == 0 {
+            return 1.0;
+        }
+        (self.total_completed() - self.total_missed()) as f64 / offered as f64
+    }
+
+    /// Max/min per-tenant goodput ratio — the isolation metric the DRR
+    /// acceptance gate checks. Tenants that offered nothing are ignored;
+    /// a served-nothing tenant makes the ratio infinite.
+    pub fn fairness_ratio(&self) -> f64 {
+        let mut min = f64::INFINITY;
+        let mut max: f64 = 0.0;
+        for t in &self.tenants {
+            if t.offered == 0 {
+                continue;
+            }
+            let g = t.completed as f64;
+            min = min.min(g);
+            max = max.max(g);
+        }
+        if !min.is_finite() || max == 0.0 {
+            return 0.0;
+        }
+        if min == 0.0 {
+            return f64::INFINITY;
+        }
+        max / min
+    }
+
+    /// Machine-readable twin (determinism tests compare this string;
+    /// `serve --csv` and the sweep reports derive from the same numbers).
+    pub fn to_json(&self) -> Json {
+        let merged = self.merged_latency();
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("driver", Json::str(self.driver)),
+            ("policy", Json::str(self.policy)),
+            ("shed", Json::str(self.shed)),
+            ("arrival", Json::str(self.arrival)),
+            ("engines", Json::num(self.engines as f64)),
+            ("duration_ms", Json::num(self.duration.as_ms())),
+            ("events", Json::num(self.events as f64)),
+            ("offered", Json::num(self.total_offered() as f64)),
+            ("completed", Json::num(self.total_completed() as f64)),
+            ("shed_frames", Json::num(self.total_shed() as f64)),
+            ("unserved", Json::num(self.total_unserved() as f64)),
+            ("missed", Json::num(self.total_missed() as f64)),
+            ("goodput_fps", Json::num(self.goodput_fps())),
+            ("slo_attainment", Json::num(self.slo_attainment())),
+            ("fairness_ratio", Json::num(self.fairness_ratio())),
+            ("latency_p50_ns", Json::num(merged.percentile(50.0).unwrap_or(0.0))),
+            ("latency_p99_ns", Json::num(merged.percentile(99.0).unwrap_or(0.0))),
+            ("latency_p999_ns", Json::num(merged.percentile(99.9).unwrap_or(0.0))),
+            ("cpu_busy_ms", Json::num(self.ledger.busy.as_ms())),
+            ("cpu_freed_ms", Json::num(self.ledger.freed.as_ms())),
+            ("cpu_used_by_tasks_ms", Json::num(self.ledger.used_by_tasks.as_ms())),
+            (
+                "tenants",
+                Json::Arr(self.tenants.iter().map(|t| t.to_json(self.duration)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slo_with(completed: u64, offered: u64) -> TenantSlo {
+        let mut t = TenantSlo::default();
+        t.offered = offered;
+        t.admitted = completed;
+        for i in 0..completed {
+            t.complete(
+                SimTime(i * 1000),
+                SimTime(i * 1000 + 100),
+                SimTime(i * 1000 + 500),
+                SimTime(i * 1000 + 10_000),
+            );
+        }
+        t
+    }
+
+    #[test]
+    fn tenant_accounting_and_attainment() {
+        let mut t = slo_with(10, 12);
+        t.dropped = 2;
+        assert_eq!(t.completed, 10);
+        assert_eq!(t.missed, 0);
+        assert!((t.slo_attainment() - 10.0 / 12.0).abs() < 1e-12);
+        assert!((t.drop_rate() - 2.0 / 12.0).abs() < 1e-12);
+        assert!(t.goodput_fps(Dur::from_secs(2.0)) == 5.0);
+        // A late completion counts as missed.
+        t.complete(SimTime(0), SimTime(1), SimTime(100), SimTime(50));
+        assert_eq!(t.missed, 1);
+    }
+
+    #[test]
+    fn zero_completion_tenant_is_safe() {
+        let t = TenantSlo::default();
+        assert_eq!(t.slo_attainment(), 1.0);
+        assert_eq!(t.goodput_fps(Dur::from_secs(1.0)), 0.0);
+        assert!(t.latency.percentile(99.0).is_none());
+    }
+
+    fn report(tenants: Vec<TenantSlo>) -> ServeReport {
+        ServeReport {
+            driver: "kernel-level drv",
+            policy: "drr",
+            shed: "tail-drop",
+            arrival: "poisson",
+            engines: 2,
+            duration: Dur::from_secs(1.0),
+            tenants,
+            ledger: CpuLedger::default(),
+            events: 1234,
+        }
+    }
+
+    #[test]
+    fn fairness_ratio_edges() {
+        // Balanced service → ratio near 1.
+        let r = report(vec![slo_with(10, 10), slo_with(10, 10)]);
+        assert!((r.fairness_ratio() - 1.0).abs() < 1e-12);
+        // Starved tenant → infinite ratio.
+        let r = report(vec![slo_with(10, 10), slo_with(0, 10)]);
+        assert!(r.fairness_ratio().is_infinite());
+        // Tenant that offered nothing is ignored.
+        let r = report(vec![slo_with(10, 10), slo_with(0, 0), slo_with(5, 5)]);
+        assert!((r.fairness_ratio() - 2.0).abs() < 1e-12);
+        // Nothing served at all.
+        let r = report(vec![slo_with(0, 10)]);
+        assert_eq!(r.fairness_ratio(), 0.0);
+    }
+
+    #[test]
+    fn report_json_carries_totals() {
+        let r = report(vec![slo_with(8, 10), slo_with(4, 4)]);
+        let j = r.to_json();
+        assert_eq!(j.get("offered").as_u64(), Some(14));
+        assert_eq!(j.get("completed").as_u64(), Some(12));
+        assert_eq!(j.get("engines").as_u64(), Some(2));
+        assert_eq!(j.get("tenants").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("policy").as_str(), Some("drr"));
+        // Round-trips through the parser (the determinism tests diff the
+        // serialised form).
+        let text = j.to_string_pretty();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,261 @@
+//! Property tests for the serving subsystem: randomized generator,
+//! admission and policy configurations (seeded, so failures replay)
+//! checked against the invariants DESIGN.md §11 states:
+//!
+//! * queues never exceed their bound, under any shed policy;
+//! * every offered frame ends in exactly one fate;
+//! * DRR never starves a backlogged tenant;
+//! * every policy is work-conserving (backlog ⇒ a pick);
+//! * open-loop arrival generation is deterministic and time-ordered.
+
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::serve::serve;
+use psoc_dma::drivers::DriverKind;
+use psoc_dma::sim::rng::Pcg32;
+use psoc_dma::sim::time::SimTime;
+use psoc_dma::workload::{
+    Admission, ArrivalKind, ArrivalQueue, FrameArrival, QosPolicyKind, QosState, ShedPolicy,
+    StreamGenerator, WorkloadConfig,
+};
+
+/// Draw a random-but-valid workload config from a seeded RNG.
+fn random_workload(rng: &mut Pcg32) -> WorkloadConfig {
+    let mut wl = WorkloadConfig::default();
+    wl.seed = rng.next_u64();
+    wl.tenants = rng.range_u64(1, 5);
+    wl.offered_fps = 50.0 + rng.next_f64() * 400.0;
+    wl.skew = [0.5, 1.0, 2.0, 5.0][rng.next_bounded(4) as usize];
+    wl.arrival = [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Ramp]
+        [rng.next_bounded(3) as usize];
+    wl.burst_factor = 1.0 + rng.next_f64() * 9.0;
+    wl.burst_dwell_ns = rng.range_u64(5_000_000, 80_000_000);
+    wl.duration_ns = rng.range_u64(50_000_000, 200_000_000);
+    wl.deadline_ns = rng.range_u64(10_000_000, 100_000_000);
+    wl.queue_cap = rng.range_u64(1, 12);
+    wl.shed = [ShedPolicy::TailDrop, ShedPolicy::DropOldest, ShedPolicy::Coalesce]
+        [rng.next_bounded(3) as usize];
+    wl.policy = QosPolicyKind::ALL[rng.next_bounded(4) as usize];
+    wl.drr_quantum = rng.range_u64(1, 3);
+    wl.weights = (0..wl.tenants).map(|_| rng.range_u64(1, 4)).collect();
+    wl.priorities = (0..wl.tenants).map(|_| rng.range_u64(0, 3)).collect();
+    wl.validate().expect("random workload must be valid by construction");
+    wl
+}
+
+#[test]
+fn random_generators_are_deterministic_ordered_and_in_horizon() {
+    let mut rng = Pcg32::new(0xA11CE);
+    for _ in 0..20 {
+        let wl = random_workload(&mut rng);
+        let gen_all = |wl: &WorkloadConfig| {
+            let mut g = StreamGenerator::new(wl);
+            let mut q = ArrivalQueue::new();
+            g.initial(&mut q);
+            let mut v = Vec::new();
+            while let Some(a) = q.pop_due(SimTime(u64::MAX)) {
+                v.push(a);
+            }
+            v
+        };
+        let a = gen_all(&wl);
+        let b = gen_all(&wl);
+        assert_eq!(a, b, "arrivals not reproducible for {wl:?}");
+        let mut last = SimTime(0);
+        let mut seqs = vec![0u64; wl.tenants as usize];
+        for f in &a {
+            assert!(f.at >= last, "queue must pop in time order");
+            last = f.at;
+            assert!(f.at.ns() < wl.duration_ns, "arrival past the horizon");
+            assert_eq!(f.deadline.ns(), f.at.ns() + wl.deadline_ns);
+            assert_eq!(f.seq, seqs[f.tenant], "per-tenant seqs must be gapless");
+            seqs[f.tenant] += 1;
+        }
+    }
+}
+
+#[test]
+fn random_admission_sequences_never_exceed_bounds() {
+    let mut rng = Pcg32::new(0xBEEF);
+    for _ in 0..30 {
+        let wl = random_workload(&mut rng);
+        let mut adm = Admission::new(&wl);
+        let n = wl.tenants as usize;
+        let mut offered = vec![0u64; n];
+        let mut served = vec![0u64; n];
+        let mut seq = vec![0u64; n];
+        for step in 0..400u64 {
+            let t = rng.next_bounded(n as u32) as usize;
+            if rng.chance(0.7) {
+                adm.offer(FrameArrival {
+                    at: SimTime(step * 1000),
+                    tenant: t,
+                    seq: seq[t],
+                    deadline: SimTime(step * 1000 + wl.deadline_ns),
+                });
+                seq[t] += 1;
+                offered[t] += 1;
+            } else if adm.pop(t).is_some() {
+                served[t] += 1;
+            }
+            // The bound holds after every single operation.
+            for i in 0..n {
+                assert!(
+                    adm.tenant(i).len() <= wl.queue_cap as usize,
+                    "queue bound violated for {wl:?}"
+                );
+            }
+        }
+        for i in 0..n {
+            let q = adm.tenant(i);
+            assert_eq!(q.offered, offered[i]);
+            assert_eq!(
+                served[i] + q.len() as u64 + q.dropped + q.coalesced,
+                q.offered,
+                "admission ledger out of balance ({:?})",
+                wl.shed
+            );
+            assert!(q.max_depth <= wl.queue_cap as usize);
+        }
+    }
+}
+
+/// DRR never starves: with every tenant continuously backlogged, each
+/// tenant is served at least once per bounded window of picks.
+#[test]
+fn drr_never_starves_a_backlogged_tenant() {
+    let mut rng = Pcg32::new(0xD22);
+    for _ in 0..20 {
+        let mut wl = random_workload(&mut rng);
+        wl.policy = QosPolicyKind::Drr;
+        wl.tenants = rng.range_u64(2, 6);
+        wl.queue_cap = 64;
+        wl.shed = ShedPolicy::TailDrop;
+        wl.weights = (0..wl.tenants).map(|_| rng.range_u64(1, 4)).collect();
+        let n = wl.tenants as usize;
+        let mut adm = Admission::new(&wl);
+        let mut qos = QosState::new(&wl);
+        let mut seq = vec![0u64; n];
+        let refill = |adm: &mut Admission, seq: &mut Vec<u64>, t: usize, at: u64| {
+            adm.offer(FrameArrival {
+                at: SimTime(at),
+                tenant: t,
+                seq: seq[t],
+                deadline: SimTime(at + 1_000_000),
+            });
+            seq[t] += 1;
+        };
+        for t in 0..n {
+            for _ in 0..8 {
+                refill(&mut adm, &mut seq, t, 0);
+            }
+        }
+        // Window bound: between two services of tenant t, every other
+        // tenant can be served at most floor(quantum*weight + 1) frames
+        // (its refill plus a sub-frame leftover), so the gap is under
+        // n*(quantum*max_weight + 1) picks — any window that long must
+        // touch every continuously-backlogged tenant.
+        let max_w = *wl.weights.iter().max().unwrap();
+        let window = (n as u64 * (wl.drr_quantum * max_w + 1)) as usize;
+        let rounds = 6;
+        let mut served_in_window = vec![0u64; n];
+        let mut picks = 0usize;
+        for _ in 0..(rounds * window) {
+            let t = qos.pick(&adm, SimTime(picks as u64)).expect("backlog exists");
+            adm.pop(t);
+            served_in_window[t] += 1;
+            // Keep every tenant backlogged.
+            refill(&mut adm, &mut seq, t, picks as u64);
+            picks += 1;
+            if picks % window == 0 {
+                for (i, &s) in served_in_window.iter().enumerate() {
+                    assert!(
+                        s >= 1,
+                        "tenant {i} starved over a {window}-pick window ({wl:?})"
+                    );
+                }
+                served_in_window = vec![0u64; n];
+            }
+        }
+    }
+}
+
+/// Work conservation: whenever any queue is non-empty, every policy
+/// produces a pick, and never picks an empty queue.
+#[test]
+fn every_policy_is_work_conserving() {
+    let mut rng = Pcg32::new(0x90C);
+    for _ in 0..30 {
+        let mut wl = random_workload(&mut rng);
+        wl.queue_cap = 8;
+        let n = wl.tenants as usize;
+        let mut adm = Admission::new(&wl);
+        let mut qos = QosState::new(&wl);
+        let mut seq = vec![0u64; n];
+        for step in 0..300u64 {
+            let t = rng.next_bounded(n as u32) as usize;
+            if rng.chance(0.5) {
+                adm.offer(FrameArrival {
+                    at: SimTime(step * 500),
+                    tenant: t,
+                    seq: seq[t],
+                    deadline: SimTime(step * 500 + wl.deadline_ns),
+                });
+                seq[t] += 1;
+            }
+            if rng.chance(0.6) {
+                match qos.pick(&adm, SimTime(step * 500)) {
+                    Some(picked) => {
+                        assert!(
+                            adm.backlogged(picked),
+                            "{:?} picked an empty queue",
+                            wl.policy
+                        );
+                        adm.pop(picked);
+                    }
+                    None => {
+                        assert!(
+                            !adm.any_backlog(),
+                            "{:?} refused work with a backlog",
+                            wl.policy
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// End-to-end: random small serve runs hold the frame ledger, the queue
+/// bounds and determinism.
+#[test]
+fn random_serve_runs_hold_invariants() {
+    let mut rng = Pcg32::new(0x5E12);
+    for _ in 0..4 {
+        let mut cfg = SimConfig::default();
+        let mut wl = random_workload(&mut rng);
+        // Keep runs small: these execute the full simulator.
+        wl.duration_ns = wl.duration_ns.min(80_000_000);
+        wl.offered_fps = wl.offered_fps.min(250.0);
+        cfg.workload = wl;
+        let kind = [DriverKind::UserPolling, DriverKind::KernelIrq]
+            [rng.next_bounded(2) as usize];
+        let engines = 1 + rng.next_bounded(2) as usize;
+        let a = serve(&cfg, kind, engines).unwrap();
+        for (i, t) in a.tenants.iter().enumerate() {
+            assert_eq!(
+                t.completed + t.dropped + t.coalesced + t.unserved,
+                t.offered,
+                "tenant {i} ledger out of balance ({:?})",
+                cfg.workload
+            );
+            assert!(t.max_queue <= cfg.workload.queue_cap as usize);
+        }
+        let b = serve(&cfg, kind, engines).unwrap();
+        assert_eq!(
+            a.to_json().to_string_compact(),
+            b.to_json().to_string_compact(),
+            "serve not deterministic for {:?}",
+            cfg.workload
+        );
+    }
+}

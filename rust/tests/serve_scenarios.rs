@@ -1,0 +1,300 @@
+//! Named serving scenarios: each one pins a behaviour of the
+//! multi-tenant serve loop, and each is replayed twice to assert the
+//! bit-identical determinism contract (same seed + config → the same
+//! per-tenant metrics, byte for byte in the serialised report).
+
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::serve::serve;
+use psoc_dma::coordinator::sweeps::{serve_sweep, ServeSweepRow};
+use psoc_dma::drivers::DriverKind;
+use psoc_dma::workload::{ArrivalKind, QosPolicyKind, ShedPolicy};
+
+/// A named scenario = a config mutation + the driver/engine binding.
+struct Scenario {
+    name: &'static str,
+    kind: DriverKind,
+    engines: usize,
+    tweak: fn(&mut SimConfig),
+}
+
+fn scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "poisson-underload-kernel",
+            kind: DriverKind::KernelIrq,
+            engines: 2,
+            tweak: |c| {
+                c.workload.offered_fps = 60.0;
+                c.workload.duration_ns = 150_000_000;
+            },
+        },
+        Scenario {
+            name: "poisson-overload-taildrop-polling",
+            kind: DriverKind::UserPolling,
+            engines: 1,
+            tweak: |c| {
+                c.workload.offered_fps = 400.0;
+                c.workload.duration_ns = 150_000_000;
+                c.workload.shed = ShedPolicy::TailDrop;
+            },
+        },
+        Scenario {
+            name: "bursty-coalesce-scheduled",
+            kind: DriverKind::UserScheduled,
+            engines: 2,
+            tweak: |c| {
+                c.workload.arrival = ArrivalKind::Bursty;
+                c.workload.burst_factor = 6.0;
+                c.workload.offered_fps = 250.0;
+                c.workload.duration_ns = 150_000_000;
+                c.workload.shed = ShedPolicy::Coalesce;
+            },
+        },
+        Scenario {
+            name: "ramp-drop-oldest-edf",
+            kind: DriverKind::KernelIrq,
+            engines: 1,
+            tweak: |c| {
+                c.workload.arrival = ArrivalKind::Ramp;
+                c.workload.offered_fps = 300.0;
+                c.workload.duration_ns = 150_000_000;
+                c.workload.shed = ShedPolicy::DropOldest;
+                c.workload.policy = QosPolicyKind::Edf;
+            },
+        },
+        Scenario {
+            name: "closed-loop-priority",
+            kind: DriverKind::KernelIrq,
+            engines: 2,
+            tweak: |c| {
+                c.workload.arrival = ArrivalKind::Closed;
+                c.workload.think_ns = 3_000_000;
+                c.workload.duration_ns = 150_000_000;
+                c.workload.policy = QosPolicyKind::Priority;
+                c.workload.priorities = vec![0, 2];
+            },
+        },
+        Scenario {
+            name: "skewed-drr-weights",
+            kind: DriverKind::UserPolling,
+            engines: 2,
+            tweak: |c| {
+                c.workload.tenants = 3;
+                c.workload.skew = 3.0;
+                c.workload.offered_fps = 350.0;
+                c.workload.duration_ns = 150_000_000;
+                c.workload.weights = vec![2, 1];
+            },
+        },
+    ]
+}
+
+fn run(s: &Scenario) -> String {
+    let mut cfg = SimConfig::default();
+    cfg.workload.tenants = cfg.workload.tenants.min(3);
+    (s.tweak)(&mut cfg);
+    cfg.validate().expect("scenario config must validate");
+    serve(&cfg, s.kind, s.engines)
+        .unwrap_or_else(|e| panic!("scenario {} failed: {e}", s.name))
+        .to_json()
+        .to_string_pretty()
+}
+
+#[test]
+fn named_scenarios_replay_bit_identically() {
+    for s in scenarios() {
+        let a = run(&s);
+        let b = run(&s);
+        assert_eq!(a, b, "scenario {} not bit-reproducible", s.name);
+        // Sanity: every scenario actually served something.
+        let json = psoc_dma::util::json::Json::parse(&a).unwrap();
+        assert!(
+            json.get("completed").as_u64().unwrap() > 0,
+            "scenario {} served nothing:\n{a}",
+            s.name
+        );
+    }
+}
+
+#[test]
+fn frame_ledger_balances_in_every_scenario() {
+    for s in scenarios() {
+        let mut cfg = SimConfig::default();
+        (s.tweak)(&mut cfg);
+        let rep = serve(&cfg, s.kind, s.engines).unwrap();
+        for (i, t) in rep.tenants.iter().enumerate() {
+            assert_eq!(
+                t.completed + t.dropped + t.coalesced + t.unserved,
+                t.offered,
+                "scenario {} tenant {i}: frame ledger out of balance",
+                s.name
+            );
+            assert!(
+                t.max_queue <= cfg.workload.queue_cap as usize,
+                "scenario {} tenant {i}: queue bound violated",
+                s.name
+            );
+        }
+    }
+}
+
+/// The saturation knee: as offered load crosses the pool's capacity,
+/// goodput flattens at capacity while the latency tail explodes.
+#[test]
+fn serve_sweep_exhibits_saturation_knee() {
+    let mut cfg = SimConfig::default();
+    cfg.workload.tenants = 2;
+    cfg.workload.duration_ns = 400_000_000;
+    let loads = [0.4, 1.6, 2.5];
+    let rows = serve_sweep(
+        &cfg,
+        DriverKind::UserPolling,
+        &loads,
+        &[QosPolicyKind::Drr],
+        &[1],
+        2,
+    )
+    .unwrap();
+    assert_eq!(rows.len(), 3);
+    let cell = |load: f64| -> &ServeSweepRow {
+        rows.iter().find(|r| (r.load - load).abs() < 1e-9).unwrap()
+    };
+    let under = &cell(0.4).report;
+    let knee = &cell(1.6).report;
+    let over = &cell(2.5).report;
+
+    // Below capacity almost everything is served...
+    assert!(
+        under.total_completed() as f64 >= 0.85 * under.total_offered() as f64,
+        "underload shed too much: {}/{}",
+        under.total_completed(),
+        under.total_offered()
+    );
+    // ...past capacity goodput is capped well below offered...
+    assert!(
+        over.goodput_fps() < 0.6 * over.offered_fps(),
+        "no saturation: goodput {} vs offered {}",
+        over.goodput_fps(),
+        over.offered_fps()
+    );
+    // ...and flat across overload levels (the plateau after the knee).
+    let plateau = over.goodput_fps() / knee.goodput_fps();
+    assert!(
+        (0.75..1.35).contains(&plateau),
+        "no plateau: goodput {} at 2.5x vs {} at 1.6x",
+        over.goodput_fps(),
+        knee.goodput_fps()
+    );
+    // The tail blows up across the knee.
+    let p99_under = under.merged_latency().percentile(99.0).unwrap();
+    let p99_over = over.merged_latency().percentile(99.0).unwrap();
+    assert!(
+        p99_over > 3.0 * p99_under,
+        "tail did not explode: p99 {p99_over} vs {p99_under}"
+    );
+}
+
+/// The DRR acceptance gate: under skewed offered load past saturation,
+/// FIFO hands the heavy tenant goodput in proportion to its arrival
+/// share, while weighted-fair DRR bounds the max/min per-tenant ratio.
+/// Deep queues keep admission from masking the policy difference; the
+/// abandoned backlog at shutdown is exactly the unfairness FIFO built.
+#[test]
+fn drr_bounds_goodput_ratio_versus_fifo_under_skew() {
+    let run = |policy: QosPolicyKind| {
+        let mut cfg = SimConfig::default();
+        cfg.workload.tenants = 2;
+        cfg.workload.skew = 4.0; // 20% / 80% offered split
+        cfg.workload.offered_fps = 320.0; // ~2x a single engine's capacity
+        cfg.workload.duration_ns = 800_000_000;
+        cfg.workload.queue_cap = 512; // deep: admission never sheds
+        cfg.workload.deadline_ns = 400_000_000;
+        cfg.workload.policy = policy;
+        serve(&cfg, DriverKind::UserPolling, 1).unwrap()
+    };
+    let fifo = run(QosPolicyKind::Fifo);
+    let drr = run(QosPolicyKind::Drr);
+    let fifo_ratio = fifo.fairness_ratio();
+    let drr_ratio = drr.fairness_ratio();
+    assert!(
+        fifo_ratio.is_finite() && drr_ratio.is_finite(),
+        "a tenant starved outright: fifo {fifo_ratio}, drr {drr_ratio}"
+    );
+    // FIFO follows the 4x offered skew; DRR's round-robin shares service
+    // out evenly while the light tenant is backlogged.
+    assert!(drr_ratio < 2.6, "DRR ratio {drr_ratio} not bounded");
+    assert!(fifo_ratio > 2.7, "FIFO ratio {fifo_ratio} did not follow the skew");
+    assert!(
+        fifo_ratio > 1.4 * drr_ratio,
+        "DRR ({drr_ratio}) must demonstrably beat FIFO ({fifo_ratio})"
+    );
+    // Both policies served the same hardware-bound total (work
+    // conservation): within 10%.
+    let (f, d) = (fifo.total_completed() as f64, drr.total_completed() as f64);
+    assert!((f / d - 1.0).abs() < 0.10, "work conservation broken: {f} vs {d}");
+}
+
+/// The §V claim under real load: the kernel driver frees CPU that the
+/// per-tenant normalization tasks actually consume; the polling driver
+/// burns it spinning.
+#[test]
+fn kernel_driver_frees_cpu_for_normalization_under_load() {
+    let run = |kind: DriverKind| {
+        let mut cfg = SimConfig::default();
+        cfg.workload.offered_fps = 300.0; // saturating: no idle gaps
+        cfg.workload.duration_ns = 200_000_000;
+        serve(&cfg, kind, 1).unwrap()
+    };
+    let poll = run(DriverKind::UserPolling);
+    let kern = run(DriverKind::KernelIrq);
+    let norm = |r: &psoc_dma::workload::ServeReport| {
+        r.tenants.iter().map(|t| t.normalize_cpu.ns()).sum::<u64>()
+    };
+    assert!(
+        norm(&kern) > 2 * norm(&poll).max(1),
+        "kernel {} ns !>> polling {} ns of normalization",
+        norm(&kern),
+        norm(&poll)
+    );
+    assert!(kern.ledger.used_by_tasks > poll.ledger.used_by_tasks);
+}
+
+/// Serve sweep rows are identical for any worker count (the parallel
+/// executor shards cells but each cell's config is position-determined).
+#[test]
+fn serve_sweep_serial_and_parallel_rows_identical() {
+    let mut cfg = SimConfig::default();
+    cfg.workload.tenants = 2;
+    cfg.workload.duration_ns = 100_000_000;
+    let loads = [0.5, 2.0];
+    let policies = [QosPolicyKind::Fifo, QosPolicyKind::Edf];
+    let go = |workers| {
+        serve_sweep(&cfg, DriverKind::KernelIrq, &loads, &policies, &[1, 2], workers)
+            .unwrap()
+            .iter()
+            .map(|r| r.report.to_json().to_string_compact())
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(go(1), go(4), "serve sweep rows depend on worker count");
+}
+
+/// Coalescing keeps bounds under a burst storm and folds frames instead
+/// of dropping them.
+#[test]
+fn coalesce_absorbs_burst_storms_within_bounds() {
+    let mut cfg = SimConfig::default();
+    cfg.workload.arrival = ArrivalKind::Bursty;
+    cfg.workload.burst_factor = 10.0;
+    cfg.workload.offered_fps = 500.0;
+    cfg.workload.duration_ns = 150_000_000;
+    cfg.workload.queue_cap = 4;
+    cfg.workload.shed = ShedPolicy::Coalesce;
+    let rep = serve(&cfg, DriverKind::UserPolling, 1).unwrap();
+    let coalesced: u64 = rep.tenants.iter().map(|t| t.coalesced).sum();
+    let dropped: u64 = rep.tenants.iter().map(|t| t.dropped).sum();
+    assert!(coalesced > 0, "storm never coalesced");
+    assert_eq!(dropped, 0, "coalesce policy must not drop");
+    for (i, t) in rep.tenants.iter().enumerate() {
+        assert!(t.max_queue <= 4, "tenant {i} queue bound violated");
+    }
+}

@@ -1,0 +1,27 @@
+#!/usr/bin/env sh
+# Bootstrap the two committed baseline files that arm CI's absolute
+# gates, in one local toolchain run:
+#
+#   rust/tests/golden/single_channel.json  — absolute single-channel
+#       timings; recorded by the golden test's first run, exact-compared
+#       forever after (missing file = hard CI failure).
+#   BENCH_baseline.json                    — the events/sec floor for
+#       `bench --check` (>20% regression fails; missing = warn + pass).
+#
+# Run from the repository root on a trusted machine, review the diff,
+# then commit both files. Idempotent: a second run only rewrites the
+# bench baseline (intentionally — re-baseline after a perf win), and the
+# golden file is only created when absent.
+set -eu
+
+cargo build --release
+cargo test -q golden_single_channel_timings
+test -f rust/tests/golden/single_channel.json || {
+    echo "golden run did not produce rust/tests/golden/single_channel.json" >&2
+    exit 1
+}
+cargo run --release -- bench --workers 4 --out BENCH_baseline.json
+
+git add rust/tests/golden/single_channel.json BENCH_baseline.json
+git status --short rust/tests/golden/single_channel.json BENCH_baseline.json
+echo "baselines staged — review and commit"
