@@ -73,6 +73,10 @@ pub struct DmaStats {
     pub fifo_stalls: u64,
     /// Injected transfer errors this channel halted on.
     pub errors: u64,
+    /// Times a cyclic ring re-queued its descriptor template
+    /// ([`DmaChannelEngine::ring_trigger`]) — frame N+1 reusing frame N's
+    /// BDs without a re-program.
+    pub ring_wraps: u64,
 }
 
 /// Interrupt request raised by a completed/failed DDR burst or kick —
@@ -122,6 +126,10 @@ pub struct DmaChannelEngine {
     /// on error (exact: faults fire before any byte moves). Appending to
     /// a halted channel grows this — see [`DmaChannelEngine::residue`].
     faulted_residue: u64,
+    /// Cyclic-mode descriptor template: armed once by
+    /// [`DmaChannelEngine::program_ring`], re-queued per frame by
+    /// [`DmaChannelEngine::ring_trigger`]. Empty = no ring armed.
+    ring: Vec<Descriptor>,
     pub stats: DmaStats,
 }
 
@@ -143,6 +151,7 @@ impl DmaChannelEngine {
             err_irq_pending: false,
             err_irq_enabled: false,
             faulted_residue: 0,
+            ring: Vec::new(),
             stats: DmaStats::default(),
         }
     }
@@ -217,6 +226,9 @@ impl DmaChannelEngine {
         self.err_irq_pending = false;
         self.err_irq_enabled = false;
         self.faulted_residue = 0;
+        // A reset disarms the ring: the BD chain in DDR is owned by the
+        // software that armed it, and recovery re-arms from scratch.
+        self.ring.clear();
     }
 
     /// Halt the channel on an injected error: the chain is abandoned
@@ -279,6 +291,45 @@ impl DmaChannelEngine {
 
     pub fn is_idle(&self) -> bool {
         self.queue.is_empty() && self.cur.is_none() && self.in_flight == 0
+    }
+
+    /// Arm a **cyclic** SG ring: program the chain as usual *and* retain
+    /// it as the channel's ring template, so subsequent frames re-run the
+    /// same BDs via [`DmaChannelEngine::ring_trigger`] at the cost of a
+    /// single doorbell write instead of a full re-program. This models
+    /// the real IP's cyclic BD mode, where the tail descriptor points
+    /// back at the head and software advances `TAILDESC` once per frame.
+    ///
+    /// The first frame starts immediately (this call doubles as the first
+    /// trigger). Descriptor *fetches* are still paid per frame — the
+    /// hardware walks the chain each cycle; only the software programming
+    /// cost is amortised.
+    pub fn program_ring(&mut self, eng: &mut Engine, descs: &[Descriptor]) {
+        self.program(eng, DmaMode::ScatterGather, descs);
+        self.ring.clear();
+        self.ring.extend(descs.iter().copied());
+    }
+
+    /// Is a cyclic ring armed on this channel?
+    pub fn ring_armed(&self) -> bool {
+        !self.ring.is_empty()
+    }
+
+    /// Re-run the armed ring for the next frame. The channel must be
+    /// idle (previous frame complete) and error-free; a halted channel
+    /// needs a reset + re-arm, exactly like the real IP.
+    pub fn ring_trigger(&mut self, eng: &mut Engine) {
+        assert!(self.ring_armed(), "triggering a {} channel with no ring armed", self.ch.name());
+        assert!(self.is_idle(), "triggering a busy {} ring", self.ch.name());
+        assert!(
+            self.error.is_none(),
+            "triggering an errored {} ring without a reset",
+            self.ch.name()
+        );
+        self.queue.extend(self.ring.iter().copied());
+        self.done = false;
+        self.stats.ring_wraps += 1;
+        eng.schedule_now(Event::DmaKick { eng: self.id, ch: self.ch });
     }
 
     /// Advance the state machine (handles `Event::DmaKick`). `fifo` is
@@ -786,6 +837,73 @@ mod tests {
         assert_eq!(rig.ch.error(), Some(DmaErrorKind::Decode), "still halted");
         assert_eq!(rig.ch.stats.bytes, 0, "halted channel moved nothing");
         assert_eq!(rig.ch.residue(), 512 + 256, "appended bytes join the residue");
+    }
+
+    #[test]
+    fn ring_retriggers_without_reprogram() {
+        let c = cfg();
+        let mut rig = Rig::mm2s(&c);
+        rig.ch.program_ring(&mut rig.eng, &chain(PhysAddr(0), 4096, 1024));
+        rig.run();
+        assert!(rig.ch.is_done() && rig.ch.ring_armed());
+        assert_eq!(rig.ch.stats.bytes, 4096);
+        assert_eq!(rig.ch.stats.ring_wraps, 0, "arming is not a wrap");
+        // Three more frames through the same ring.
+        for frame in 2..=4u64 {
+            rig.ch.ring_trigger(&mut rig.eng);
+            rig.run();
+            assert!(rig.ch.is_done());
+            assert_eq!(rig.ch.stats.bytes, frame * 4096);
+        }
+        assert_eq!(rig.ch.stats.ring_wraps, 3);
+        // The hardware still walks the BD chain every frame: fetches
+        // scale with frames even though software programmed once.
+        assert_eq!(rig.ch.stats.desc_fetches, 4 * 4);
+    }
+
+    #[test]
+    fn ring_fault_preserves_residue_and_reset_disarms() {
+        use crate::sim::fault::FaultSpec;
+        let c = cfg();
+        let mut rig = Rig::mm2s(&c);
+        rig.ch.program_ring(&mut rig.eng, &chain(PhysAddr(0), 4096, 1024));
+        rig.run();
+        assert!(rig.ch.is_done());
+        // Error the 2nd burst of frame 2.
+        rig.faults.schedule(FaultSpec::DmaError {
+            eng: EngineId::ZERO,
+            ch: Channel::Mm2s,
+            nth: 4 + 2,
+            kind: DmaErrorKind::Slave,
+        });
+        rig.ch.ring_trigger(&mut rig.eng);
+        rig.run();
+        assert_eq!(rig.ch.error(), Some(DmaErrorKind::Slave));
+        assert_eq!(rig.ch.residue(), 4096 - 1024, "exact residue inside the ring frame");
+        assert!(rig.ch.ring_armed(), "halt latches; the ring template survives until reset");
+        rig.ch.reset();
+        assert!(!rig.ch.ring_armed(), "recovery reset disarms the ring");
+        assert_eq!(rig.ch.residue(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no ring armed")]
+    fn triggering_unarmed_ring_is_a_bug() {
+        let c = cfg();
+        let mut rig = Rig::mm2s(&c);
+        rig.ch.program(&mut rig.eng, DmaMode::ScatterGather, &[Descriptor::new(PhysAddr(0), 512)]);
+        rig.run();
+        rig.ch.ring_trigger(&mut rig.eng);
+    }
+
+    #[test]
+    #[should_panic(expected = "busy")]
+    fn triggering_midframe_is_a_bug() {
+        let c = cfg();
+        let mut rig = Rig::mm2s(&c);
+        rig.ch.program_ring(&mut rig.eng, &chain(PhysAddr(0), 4096, 1024));
+        // No run(): the first frame has not completed.
+        rig.ch.ring_trigger(&mut rig.eng);
     }
 
     #[test]

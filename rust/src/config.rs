@@ -10,6 +10,7 @@
 
 use std::path::Path;
 
+use crate::memory::path::MemoryConfig;
 use crate::sim::engine::CalendarKind;
 use crate::sim::fault::FaultConfig;
 use crate::util::json::Json;
@@ -177,6 +178,12 @@ pub struct SimConfig {
     /// and QoS policies. Only the `serve`/`serve-sweep` paths read it;
     /// every other experiment is unaffected by these knobs.
     pub workload: WorkloadConfig,
+    /// Memory-path axis (see [`crate::memory::path`]): copy-through vs
+    /// zero-copy, ACP vs HP port, and the coherency cost knobs. Defaults
+    /// to copy-through, under which no driver reads any other field of
+    /// the struct — the timeline is bit-identical to the pre-subsystem
+    /// simulator (enforced by `rust/tests/memory_path.rs`).
+    pub memory: MemoryConfig,
 }
 
 impl Default for SimConfig {
@@ -246,6 +253,7 @@ impl Default for SimConfig {
             calendar: CalendarKind::Wheel,
             faults: FaultConfig::none(),
             workload: WorkloadConfig::default(),
+            memory: MemoryConfig::none(),
         }
     }
 }
@@ -313,10 +321,14 @@ macro_rules! config_fields {
     (@set $self:ident, $field:ident, workload, $val:ident, $k:ident) => {
         $self.$field.apply_json($val)?;
     };
+    (@set $self:ident, $field:ident, memory, $val:ident, $k:ident) => {
+        $self.$field.apply_json($val)?;
+    };
     (@get $self:ident, $field:ident, f64) => { Json::num($self.$field) };
     (@get $self:ident, $field:ident, u64) => { Json::num($self.$field as f64) };
     (@get $self:ident, $field:ident, faults) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, workload) => { $self.$field.to_json() };
+    (@get $self:ident, $field:ident, memory) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, vec_u64) => {
         Json::Arr($self.$field.iter().map(|&x| Json::num(x as f64)).collect())
     };
@@ -373,6 +385,7 @@ config_fields! {
     calendar: calendar,
     faults: faults,
     workload: workload,
+    memory: memory,
 }
 
 impl SimConfig {
@@ -445,6 +458,7 @@ impl SimConfig {
         );
         self.faults.validate()?;
         self.workload.validate()?;
+        self.memory.validate()?;
         Ok(())
     }
 }
@@ -584,6 +598,32 @@ mod tests {
         assert!(cfg.apply_json(&Json::parse(r#"{"workload": {"bogus": 1}}"#).unwrap()).is_err());
         let mut cfg = SimConfig::default();
         cfg.workload.queue_cap = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn memory_key_roundtrips_and_validates() {
+        use crate::memory::path::{DmaPortKind, MemoryPath};
+        let mut cfg = SimConfig::default();
+        cfg.apply_json(
+            &Json::parse(r#"{"memory": {"path": "zero", "port": "acp", "flush_bps": 2e9}}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.memory.path, MemoryPath::ZeroCopy);
+        assert_eq!(cfg.memory.port, DmaPortKind::Acp);
+        assert_eq!(cfg.memory.flush_bps, 2e9);
+        assert!(cfg.memory.is_zero_copy());
+        cfg.validate().unwrap();
+        let json = cfg.to_json();
+        let mut cfg2 = SimConfig::default();
+        cfg2.apply_json(&json).unwrap();
+        assert_eq!(cfg, cfg2);
+        // Unknown nested key and out-of-range value both rejected.
+        let mut cfg = SimConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"memory": {"bogus": 1}}"#).unwrap()).is_err());
+        let mut cfg = SimConfig::default();
+        cfg.memory.acp_cpu_derate = 2.0;
         assert!(cfg.validate().is_err());
     }
 

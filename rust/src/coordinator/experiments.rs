@@ -13,6 +13,7 @@ use crate::drivers::{
     BufferScheme, Driver, DriverConfig, DriverError, DriverKind, PartitionMode, TransferOutcome,
 };
 use crate::memory::buffer::CmaAllocator;
+use crate::memory::{DmaPortKind, MemoryPath};
 use crate::runtime::Runtime;
 use crate::sensor::davis::{DavisConfig, DavisSim};
 use crate::sensor::frame::FrameCollector;
@@ -83,6 +84,182 @@ pub fn loopback_sweep(
         }
     }
     Ok(rows)
+}
+
+/// Memory-path mode of one `memory_sweep` cell: the copy-through
+/// baseline or the zero-copy path on one of the two PS↔PL port
+/// families.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MemoryMode {
+    CopyThrough,
+    ZeroCopyHp,
+    ZeroCopyAcp,
+}
+
+impl MemoryMode {
+    pub const ALL: [MemoryMode; 3] =
+        [MemoryMode::CopyThrough, MemoryMode::ZeroCopyHp, MemoryMode::ZeroCopyAcp];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            MemoryMode::CopyThrough => "copy",
+            MemoryMode::ZeroCopyHp => "zero-hp",
+            MemoryMode::ZeroCopyAcp => "zero-acp",
+        }
+    }
+
+    fn apply(self, cfg: &mut SimConfig) {
+        match self {
+            // Copy-through is the config default; touch nothing so the
+            // cell exercises the exact seed timeline.
+            MemoryMode::CopyThrough => {}
+            MemoryMode::ZeroCopyHp => {
+                cfg.memory.path = MemoryPath::ZeroCopy;
+                cfg.memory.port = DmaPortKind::Hp;
+            }
+            MemoryMode::ZeroCopyAcp => {
+                cfg.memory.path = MemoryPath::ZeroCopy;
+                cfg.memory.port = DmaPortKind::Acp;
+            }
+        }
+    }
+}
+
+/// One cell of the memory-path sweep: `frames` back-to-back loop-back
+/// round trips of `bytes` per direction through a single driver
+/// instance (so zero-copy ring arming amortises across frames, exactly
+/// as a streaming CNN pipeline would run it).
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryRow {
+    pub bytes: u64,
+    pub driver: DriverKind,
+    pub mode: MemoryMode,
+    pub frames: u64,
+    /// Wall-clock simulated time for the whole frame stream.
+    pub total: Dur,
+    /// CPU busy time accrued over the stream (copies, flushes,
+    /// coherency charges, driver management — everything but waits).
+    pub busy: Dur,
+    /// Simulator events dispatched (the bench's work-proxy metric).
+    pub events: u64,
+}
+
+impl MemoryRow {
+    pub fn frames_per_sec(&self) -> f64 {
+        self.frames as f64 / (self.total.ns() as f64 * 1e-9).max(1e-12)
+    }
+
+    /// Fraction of the stream the CPU spent busy rather than waiting.
+    pub fn cpu_load(&self) -> f64 {
+        self.busy.ns() as f64 / self.total.ns().max(1) as f64
+    }
+}
+
+/// The frame sizes the memory sweep crosses: 4 KB → 4 MB, bracketing
+/// the ACP/HP coherency crossover (≈6 KB per direction with default
+/// knobs) at the small end and the streaming-bandwidth regime at the
+/// large end.
+pub fn memory_sweep_sizes(quick: bool) -> Vec<u64> {
+    if quick {
+        vec![4 << 10, 64 << 10, 1 << 20]
+    } else {
+        vec![4 << 10, 16 << 10, 64 << 10, 256 << 10, 1 << 20, 4 << 20]
+    }
+}
+
+/// One cell: fresh system, one persistent driver, `frames` transfers.
+/// `pub(crate)` so the bench leg runs individual cells.
+pub(crate) fn memory_cell(
+    cfg: &SimConfig,
+    bytes: u64,
+    kind: DriverKind,
+    mode: MemoryMode,
+    frames: u64,
+) -> Result<MemoryRow, DriverError> {
+    let mut c = cfg.clone();
+    mode.apply(&mut c);
+    // Same per-driver shapes as the loop-back sweep: user drivers in
+    // their Table-1 baseline, the kernel driver in its natural
+    // pipelined SG shape.
+    let dcfg = match kind {
+        DriverKind::KernelIrq => DriverConfig {
+            kind,
+            buffering: BufferScheme::Double,
+            partition: PartitionMode::Blocks,
+        },
+        _ => DriverConfig::table1(kind),
+    };
+    let mut sys = System::loopback(c.clone());
+    let mut cma = CmaAllocator::zynq_default();
+    let mut drv = Driver::new(dcfg, &mut cma, &c, bytes)?;
+    let t0 = sys.now();
+    let busy0 = sys.ledger.busy;
+    let ev0 = sys.eng.dispatched;
+    for _ in 0..frames.max(1) {
+        drv.transfer(&mut sys, bytes, bytes)?;
+    }
+    let row = MemoryRow {
+        bytes,
+        driver: kind,
+        mode,
+        frames: frames.max(1),
+        total: sys.now().since(t0),
+        busy: sys.ledger.busy.saturating_sub(busy0),
+        events: sys.eng.dispatched - ev0,
+    };
+    drv.release(&mut cma);
+    Ok(row)
+}
+
+/// MEM-SWEEP: the copy-through vs. zero-copy vs. port crossover grid —
+/// every {size × driver × memory mode} cell as a frame stream.
+pub fn memory_sweep(
+    cfg: &SimConfig,
+    sizes: &[u64],
+    drivers: &[DriverKind],
+    frames: u64,
+) -> Result<Vec<MemoryRow>, DriverError> {
+    let mut rows = Vec::with_capacity(sizes.len() * drivers.len() * MemoryMode::ALL.len());
+    for &bytes in sizes {
+        for &kind in drivers {
+            for mode in MemoryMode::ALL {
+                rows.push(memory_cell(cfg, bytes, kind, mode, frames)?);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// The smallest swept frame size at which the HP port matches or beats
+/// ACP for `driver`, given that ACP won some smaller size — the
+/// port-selection crossover the sweep exists to expose. `None` when one
+/// port dominates every swept size.
+pub fn acp_hp_crossover(rows: &[MemoryRow], driver: DriverKind) -> Option<u64> {
+    let mut sizes: Vec<u64> =
+        rows.iter().filter(|r| r.driver == driver).map(|r| r.bytes).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    let fps = |bytes: u64, mode: MemoryMode| {
+        rows.iter()
+            .find(|r| r.driver == driver && r.bytes == bytes && r.mode == mode)
+            .map(MemoryRow::frames_per_sec)
+    };
+    let mut acp_won = false;
+    for &b in &sizes {
+        let (Some(hp), Some(acp)) =
+            (fps(b, MemoryMode::ZeroCopyHp), fps(b, MemoryMode::ZeroCopyAcp))
+        else {
+            continue;
+        };
+        if hp >= acp {
+            if acp_won {
+                return Some(b);
+            }
+        } else {
+            acp_won = true;
+        }
+    }
+    None
 }
 
 /// One row of Table I.
@@ -756,6 +933,86 @@ mod tests {
             "kernel must additionally recover the lost IRQ: {} vs {}",
             demo.kern_recovered,
             demo.poll_recovered
+        );
+    }
+
+    #[test]
+    fn memory_sweep_zero_copy_beats_copy_everywhere() {
+        let sizes = memory_sweep_sizes(false);
+        let rows = memory_sweep(&cfg(), &sizes, &DriverKind::ALL, 4).unwrap();
+        assert_eq!(rows.len(), sizes.len() * DriverKind::ALL.len() * 3);
+        for &bytes in &sizes {
+            for kind in DriverKind::ALL {
+                let fps = |mode| {
+                    rows.iter()
+                        .find(|r| r.bytes == bytes && r.driver == kind && r.mode == mode)
+                        .unwrap()
+                        .frames_per_sec()
+                };
+                let copy = fps(MemoryMode::CopyThrough);
+                for mode in [MemoryMode::ZeroCopyHp, MemoryMode::ZeroCopyAcp] {
+                    assert!(
+                        fps(mode) > copy,
+                        "{kind:?}/{}/{bytes}B: zero-copy {} fps not above copy-through {copy} fps",
+                        mode.label(),
+                        fps(mode),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memory_sweep_exposes_acp_hp_crossover() {
+        let sizes = memory_sweep_sizes(false);
+        let rows =
+            memory_sweep(&cfg(), &sizes, &[DriverKind::UserPolling], 4).unwrap();
+        // With default knobs ACP's per-byte toll beats HP's fixed
+        // maintenance setup only on small frames: the crossover must
+        // exist and sit strictly inside the swept range.
+        let cross = acp_hp_crossover(&rows, DriverKind::UserPolling)
+            .expect("no ACP/HP crossover in the swept range");
+        assert!(
+            cross > sizes[0] && cross <= *sizes.last().unwrap(),
+            "crossover {cross} outside ({}, {}]",
+            sizes[0],
+            sizes.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn memory_sweep_is_deterministic() {
+        let run = || {
+            memory_sweep(&cfg(), &[16 << 10, 1 << 20], &[DriverKind::KernelIrq], 3).unwrap()
+        };
+        for (a, b) in run().iter().zip(&run()) {
+            assert_eq!(
+                (a.total, a.busy, a.events),
+                (b.total, b.busy, b.events),
+                "{:?}/{}/{}B not reproducible",
+                a.driver,
+                a.mode.label(),
+                a.bytes
+            );
+        }
+    }
+
+    #[test]
+    fn memory_rings_amortise_across_frames() {
+        // The second frame of a zero-copy stream re-triggers the armed
+        // rings instead of rebuilding descriptor chains, so a 2-frame
+        // stream takes less than twice a 1-frame stream.
+        let one =
+            memory_cell(&cfg(), 256 << 10, DriverKind::UserPolling, MemoryMode::ZeroCopyHp, 1)
+                .unwrap();
+        let two =
+            memory_cell(&cfg(), 256 << 10, DriverKind::UserPolling, MemoryMode::ZeroCopyHp, 2)
+                .unwrap();
+        assert!(
+            two.total.ns() < 2 * one.total.ns(),
+            "2 frames {} ns not under 2 × 1 frame {} ns",
+            two.total.ns(),
+            one.total.ns()
         );
     }
 

@@ -6,8 +6,9 @@
 //!   real feature maps between layers via the PJRT [`crate::runtime`];
 //! * [`experiments`] — the runners behind every figure/table: the
 //!   loop-back size sweep (Fig. 4/5), the RoShamBo frame timing
-//!   (Table I), the channel-count × pipeline-depth scaling grid, and the
-//!   ablations (buffering, partitioning, VGG19 blocking);
+//!   (Table I), the channel-count × pipeline-depth scaling grid, the
+//!   memory-path sweep (copy-through vs. zero-copy × ACP/HP, DESIGN.md
+//!   §12), and the ablations (buffering, partitioning, VGG19 blocking);
 //! * [`serve`] — the multi-tenant serving loop: workload generators →
 //!   admission → QoS policy → the split-phase frame pipeline, the
 //!   execution mode behind the `serve` CLI command (DESIGN.md §11);
@@ -23,7 +24,10 @@ pub mod pipeline;
 pub mod serve;
 pub mod sweeps;
 
-pub use experiments::{loopback_sweep, scaling_sweep, table1, ScalingRow, SweepRow, Table1Row};
+pub use experiments::{
+    acp_hp_crossover, loopback_sweep, memory_sweep, memory_sweep_sizes, scaling_sweep, table1,
+    MemoryMode, MemoryRow, ScalingRow, SweepRow, Table1Row,
+};
 pub use serve::serve;
 pub use sweeps::{
     bench, cell_seed, loopback_sweep_parallel, run_cells, scaling_sweep_parallel, serve_sweep,

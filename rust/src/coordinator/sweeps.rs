@@ -15,14 +15,17 @@
 //! with jitter disabled — the default — rows are bit-identical to
 //! serial, which the tests pin.)
 //!
-//! [`bench`] packages two measurements into a machine-readable report
+//! [`bench`] packages four measurements into a machine-readable report
 //! (`BENCH_sweeps.json`) that CI archives and diffs against a committed
 //! baseline:
 //!
 //! * **calendar** — raw schedule/pop throughput of the time-wheel and
 //!   binary-heap backends on a deep, wide-horizon churn (events/sec);
 //! * **sweep** — wall time of a loop-back grid executed with 1 worker
-//!   and with N workers (cells/sec, events/sec, multi-thread speedup).
+//!   and with N workers (cells/sec, events/sec, multi-thread speedup);
+//! * **serve** — one fixed multi-tenant serving scenario (events/sec);
+//! * **memory** — a copy-through/zero-copy/port grid of frame streams
+//!   (events/sec, schema 3).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -43,7 +46,7 @@ use crate::util::json::Json;
 use crate::cnn::roshambo::roshambo;
 use crate::workload::{QosPolicyKind, ServeReport};
 
-use super::experiments::{scaling_cell, AblationRow, ScalingRow, SweepRow};
+use super::experiments::{memory_cell, scaling_cell, AblationRow, MemoryMode, ScalingRow, SweepRow};
 use super::serve::serve;
 
 /// Deterministic per-cell seed: splitmix64 over (base, cell index).
@@ -380,6 +383,10 @@ pub struct BenchReport {
     /// Serving-loop leg: one fixed multi-tenant serve scenario, measured
     /// as simulator events/sec (the regression gate's third scalar).
     pub serve: SweepStats,
+    /// Memory-path leg: a small copy-through/zero-copy/port grid of
+    /// frame streams, measured as simulator events/sec (the regression
+    /// gate's fourth scalar — schema 3).
+    pub memory: SweepStats,
 }
 
 /// Deep-calendar churn: `events` schedule/pop cycles over a ~1 ms
@@ -440,7 +447,37 @@ pub fn bench(cfg: &SimConfig, opts: BenchOptions) -> Result<BenchReport, DriverE
         let rep = serve(&c, DriverKind::KernelIrq, 2)?;
         SweepStats { workers: 1, cells: 1, events: rep.events, wall: t0.elapsed() }
     };
-    Ok(BenchReport { quick: opts.quick, calendar, sweeps, serve: serve_stats })
+
+    // Memory-path leg: every mode (copy-through, zero-copy HP/ACP) over
+    // a small size grid, as back-to-back frame streams through the two
+    // driver families. Deterministic cells; the gate tracks events/sec.
+    let memory_stats = {
+        let (sizes, frames): (&[u64], u64) = if opts.quick {
+            (&[64 << 10, 1 << 20], 3)
+        } else {
+            (&[16 << 10, 256 << 10, 4 << 20], 6)
+        };
+        let mut events = 0u64;
+        let mut cells = 0usize;
+        let t0 = Instant::now();
+        for &bytes in sizes {
+            for kind in [DriverKind::UserPolling, DriverKind::KernelIrq] {
+                for mode in MemoryMode::ALL {
+                    let row = memory_cell(cfg, bytes, kind, mode, frames)?;
+                    events += row.events;
+                    cells += 1;
+                }
+            }
+        }
+        SweepStats { workers: 1, cells, events, wall: t0.elapsed() }
+    };
+    Ok(BenchReport {
+        quick: opts.quick,
+        calendar,
+        sweeps,
+        serve: serve_stats,
+        memory: memory_stats,
+    })
 }
 
 impl BenchReport {
@@ -489,6 +526,11 @@ impl BenchReport {
         self.serve.events_per_sec()
     }
 
+    /// Memory-path leg events/sec (the fourth gated scalar, schema 3).
+    pub fn memory_events_per_sec(&self) -> f64 {
+        self.memory.events_per_sec()
+    }
+
     pub fn to_json(&self) -> Json {
         let calendar = self
             .calendar
@@ -521,14 +563,21 @@ impl BenchReport {
             ("wall_ms", Json::num(self.serve.wall.as_secs_f64() * 1e3)),
             ("events_per_sec", Json::num(self.serve.events_per_sec())),
         ]);
+        let memory = Json::obj(vec![
+            ("cells", Json::num(self.memory.cells as f64)),
+            ("events", Json::num(self.memory.events as f64)),
+            ("wall_ms", Json::num(self.memory.wall.as_secs_f64() * 1e3)),
+            ("events_per_sec", Json::num(self.memory.events_per_sec())),
+        ]);
         Json::obj(vec![
-            ("schema", Json::num(2.0)),
+            ("schema", Json::num(3.0)),
             ("quick", Json::Bool(self.quick)),
             ("calendar", Json::Arr(calendar)),
             ("wheel_speedup_over_heap", Json::num(self.wheel_speedup_over_heap())),
             ("sweep", Json::Arr(sweeps)),
             ("sweep_speedup", Json::num(self.sweep_speedup())),
             ("serve", serve),
+            ("memory", memory),
         ])
     }
 
@@ -572,6 +621,13 @@ impl BenchReport {
             .as_f64()
             .unwrap_or(0.0);
         check("serve/events", self.serve_events_per_sec(), base_serve);
+        // Same precedent for pre-schema-3 baselines and the memory leg.
+        let base_memory = baseline
+            .get("memory")
+            .get("events_per_sec")
+            .as_f64()
+            .unwrap_or(0.0);
+        check("memory/events", self.memory_events_per_sec(), base_memory);
         regressions
     }
 }
@@ -656,13 +712,15 @@ mod tests {
         assert!(rep.wheel_events_per_sec() > 0.0);
         assert!(rep.sweep_speedup() > 0.0);
         assert!(rep.serve_events_per_sec() > 0.0);
+        assert!(rep.memory_events_per_sec() > 0.0);
         let json = rep.to_json();
-        assert_eq!(json.get("schema").as_u64(), Some(2));
+        assert_eq!(json.get("schema").as_u64(), Some(3));
         assert_eq!(json.get("calendar").as_arr().unwrap().len(), 2);
         assert!(json.get("serve").get("events").as_u64().unwrap() > 0);
+        assert!(json.get("memory").get("events").as_u64().unwrap() > 0);
         // A report never regresses against itself.
         assert!(rep.check_against(&json, 0.2).is_empty());
-        // A 10x-faster fake baseline must flag all three metrics.
+        // A 10x-faster fake baseline must flag all four metrics.
         let mut fake = rep.clone();
         for c in &mut fake.calendar {
             c.wall = Duration::from_nanos((c.wall.as_nanos() as u64 / 10).max(1));
@@ -671,11 +729,17 @@ mod tests {
             s.wall = Duration::from_nanos((s.wall.as_nanos() as u64 / 10).max(1));
         }
         fake.serve.wall = Duration::from_nanos((fake.serve.wall.as_nanos() as u64 / 10).max(1));
+        fake.memory.wall =
+            Duration::from_nanos((fake.memory.wall.as_nanos() as u64 / 10).max(1));
         let flagged = rep.check_against(&fake.to_json(), 0.2);
-        assert_eq!(flagged.len(), 3, "{flagged:?}");
-        // A schema-1 baseline (no serve key) self-skips the serve gate.
+        assert_eq!(flagged.len(), 4, "{flagged:?}");
+        // Older-schema baselines (no serve / no memory key) self-skip
+        // the legs they predate.
         let old = Json::parse(
-            &json.to_string_compact().replace("\"serve\"", "\"serve_unused\""),
+            &json
+                .to_string_compact()
+                .replace("\"serve\"", "\"serve_unused\"")
+                .replace("\"memory\"", "\"memory_unused\""),
         );
         if let Ok(old) = old {
             assert!(rep.check_against(&old, 0.2).is_empty());

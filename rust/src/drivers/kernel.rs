@@ -34,7 +34,7 @@
 //! trick. The CPU-side copy+flush feed is still serial (one core), so
 //! striping pays exactly when the per-engine stream is the bottleneck.
 
-use crate::axi::descriptor::{chain_into, Descriptor};
+use crate::axi::descriptor::{chain_into, Descriptor, MAX_DESC_LEN};
 use crate::axi::dma::DmaMode;
 use crate::axi::regs;
 use crate::memory::buffer::PhysAddr;
@@ -50,6 +50,25 @@ use super::{BufferScheme, Driver, DriverError, PartitionMode, TransferOutcome, T
 /// dma_map_single cache-maintenance time for `bytes`.
 fn flush_time(sys: &System, bytes: u64) -> Dur {
     Dur::for_bytes(bytes, sys.cfg.kernel_cache_flush_bps)
+}
+
+/// Hand a completed RX payload back to user space: copy-through runs
+/// the per-chunk dma_unmap invalidate + `copy_to_user` loop; zero-copy
+/// charges the port's coherency cost and returns the frame in place.
+fn rx_handoff(sys: &mut System, rx_bytes: u64) {
+    if sys.cfg.memory.is_zero_copy() {
+        sys.coherency_rx(rx_bytes);
+        return;
+    }
+    let sg_chunk = sys.cfg.kernel_sg_chunk_bytes;
+    let mut left = rx_bytes;
+    while left > 0 {
+        let len = sg_chunk.min(left);
+        let fl = flush_time(sys, len);
+        sys.cpu_exec(fl); // dma_unmap invalidate
+        sys.cpu_copy(len, CopyKind::KernelCached);
+        left -= len;
+    }
 }
 
 pub(super) fn transfer(
@@ -74,6 +93,19 @@ fn arm_rx_chain(drv: &Driver, sys: &mut System, offset: u64, bytes: u64) {
     chain_into(PhysAddr(drv.rx_buf(0).addr.0 + offset), bytes, sg_chunk, &mut descs);
     sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
     sys.program_dma_slice_on(drv.port, Channel::S2mm, DmaMode::ScatterGather, &descs);
+    sys.put_desc_scratch(descs);
+}
+
+/// Zero-copy TX arm: build and submit the SG chain over the in-place
+/// region — no copy, no flush (coherency was charged at submit). Used on
+/// the fault-active zero-copy path and by recovery, where partial
+/// residues rule out the fixed ring template.
+fn arm_tx_chain(drv: &Driver, sys: &mut System, offset: u64, bytes: u64) {
+    let sg_chunk = sys.cfg.kernel_sg_chunk_bytes;
+    let mut descs = sys.take_desc_scratch();
+    chain_into(PhysAddr(drv.tx_buf(0).addr.0 + offset), bytes, sg_chunk, &mut descs);
+    sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
+    sys.program_dma_slice_on(drv.port, Channel::Mm2s, DmaMode::ScatterGather, &descs);
     sys.put_desc_scratch(descs);
 }
 
@@ -132,6 +164,9 @@ pub(super) fn submit(
     tx_bytes: u64,
     rx_bytes: u64,
 ) -> Result<SubmitToken, DriverError> {
+    if sys.cfg.memory.is_zero_copy() {
+        return submit_zero_copy(drv, sys, tx_bytes, rx_bytes);
+    }
     let worst_case = drv.cfg.buffering == BufferScheme::Single
         && drv.cfg.partition == PartitionMode::Unique;
     let t0 = sys.now();
@@ -147,6 +182,67 @@ pub(super) fn submit(
     }
     feed_tx(drv, sys, 0, tx_bytes, worst_case);
     Ok(SubmitToken { t0, tx_bytes, rx_bytes })
+}
+
+/// Zero-copy ioctl submit: the frame already lives in the in-place DMA
+/// region, so there is no `copy_from_user` and no bounce-buffer flush —
+/// only the port's coherency cost ([`System::coherency_tx`], the
+/// dma_map of the user pages). The first frame of a shape arms cyclic
+/// SG rings; later same-shape frames re-trigger them with one doorbell
+/// write per direction. With the fault plan active the rings are
+/// bypassed for per-frame chains, which recovery can rebuild at partial
+/// residues.
+fn submit_zero_copy(
+    drv: &mut Driver,
+    sys: &mut System,
+    tx_bytes: u64,
+    rx_bytes: u64,
+) -> Result<SubmitToken, DriverError> {
+    let t0 = sys.now();
+    let port = drv.port;
+
+    let entry = sys.costs.syscall_entry();
+    sys.cpu_exec(entry);
+    sys.cpu_exec(Dur(sys.cfg.kernel_submit_ns));
+    sys.coherency_tx(tx_bytes);
+
+    if sys.faults.is_active() {
+        drv.armed = None;
+        if rx_bytes > 0 {
+            arm_rx_chain(drv, sys, 0, rx_bytes);
+        }
+        arm_tx_chain(drv, sys, 0, tx_bytes);
+        return Ok(SubmitToken { t0, tx_bytes, rx_bytes });
+    }
+
+    if drv.armed == Some((tx_bytes, rx_bytes)) {
+        if rx_bytes > 0 {
+            sys.ring_trigger_on(port, Channel::S2mm);
+        }
+        sys.ring_trigger_on(port, Channel::Mm2s);
+    } else {
+        arm_rings(drv, sys, tx_bytes, rx_bytes);
+    }
+    Ok(SubmitToken { t0, tx_bytes, rx_bytes })
+}
+
+/// Build and arm the cyclic SG rings for one frame shape (RX first).
+/// BD construction is charged per descriptor; the rings survive across
+/// frames until a shape change or a recovery reset disarms them.
+fn arm_rings(drv: &mut Driver, sys: &mut System, tx_bytes: u64, rx_bytes: u64) {
+    let chunk = sys.cfg.memory.ring_chunk_bytes.min(MAX_DESC_LEN);
+    let port = drv.port;
+    let mut descs = sys.take_desc_scratch();
+    if rx_bytes > 0 {
+        chain_into(drv.rx_buf(0).addr, rx_bytes, chunk, &mut descs);
+        sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
+        sys.program_dma_ring_on(port, Channel::S2mm, &descs);
+    }
+    chain_into(drv.tx_buf(0).addr, tx_bytes, chunk, &mut descs);
+    sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
+    sys.program_dma_ring_on(port, Channel::Mm2s, &descs);
+    sys.put_desc_scratch(descs);
+    drv.armed = Some((tx_bytes, rx_bytes));
 }
 
 /// Bounded re-submission after a channel error: dmaengine terminates
@@ -184,6 +280,9 @@ fn kernel_recover(
         .expect("CR_RESET write");
     match ch {
         Channel::S2mm => arm_rx_chain(drv, sys, done, residue),
+        // Zero-copy frames are never staged, so a TX retry just rebuilds
+        // the chain over the residue tail of the in-place region.
+        Channel::Mm2s if sys.cfg.memory.is_zero_copy() => arm_tx_chain(drv, sys, done, residue),
         Channel::Mm2s => feed_tx(drv, sys, done, residue, worst_case),
     }
     *retries += 1;
@@ -293,24 +392,16 @@ pub(super) fn complete(
         return complete_recover(drv, sys, token);
     }
     let SubmitToken { t0, tx_bytes, rx_bytes } = token;
-    let sg_chunk = sys.cfg.kernel_sg_chunk_bytes;
     let port = drv.port;
 
     // Block until the TX completion interrupt.
     sys.irq_wait_on(port, Channel::Mm2s)?;
     let tx_time = sys.now().since(t0);
 
-    // Block until RX completes, then invalidate + copy the payload out.
+    // Block until RX completes, then hand the payload back.
     let rx_time = if rx_bytes > 0 {
         sys.irq_wait_on(port, Channel::S2mm)?;
-        let mut left = rx_bytes;
-        while left > 0 {
-            let len = sg_chunk.min(left);
-            let fl = flush_time(sys, len);
-            sys.cpu_exec(fl); // dma_unmap invalidate
-            sys.cpu_copy(len, CopyKind::KernelCached);
-            left -= len;
-        }
+        rx_handoff(sys, rx_bytes);
         let exit = sys.costs.syscall_exit();
         sys.cpu_exec(exit);
         sys.now().since(t0)
@@ -339,7 +430,6 @@ fn complete_recover(
     let SubmitToken { t0, tx_bytes, rx_bytes } = token;
     let worst_case = drv.cfg.buffering == BufferScheme::Single
         && drv.cfg.partition == PartitionMode::Unique;
-    let sg_chunk = sys.cfg.kernel_sg_chunk_bytes;
     let mut retries = 0u32;
     let mut recovery_ns = 0u64;
 
@@ -366,14 +456,7 @@ fn complete_recover(
             &mut retries,
             &mut recovery_ns,
         )?;
-        let mut left = rx_bytes;
-        while left > 0 {
-            let len = sg_chunk.min(left);
-            let fl = flush_time(sys, len);
-            sys.cpu_exec(fl); // dma_unmap invalidate
-            sys.cpu_copy(len, CopyKind::KernelCached);
-            left -= len;
-        }
+        rx_handoff(sys, rx_bytes);
         let exit = sys.costs.syscall_exit();
         sys.cpu_exec(exit);
         sys.now().since(t0)
@@ -481,6 +564,12 @@ pub(super) fn transfer_multiqueue(
     sys.cpu_exec(entry);
     let engines_used = tx_share.iter().filter(|&&s| s > 0).count() as u64;
     sys.cpu_exec(Dur(engines_used.max(1) * sys.cfg.kernel_submit_ns));
+    // Zero-copy: one dma_map of the whole in-place frame up front; the
+    // per-stripe copy+flush below is gated off.
+    let zero_copy = sys.cfg.memory.is_zero_copy();
+    if zero_copy {
+        sys.coherency_tx(tx_bytes);
+    }
 
     // Arm every engine's RX chain up front (one recycled chain buffer
     // reused across engines).
@@ -503,9 +592,11 @@ pub(super) fn transfer_multiqueue(
     while off < tx_bytes {
         let len = sg_chunk.min(tx_bytes - off);
         let p = i % n;
-        sys.cpu_copy(len, CopyKind::KernelCached);
-        let fl = flush_time(sys, len);
-        sys.cpu_exec(fl);
+        if !zero_copy {
+            sys.cpu_copy(len, CopyKind::KernelCached);
+            let fl = flush_time(sys, len);
+            sys.cpu_exec(fl);
+        }
         sys.cpu_exec(Dur(sys.cfg.kernel_desc_build_ns));
         let mut d = Descriptor::new(drv.tx_buf(i).addr, len);
         if fed[p] + 1 == chunks_of[p] {
@@ -539,14 +630,20 @@ pub(super) fn transfer_multiqueue(
                 continue;
             }
             mq_wait(sys, EngineId(p as u8), Channel::S2mm, &mut rescues, &mut recovery_ns)?;
-            let mut left = rx_share[p];
-            while left > 0 {
-                let len = sg_chunk.min(left);
-                let fl = flush_time(sys, len);
-                sys.cpu_exec(fl); // dma_unmap invalidate
-                sys.cpu_copy(len, CopyKind::KernelCached);
-                left -= len;
+            if !zero_copy {
+                let mut left = rx_share[p];
+                while left > 0 {
+                    let len = sg_chunk.min(left);
+                    let fl = flush_time(sys, len);
+                    sys.cpu_exec(fl); // dma_unmap invalidate
+                    sys.cpu_copy(len, CopyKind::KernelCached);
+                    left -= len;
+                }
             }
+        }
+        if zero_copy {
+            // One dma_unmap of the whole frame; software reads in place.
+            sys.coherency_rx(rx_bytes);
         }
         let exit = sys.costs.syscall_exit();
         sys.cpu_exec(exit);

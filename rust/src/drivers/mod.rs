@@ -241,6 +241,12 @@ pub struct Driver {
     bufs: BounceBufs,
     /// Capacity of each bounce buffer.
     buf_len: u64,
+    /// Zero-copy fast path: the `(tx_bytes, rx_bytes)` the cyclic SG
+    /// rings are currently armed for, if any. The first frame arms the
+    /// rings (full program cost); later frames of the same shape only
+    /// pay a doorbell trigger. Cleared by fault recovery and by a shape
+    /// change, both of which force a re-arm.
+    pub(crate) armed: Option<(u64, u64)>,
 }
 
 impl Driver {
@@ -261,7 +267,10 @@ impl Driver {
     /// * user Unique: full-payload buffers (1 or 2 per direction);
     /// * user Blocks: chunk-sized buffers (1 or 2 per direction);
     /// * kernel: two SG-chunk bounce buffers per direction (the driver's
-    ///   internal pipeline), regardless of the user-visible knobs.
+    ///   internal pipeline), regardless of the user-visible knobs;
+    /// * zero-copy (any driver): one full-payload in-place region per
+    ///   direction — frames are produced/consumed directly in it, so
+    ///   there is nothing to ping-pong and no staging to chunk.
     pub fn new_on(
         cfg: DriverConfig,
         cma: &mut CmaAllocator,
@@ -269,10 +278,12 @@ impl Driver {
         max_bytes: u64,
         port: EngineId,
     ) -> Result<Driver, DriverError> {
+        let zero_copy = sys_cfg.memory.is_zero_copy();
         let kernel_worst_case = cfg.kind == DriverKind::KernelIrq
             && cfg.buffering == BufferScheme::Single
             && cfg.partition == PartitionMode::Unique;
         let buf_len = match (cfg.kind, cfg.partition) {
+            _ if zero_copy => max_bytes,
             // Worst-case kernel mode stages the whole payload at once.
             (DriverKind::KernelIrq, _) if kernel_worst_case => max_bytes,
             (DriverKind::KernelIrq, _) | (DriverKind::KernelMultiQueue, _) => {
@@ -282,6 +293,7 @@ impl Driver {
             (_, PartitionMode::Blocks) => sys_cfg.blocks_chunk_bytes.min(max_bytes),
         };
         let n = match (cfg.kind, cfg.buffering) {
+            _ if zero_copy => 1,
             (DriverKind::KernelIrq | DriverKind::KernelMultiQueue, _) => 2,
             (_, BufferScheme::Single) => 1,
             (_, BufferScheme::Double) => 2,
@@ -292,7 +304,7 @@ impl Driver {
             tx.push(cma.alloc(buf_len)?);
             rx.push(cma.alloc(buf_len)?);
         }
-        Ok(Driver { cfg, port, bufs: BounceBufs { tx, rx }, buf_len })
+        Ok(Driver { cfg, port, bufs: BounceBufs { tx, rx }, buf_len, armed: None })
     }
 
     /// Release the bounce buffers back to the CMA pool.

@@ -26,6 +26,15 @@
 //! reliability sweep tallies as a dropped frame. Recovery paths engage
 //! only while the system's fault plan is active, so fault-free timings
 //! are bit-identical to the seed.
+//!
+//! Orthogonally, when `SimConfig::memory` selects the zero-copy path,
+//! every scheme elides its staging copies: frames live in DMA-visible
+//! in-place regions, cyclic SG rings are armed once and re-triggered per
+//! frame, and the per-transfer cost becomes the configured ACP/HP
+//! coherency charge (see [`crate::memory::path`]). The branch lives
+//! inside the `user`/`kernel` implementation functions, guarded by
+//! `SimConfig::memory.is_zero_copy()` exactly like the fault guard, so
+//! the default copy-through timeline stays bit-identical.
 
 use crate::sim::time::SimTime;
 use crate::system::System;

@@ -32,7 +32,7 @@
 //! — exactly the safety gap (§V) that makes the kernel driver, which
 //! *can* rescue such timeouts, the paper's "safer solution".
 
-use crate::axi::descriptor::MAX_DESC_LEN;
+use crate::axi::descriptor::{chain, MAX_DESC_LEN};
 use crate::axi::regs;
 use crate::memory::buffer::PhysAddr;
 use crate::memory::copy::CopyKind;
@@ -85,6 +85,12 @@ pub(super) fn transfer(
     rx_bytes: u64,
     mode: WaitMode,
 ) -> Result<TransferReport, DriverError> {
+    if sys.cfg.memory.is_zero_copy() {
+        // Nothing to stage → nothing to chunk or ping-pong: every
+        // user-level cell collapses to the Unique-shaped split-phase
+        // pair (Blocks/Double only exist to overlap staging copies).
+        return unique(drv, sys, tx_bytes, rx_bytes, mode);
+    }
     match drv.cfg.partition {
         PartitionMode::Unique => unique(drv, sys, tx_bytes, rx_bytes, mode),
         PartitionMode::Blocks => blocks(drv, sys, tx_bytes, rx_bytes, mode),
@@ -100,6 +106,9 @@ pub(super) fn submit(
     tx_bytes: u64,
     rx_bytes: u64,
 ) -> Result<SubmitToken, DriverError> {
+    if sys.cfg.memory.is_zero_copy() {
+        return submit_zero_copy(drv, sys, tx_bytes, rx_bytes);
+    }
     if tx_bytes > MAX_DESC_LEN || rx_bytes > MAX_DESC_LEN {
         // The 23-bit BD length field: the paper's "maximum supported
         // transfer lengths are 8 Mbytes" user-level limit.
@@ -122,6 +131,71 @@ pub(super) fn submit(
     Ok(SubmitToken { t0, tx_bytes, rx_bytes })
 }
 
+/// Zero-copy submit: the frame already lives in the in-place DMA region,
+/// so there is no staging copy — only the port's coherency cost
+/// ([`System::coherency_tx`]). The first frame of a shape arms cyclic SG
+/// rings (full program + per-BD build cost); subsequent same-shape
+/// frames re-trigger them with one doorbell write per direction.
+///
+/// While the fault plan is active the rings are bypassed: recovery
+/// re-arms partial residues, which a fixed ring template cannot express,
+/// so each frame is armed individually through the seed's simple-mode
+/// path (staging copies still elided).
+fn submit_zero_copy(
+    drv: &mut Driver,
+    sys: &mut System,
+    tx_bytes: u64,
+    rx_bytes: u64,
+) -> Result<SubmitToken, DriverError> {
+    let t0 = sys.now();
+    let port = drv.port;
+
+    sys.cpu_exec(Dur(sys.cfg.user_setup_ns));
+    // The engine reads the TX frame in place: make it visible first.
+    sys.coherency_tx(tx_bytes);
+
+    if sys.faults.is_active() {
+        if tx_bytes > MAX_DESC_LEN || rx_bytes > MAX_DESC_LEN {
+            return Err(DriverError::TooLarge { bytes: tx_bytes.max(rx_bytes) });
+        }
+        drv.armed = None;
+        if rx_bytes > 0 {
+            arm_simple(sys, port, Channel::S2mm, drv.rx_buf(0).addr, rx_bytes);
+        }
+        arm_simple(sys, port, Channel::Mm2s, drv.tx_buf(0).addr, tx_bytes);
+        return Ok(SubmitToken { t0, tx_bytes, rx_bytes });
+    }
+
+    if drv.armed == Some((tx_bytes, rx_bytes)) {
+        // Rings already armed for this shape: doorbell writes only.
+        if rx_bytes > 0 {
+            sys.ring_trigger_on(port, Channel::S2mm);
+        }
+        sys.ring_trigger_on(port, Channel::Mm2s);
+    } else {
+        arm_rings(drv, sys, tx_bytes, rx_bytes);
+    }
+    Ok(SubmitToken { t0, tx_bytes, rx_bytes })
+}
+
+/// Build and arm the cyclic SG rings for one frame shape (RX first, so
+/// the device output has somewhere to go). BD construction is charged
+/// per descriptor; the ring survives across frames until a shape change
+/// or a recovery reset disarms it.
+fn arm_rings(drv: &mut Driver, sys: &mut System, tx_bytes: u64, rx_bytes: u64) {
+    let chunk = sys.cfg.memory.ring_chunk_bytes.min(MAX_DESC_LEN);
+    let port = drv.port;
+    if rx_bytes > 0 {
+        let descs = chain(drv.rx_buf(0).addr, rx_bytes, chunk);
+        sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
+        sys.program_dma_ring_on(port, Channel::S2mm, &descs);
+    }
+    let descs = chain(drv.tx_buf(0).addr, tx_bytes, chunk);
+    sys.cpu_exec(Dur(descs.len() as u64 * sys.cfg.kernel_desc_build_ns));
+    sys.program_dma_ring_on(port, Channel::Mm2s, &descs);
+    drv.armed = Some((tx_bytes, rx_bytes));
+}
+
 /// Split-phase completion: wait TX, wait RX, copy the RX payload out.
 /// With an active fault plan the waits carry the watchdog + reset/retry
 /// recovery machinery; otherwise this is exactly the seed's code path.
@@ -141,7 +215,7 @@ pub(super) fn complete(
 
     let rx_time = if rx_bytes > 0 {
         wait(sys, port, Channel::S2mm, mode)?;
-        sys.cpu_copy(rx_bytes, CopyKind::UserUncached);
+        rx_handoff(sys, rx_bytes);
         sys.now().since(t0)
     } else {
         Dur::ZERO
@@ -155,6 +229,17 @@ pub(super) fn complete(
         ledger: CpuLedger::default(),
         outcome: TransferOutcome::Completed,
     })
+}
+
+/// Make a completed RX frame readable by the application: copy-through
+/// copies it out of the bounce buffer; zero-copy reads it in place after
+/// the port's coherency cost (HP: invalidate; ACP: free).
+fn rx_handoff(sys: &mut System, rx_bytes: u64) {
+    if sys.cfg.memory.is_zero_copy() {
+        sys.coherency_rx(rx_bytes);
+    } else {
+        sys.cpu_copy(rx_bytes, CopyKind::UserUncached);
+    }
 }
 
 /// Timeout-aware wait dispatch (fault plan active).
@@ -286,7 +371,7 @@ fn complete_recover(
             &mut retries,
             &mut recovery_ns,
         )?;
-        sys.cpu_copy(rx_bytes, CopyKind::UserUncached);
+        rx_handoff(sys, rx_bytes);
         sys.now().since(t0)
     } else {
         Dur::ZERO

@@ -12,6 +12,7 @@
 //! psoc-dma faults            # fault-injection reliability sweep + safety demo
 //! psoc-dma serve             # multi-tenant serving run (workload config)
 //! psoc-dma serve-sweep       # capacity planning: load x policy x engines
+//! psoc-dma memory-sweep      # copy-through vs zero-copy x ACP/HP crossover
 //! psoc-dma bench             # simulator perf bench -> BENCH_sweeps.json
 //! psoc-dma all               # everything above (estimate plans)
 //! ```
@@ -22,6 +23,9 @@
 //! `serve` flags: `--driver polling|scheduled|kernel` (default kernel),
 //! `--engines <n>` (default 2), `--quick` (short horizon). `serve-sweep`
 //! adds `--workers <n>` for the sharded grid.
+//!
+//! `memory-sweep` flags: `--quick` (3-size grid), `--frames <n>` (frames
+//! per cell, default 3 — rings amortise across them).
 //!
 //! `bench` flags: `--quick` (CI smoke grid), `--workers <n>` (threads for
 //! the parallel leg, default 4), `--out <path>` (report destination,
@@ -36,7 +40,8 @@ use anyhow::{bail, Result};
 use psoc_dma::config::SimConfig;
 use psoc_dma::coordinator::experiments::{
     ablation_chunk_sweep, ablation_load, ablation_matrix, ablation_vgg, fault_safety_demo,
-    fault_sweep, fig45_sizes, loopback_sweep, scaling_sweep, table1, table1_runtime,
+    fault_sweep, fig45_sizes, loopback_sweep, memory_sweep, memory_sweep_sizes, scaling_sweep,
+    table1, table1_runtime,
 };
 use psoc_dma::drivers::DriverKind;
 use psoc_dma::report;
@@ -318,6 +323,20 @@ fn run_serve_sweep(cfg: &SimConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Memory-path sweep: copy-through vs. zero-copy on both port families,
+/// as frame streams (`--frames` per cell, so ring amortisation shows),
+/// with the per-driver ACP/HP crossover in the footer.
+fn run_memory_sweep(cfg: &SimConfig, args: &Args) -> Result<()> {
+    let sizes = memory_sweep_sizes(args.quick);
+    let frames = args.frames.max(2) as u64;
+    let rows = memory_sweep(cfg, &sizes, &DriverKind::ALL, frames)?;
+    print!("{}", report::memory_sweep_text(&rows));
+    if let Some(dir) = &args.csv_dir {
+        report::save(&format!("{dir}/memory_sweep.csv"), &report::memory_sweep_csv(&rows))?;
+    }
+    Ok(())
+}
+
 /// Simulator perf bench: calendar backends + parallel sweep scaling.
 /// Writes `BENCH_sweeps.json` and optionally gates against a baseline.
 fn run_bench(cfg: &SimConfig, args: &Args) -> Result<()> {
@@ -440,6 +459,7 @@ fn main() -> Result<()> {
         "faults" => run_faults(&cfg, &args)?,
         "serve" => run_serve(&cfg, &args)?,
         "serve-sweep" | "serve_sweep" => run_serve_sweep(&cfg, &args)?,
+        "memory-sweep" | "memory_sweep" | "memory" => run_memory_sweep(&cfg, &args)?,
         "bench" => run_bench(&cfg, &args)?,
         "trace" => run_trace(&cfg)?,
         "calibrate" => run_calibrate(&cfg)?,
@@ -462,6 +482,8 @@ fn main() -> Result<()> {
             run_faults(&cfg, &args)?;
             println!();
             run_serve(&cfg, &args)?;
+            println!();
+            run_memory_sweep(&cfg, &args)?;
         }
         other => bail!("unknown command {other}; see the README"),
     }

@@ -12,6 +12,7 @@
 //! DDR (contention derating).
 
 use crate::config::SimConfig;
+use crate::memory::path::{DmaPortKind, MemoryConfig};
 use crate::sim::time::Dur;
 
 /// Which mapping the CPU copies through.
@@ -64,6 +65,104 @@ impl CopyModel {
     /// CPU time to copy `bytes`.
     pub fn copy_time(&self, bytes: u64, kind: CopyKind, dma_active: bool) -> Dur {
         Dur::for_bytes(bytes, self.bandwidth(bytes, kind, dma_active))
+    }
+}
+
+/// Cache-coherency cost model of the zero-copy path (the ACP/HP port
+/// axis of [`MemoryConfig`]). Copy-through never charges anything here —
+/// its staging copies already serialise CPU and DMA views of the data.
+///
+/// Zero-copy removes the staging memcpy, so coherency must be paid
+/// explicitly, per transfer:
+///
+/// * **HP** — the engine masters a non-coherent port. Before TX the CPU
+///   cleans the frame region (dirty lines reach DDR); after RX it
+///   invalidates the result region (stale lines dropped). Each op costs
+///   a fixed `maintenance_setup_ns` plus `bytes / flush_bps`.
+/// * **ACP** — the engine snoops through the SCU: no maintenance ops at
+///   all, but every byte pays `1 / acp_penalty_bps` of sharing toll, and
+///   concurrent CPU memcpys run derated ([`CoherencyModel::cpu_derate`]).
+///
+/// With the defaults the per-transfer fixed HP cost amortises as frames
+/// grow while the ACP per-byte toll does not, so ACP wins small frames
+/// and HP wins large ones — the crossover the `memory-sweep` command
+/// sweeps out.
+#[derive(Clone, Debug)]
+pub struct CoherencyModel {
+    zero_copy: bool,
+    port: DmaPortKind,
+    flush_bps: f64,
+    setup: Dur,
+    acp_penalty_bps: f64,
+    acp_cpu_derate: f64,
+}
+
+impl CoherencyModel {
+    pub fn new(cfg: &MemoryConfig) -> Self {
+        CoherencyModel {
+            zero_copy: cfg.is_zero_copy(),
+            port: cfg.port,
+            flush_bps: cfg.flush_bps,
+            setup: Dur(cfg.maintenance_setup_ns),
+            acp_penalty_bps: cfg.acp_penalty_bps,
+            acp_cpu_derate: cfg.acp_cpu_derate,
+        }
+    }
+
+    /// Is the zero-copy path (and therefore this model) engaged?
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.zero_copy
+    }
+
+    #[inline]
+    pub fn port(&self) -> DmaPortKind {
+        self.port
+    }
+
+    /// One HP cache-maintenance op over `bytes` (clean or invalidate).
+    fn maintenance(&self, bytes: u64) -> Dur {
+        self.setup + Dur::for_bytes(bytes, self.flush_bps)
+    }
+
+    /// ACP snoop toll over `bytes`.
+    fn acp_share(&self, bytes: u64) -> Dur {
+        Dur::for_bytes(bytes, self.acp_penalty_bps)
+    }
+
+    /// CPU cost charged before the engine reads a TX frame in place:
+    /// HP cleans the region; ACP pays the snoop toll.
+    pub fn tx_cost(&self, bytes: u64) -> Dur {
+        if !self.zero_copy {
+            return Dur::ZERO;
+        }
+        match self.port {
+            DmaPortKind::Hp => self.maintenance(bytes),
+            DmaPortKind::Acp => self.acp_share(bytes),
+        }
+    }
+
+    /// CPU cost charged before software reads an RX frame in place:
+    /// HP invalidates the region; ACP pays the snoop toll.
+    pub fn rx_cost(&self, bytes: u64) -> Dur {
+        if !self.zero_copy {
+            return Dur::ZERO;
+        }
+        match self.port {
+            DmaPortKind::Hp => self.maintenance(bytes),
+            DmaPortKind::Acp => self.acp_share(bytes),
+        }
+    }
+
+    /// Multiplier on CPU memcpy bandwidth while DMA is in flight: below
+    /// 1 only on an active ACP path (snoops contend for L2 tags).
+    #[inline]
+    pub fn cpu_derate(&self) -> f64 {
+        if self.zero_copy && self.port == DmaPortKind::Acp {
+            self.acp_cpu_derate
+        } else {
+            1.0
+        }
     }
 }
 
@@ -122,5 +221,60 @@ mod tests {
     fn zero_bytes_is_free() {
         let m = model();
         assert_eq!(m.copy_time(0, CopyKind::UserUncached, true), Dur::ZERO);
+    }
+
+    fn coh(path: crate::memory::path::MemoryPath, port: DmaPortKind) -> CoherencyModel {
+        let mut c = MemoryConfig::default();
+        c.path = path;
+        c.port = port;
+        CoherencyModel::new(&c)
+    }
+
+    #[test]
+    fn copy_through_coherency_is_free() {
+        use crate::memory::path::MemoryPath;
+        for port in [DmaPortKind::Hp, DmaPortKind::Acp] {
+            let m = coh(MemoryPath::CopyThrough, port);
+            assert!(!m.active());
+            assert_eq!(m.tx_cost(1 << 20), Dur::ZERO);
+            assert_eq!(m.rx_cost(1 << 20), Dur::ZERO);
+            assert_eq!(m.cpu_derate(), 1.0);
+        }
+    }
+
+    #[test]
+    fn hp_charges_setup_plus_line_walk() {
+        use crate::memory::path::MemoryPath;
+        let cfg = MemoryConfig::default();
+        let m = coh(MemoryPath::ZeroCopy, DmaPortKind::Hp);
+        let bytes = 1 << 20;
+        let expect = Dur(cfg.maintenance_setup_ns) + Dur::for_bytes(bytes, cfg.flush_bps);
+        assert_eq!(m.tx_cost(bytes), expect);
+        assert_eq!(m.rx_cost(bytes), expect);
+        assert_eq!(m.cpu_derate(), 1.0, "HP does not snoop the L2");
+    }
+
+    #[test]
+    fn acp_charges_per_byte_only_and_derates_cpu() {
+        use crate::memory::path::MemoryPath;
+        let cfg = MemoryConfig::default();
+        let m = coh(MemoryPath::ZeroCopy, DmaPortKind::Acp);
+        let bytes = 1 << 20;
+        assert_eq!(m.tx_cost(bytes), Dur::for_bytes(bytes, cfg.acp_penalty_bps));
+        assert_eq!(m.cpu_derate(), cfg.acp_cpu_derate);
+    }
+
+    /// The defaults must place the ACP/HP crossover between the smallest
+    /// and largest swept frame sizes: ACP's per-byte toll wins small
+    /// frames (no fixed maintenance setup), HP's amortised fixed cost
+    /// wins large ones.
+    #[test]
+    fn acp_wins_small_hp_wins_large() {
+        use crate::memory::path::MemoryPath;
+        let hp = coh(MemoryPath::ZeroCopy, DmaPortKind::Hp);
+        let acp = coh(MemoryPath::ZeroCopy, DmaPortKind::Acp);
+        let total = |m: &CoherencyModel, b: u64| m.tx_cost(b) + m.rx_cost(b);
+        assert!(total(&acp, 4 << 10) < total(&hp, 4 << 10), "ACP must win at 4KB");
+        assert!(total(&hp, 64 << 10) < total(&acp, 64 << 10), "HP must win at 64KB");
     }
 }

@@ -1,10 +1,13 @@
 //! PS memory system: DDR3 controller model, contiguous (CMA) buffer
-//! allocator, and the CPU memcpy cost model.
+//! allocator, the CPU memcpy cost model, and the zero-copy memory-path
+//! configuration (ACP/HP coherency axis).
 
 pub mod buffer;
 pub mod copy;
 pub mod ddr;
+pub mod path;
 
-pub use buffer::{CmaAllocator, DmaBuffer, PhysAddr};
-pub use copy::{CopyKind, CopyModel};
+pub use buffer::{AllocStrategy, CmaAllocator, DmaBuffer, PhysAddr};
+pub use copy::{CoherencyModel, CopyKind, CopyModel};
 pub use ddr::{DdrController, DdrDir, Requester};
+pub use path::{DmaPortKind, MemoryConfig, MemoryPath};

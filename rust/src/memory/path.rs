@@ -1,0 +1,248 @@
+//! Memory-path configuration: the copy-through vs zero-copy axis and the
+//! ACP/HP port coherency axis, JSON-configurable under the `memory` key
+//! of [`crate::config::SimConfig`].
+//!
+//! The seed models the paper's measurement app faithfully: every frame is
+//! staged through a bounce buffer with a CPU memcpy. Real co-design
+//! stacks (NEURAghe-style shared-memory integration) eliminate that copy
+//! by producing frames directly into DMA-visible contiguous regions. The
+//! [`MemoryPath::ZeroCopy`] mode models that: no staging memcpy, cyclic
+//! scatter-gather rings armed once and re-triggered per frame, and an
+//! explicit cache-coherency cost charged per transfer instead:
+//!
+//! * [`DmaPortKind::Hp`] — the high-performance (non-coherent) AXI port.
+//!   Full DDR bandwidth, but the CPU must clean the TX region before the
+//!   engine reads it and invalidate the RX region before reading results
+//!   (a fixed maintenance setup plus a per-byte line walk).
+//! * [`DmaPortKind::Acp`] — the accelerator coherency port through the
+//!   SCU. No cache maintenance at all, but every DMA byte snoops the L2:
+//!   a per-byte sharing toll on the transfer and a derate on concurrent
+//!   CPU memcpy bandwidth.
+//!
+//! The default is [`MemoryPath::CopyThrough`], and like
+//! [`crate::sim::fault::FaultConfig`] the disabled axis is provably
+//! inert: no driver reads any zero-copy knob, so the copy-through
+//! timeline is bit-identical to the pre-subsystem simulator (enforced by
+//! `rust/tests/memory_path.rs`).
+
+use crate::util::json::Json;
+
+/// Which buffer/driver boundary the transfer path uses.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MemoryPath {
+    /// Stage every frame through a bounce buffer (the paper's app).
+    CopyThrough,
+    /// Frames live in DMA-visible regions; no staging memcpy.
+    ZeroCopy,
+}
+
+impl MemoryPath {
+    pub fn label(self) -> &'static str {
+        match self {
+            MemoryPath::CopyThrough => "copy",
+            MemoryPath::ZeroCopy => "zero",
+        }
+    }
+}
+
+/// Which PS port the DMA masters (only read on the zero-copy path).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DmaPortKind {
+    /// AXI_HP: full bandwidth, explicit flush/invalidate per transfer.
+    Hp,
+    /// ACP: cache-coherent through the SCU, contended per byte.
+    Acp,
+}
+
+impl DmaPortKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            DmaPortKind::Hp => "hp",
+            DmaPortKind::Acp => "acp",
+        }
+    }
+}
+
+/// Zero-copy memory-path knobs, nested under the `memory` config key.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemoryConfig {
+    /// `"copy"` (default, bit-identical to the seed) or `"zero"`.
+    pub path: MemoryPath,
+    /// `"hp"` or `"acp"`; ignored while `path` is `"copy"`.
+    pub port: DmaPortKind,
+    /// Cache clean/invalidate line-walk throughput on the HP path
+    /// (dcache ops by MVA over an already-resident region — much faster
+    /// than the kernel bounce-buffer flush, which also misses).
+    pub flush_bps: f64,
+    /// Fixed cost of one maintenance operation (barrier + loop setup),
+    /// paid per clean and per invalidate on the HP path.
+    pub maintenance_setup_ns: u64,
+    /// Effective rate of the ACP snoop toll: each transferred byte costs
+    /// `1/acp_penalty_bps` seconds of SCU sharing overhead.
+    pub acp_penalty_bps: f64,
+    /// Multiplier (<= 1) on CPU memcpy bandwidth while ACP DMA traffic
+    /// is in flight (snoops steal L2 tag bandwidth from the CPU).
+    pub acp_cpu_derate: f64,
+    /// Descriptor granularity of the cyclic SG rings.
+    pub ring_chunk_bytes: u64,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> Self {
+        MemoryConfig {
+            path: MemoryPath::CopyThrough,
+            port: DmaPortKind::Hp,
+            // A9 dcache clean/invalidate by MVA sweeps resident lines at
+            // roughly L2 fill bandwidth.
+            flush_bps: 3.2e9,
+            maintenance_setup_ns: 1_800,
+            // ACP snoop toll: every byte crosses the SCU twice (tag probe
+            // + fill), roughly halving the effective maintenance rate.
+            acp_penalty_bps: 1.6e9,
+            acp_cpu_derate: 0.85,
+            ring_chunk_bytes: 256 * 1024,
+        }
+    }
+}
+
+impl MemoryConfig {
+    /// The disabled configuration (copy-through).
+    pub fn none() -> Self {
+        MemoryConfig::default()
+    }
+
+    /// Does the zero-copy path engage? Drivers branch on exactly this,
+    /// so copy-through never reads any other field of the struct.
+    #[inline]
+    pub fn is_zero_copy(&self) -> bool {
+        self.path == MemoryPath::ZeroCopy
+    }
+
+    /// Apply overrides from the nested `memory` JSON object; unknown
+    /// keys are an error.
+    pub fn apply_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("memory must be a JSON object"))?;
+        for (k, val) in obj {
+            match k.as_str() {
+                "path" => {
+                    self.path = match val.as_str() {
+                        Some("copy") => MemoryPath::CopyThrough,
+                        Some("zero") => MemoryPath::ZeroCopy,
+                        _ => anyhow::bail!("memory.path must be \"copy\" or \"zero\""),
+                    };
+                }
+                "port" => {
+                    self.port = match val.as_str() {
+                        Some("hp") => DmaPortKind::Hp,
+                        Some("acp") => DmaPortKind::Acp,
+                        _ => anyhow::bail!("memory.port must be \"hp\" or \"acp\""),
+                    };
+                }
+                "flush_bps" => {
+                    self.flush_bps = val
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("memory key {k} must be a number"))?;
+                }
+                "maintenance_setup_ns" => {
+                    self.maintenance_setup_ns = val.as_u64().ok_or_else(|| {
+                        anyhow::anyhow!("memory key {k} must be a non-negative integer")
+                    })?;
+                }
+                "acp_penalty_bps" => {
+                    self.acp_penalty_bps = val
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("memory key {k} must be a number"))?;
+                }
+                "acp_cpu_derate" => {
+                    self.acp_cpu_derate = val
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("memory key {k} must be a number"))?;
+                }
+                "ring_chunk_bytes" => {
+                    self.ring_chunk_bytes = val.as_u64().ok_or_else(|| {
+                        anyhow::anyhow!("memory key {k} must be a non-negative integer")
+                    })?;
+                }
+                _ => anyhow::bail!("unknown memory key: {k}"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::str(self.path.label())),
+            ("port", Json::str(self.port.label())),
+            ("flush_bps", Json::num(self.flush_bps)),
+            ("maintenance_setup_ns", Json::num(self.maintenance_setup_ns as f64)),
+            ("acp_penalty_bps", Json::num(self.acp_penalty_bps)),
+            ("acp_cpu_derate", Json::num(self.acp_cpu_derate)),
+            ("ring_chunk_bytes", Json::num(self.ring_chunk_bytes as f64)),
+        ])
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.flush_bps > 0.0, "memory.flush_bps must be > 0");
+        anyhow::ensure!(self.acp_penalty_bps > 0.0, "memory.acp_penalty_bps must be > 0");
+        anyhow::ensure!(
+            self.acp_cpu_derate > 0.0 && self.acp_cpu_derate <= 1.0,
+            "memory.acp_cpu_derate must be in (0, 1]"
+        );
+        anyhow::ensure!(self.ring_chunk_bytes > 0, "memory.ring_chunk_bytes must be > 0");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_copy_through_and_valid() {
+        let cfg = MemoryConfig::default();
+        assert!(!cfg.is_zero_copy());
+        assert_eq!(cfg.port, DmaPortKind::Hp);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_identity() {
+        let mut cfg = MemoryConfig::default();
+        cfg.path = MemoryPath::ZeroCopy;
+        cfg.port = DmaPortKind::Acp;
+        cfg.flush_bps = 1e9;
+        let json = cfg.to_json();
+        let mut back = MemoryConfig::default();
+        back.apply_json(&json).unwrap();
+        assert_eq!(cfg, back);
+        assert_eq!(json.get("path").as_str(), Some("zero"));
+        assert_eq!(json.get("port").as_str(), Some("acp"));
+    }
+
+    #[test]
+    fn unknown_and_junk_keys_rejected() {
+        let mut cfg = MemoryConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"paht": "zero"}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"path": "dma"}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"port": "gp"}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"flush_bps": "fast"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let mut cfg = MemoryConfig::default();
+        cfg.flush_bps = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = MemoryConfig::default();
+        cfg.acp_cpu_derate = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = MemoryConfig::default();
+        cfg.acp_cpu_derate = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = MemoryConfig::default();
+        cfg.ring_chunk_bytes = 0;
+        assert!(cfg.validate().is_err());
+    }
+}

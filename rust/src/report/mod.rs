@@ -7,7 +7,8 @@ use std::fmt::Write as _;
 use std::path::Path;
 
 use crate::coordinator::experiments::{
-    AblationRow, FaultCell, FaultSafetyDemo, ScalingRow, SweepRow, Table1Row, VggAblation,
+    acp_hp_crossover, AblationRow, FaultCell, FaultSafetyDemo, MemoryMode, MemoryRow, ScalingRow,
+    SweepRow, Table1Row, VggAblation,
 };
 use crate::coordinator::sweeps::{BenchReport, ServeSweepRow};
 use crate::drivers::DriverKind;
@@ -569,6 +570,98 @@ pub fn serve_sweep_csv(rows: &[ServeSweepRow]) -> String {
     out
 }
 
+/// The memory-path crossover table (`memory-sweep` CLI command): per
+/// size × driver, frames/sec under copy-through and both zero-copy
+/// ports, the zero-copy speedup, and which port wins; footer gives each
+/// driver's ACP→HP crossover size.
+pub fn memory_sweep_text(rows: &[MemoryRow]) -> String {
+    let mut sizes: Vec<u64> = rows.iter().map(|r| r.bytes).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    let mut drivers: Vec<DriverKind> = Vec::new();
+    for r in rows {
+        if !drivers.contains(&r.driver) {
+            drivers.push(r.driver);
+        }
+    }
+    let frames = rows.first().map(|r| r.frames).unwrap_or(0);
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Memory path — copy-through vs zero-copy frames/sec ({frames} frames/cell)\n\
+         {:>8} {:<26} | {:>10} {:>10} {:>10} | {:>8} {:>5}",
+        "size", "driver", "copy", "zero-hp", "zero-acp", "speedup", "port"
+    )
+    .unwrap();
+    writeln!(out, "{}", "-".repeat(90)).unwrap();
+    for &bytes in &sizes {
+        for &kind in &drivers {
+            let fps = |mode| {
+                rows.iter()
+                    .find(|r| r.bytes == bytes && r.driver == kind && r.mode == mode)
+                    .map(MemoryRow::frames_per_sec)
+                    .unwrap_or(f64::NAN)
+            };
+            let copy = fps(MemoryMode::CopyThrough);
+            let hp = fps(MemoryMode::ZeroCopyHp);
+            let acp = fps(MemoryMode::ZeroCopyAcp);
+            let best = hp.max(acp);
+            writeln!(
+                out,
+                "{:>8} {:<26} | {:>10.1} {:>10.1} {:>10.1} | {:>7.2}x {:>5}",
+                size_label(bytes),
+                kind.label(),
+                copy,
+                hp,
+                acp,
+                best / copy,
+                if hp >= acp { "hp" } else { "acp" },
+            )
+            .unwrap();
+        }
+    }
+    for &kind in &drivers {
+        match acp_hp_crossover(rows, kind) {
+            Some(b) => writeln!(
+                out,
+                "{:<26}: ACP wins below {}, HP from {} up",
+                kind.label(),
+                size_label(b),
+                size_label(b)
+            )
+            .unwrap(),
+            None => {
+                writeln!(out, "{:<26}: one port dominates every swept size", kind.label())
+                    .unwrap()
+            }
+        }
+    }
+    out
+}
+
+/// CSV twin of [`memory_sweep_text`] (one row per cell).
+pub fn memory_sweep_csv(rows: &[MemoryRow]) -> String {
+    let mut out =
+        String::from("bytes,driver,mode,frames,total_ns,busy_ns,events,frames_per_sec,cpu_load\n");
+    for r in rows {
+        writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{}",
+            r.bytes,
+            r.driver.label().replace(' ', "_"),
+            r.mode.label(),
+            r.frames,
+            r.total.ns(),
+            r.busy.ns(),
+            r.events,
+            r.frames_per_sec(),
+            r.cpu_load(),
+        )
+        .unwrap();
+    }
+    out
+}
+
 /// The `bench` command's stdout table (the JSON twin goes to
 /// `BENCH_sweeps.json`).
 pub fn bench_text(rep: &BenchReport) -> String {
@@ -621,6 +714,15 @@ pub fn bench_text(rep: &BenchReport) -> String {
         rep.serve.events,
         rep.serve.wall.as_secs_f64() * 1e3,
         rep.serve_events_per_sec()
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "memory path: {} cells, {} events in {:.3} ms = {:.0} events/sec",
+        rep.memory.cells,
+        rep.memory.events,
+        rep.memory.wall.as_secs_f64() * 1e3,
+        rep.memory_events_per_sec()
     )
     .unwrap();
     out
@@ -723,6 +825,36 @@ mod tests {
         let c = serve_csv(&rep);
         assert_eq!(c.lines().count(), 3);
         assert!(c.starts_with("tenant,"));
+    }
+
+    #[test]
+    fn memory_report_renders_crossover_and_csv() {
+        // Synthetic rows with a clean crossover: ACP wins at 4KB, HP
+        // wins at 64KB; both zero-copy modes beat copy-through.
+        let mk = |bytes: u64, mode: MemoryMode, total_us: f64| MemoryRow {
+            bytes,
+            driver: DriverKind::UserPolling,
+            mode,
+            frames: 4,
+            total: Dur::from_us(total_us),
+            busy: Dur::from_us(total_us / 2.0),
+            events: 100,
+        };
+        let rows = vec![
+            mk(4 << 10, MemoryMode::CopyThrough, 100.0),
+            mk(4 << 10, MemoryMode::ZeroCopyHp, 60.0),
+            mk(4 << 10, MemoryMode::ZeroCopyAcp, 50.0),
+            mk(64 << 10, MemoryMode::CopyThrough, 1000.0),
+            mk(64 << 10, MemoryMode::ZeroCopyHp, 500.0),
+            mk(64 << 10, MemoryMode::ZeroCopyAcp, 700.0),
+        ];
+        let t = memory_sweep_text(&rows);
+        assert!(t.contains("4KB"), "{t}");
+        assert!(t.contains("HP from 64KB up"), "{t}");
+        let c = memory_sweep_csv(&rows);
+        assert_eq!(c.lines().count(), 7);
+        assert!(c.starts_with("bytes,"));
+        assert!(c.contains("zero-acp"), "{c}");
     }
 
     #[test]

@@ -35,7 +35,7 @@ use crate::axi::dma::{DmaChannelEngine, DmaIrq, DmaMode};
 use crate::axi::regs::{self, DmaRegFile, RegError};
 use crate::axi::stream::ByteFifo;
 use crate::config::SimConfig;
-use crate::memory::copy::{CopyKind, CopyModel};
+use crate::memory::copy::{CoherencyModel, CopyKind, CopyModel};
 use crate::memory::ddr::{DdrController, Requester};
 use crate::os::costs::OsCosts;
 use crate::os::sched::Scheduler;
@@ -195,6 +195,9 @@ pub struct System {
     pub ports: Vec<DmaPort>,
     pub costs: OsCosts,
     pub copy: CopyModel,
+    /// Cache-coherency cost model of the zero-copy path (built from
+    /// `SimConfig::memory`; inert on the default copy-through path).
+    pub coh: CoherencyModel,
     pub sched: Scheduler,
     pub ledger: CpuLedger,
     /// Fault-injection plan (built from `SimConfig::faults`; inert by
@@ -231,6 +234,7 @@ impl System {
             ports,
             costs: OsCosts::new(&cfg),
             copy: CopyModel::new(&cfg),
+            coh: CoherencyModel::new(&cfg.memory),
             sched: Scheduler::new(timeslice),
             ledger: CpuLedger::default(),
             faults: FaultPlan::from_config(&cfg.faults),
@@ -533,8 +537,14 @@ impl System {
     }
 
     /// Charge a virtual→physical (or back) copy at the memcpy model rate.
+    /// On an active ACP zero-copy path, concurrent snoop traffic derates
+    /// the copy ([`CoherencyModel::cpu_derate`]).
     pub fn cpu_copy(&mut self, bytes: u64, kind: CopyKind) {
-        let d = self.copy.copy_time(bytes, kind, self.dma_active());
+        let mut d = self.copy.copy_time(bytes, kind, self.dma_active());
+        let derate = self.coh.cpu_derate();
+        if derate < 1.0 && self.dma_active() {
+            d = Dur((d.ns() as f64 / derate).ceil() as u64);
+        }
         let start = self.eng.now();
         self.cpu_exec(d);
         if let Some(t) = &mut self.trace {
@@ -543,6 +553,32 @@ impl System {
                 CopyKind::KernelCached => "copy_user (cached)",
             };
             t.span("cpu", format!("{what} {bytes}B"), start.ns(), d.ns());
+        }
+    }
+
+    /// Charge the coherency cost of handing a `bytes`-long in-place TX
+    /// frame to the engine (HP: dcache clean; ACP: snoop toll). A no-op
+    /// on the copy-through path.
+    pub fn coherency_tx(&mut self, bytes: u64) {
+        self.coherency_charge(bytes, self.coh.tx_cost(bytes), "clean/tx");
+    }
+
+    /// Charge the coherency cost of reading a `bytes`-long in-place RX
+    /// frame after the engine wrote it (HP: dcache invalidate; ACP: snoop
+    /// toll). A no-op on the copy-through path.
+    pub fn coherency_rx(&mut self, bytes: u64) {
+        self.coherency_charge(bytes, self.coh.rx_cost(bytes), "invalidate/rx");
+    }
+
+    fn coherency_charge(&mut self, bytes: u64, d: Dur, what: &str) {
+        if d == Dur::ZERO {
+            return;
+        }
+        let start = self.eng.now();
+        self.cpu_exec(d);
+        if let Some(t) = &mut self.trace {
+            let port = self.coh.port().label();
+            t.span("cpu", format!("coherency {what} [{port}] {bytes}B"), start.ns(), d.ns());
         }
     }
 
@@ -604,6 +640,28 @@ impl System {
         // (register-file-programmed channels set this from DMACR[14]).
         port.chan_mut(ch).set_err_irq_enabled(true);
         port.chan_mut(ch).program(&mut self.eng, mode, descs);
+    }
+
+    /// Arm a **cyclic** SG ring on one channel (zero-copy fast path):
+    /// full program cost once (CURDESC + TAILDESC + CTRL, like any SG
+    /// program), after which each frame costs one doorbell write via
+    /// [`System::ring_trigger_on`].
+    pub fn program_dma_ring_on(&mut self, e: EngineId, ch: Channel, descs: &[Descriptor]) {
+        let regs = 3;
+        self.cpu_exec(Dur(regs * self.cfg.reg_write_ns));
+        let port = &mut self.ports[e.index()];
+        port.irq_delivered[ch_index(ch)] = false;
+        port.chan_mut(ch).set_err_irq_enabled(true);
+        port.chan_mut(ch).program_ring(&mut self.eng, descs);
+    }
+
+    /// Re-run an armed ring for the next frame: a single TAILDESC
+    /// doorbell write instead of a full re-program.
+    pub fn ring_trigger_on(&mut self, e: EngineId, ch: Channel) {
+        self.cpu_exec(Dur(self.cfg.reg_write_ns));
+        let port = &mut self.ports[e.index()];
+        port.irq_delivered[ch_index(ch)] = false;
+        port.chan_mut(ch).ring_trigger(&mut self.eng);
     }
 
     /// MMIO write into engine 0's AXI-Lite register block.

@@ -1,0 +1,290 @@
+//! Memory-path subsystem acceptance tests (DESIGN.md §12).
+//!
+//! Three contracts, end to end through the real drivers:
+//!
+//! 1. **Inert default** — with `memory.path = "copy"` (the default) the
+//!    timeline is bit-identical to the seed for every driver, no matter
+//!    how the other zero-copy knobs are set: drivers branch on
+//!    `is_zero_copy()` alone, exactly like the fault-plan guard.
+//! 2. **Zero-copy wins** — with `memory.path = "zero"` every driver is
+//!    strictly faster at every swept frame size on both ports, rings
+//!    amortise across same-shape frames, and recovery still works under
+//!    injected faults (the ring template is bypassed for per-frame arms).
+//! 3. **Coherency accounting** — ACP/HP charges land in the CPU ledger
+//!    exactly as [`CoherencyModel`] prices them, and the sweep exposes
+//!    the ACP-to-HP crossover as a function of frame size.
+
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::{
+    acp_hp_crossover, memory_sweep, memory_sweep_sizes, MemoryMode, MemoryRow,
+};
+use psoc_dma::drivers::{
+    BufferScheme, Driver, DriverConfig, DriverKind, PartitionMode, TransferOutcome,
+};
+use psoc_dma::memory::buffer::CmaAllocator;
+use psoc_dma::memory::{DmaPortKind, MemoryPath};
+use psoc_dma::sim::event::{Channel, EngineId};
+use psoc_dma::sim::fault::{DmaErrorKind, FaultSpec};
+use psoc_dma::sim::time::Dur;
+use psoc_dma::system::System;
+
+fn zero_copy_cfg(port: DmaPortKind) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.memory.path = MemoryPath::ZeroCopy;
+    c.memory.port = port;
+    c
+}
+
+/// One blocking round trip; returns (tx ns, rx ns, events dispatched).
+fn timeline(cfg: &SimConfig, dcfg: DriverConfig, bytes: u64) -> (u64, u64, u64) {
+    let mut sys = System::loopback(cfg.clone());
+    let mut cma = CmaAllocator::zynq_default();
+    let mut drv = Driver::new(dcfg, &mut cma, cfg, bytes).unwrap();
+    let r = drv.transfer(&mut sys, bytes, bytes).unwrap();
+    sys.run_until_quiet();
+    (r.tx_time.ns(), r.rx_time.ns(), sys.eng.dispatched)
+}
+
+#[test]
+fn copy_through_default_is_bit_identical_whatever_the_other_knobs_say() {
+    // Same path selector, wildly different zero-copy knobs: if any
+    // driver reads a knob other than `path` on the copy-through branch,
+    // some timeline diverges.
+    let mut twisted = SimConfig::default();
+    assert_eq!(twisted.memory.path, MemoryPath::CopyThrough);
+    twisted.memory.port = DmaPortKind::Acp;
+    twisted.memory.flush_bps = 1.0;
+    twisted.memory.maintenance_setup_ns = 999_999;
+    twisted.memory.acp_penalty_bps = 1.0;
+    twisted.memory.acp_cpu_derate = 0.5;
+    twisted.memory.ring_chunk_bytes = 4096;
+    let baseline = SimConfig::default();
+    for kind in DriverKind::ALL {
+        for bytes in [4u64 << 10, 256 << 10, 2 << 20] {
+            let a = timeline(&baseline, DriverConfig::table1(kind), bytes);
+            let b = timeline(&twisted, DriverConfig::table1(kind), bytes);
+            assert_eq!(a, b, "{kind:?}/{bytes}B: copy-through read a zero-copy knob");
+        }
+    }
+    // The multi-queue scheme too (its gating is a separate code path).
+    let mut base_mq = baseline.clone();
+    base_mq.num_engines = 2;
+    let mut twisted_mq = twisted.clone();
+    twisted_mq.num_engines = 2;
+    let dcfg = DriverConfig::table1(DriverKind::KernelMultiQueue);
+    assert_eq!(
+        timeline(&base_mq, dcfg, 1 << 20),
+        timeline(&twisted_mq, dcfg, 1 << 20),
+        "multi-queue copy-through read a zero-copy knob"
+    );
+}
+
+#[test]
+fn zero_copy_is_strictly_faster_at_every_swept_size_on_both_ports() {
+    let sizes = memory_sweep_sizes(false);
+    let rows = memory_sweep(&SimConfig::default(), &sizes, &DriverKind::ALL, 3).unwrap();
+    let fps = |bytes, kind, mode| {
+        rows.iter()
+            .find(|r: &&MemoryRow| r.bytes == bytes && r.driver == kind && r.mode == mode)
+            .unwrap()
+            .frames_per_sec()
+    };
+    for &bytes in &sizes {
+        for kind in DriverKind::ALL {
+            let copy = fps(bytes, kind, MemoryMode::CopyThrough);
+            let hp = fps(bytes, kind, MemoryMode::ZeroCopyHp);
+            let acp = fps(bytes, kind, MemoryMode::ZeroCopyAcp);
+            assert!(hp > copy, "{kind:?}/{bytes}B: zero-hp {hp} !> copy {copy}");
+            assert!(acp > copy, "{kind:?}/{bytes}B: zero-acp {acp} !> copy {copy}");
+        }
+    }
+}
+
+#[test]
+fn sweep_exposes_an_acp_hp_crossover_for_every_driver() {
+    let sizes = memory_sweep_sizes(false);
+    let rows = memory_sweep(&SimConfig::default(), &sizes, &DriverKind::ALL, 3).unwrap();
+    let fps = |bytes, kind, mode| {
+        rows.iter()
+            .find(|r: &&MemoryRow| r.bytes == bytes && r.driver == kind && r.mode == mode)
+            .unwrap()
+            .frames_per_sec()
+    };
+    let small = sizes[0];
+    let large = *sizes.last().unwrap();
+    for kind in DriverKind::ALL {
+        // ACP's per-byte toll beats HP's fixed maintenance setup only on
+        // small frames; large frames invert it.
+        assert!(
+            fps(small, kind, MemoryMode::ZeroCopyAcp) > fps(small, kind, MemoryMode::ZeroCopyHp),
+            "{kind:?}: ACP does not win at {small}B"
+        );
+        assert!(
+            fps(large, kind, MemoryMode::ZeroCopyHp) > fps(large, kind, MemoryMode::ZeroCopyAcp),
+            "{kind:?}: HP does not win at {large}B"
+        );
+        let cross = acp_hp_crossover(&rows, kind)
+            .unwrap_or_else(|| panic!("{kind:?}: no crossover in the swept range"));
+        assert!(cross > small && cross <= large, "{kind:?}: crossover {cross} out of range");
+    }
+}
+
+#[test]
+fn rings_arm_once_and_amortise_across_same_shape_frames() {
+    let cfg = zero_copy_cfg(DmaPortKind::Hp);
+    let bytes = 256u64 << 10;
+    let mut sys = System::loopback(cfg.clone());
+    let mut cma = CmaAllocator::zynq_default();
+    let mut drv =
+        Driver::new(DriverConfig::table1(DriverKind::UserPolling), &mut cma, &cfg, bytes).unwrap();
+    let mut frame_ns = Vec::new();
+    for _ in 0..3 {
+        let t0 = sys.now();
+        let r = drv.transfer(&mut sys, bytes, bytes).unwrap();
+        assert!(matches!(r.outcome, TransferOutcome::Completed));
+        frame_ns.push(sys.now().since(t0).ns());
+    }
+    // Frame 1 armed the rings; frames 2 and 3 only rang the doorbells.
+    assert_eq!(sys.mm2s().stats.ring_wraps, 2);
+    assert_eq!(sys.s2mm().stats.ring_wraps, 2);
+    // 256 KB at the default 256 KB ring chunk = one BD per direction
+    // per frame (the hardware still fetches it every frame).
+    assert_eq!(sys.mm2s().stats.desc_fetches, 3);
+    assert!(
+        frame_ns[1] < frame_ns[0],
+        "re-triggered frame {} ns not cheaper than arming frame {} ns",
+        frame_ns[1],
+        frame_ns[0]
+    );
+    // Steady state is exactly periodic: every post-arm frame starts from
+    // quiescent hardware and runs the identical event sequence.
+    assert_eq!(frame_ns[2], frame_ns[1]);
+    // A shape change re-arms instead of re-triggering.
+    drv.transfer(&mut sys, bytes / 2, bytes / 2).unwrap();
+    assert_eq!(sys.mm2s().stats.ring_wraps, 2, "shape change must not count as a wrap");
+}
+
+#[test]
+fn blocks_and_double_buffer_collapse_to_unique_under_zero_copy() {
+    // The Blocks pipeline exists to overlap staging copies; with nothing
+    // to stage it must take exactly the Unique path.
+    let cfg = zero_copy_cfg(DmaPortKind::Hp);
+    let unique = DriverConfig::table1(DriverKind::UserPolling);
+    let blocks = DriverConfig {
+        kind: DriverKind::UserPolling,
+        buffering: BufferScheme::Double,
+        partition: PartitionMode::Blocks,
+    };
+    assert_eq!(
+        timeline(&cfg, unique, 1 << 20),
+        timeline(&cfg, blocks, 1 << 20),
+        "Blocks/Double did not collapse to Unique under zero-copy"
+    );
+}
+
+#[test]
+fn multiqueue_zero_copy_beats_copy_through() {
+    let mut copy = SimConfig::default();
+    copy.num_engines = 2;
+    let mut zero = zero_copy_cfg(DmaPortKind::Hp);
+    zero.num_engines = 2;
+    let dcfg = DriverConfig::table1(DriverKind::KernelMultiQueue);
+    let (_, rx_copy, _) = timeline(&copy, dcfg, 2 << 20);
+    let (_, rx_zero, _) = timeline(&zero, dcfg, 2 << 20);
+    assert!(rx_zero < rx_copy, "multi-queue zero-copy {rx_zero} !< copy-through {rx_copy}");
+}
+
+#[test]
+fn zero_copy_recovers_injected_dma_errors_with_exact_residue() {
+    // With the fault plan active the rings are bypassed for per-frame
+    // arms, so the existing reset + residue re-arm machinery must work
+    // unchanged on the zero-copy path — for the user driver (simple-mode
+    // re-arm) and the kernel driver (SG chain rebuild over the in-place
+    // region, the `arm_tx_chain` recovery branch).
+    let run = |kind: DriverKind, ch: Channel| {
+        let cfg = zero_copy_cfg(DmaPortKind::Hp);
+        let mut sys = System::loopback(cfg.clone());
+        sys.faults.schedule(FaultSpec::DmaError {
+            eng: EngineId(0),
+            ch,
+            nth: 2,
+            kind: DmaErrorKind::Slave,
+        });
+        let mut cma = CmaAllocator::zynq_default();
+        let bytes = 256u64 << 10;
+        let mut drv = Driver::new(DriverConfig::table1(kind), &mut cma, &cfg, bytes).unwrap();
+        let r = drv.transfer(&mut sys, bytes, bytes).unwrap();
+        sys.run_until_quiet();
+        match r.outcome {
+            TransferOutcome::Recovered { retries, .. } => {
+                assert!(retries >= 1, "{kind:?}/{ch:?}: recovered with zero retries")
+            }
+            other => panic!("{kind:?}/{ch:?}: expected recovery, got {other:?}"),
+        }
+        assert!(sys.faults.stats.total() > 0, "{kind:?}/{ch:?}: no fault was injected");
+        // With the fault plan active the drivers bypass the ring template
+        // entirely (partial residues cannot be expressed by a fixed ring),
+        // and channel reset disarms — no descriptor may be left retained.
+        assert!(!sys.port(EngineId(0)).chan(ch).ring_armed(), "descriptor ring leaked");
+        (r.tx_time.ns(), r.rx_time.ns(), sys.now().ns())
+    };
+    // Deterministic, fault for fault.
+    assert_eq!(
+        run(DriverKind::UserPolling, Channel::S2mm),
+        run(DriverKind::UserPolling, Channel::S2mm)
+    );
+    assert_eq!(
+        run(DriverKind::KernelIrq, Channel::Mm2s),
+        run(DriverKind::KernelIrq, Channel::Mm2s)
+    );
+}
+
+#[test]
+fn coherency_charges_land_in_the_cpu_ledger_exactly_as_priced() {
+    for port in [DmaPortKind::Hp, DmaPortKind::Acp] {
+        let cfg = zero_copy_cfg(port);
+        let mut sys = System::loopback(cfg.clone());
+        assert!(sys.coh.active());
+        assert_eq!(sys.coh.port(), port);
+        let b0 = sys.ledger.busy;
+        sys.coherency_tx(1 << 20);
+        let tx = sys.ledger.busy.saturating_sub(b0);
+        assert_eq!(tx, sys.coh.tx_cost(1 << 20), "{port:?}: tx charge != priced cost");
+        assert!(tx > Dur::ZERO);
+        let b1 = sys.ledger.busy;
+        sys.coherency_rx(64 << 10);
+        let rx = sys.ledger.busy.saturating_sub(b1);
+        assert_eq!(rx, sys.coh.rx_cost(64 << 10), "{port:?}: rx charge != priced cost");
+    }
+    // Copy-through: the model prices everything at zero and the charge
+    // helpers are free (no time advance, no busy accrual).
+    let mut sys = System::loopback(SimConfig::default());
+    assert!(!sys.coh.active());
+    assert_eq!(sys.coh.tx_cost(1 << 20), Dur::ZERO);
+    let b0 = sys.ledger.busy;
+    let t0 = sys.now();
+    sys.coherency_tx(1 << 20);
+    sys.coherency_rx(1 << 20);
+    assert_eq!(sys.ledger.busy, b0);
+    assert_eq!(sys.now(), t0);
+}
+
+#[test]
+fn zero_copy_runs_are_bit_reproducible() {
+    let run = |port| {
+        let cfg = zero_copy_cfg(port);
+        let mut sys = System::loopback(cfg.clone());
+        let mut cma = CmaAllocator::zynq_default();
+        let mut drv =
+            Driver::new(DriverConfig::table1(DriverKind::KernelIrq), &mut cma, &cfg, 1 << 20)
+                .unwrap();
+        for _ in 0..2 {
+            drv.transfer(&mut sys, 1 << 20, 1 << 20).unwrap();
+        }
+        sys.run_until_quiet();
+        (sys.now().ns(), sys.eng.dispatched, sys.ledger.busy.ns())
+    };
+    for port in [DmaPortKind::Hp, DmaPortKind::Acp] {
+        assert_eq!(run(port), run(port), "{port:?} run not reproducible");
+    }
+}
