@@ -1,0 +1,680 @@
+//! The fleet front end: placement, spill/steal routing, failover, and
+//! the worker-sharded board executor.
+//!
+//! `serve_cluster` runs in three deterministic phases:
+//!
+//! 1. **Route** (serial): the global tenant streams are materialised once
+//!    from the workload seed, then every frame is routed in `(at, tenant,
+//!    seq)` order. The balancer tracks a *fluid* backlog estimate per
+//!    board — arrivals add a frame, service drains at the board's
+//!    measured capacity — and decides home/spill/steal/redirect per
+//!    frame. The estimate is the front end's imperfect knowledge (a real
+//!    balancer sees queue depths, not futures), and it is a pure function
+//!    of the arrival sequence, so routing is bit-replayable.
+//! 2. **Fail over** (serial, only when `cluster.fail_at_ns > 0`): the
+//!    failed board runs first with a hard stop; every frame it still owed
+//!    draws retry-or-lose from a PCG32 stream seeded by `cluster.seed`,
+//!    and retried frames are re-delivered to surviving boards at
+//!    `fail_at + failover_detect_ns` with their original deadlines.
+//! 3. **Serve** (parallel): surviving boards are independent simulations
+//!    over their delivered frames, sharded across threads by
+//!    [`crate::coordinator::run_cells`] — the same worker-count-invariant
+//!    executor the sweeps use, so any `--workers` yields identical
+//!    reports.
+//!
+//! The cluster-wide ledger identity (asserted by
+//! `rust/tests/cluster_scenarios.rs`): every generated frame ends in
+//! exactly one of {completed, dropped, coalesced, unserved, failed_over},
+//! summed over boards and tenants.
+
+use crate::config::SimConfig;
+use crate::coordinator::{capacity_fps, cell_seed, run_cells};
+use crate::drivers::{DriverError, DriverKind};
+use crate::sim::rng::Pcg32;
+use crate::sim::time::{Dur, SimTime};
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+use crate::workload::{
+    ArrivalKind, ArrivalQueue, FrameArrival, ServeReport, StreamGenerator, TenantSlo,
+};
+
+use super::board::{serve_board, BoardRun};
+use super::{BoardKind, ClusterConfig, PlacementKind};
+
+/// PCG32 stream selector for the failover retry draws.
+const FAILOVER_STREAM: u64 = 0xFA11_0EE4;
+/// Virtual nodes per board on the consistent-hash ring.
+const VNODES: u64 = 16;
+
+/// One board's slice of the cluster outcome.
+#[derive(Clone, Debug)]
+pub struct BoardSummary {
+    pub kind: BoardKind,
+    pub engines: usize,
+    /// Memory-path label ("copy" / "zero-hp" / "zero-acp").
+    pub memory: &'static str,
+    /// Frames the balancer routed to this board (including failover
+    /// re-deliveries).
+    pub delivered: u64,
+    /// Measured single-board capacity the balancer planned with, fps.
+    pub capacity_fps: f64,
+    /// Served share of the board's capacity over the workload horizon.
+    pub utilization: f64,
+    /// Did this board die mid-run?
+    pub failed: bool,
+    pub report: ServeReport,
+}
+
+/// The full outcome of one cluster serve run.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub driver: &'static str,
+    pub placement: &'static str,
+    pub boards: Vec<BoardSummary>,
+    /// Cluster-wide per-tenant aggregate. `offered` here is the frames
+    /// the tenant *generated*; `failed_over` the ones lost to the board
+    /// failure, so `offered == completed + dropped + coalesced +
+    /// unserved + failed_over` per tenant.
+    pub tenants: Vec<TenantSlo>,
+    /// Longest board timeline (the fleet is done when its last board is).
+    pub duration: Dur,
+    /// Frames the workload generators produced.
+    pub generated: u64,
+    /// Frames routed off their home board by overflow spill.
+    pub spilled: u64,
+    /// Frames pulled to an idle board by work stealing.
+    pub stolen: u64,
+    /// Frames redirected at the front door because their home board was
+    /// already dead when they arrived.
+    pub redirected: u64,
+    /// Abandoned frames re-delivered to a surviving board.
+    pub retried: u64,
+    /// Abandoned frames lost for good (not retried, or retried past the
+    /// horizon).
+    pub failed_over: u64,
+    /// Simulator events dispatched, summed over boards.
+    pub events: u64,
+}
+
+impl ClusterReport {
+    pub fn total_completed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.completed).sum()
+    }
+
+    pub fn total_shed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.dropped + t.coalesced).sum()
+    }
+
+    pub fn total_unserved(&self) -> u64 {
+        self.tenants.iter().map(|t| t.unserved).sum()
+    }
+
+    pub fn total_missed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.missed).sum()
+    }
+
+    /// Aggregate delivered frames/sec over the fleet timeline.
+    pub fn goodput_fps(&self) -> f64 {
+        if self.duration == Dur::ZERO {
+            return 0.0;
+        }
+        self.total_completed() as f64 / self.duration.as_secs()
+    }
+
+    /// Cluster-wide SLO attainment over *generated* frames: sheds,
+    /// shutdown abandons, failover losses and deadline misses all count
+    /// against it.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.generated == 0 {
+            return 1.0;
+        }
+        (self.total_completed() - self.total_missed()) as f64 / self.generated as f64
+    }
+
+    /// Max/min per-tenant completions (tenants that generated nothing are
+    /// ignored; a starved tenant makes the ratio infinite) — the same
+    /// isolation metric as [`ServeReport::fairness_ratio`], fleet-wide.
+    pub fn fairness_ratio(&self) -> f64 {
+        let mut min = f64::INFINITY;
+        let mut max: f64 = 0.0;
+        for t in &self.tenants {
+            if t.offered == 0 {
+                continue;
+            }
+            let g = t.completed as f64;
+            min = min.min(g);
+            max = max.max(g);
+        }
+        if !min.is_finite() || max == 0.0 {
+            return 0.0;
+        }
+        if min == 0.0 {
+            return f64::INFINITY;
+        }
+        max / min
+    }
+
+    pub fn spill_rate(&self) -> f64 {
+        if self.generated == 0 {
+            return 0.0;
+        }
+        self.spilled as f64 / self.generated as f64
+    }
+
+    pub fn steal_rate(&self) -> f64 {
+        if self.generated == 0 {
+            return 0.0;
+        }
+        self.stolen as f64 / self.generated as f64
+    }
+
+    /// Merged end-to-end latency across every tenant and board.
+    pub fn merged_latency(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for t in &self.tenants {
+            h.merge(&t.latency);
+        }
+        h
+    }
+
+    /// Machine-readable twin — the determinism tests compare this string.
+    pub fn to_json(&self) -> Json {
+        let merged = self.merged_latency();
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("driver", Json::str(self.driver)),
+            ("placement", Json::str(self.placement)),
+            ("boards", Json::num(self.boards.len() as f64)),
+            ("duration_ms", Json::num(self.duration.as_ms())),
+            ("events", Json::num(self.events as f64)),
+            ("generated", Json::num(self.generated as f64)),
+            ("completed", Json::num(self.total_completed() as f64)),
+            ("shed_frames", Json::num(self.total_shed() as f64)),
+            ("unserved", Json::num(self.total_unserved() as f64)),
+            ("missed", Json::num(self.total_missed() as f64)),
+            ("spilled", Json::num(self.spilled as f64)),
+            ("stolen", Json::num(self.stolen as f64)),
+            ("redirected", Json::num(self.redirected as f64)),
+            ("retried", Json::num(self.retried as f64)),
+            ("failed_over", Json::num(self.failed_over as f64)),
+            ("goodput_fps", Json::num(self.goodput_fps())),
+            ("slo_attainment", Json::num(self.slo_attainment())),
+            ("fairness_ratio", Json::num(self.fairness_ratio())),
+            ("latency_p50_ns", Json::num(merged.percentile(50.0).unwrap_or(0.0))),
+            ("latency_p99_ns", Json::num(merged.percentile(99.0).unwrap_or(0.0))),
+            (
+                "board_summaries",
+                Json::Arr(
+                    self.boards
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                ("kind", Json::str(b.kind.label())),
+                                ("engines", Json::num(b.engines as f64)),
+                                ("memory", Json::str(b.memory)),
+                                ("delivered", Json::num(b.delivered as f64)),
+                                ("capacity_fps", Json::num(b.capacity_fps)),
+                                ("utilization", Json::num(b.utilization)),
+                                ("failed", Json::Bool(b.failed)),
+                                (
+                                    "completed",
+                                    Json::num(b.report.total_completed() as f64),
+                                ),
+                                ("events", Json::num(b.report.events as f64)),
+                                ("duration_ms", Json::num(b.report.duration.as_ms())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "tenants",
+                Json::Arr(
+                    self.tenants.iter().map(|t| t.to_json(self.duration)).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Hash for ring placement: reuse the sweep executor's splitmix-based
+/// seed derivation so placement shares the repo's one mixing function.
+fn hash64(seed: u64, x: u64) -> u64 {
+    cell_seed(seed, x)
+}
+
+/// The home board per tenant under consistent hashing: each board owns
+/// [`VNODES`] points on a 2^64 ring, a tenant lands on the successor of
+/// its own hash.
+fn hash_ring_homes(cl: &ClusterConfig, tenants: usize) -> Vec<usize> {
+    let boards = cl.boards as usize;
+    let mut ring: Vec<(u64, usize)> = Vec::with_capacity(boards * VNODES as usize);
+    for b in 0..boards {
+        for v in 0..VNODES {
+            ring.push((hash64(cl.seed, 0x8000_0000_0000_0000 | ((b as u64) << 16) | v), b));
+        }
+    }
+    ring.sort_unstable();
+    (0..tenants)
+        .map(|t| {
+            let h = hash64(cl.seed, 0x4000_0000_0000_0000 | t as u64);
+            match ring.binary_search_by(|&(p, _)| p.cmp(&h)) {
+                Ok(i) => ring[i].1,
+                Err(i) => ring[i % ring.len()].1,
+            }
+        })
+        .collect()
+}
+
+/// The home board per tenant under least-loaded placement: tenants in
+/// descending offered-rate order, each to the board with the lowest
+/// projected load/capacity ratio.
+fn least_loaded_homes(cfg: &SimConfig, capacity: &[f64]) -> Vec<usize> {
+    let n = cfg.workload.tenants as usize;
+    let boards = capacity.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    // Descending rate, index as the deterministic tie-break.
+    order.sort_by(|&a, &b| {
+        cfg.workload
+            .tenant_fps(b)
+            .partial_cmp(&cfg.workload.tenant_fps(a))
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let mut assigned = vec![0f64; boards];
+    let mut homes = vec![0usize; n];
+    for t in order {
+        let rate = cfg.workload.tenant_fps(t);
+        let best = (0..boards)
+            .min_by(|&a, &b| {
+                let ra = (assigned[a] + rate) / capacity[a];
+                let rb = (assigned[b] + rate) / capacity[b];
+                ra.partial_cmp(&rb).unwrap().then(a.cmp(&b))
+            })
+            .expect("at least one board");
+        assigned[best] += rate;
+        homes[t] = best;
+    }
+    homes
+}
+
+/// Serve the configured workload across the configured fleet. Routing and
+/// failover are serial and seeded; board simulations shard across
+/// `workers` threads with worker-count-invariant results.
+pub fn serve_cluster(
+    cfg: &SimConfig,
+    kind: DriverKind,
+    workers: usize,
+) -> Result<ClusterReport, DriverError> {
+    assert!(
+        cfg.workload.arrival != ArrivalKind::Closed,
+        "cluster serving requires an open-loop arrival kind (closed-loop pacing is per-board)"
+    );
+    let cl = cfg.cluster.clone();
+    let wl = cfg.workload.clone();
+    let boards = cl.boards as usize;
+    let n_tenants = wl.tenants as usize;
+    let fail_board = cl.fail_board as usize;
+
+    // Board configs + the capacities the balancer plans with. Capacity is
+    // *measured* per board profile (a short scaling run), so heterogeneity
+    // in engines, DDR, clock and memory path all show up in placement.
+    let mut board_cfgs: Vec<SimConfig> = Vec::with_capacity(boards);
+    let mut capacity: Vec<f64> = Vec::with_capacity(boards);
+    for b in 0..boards {
+        let spec = cl.board_kind(b).spec();
+        let mut c = spec.specialize(cfg);
+        c.seed = cell_seed(cl.seed, b as u64);
+        capacity.push(capacity_fps(&c, kind, spec.engines)?.max(1e-9));
+        board_cfgs.push(c);
+    }
+
+    // Phase 1 — materialise and route the global streams.
+    let mut gen = StreamGenerator::new(&wl);
+    let mut q = ArrivalQueue::new();
+    gen.initial(&mut q);
+    let mut arrivals: Vec<FrameArrival> = Vec::with_capacity(q.len());
+    while let Some(a) = q.pop_due(SimTime(u64::MAX)) {
+        arrivals.push(a);
+    }
+    let generated = arrivals.len() as u64;
+
+    let mut home_of: Vec<usize> = match cl.placement {
+        PlacementKind::ConsistentHash | PlacementKind::LocalityAffine => {
+            hash_ring_homes(&cl, n_tenants)
+        }
+        PlacementKind::LeastLoaded => least_loaded_homes(cfg, &capacity),
+    };
+    let mut homed_count = vec![0usize; boards];
+    for &h in &home_of {
+        homed_count[h] += 1;
+    }
+
+    let alive = |b: usize, at_ns: u64| -> bool {
+        !(cl.has_failure() && b == fail_board && at_ns >= cl.fail_at_ns)
+    };
+
+    let mut deliveries: Vec<Vec<FrameArrival>> = vec![Vec::new(); boards];
+    let mut load = vec![0f64; boards];
+    let mut last_ns = vec![0u64; boards];
+    let mut consec_spills = vec![0u32; n_tenants];
+    let (mut spilled, mut stolen, mut redirected) = (0u64, 0u64, 0u64);
+
+    for a in &arrivals {
+        let at = a.at.ns();
+        // Drain every board's fluid backlog to `at` (service at measured
+        // capacity), then decide where this frame goes.
+        for b in 0..boards {
+            let dt = (at - last_ns[b]) as f64 * 1e-9;
+            load[b] = (load[b] - dt * capacity[b]).max(0.0);
+            last_ns[b] = at;
+        }
+        let t = a.tenant;
+        let home = home_of[t];
+        let least_loaded_alive = |exclude: usize| -> Option<usize> {
+            (0..boards)
+                .filter(|&b| b != exclude && alive(b, at))
+                .min_by(|&x, &y| {
+                    let rx = load[x] / capacity[x];
+                    let ry = load[y] / capacity[y];
+                    rx.partial_cmp(&ry).unwrap().then(x.cmp(&y))
+                })
+        };
+        let mut target = home;
+        let mut was_spill = false;
+        if !alive(home, at) {
+            // Front-door failover: the home board is dead, route to the
+            // least-loaded survivor.
+            if let Some(b) = least_loaded_alive(home) {
+                target = b;
+                redirected += 1;
+            }
+        } else {
+            let thr = wl.queue_cap as f64 * homed_count[home].max(1) as f64;
+            if cl.spill && load[home] >= thr {
+                // Overflow spill: the home board's admission backlog is
+                // saturated; shed the frame to a less-loaded board if one
+                // exists.
+                if let Some(b) = least_loaded_alive(home) {
+                    if load[b] / capacity[b] < load[home] / capacity[home] {
+                        target = b;
+                        spilled += 1;
+                        was_spill = true;
+                    }
+                }
+            } else if cl.steal && load[home] >= thr * 0.5 {
+                // Work stealing: a near-idle board pulls from a
+                // backlogged home before it saturates.
+                if let Some(b) = least_loaded_alive(home) {
+                    if load[b] < 1.0 {
+                        target = b;
+                        stolen += 1;
+                    }
+                }
+            }
+        }
+        if cl.placement == PlacementKind::LocalityAffine {
+            if was_spill {
+                consec_spills[t] += 1;
+                if consec_spills[t] >= 3 {
+                    // Sticky reassignment: three consecutive spills mean
+                    // the hash home is chronically overloaded for this
+                    // tenant — rehome it where its frames actually land.
+                    homed_count[home_of[t]] -= 1;
+                    home_of[t] = target;
+                    homed_count[target] += 1;
+                    consec_spills[t] = 0;
+                }
+            } else {
+                consec_spills[t] = 0;
+            }
+        }
+        load[target] += 1.0;
+        deliveries[target].push(*a);
+    }
+
+    // Phase 2 — run the failed board to its death and fail its owed
+    // frames over. Every decision draws from a dedicated seeded stream.
+    let mut failed_run: Option<BoardRun> = None;
+    let mut lost = vec![0u64; n_tenants];
+    let mut retried = 0u64;
+    if cl.has_failure() {
+        let run = serve_board(
+            &board_cfgs[fail_board],
+            kind,
+            deliveries[fail_board].clone(),
+            Some(cl.fail_at_ns),
+        )?;
+        let mut rng = Pcg32::with_stream(cl.seed, FAILOVER_STREAM);
+        let resume_at = cl.fail_at_ns.saturating_add(cl.failover_detect_ns);
+        for a in &run.abandoned {
+            if !rng.chance(cl.failover_retry) {
+                lost[a.tenant] += 1;
+                continue;
+            }
+            if resume_at >= wl.duration_ns {
+                // Retried, but the service horizon closed before the
+                // failover detector fired: lost all the same.
+                lost[a.tenant] += 1;
+                continue;
+            }
+            // Re-deliver to the survivor with the most headroom relative
+            // to what it has been dealt so far; the original deadline
+            // rides along (a failed-over frame is usually late — that is
+            // the cost the report should show).
+            let target = (0..boards)
+                .filter(|&b| b != fail_board)
+                .min_by(|&x, &y| {
+                    let rx = deliveries[x].len() as f64 / capacity[x];
+                    let ry = deliveries[y].len() as f64 / capacity[y];
+                    rx.partial_cmp(&ry).unwrap().then(x.cmp(&y))
+                })
+                .expect("validated: failure needs >= 2 boards");
+            deliveries[target].push(FrameArrival {
+                at: SimTime(resume_at),
+                tenant: a.tenant,
+                seq: a.seq,
+                deadline: a.deadline,
+            });
+            retried += 1;
+        }
+        failed_run = Some(run);
+    }
+
+    // Phase 3 — surviving boards are independent simulations; shard them
+    // across workers with the deterministic executor.
+    struct BoardCell {
+        cfg: SimConfig,
+        arrivals: Vec<FrameArrival>,
+        index: usize,
+    }
+    let cells: Vec<BoardCell> = (0..boards)
+        .filter(|&b| !(cl.has_failure() && b == fail_board))
+        .map(|b| BoardCell {
+            cfg: board_cfgs[b].clone(),
+            arrivals: deliveries[b].clone(),
+            index: b,
+        })
+        .collect();
+    let results = run_cells(&cells, workers, |_, cell| {
+        serve_board(&cell.cfg, kind, cell.arrivals.clone(), None)
+    });
+
+    let mut runs: Vec<Option<BoardRun>> = (0..boards).map(|_| None).collect();
+    if let Some(run) = failed_run {
+        runs[fail_board] = Some(run);
+    }
+    for (cell, res) in cells.iter().zip(results) {
+        runs[cell.index] = Some(res?);
+    }
+
+    // Aggregate: per-board summaries + the cluster-wide tenant ledger.
+    let horizon_s = wl.duration_ns as f64 * 1e-9;
+    let mut summaries: Vec<BoardSummary> = Vec::with_capacity(boards);
+    let mut tenants: Vec<TenantSlo> = (0..n_tenants).map(|_| TenantSlo::default()).collect();
+    let mut duration = Dur::ZERO;
+    let mut events = 0u64;
+    for (b, run) in runs.into_iter().enumerate() {
+        let run = run.expect("every board ran exactly once");
+        let rep = run.report;
+        duration = duration.max(rep.duration);
+        events += rep.events;
+        for (t, agg) in tenants.iter_mut().enumerate() {
+            let s = &rep.tenants[t];
+            agg.offered += s.offered;
+            agg.admitted += s.admitted;
+            agg.dropped += s.dropped;
+            agg.coalesced += s.coalesced;
+            agg.completed += s.completed;
+            agg.unserved += s.unserved;
+            agg.missed += s.missed;
+            agg.latency.merge(&s.latency);
+            agg.queueing.merge(&s.queueing);
+            agg.normalize_cpu = Dur(agg.normalize_cpu.ns() + s.normalize_cpu.ns());
+            agg.max_queue = agg.max_queue.max(s.max_queue);
+        }
+        let spec = cl.board_kind(b).spec();
+        summaries.push(BoardSummary {
+            kind: spec.kind,
+            engines: spec.engines,
+            memory: board_cfgs[b].memory.mode_label(),
+            delivered: deliveries[b].len() as u64,
+            capacity_fps: capacity[b],
+            utilization: rep.total_completed() as f64 / (capacity[b] * horizon_s),
+            failed: cl.has_failure() && b == fail_board,
+            report: rep,
+        });
+    }
+    for (t, agg) in tenants.iter_mut().enumerate() {
+        // Frames lost to the failure were revoked from every board's
+        // front door; the cluster ledger re-owns them here so the
+        // identity `offered == completed + dropped + coalesced +
+        // unserved + failed_over` closes over the whole fleet.
+        agg.failed_over = lost[t];
+        agg.offered += lost[t];
+    }
+
+    Ok(ClusterReport {
+        driver: kind.label(),
+        placement: cl.placement.label(),
+        boards: summaries,
+        tenants,
+        duration,
+        generated,
+        spilled,
+        stolen,
+        redirected,
+        retried,
+        failed_over: lost.iter().sum(),
+        events,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet_cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.workload.tenants = 4;
+        c.workload.offered_fps = 240.0;
+        c.workload.duration_ns = 100_000_000;
+        c.workload.deadline_ns = 60_000_000;
+        c.cluster.boards = 2;
+        c
+    }
+
+    #[test]
+    fn cluster_serves_and_balances_the_ledger() {
+        let cfg = fleet_cfg();
+        let rep = serve_cluster(&cfg, DriverKind::KernelIrq, 1).unwrap();
+        assert_eq!(rep.boards.len(), 2);
+        assert!(rep.total_completed() > 0, "fleet served nothing");
+        let accounted: u64 = rep
+            .tenants
+            .iter()
+            .map(|t| t.completed + t.dropped + t.coalesced + t.unserved + t.failed_over)
+            .sum();
+        assert_eq!(accounted, rep.generated);
+        for t in &rep.tenants {
+            assert_eq!(
+                t.completed + t.dropped + t.coalesced + t.unserved + t.failed_over,
+                t.offered
+            );
+        }
+    }
+
+    #[test]
+    fn placement_policies_route_every_frame() {
+        for placement in PlacementKind::ALL {
+            let mut cfg = fleet_cfg();
+            cfg.cluster.placement = placement;
+            cfg.cluster.boards = 3;
+            let rep = serve_cluster(&cfg, DriverKind::KernelIrq, 1).unwrap();
+            let delivered: u64 = rep.boards.iter().map(|b| b.delivered).sum();
+            assert_eq!(delivered, rep.generated, "{placement:?} lost frames in routing");
+        }
+    }
+
+    #[test]
+    fn least_loaded_respects_capacity_heterogeneity() {
+        let caps = vec![10.0, 100.0];
+        let mut cfg = fleet_cfg();
+        cfg.workload.tenants = 6;
+        cfg.workload.skew = 1.0;
+        let homes = least_loaded_homes(&cfg, &caps);
+        let on_fast = homes.iter().filter(|&&h| h == 1).count();
+        assert!(
+            on_fast > homes.len() / 2,
+            "the 10x board should receive most tenants: {homes:?}"
+        );
+    }
+
+    #[test]
+    fn hash_ring_is_stable_and_total() {
+        let mut cl = ClusterConfig::default();
+        cl.boards = 4;
+        let a = hash_ring_homes(&cl, 16);
+        let b = hash_ring_homes(&cl, 16);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&h| h < 4));
+        // Not all tenants on one board (16 tenants, 64 vnodes).
+        let first = a[0];
+        assert!(a.iter().any(|&h| h != first), "degenerate ring: {a:?}");
+    }
+
+    #[test]
+    fn board_failure_reroutes_and_accounts() {
+        let mut cfg = fleet_cfg();
+        cfg.cluster.boards = 3;
+        cfg.cluster.fail_at_ns = 50_000_000;
+        cfg.cluster.fail_board = 0;
+        let rep = serve_cluster(&cfg, DriverKind::KernelIrq, 1).unwrap();
+        assert!(rep.boards[0].failed);
+        assert!(!rep.boards[1].failed && !rep.boards[2].failed);
+        // The failed board stopped near the failure instant.
+        assert!(rep.boards[0].report.duration.ns() < cfg.workload.duration_ns);
+        let accounted: u64 = rep
+            .tenants
+            .iter()
+            .map(|t| t.completed + t.dropped + t.coalesced + t.unserved + t.failed_over)
+            .sum();
+        assert_eq!(accounted, rep.generated);
+    }
+
+    #[test]
+    fn failover_retry_zero_loses_everything_abandoned() {
+        let mut cfg = fleet_cfg();
+        cfg.cluster.boards = 2;
+        cfg.cluster.fail_at_ns = 50_000_000;
+        cfg.cluster.fail_board = 1;
+        cfg.cluster.failover_retry = 0.0;
+        let rep = serve_cluster(&cfg, DriverKind::KernelIrq, 1).unwrap();
+        assert_eq!(rep.retried, 0);
+        // With retry 1.0 and time remaining, losses can only shrink.
+        cfg.cluster.failover_retry = 1.0;
+        let rep2 = serve_cluster(&cfg, DriverKind::KernelIrq, 1).unwrap();
+        assert!(rep2.failed_over <= rep.failed_over);
+        assert!(rep2.retried >= rep.retried);
+    }
+}

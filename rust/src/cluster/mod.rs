@@ -1,0 +1,467 @@
+//! Fleet-scale serving: N simulated boards behind one front door.
+//!
+//! The paper evaluates PS↔PL transfer management on a single Zynq board;
+//! the ROADMAP's north star is serving millions of users, which means
+//! scaling past one SoC to a *fleet* of heterogeneous boards — the
+//! platform spread the related work actually shipped on (NEURAghe's
+//! Zynq-7000 and Ultrascale+ configurations, ZynqNet's single-board
+//! envelope, the PYNQ-Z2 teaching boards). This module composes the
+//! machinery previous PRs built:
+//!
+//! * each [`BoardSpec`] instantiates one full simulated system — its own
+//!   `System`, CMA pool and per-engine drivers — scaled by the board
+//!   profile (engine count, DDR bandwidth, accelerator clock, memory
+//!   path), via [`board::serve_board`];
+//! * a front-end load balancer places tenants on boards with a pluggable
+//!   [`PlacementKind`] policy (consistent hashing, least-loaded,
+//!   locality-affine with sticky reassignment), and can spill or steal
+//!   frames across boards when a board's admission backlog saturates
+//!   ([`fleet::serve_cluster`]);
+//! * board failure reuses the fault subsystem's contract: a failed
+//!   board's in-flight frames and backlog are retried elsewhere or
+//!   counted `failed_over`, with every failover decision drawn from a
+//!   seeded PCG32 stream so cluster runs stay bit-replayable;
+//! * boards shard across threads through the worker-sharded executor
+//!   ([`crate::coordinator::run_cells`]), so cluster runs are
+//!   worker-count-invariant, and [`sweep::cluster_sweep`] grids
+//!   boards × placement × load.
+//!
+//! Knobs live under the `cluster` key of the JSON config (same override
+//! mechanism as `workload`/`faults`/`memory`). See DESIGN.md §13 for the
+//! board model, the placement/steal/spill protocol and the failover
+//! determinism contract.
+
+pub mod board;
+pub mod fleet;
+pub mod sweep;
+
+pub use board::{serve_board, BoardRun};
+pub use fleet::{serve_cluster, BoardSummary, ClusterReport};
+pub use sweep::{cluster_sweep, ClusterSweepRow};
+
+use crate::memory::path::{DmaPortKind, MemoryPath};
+use crate::util::json::Json;
+
+/// A board hardware profile — the heterogeneity axis of the fleet,
+/// mirroring the platform spread of the related work.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BoardKind {
+    /// The paper's board class: one engine, baseline DDR and clock,
+    /// copy-through staging (the measurement app as published).
+    Zynq7000,
+    /// PYNQ-Z2 class: one engine on a slower part (0.8× DDR, 0.8× clock).
+    PynqZ2,
+    /// ZynqNet-class co-design build: two engines, 1.2× DDR, 1.6× clock,
+    /// frames produced directly into DMA-visible regions (zero-copy/HP).
+    ZynqNet,
+    /// Ultrascale+ class: four engines, 2× DDR, 2× clock, zero-copy/HP.
+    Ultrascale,
+}
+
+impl BoardKind {
+    pub fn parse(s: &str) -> Option<BoardKind> {
+        match s {
+            "zynq7000" => Some(BoardKind::Zynq7000),
+            "pynq-z2" => Some(BoardKind::PynqZ2),
+            "zynqnet" => Some(BoardKind::ZynqNet),
+            "ultrascale" => Some(BoardKind::Ultrascale),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            BoardKind::Zynq7000 => "zynq7000",
+            BoardKind::PynqZ2 => "pynq-z2",
+            BoardKind::ZynqNet => "zynqnet",
+            BoardKind::Ultrascale => "ultrascale",
+        }
+    }
+
+    /// Every profile, for sweep grids and the property tests.
+    pub const ALL: [BoardKind; 4] = [
+        BoardKind::Zynq7000,
+        BoardKind::PynqZ2,
+        BoardKind::ZynqNet,
+        BoardKind::Ultrascale,
+    ];
+
+    /// The concrete hardware numbers behind the profile.
+    pub fn spec(self) -> BoardSpec {
+        match self {
+            BoardKind::Zynq7000 => BoardSpec {
+                kind: self,
+                engines: 1,
+                ddr_scale: 1.0,
+                clk_scale: 1.0,
+                memory: MemoryPath::CopyThrough,
+                port: DmaPortKind::Hp,
+            },
+            BoardKind::PynqZ2 => BoardSpec {
+                kind: self,
+                engines: 1,
+                ddr_scale: 0.8,
+                clk_scale: 0.8,
+                memory: MemoryPath::CopyThrough,
+                port: DmaPortKind::Hp,
+            },
+            BoardKind::ZynqNet => BoardSpec {
+                kind: self,
+                engines: 2,
+                ddr_scale: 1.2,
+                clk_scale: 1.6,
+                memory: MemoryPath::ZeroCopy,
+                port: DmaPortKind::Hp,
+            },
+            BoardKind::Ultrascale => BoardSpec {
+                kind: self,
+                engines: 4,
+                ddr_scale: 2.0,
+                clk_scale: 2.0,
+                memory: MemoryPath::ZeroCopy,
+                port: DmaPortKind::Hp,
+            },
+        }
+    }
+}
+
+/// One board's hardware parameters, derived from its [`BoardKind`].
+#[derive(Clone, Copy, Debug)]
+pub struct BoardSpec {
+    pub kind: BoardKind,
+    /// DMA engines on the board (each binds one driver instance).
+    pub engines: usize,
+    /// Multiplier on `SimConfig::ddr_bandwidth_bps`.
+    pub ddr_scale: f64,
+    /// Multiplier on `SimConfig::nullhop_clk_hz`.
+    pub clk_scale: f64,
+    /// Which memory path the board's co-design stack uses.
+    pub memory: MemoryPath,
+    pub port: DmaPortKind,
+}
+
+impl BoardSpec {
+    /// Specialise a fleet-level config into this board's config: engine
+    /// count, scaled DDR bandwidth and accelerator clock, memory path.
+    /// The caller still owns the per-board seed.
+    pub fn specialize(&self, cfg: &crate::config::SimConfig) -> crate::config::SimConfig {
+        let mut c = cfg.clone();
+        c.num_engines = self.engines as u64;
+        c.ddr_bandwidth_bps = cfg.ddr_bandwidth_bps * self.ddr_scale;
+        c.nullhop_clk_hz = cfg.nullhop_clk_hz * self.clk_scale;
+        c.memory.path = self.memory;
+        c.memory.port = self.port;
+        c
+    }
+}
+
+/// Tenant-placement policy of the front-end load balancer.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PlacementKind {
+    /// Hash each tenant onto a virtual-node ring — stateless and stable
+    /// under board count changes, blind to rate skew and board capacity.
+    ConsistentHash,
+    /// Assign tenants (heaviest first) to the board with the lowest
+    /// projected load/capacity ratio — skew- and heterogeneity-aware.
+    LeastLoaded,
+    /// Hash affinity like `ConsistentHash`, but a tenant that spills off
+    /// its home board repeatedly is stickily rehomed to the spill target.
+    LocalityAffine,
+}
+
+impl PlacementKind {
+    pub fn parse(s: &str) -> Option<PlacementKind> {
+        match s {
+            "consistent-hash" => Some(PlacementKind::ConsistentHash),
+            "least-loaded" => Some(PlacementKind::LeastLoaded),
+            "locality-affine" => Some(PlacementKind::LocalityAffine),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PlacementKind::ConsistentHash => "consistent-hash",
+            PlacementKind::LeastLoaded => "least-loaded",
+            PlacementKind::LocalityAffine => "locality-affine",
+        }
+    }
+
+    pub const ALL: [PlacementKind; 3] = [
+        PlacementKind::ConsistentHash,
+        PlacementKind::LeastLoaded,
+        PlacementKind::LocalityAffine,
+    ];
+}
+
+/// Fleet knobs, JSON-configurable under the `cluster` key of
+/// [`crate::config::SimConfig`]. `profiles` follows the inherit-last
+/// convention of the per-tenant workload vectors: boards beyond the list
+/// reuse the last profile, so `["zynq7000"]` means a homogeneous fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Seed of the fleet's decision streams (per-board simulator seeds,
+    /// failover retry draws) — independent of the workload seed so the
+    /// same traffic can be replayed against a different fleet.
+    pub seed: u64,
+    /// Number of simulated boards.
+    pub boards: u64,
+    /// Board profile per index (inherit-last).
+    pub profiles: Vec<BoardKind>,
+    /// Tenant-placement policy of the front-end balancer.
+    pub placement: PlacementKind,
+    /// Redirect a frame to the least-loaded board when its home board's
+    /// estimated backlog saturates (overflow spill).
+    pub spill: bool,
+    /// Let a nearly idle board pull frames from a backlogged home board
+    /// before it saturates (work stealing).
+    pub steal: bool,
+    /// Virtual instant the failed board dies; 0 disables board failure.
+    pub fail_at_ns: u64,
+    /// Index of the board that fails (only read when `fail_at_ns > 0`).
+    pub fail_board: u64,
+    /// Probability an abandoned frame is retried on a surviving board
+    /// (each frame draws from the seeded failover stream); the rest are
+    /// counted `failed_over`.
+    pub failover_retry: f64,
+    /// Detection + re-dispatch delay added to a retried frame's arrival.
+    pub failover_detect_ns: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            seed: 0xC1A5_7E11,
+            boards: 4,
+            profiles: vec![BoardKind::Zynq7000],
+            placement: PlacementKind::LeastLoaded,
+            spill: true,
+            steal: false,
+            fail_at_ns: 0,
+            fail_board: 0,
+            failover_retry: 1.0,
+            failover_detect_ns: 5_000_000,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// The default configuration (no failure scheduled).
+    pub fn none() -> Self {
+        ClusterConfig::default()
+    }
+
+    /// Board `b`'s profile (inherit-last).
+    pub fn board_kind(&self, b: usize) -> BoardKind {
+        *self
+            .profiles
+            .get(b)
+            .or_else(|| self.profiles.last())
+            .expect("validated non-empty")
+    }
+
+    /// Does a board failure occur during the run?
+    pub fn has_failure(&self) -> bool {
+        self.fail_at_ns > 0
+    }
+
+    /// Apply overrides from the nested `cluster` JSON object; unknown
+    /// keys are an error (same contract as the top-level config).
+    pub fn apply_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("cluster must be a JSON object"))?;
+        for (k, val) in obj {
+            let need_u64 = || {
+                val.as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("cluster.{k} must be a non-negative integer"))
+            };
+            let need_bool = || {
+                val.as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("cluster.{k} must be true or false"))
+            };
+            match k.as_str() {
+                "seed" => self.seed = need_u64()?,
+                "boards" => self.boards = need_u64()?,
+                "profiles" => {
+                    self.profiles = val
+                        .as_arr()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("cluster.profiles must be an array of profile names")
+                        })?
+                        .iter()
+                        .map(|p| {
+                            p.as_str().and_then(BoardKind::parse).ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "cluster.profiles entries must be \"zynq7000\", \"pynq-z2\", \
+                                     \"zynqnet\" or \"ultrascale\""
+                                )
+                            })
+                        })
+                        .collect::<anyhow::Result<Vec<_>>>()?;
+                }
+                "placement" => {
+                    self.placement = val.as_str().and_then(PlacementKind::parse).ok_or_else(
+                        || {
+                            anyhow::anyhow!(
+                                "cluster.placement must be \"consistent-hash\", \"least-loaded\" \
+                                 or \"locality-affine\""
+                            )
+                        },
+                    )?;
+                }
+                "spill" => self.spill = need_bool()?,
+                "steal" => self.steal = need_bool()?,
+                "fail_at_ns" => self.fail_at_ns = need_u64()?,
+                "fail_board" => self.fail_board = need_u64()?,
+                "failover_retry" => {
+                    self.failover_retry = val
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("cluster.{k} must be a number"))?;
+                }
+                "failover_detect_ns" => self.failover_detect_ns = need_u64()?,
+                _ => anyhow::bail!("unknown cluster key: {k}"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("boards", Json::num(self.boards as f64)),
+            (
+                "profiles",
+                Json::Arr(self.profiles.iter().map(|p| Json::str(p.label())).collect()),
+            ),
+            ("placement", Json::str(self.placement.label())),
+            ("spill", Json::Bool(self.spill)),
+            ("steal", Json::Bool(self.steal)),
+            ("fail_at_ns", Json::num(self.fail_at_ns as f64)),
+            ("fail_board", Json::num(self.fail_board as f64)),
+            ("failover_retry", Json::num(self.failover_retry)),
+            ("failover_detect_ns", Json::num(self.failover_detect_ns as f64)),
+        ])
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.boards >= 1 && self.boards <= 64,
+            "cluster.boards must be in [1, 64]"
+        );
+        anyhow::ensure!(
+            !self.profiles.is_empty(),
+            "cluster.profiles must name at least one board profile"
+        );
+        if self.has_failure() {
+            anyhow::ensure!(
+                self.fail_board < self.boards,
+                "cluster.fail_board must be < cluster.boards"
+            );
+            anyhow::ensure!(
+                self.boards >= 2,
+                "cluster board failure needs at least 2 boards (someone must survive)"
+            );
+        }
+        anyhow::ensure!(
+            self.failover_retry.is_finite()
+                && (0.0..=1.0).contains(&self.failover_retry),
+            "cluster.failover_retry must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            self.failover_detect_ns <= 1_000_000_000,
+            "cluster.failover_detect_ns must be <= 1e9"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ClusterConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_identity() {
+        let mut cl = ClusterConfig::default();
+        cl.boards = 6;
+        cl.profiles = vec![BoardKind::Zynq7000, BoardKind::Ultrascale];
+        cl.placement = PlacementKind::ConsistentHash;
+        cl.spill = false;
+        cl.steal = true;
+        cl.fail_at_ns = 50_000_000;
+        cl.fail_board = 2;
+        cl.failover_retry = 0.5;
+        let json = cl.to_json();
+        let mut back = ClusterConfig::default();
+        back.apply_json(&json).unwrap();
+        assert_eq!(cl, back);
+        assert_eq!(json.get("placement").as_str(), Some("consistent-hash"));
+        assert_eq!(json.get("spill").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn unknown_and_bad_keys_rejected() {
+        let mut cl = ClusterConfig::default();
+        assert!(cl.apply_json(&Json::parse(r#"{"board_count": 3}"#).unwrap()).is_err());
+        assert!(cl.apply_json(&Json::parse(r#"{"placement": "round-robin"}"#).unwrap()).is_err());
+        assert!(cl.apply_json(&Json::parse(r#"{"profiles": ["zynq9000"]}"#).unwrap()).is_err());
+        assert!(cl.apply_json(&Json::parse(r#"{"spill": "yes"}"#).unwrap()).is_err());
+        // Valid override applies.
+        cl.apply_json(&Json::parse(r#"{"boards": 2, "steal": true}"#).unwrap()).unwrap();
+        assert_eq!(cl.boards, 2);
+        assert!(cl.steal);
+    }
+
+    #[test]
+    fn validation_bounds() {
+        let mut cl = ClusterConfig::default();
+        cl.boards = 0;
+        assert!(cl.validate().is_err());
+        let mut cl = ClusterConfig::default();
+        cl.profiles.clear();
+        assert!(cl.validate().is_err());
+        let mut cl = ClusterConfig::default();
+        cl.fail_at_ns = 1;
+        cl.fail_board = 4;
+        assert!(cl.validate().is_err());
+        let mut cl = ClusterConfig::default();
+        cl.boards = 1;
+        cl.fail_at_ns = 1;
+        cl.fail_board = 0;
+        assert!(cl.validate().is_err(), "a 1-board fleet cannot fail over");
+        let mut cl = ClusterConfig::default();
+        cl.failover_retry = 1.5;
+        assert!(cl.validate().is_err());
+    }
+
+    #[test]
+    fn profiles_inherit_last_and_specialize() {
+        let mut cl = ClusterConfig::default();
+        cl.profiles = vec![BoardKind::Ultrascale, BoardKind::PynqZ2];
+        assert_eq!(cl.board_kind(0), BoardKind::Ultrascale);
+        assert_eq!(cl.board_kind(1), BoardKind::PynqZ2);
+        assert_eq!(cl.board_kind(7), BoardKind::PynqZ2);
+        let base = crate::config::SimConfig::default();
+        let spec = BoardKind::Ultrascale.spec();
+        let c = spec.specialize(&base);
+        assert_eq!(c.num_engines, 4);
+        assert!(c.ddr_bandwidth_bps > base.ddr_bandwidth_bps * 1.9);
+        assert!(c.memory.is_zero_copy());
+        let c2 = BoardKind::Zynq7000.spec().specialize(&base);
+        assert_eq!(c2.num_engines, 1);
+        assert!(!c2.memory.is_zero_copy());
+    }
+
+    #[test]
+    fn every_profile_fits_the_engine_bound() {
+        for kind in BoardKind::ALL {
+            assert!(kind.spec().engines <= crate::sim::event::MAX_ENGINES);
+            assert!(kind.spec().engines >= 1);
+        }
+    }
+}

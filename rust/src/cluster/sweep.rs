@@ -1,0 +1,147 @@
+//! The cluster capacity grid: boards × placement × load.
+//!
+//! Each cell reconfigures the fleet (board count, placement policy) and
+//! scales the aggregate offered rate to a multiple of the *fleet's*
+//! measured capacity — `load = 1.0` offers exactly what the boards can
+//! collectively serve, so the interesting placement effects (skew-blind
+//! hashing overloading a weak board while capacity idles elsewhere) show
+//! up as SLO attainment gaps between rows, not as trivial under/overload.
+//!
+//! Cells shard across threads with [`crate::coordinator::run_cells`];
+//! each cell runs its cluster serially (`workers = 1` inside the cell),
+//! so the grid is worker-count-invariant end to end — the same contract
+//! `serve_sweep` keeps, pinned by `rust/tests/cluster_scenarios.rs`.
+
+use crate::config::SimConfig;
+use crate::coordinator::{capacity_fps, run_cells};
+use crate::drivers::{DriverError, DriverKind};
+
+use super::fleet::{serve_cluster, ClusterReport};
+use super::PlacementKind;
+
+/// One cell of the cluster grid.
+#[derive(Clone, Debug)]
+pub struct ClusterSweepRow {
+    pub boards: u64,
+    pub placement: PlacementKind,
+    /// Offered load as a multiple of the fleet's measured capacity.
+    pub load: f64,
+    pub report: ClusterReport,
+}
+
+/// Run the boards × placement × load grid. `boards_axis` entries must
+/// respect `cluster.boards` bounds; the base config's profiles, workload
+/// shape (tenants, skew, policy) and failure schedule apply to every
+/// cell.
+pub fn cluster_sweep(
+    cfg: &SimConfig,
+    kind: DriverKind,
+    boards_axis: &[u64],
+    placements: &[PlacementKind],
+    loads: &[f64],
+    workers: usize,
+) -> Result<Vec<ClusterSweepRow>, DriverError> {
+    // Fleet capacity per board count, measured serially up front (the
+    // same short scaling runs the balancer itself plans with).
+    let max_boards = boards_axis.iter().copied().max().unwrap_or(0) as usize;
+    let mut board_caps: Vec<f64> = Vec::with_capacity(max_boards);
+    for b in 0..max_boards {
+        let spec = cfg.cluster.board_kind(b).spec();
+        let c = spec.specialize(cfg);
+        board_caps.push(capacity_fps(&c, kind, spec.engines)?);
+    }
+
+    struct Cell {
+        cfg: SimConfig,
+        boards: u64,
+        placement: PlacementKind,
+        load: f64,
+    }
+    let mut cells: Vec<Cell> = Vec::new();
+    for &boards in boards_axis {
+        let fleet_cap: f64 = board_caps[..boards as usize].iter().sum();
+        for &placement in placements {
+            for &load in loads {
+                let mut c = cfg.clone();
+                c.cluster.boards = boards;
+                c.cluster.placement = placement;
+                // The workload validator caps offered_fps; stay under it.
+                c.workload.offered_fps = (load * fleet_cap).min(1e5);
+                cells.push(Cell { cfg: c, boards, placement, load });
+            }
+        }
+    }
+
+    let results = run_cells(&cells, workers, |_, cell| {
+        serve_cluster(&cell.cfg, kind, 1)
+    });
+    cells
+        .into_iter()
+        .zip(results)
+        .map(|(cell, res)| {
+            Ok(ClusterSweepRow {
+                boards: cell.boards,
+                placement: cell.placement,
+                load: cell.load,
+                report: res?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.workload.tenants = 3;
+        c.workload.duration_ns = 60_000_000;
+        c.workload.deadline_ns = 50_000_000;
+        c.cluster.boards = 2;
+        c
+    }
+
+    #[test]
+    fn grid_covers_every_cell_in_order() {
+        let cfg = quick_cfg();
+        let rows = cluster_sweep(
+            &cfg,
+            DriverKind::KernelIrq,
+            &[1, 2],
+            &[PlacementKind::LeastLoaded, PlacementKind::ConsistentHash],
+            &[0.5],
+            1,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].boards, 1);
+        assert_eq!(rows[0].placement, PlacementKind::LeastLoaded);
+        assert_eq!(rows[3].boards, 2);
+        assert_eq!(rows[3].placement, PlacementKind::ConsistentHash);
+        for row in &rows {
+            assert_eq!(row.report.boards.len(), row.boards as usize);
+            assert!(row.report.generated > 0, "load scaling produced no traffic");
+        }
+    }
+
+    #[test]
+    fn sweep_is_worker_count_invariant() {
+        let cfg = quick_cfg();
+        let go = |workers| {
+            cluster_sweep(
+                &cfg,
+                DriverKind::KernelIrq,
+                &[2],
+                &[PlacementKind::LeastLoaded, PlacementKind::LocalityAffine],
+                &[0.5, 1.2],
+                workers,
+            )
+            .unwrap()
+            .iter()
+            .map(|r| r.report.to_json().to_string_pretty())
+            .collect::<Vec<_>>()
+        };
+        assert_eq!(go(1), go(3));
+    }
+}

@@ -10,6 +10,7 @@
 
 use std::path::Path;
 
+use crate::cluster::ClusterConfig;
 use crate::memory::path::MemoryConfig;
 use crate::sim::engine::CalendarKind;
 use crate::sim::fault::FaultConfig;
@@ -184,6 +185,11 @@ pub struct SimConfig {
     /// the struct — the timeline is bit-identical to the pre-subsystem
     /// simulator (enforced by `rust/tests/memory_path.rs`).
     pub memory: MemoryConfig,
+    /// Fleet topology and placement (see [`crate::cluster`]): board
+    /// count, per-board hardware profiles, placement policy, spill/steal
+    /// and the board-failure schedule. Only the `cluster`/`cluster-sweep`
+    /// paths read it.
+    pub cluster: ClusterConfig,
 }
 
 impl Default for SimConfig {
@@ -254,6 +260,7 @@ impl Default for SimConfig {
             faults: FaultConfig::none(),
             workload: WorkloadConfig::default(),
             memory: MemoryConfig::none(),
+            cluster: ClusterConfig::none(),
         }
     }
 }
@@ -324,11 +331,15 @@ macro_rules! config_fields {
     (@set $self:ident, $field:ident, memory, $val:ident, $k:ident) => {
         $self.$field.apply_json($val)?;
     };
+    (@set $self:ident, $field:ident, cluster, $val:ident, $k:ident) => {
+        $self.$field.apply_json($val)?;
+    };
     (@get $self:ident, $field:ident, f64) => { Json::num($self.$field) };
     (@get $self:ident, $field:ident, u64) => { Json::num($self.$field as f64) };
     (@get $self:ident, $field:ident, faults) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, workload) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, memory) => { $self.$field.to_json() };
+    (@get $self:ident, $field:ident, cluster) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, vec_u64) => {
         Json::Arr($self.$field.iter().map(|&x| Json::num(x as f64)).collect())
     };
@@ -386,6 +397,7 @@ config_fields! {
     faults: faults,
     workload: workload,
     memory: memory,
+    cluster: cluster,
 }
 
 impl SimConfig {
@@ -459,6 +471,7 @@ impl SimConfig {
         self.faults.validate()?;
         self.workload.validate()?;
         self.memory.validate()?;
+        self.cluster.validate()?;
         Ok(())
     }
 }
@@ -624,6 +637,35 @@ mod tests {
         assert!(cfg.apply_json(&Json::parse(r#"{"memory": {"bogus": 1}}"#).unwrap()).is_err());
         let mut cfg = SimConfig::default();
         cfg.memory.acp_cpu_derate = 2.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn cluster_key_roundtrips_and_validates() {
+        use crate::cluster::{BoardKind, PlacementKind};
+        let mut cfg = SimConfig::default();
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"cluster": {"boards": 3, "profiles": ["zynq7000", "ultrascale"],
+                    "placement": "consistent-hash", "steal": true}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.boards, 3);
+        assert_eq!(cfg.cluster.profiles, vec![BoardKind::Zynq7000, BoardKind::Ultrascale]);
+        assert_eq!(cfg.cluster.placement, PlacementKind::ConsistentHash);
+        assert!(cfg.cluster.steal);
+        cfg.validate().unwrap();
+        let json = cfg.to_json();
+        let mut cfg2 = SimConfig::default();
+        cfg2.apply_json(&json).unwrap();
+        assert_eq!(cfg, cfg2);
+        // Unknown nested key and out-of-range value both rejected.
+        let mut cfg = SimConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"cluster": {"bogus": 1}}"#).unwrap()).is_err());
+        let mut cfg = SimConfig::default();
+        cfg.cluster.boards = 0;
         assert!(cfg.validate().is_err());
     }
 

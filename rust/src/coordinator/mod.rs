@@ -30,8 +30,8 @@ pub use experiments::{
 };
 pub use serve::serve;
 pub use sweeps::{
-    bench, cell_seed, loopback_sweep_parallel, run_cells, scaling_sweep_parallel, serve_sweep,
-    BenchOptions, BenchReport, ServeSweepRow, SweepStats,
+    bench, capacity_fps, cell_seed, loopback_sweep_parallel, run_cells, scaling_sweep_parallel,
+    serve_sweep, BenchOptions, BenchReport, ServeSweepRow, SweepStats,
 };
 pub use pipeline::{
     plan_from_estimates, plan_with_runtime, run_batch, run_frame, BatchReport, ChannelPolicy,

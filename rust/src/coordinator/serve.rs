@@ -232,6 +232,7 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
         policy: wl.policy.label(),
         shed: wl.shed.label(),
         arrival: wl.arrival.label(),
+        memory: c.memory.mode_label(),
         engines,
         duration,
         tenants: slo,
@@ -292,6 +293,31 @@ mod tests {
         assert!(rep.total_completed() > 0);
         assert!(rep.total_unserved() <= cfg.workload.tenants);
         assert_eq!(rep.total_completed() + rep.total_unserved(), rep.total_offered());
+    }
+
+    #[test]
+    fn serve_honors_zero_copy_memory_path() {
+        use crate::memory::{DmaPortKind, MemoryPath};
+        let mut cfg = quick_cfg();
+        cfg.memory.path = MemoryPath::ZeroCopy;
+        cfg.memory.port = DmaPortKind::Hp;
+        let zero = serve(&cfg, DriverKind::KernelIrq, 1).unwrap();
+        assert_eq!(zero.memory, "zero-hp");
+        assert!(zero.total_completed() > 0, "zero-copy serve served nothing");
+        let copy = serve(&quick_cfg(), DriverKind::KernelIrq, 1).unwrap();
+        assert_eq!(copy.memory, "copy");
+        // The paths time differently — the mode is actually engaged, not
+        // just labelled.
+        assert_ne!(
+            zero.to_json().to_string_pretty(),
+            copy.to_json().to_string_pretty()
+        );
+        // And the zero-copy run stays deterministic.
+        let again = serve(&cfg, DriverKind::KernelIrq, 1).unwrap();
+        assert_eq!(
+            zero.to_json().to_string_pretty(),
+            again.to_json().to_string_pretty()
+        );
     }
 
     #[test]

@@ -25,12 +25,15 @@
 //!   and with N workers (cells/sec, events/sec, multi-thread speedup);
 //! * **serve** — one fixed multi-tenant serving scenario (events/sec);
 //! * **memory** — a copy-through/zero-copy/port grid of frame streams
-//!   (events/sec, schema 3).
+//!   (events/sec, schema 3);
+//! * **cluster** — one fixed multi-board fleet scenario routed with the
+//!   least-loaded balancer (events/sec, schema 4).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::cluster::{serve_cluster, PlacementKind};
 use crate::config::SimConfig;
 use crate::drivers::{
     BufferScheme, Driver, DriverConfig, DriverError, DriverKind, PartitionMode,
@@ -387,6 +390,10 @@ pub struct BenchReport {
     /// frame streams, measured as simulator events/sec (the regression
     /// gate's fourth scalar — schema 3).
     pub memory: SweepStats,
+    /// Cluster leg: one fixed multi-board fleet scenario (least-loaded
+    /// placement), measured as simulator events/sec summed over boards
+    /// (the regression gate's fifth scalar — schema 4).
+    pub cluster: SweepStats,
 }
 
 /// Deep-calendar churn: `events` schedule/pop cycles over a ~1 ms
@@ -471,12 +478,32 @@ pub fn bench(cfg: &SimConfig, opts: BenchOptions) -> Result<BenchReport, DriverE
         }
         SweepStats { workers: 1, cells, events, wall: t0.elapsed() }
     };
+    // Cluster leg: a fixed homogeneous fleet under the least-loaded
+    // balancer, serially routed then board-sharded over 1 worker so the
+    // event count is deterministic and only events/sec varies.
+    let cluster_stats = {
+        let mut c = cfg.clone();
+        c.cluster.boards = if opts.quick { 2 } else { 4 };
+        c.cluster.placement = PlacementKind::LeastLoaded;
+        c.workload.duration_ns = if opts.quick { 100_000_000 } else { 400_000_000 };
+        c.workload.offered_fps = 360.0;
+        c.workload.tenants = 4;
+        let t0 = Instant::now();
+        let rep = serve_cluster(&c, DriverKind::KernelIrq, 1)?;
+        SweepStats {
+            workers: 1,
+            cells: rep.boards.len(),
+            events: rep.events,
+            wall: t0.elapsed(),
+        }
+    };
     Ok(BenchReport {
         quick: opts.quick,
         calendar,
         sweeps,
         serve: serve_stats,
         memory: memory_stats,
+        cluster: cluster_stats,
     })
 }
 
@@ -531,6 +558,11 @@ impl BenchReport {
         self.memory.events_per_sec()
     }
 
+    /// Cluster leg events/sec (the fifth gated scalar, schema 4).
+    pub fn cluster_events_per_sec(&self) -> f64 {
+        self.cluster.events_per_sec()
+    }
+
     pub fn to_json(&self) -> Json {
         let calendar = self
             .calendar
@@ -569,8 +601,14 @@ impl BenchReport {
             ("wall_ms", Json::num(self.memory.wall.as_secs_f64() * 1e3)),
             ("events_per_sec", Json::num(self.memory.events_per_sec())),
         ]);
+        let cluster = Json::obj(vec![
+            ("boards", Json::num(self.cluster.cells as f64)),
+            ("events", Json::num(self.cluster.events as f64)),
+            ("wall_ms", Json::num(self.cluster.wall.as_secs_f64() * 1e3)),
+            ("events_per_sec", Json::num(self.cluster.events_per_sec())),
+        ]);
         Json::obj(vec![
-            ("schema", Json::num(3.0)),
+            ("schema", Json::num(4.0)),
             ("quick", Json::Bool(self.quick)),
             ("calendar", Json::Arr(calendar)),
             ("wheel_speedup_over_heap", Json::num(self.wheel_speedup_over_heap())),
@@ -578,6 +616,7 @@ impl BenchReport {
             ("sweep_speedup", Json::num(self.sweep_speedup())),
             ("serve", serve),
             ("memory", memory),
+            ("cluster", cluster),
         ])
     }
 
@@ -628,6 +667,13 @@ impl BenchReport {
             .as_f64()
             .unwrap_or(0.0);
         check("memory/events", self.memory_events_per_sec(), base_memory);
+        // And for pre-schema-4 baselines and the cluster leg.
+        let base_cluster = baseline
+            .get("cluster")
+            .get("events_per_sec")
+            .as_f64()
+            .unwrap_or(0.0);
+        check("cluster/events", self.cluster_events_per_sec(), base_cluster);
         regressions
     }
 }
@@ -713,14 +759,16 @@ mod tests {
         assert!(rep.sweep_speedup() > 0.0);
         assert!(rep.serve_events_per_sec() > 0.0);
         assert!(rep.memory_events_per_sec() > 0.0);
+        assert!(rep.cluster_events_per_sec() > 0.0);
         let json = rep.to_json();
-        assert_eq!(json.get("schema").as_u64(), Some(3));
+        assert_eq!(json.get("schema").as_u64(), Some(4));
         assert_eq!(json.get("calendar").as_arr().unwrap().len(), 2);
         assert!(json.get("serve").get("events").as_u64().unwrap() > 0);
         assert!(json.get("memory").get("events").as_u64().unwrap() > 0);
+        assert!(json.get("cluster").get("events").as_u64().unwrap() > 0);
         // A report never regresses against itself.
         assert!(rep.check_against(&json, 0.2).is_empty());
-        // A 10x-faster fake baseline must flag all four metrics.
+        // A 10x-faster fake baseline must flag all five metrics.
         let mut fake = rep.clone();
         for c in &mut fake.calendar {
             c.wall = Duration::from_nanos((c.wall.as_nanos() as u64 / 10).max(1));
@@ -731,15 +779,18 @@ mod tests {
         fake.serve.wall = Duration::from_nanos((fake.serve.wall.as_nanos() as u64 / 10).max(1));
         fake.memory.wall =
             Duration::from_nanos((fake.memory.wall.as_nanos() as u64 / 10).max(1));
+        fake.cluster.wall =
+            Duration::from_nanos((fake.cluster.wall.as_nanos() as u64 / 10).max(1));
         let flagged = rep.check_against(&fake.to_json(), 0.2);
-        assert_eq!(flagged.len(), 4, "{flagged:?}");
-        // Older-schema baselines (no serve / no memory key) self-skip
-        // the legs they predate.
+        assert_eq!(flagged.len(), 5, "{flagged:?}");
+        // Older-schema baselines (no serve / memory / cluster key)
+        // self-skip the legs they predate.
         let old = Json::parse(
             &json
                 .to_string_compact()
                 .replace("\"serve\"", "\"serve_unused\"")
-                .replace("\"memory\"", "\"memory_unused\""),
+                .replace("\"memory\"", "\"memory_unused\"")
+                .replace("\"cluster\"", "\"cluster_unused\""),
         );
         if let Ok(old) = old {
             assert!(rep.check_against(&old, 0.2).is_empty());

@@ -1,0 +1,621 @@
+//! The built-in experiments: one unit struct per CLI command, all
+//! registered in [`REGISTRY`].
+//!
+//! The `run` bodies are the former `main.rs` `run_*` functions moved
+//! verbatim behind the [`Experiment`] trait — stdout writes became
+//! `text` appends, `--csv` writes became named [`ExperimentOutput::csv`]
+//! entries — so the rendered bytes are identical to the pre-registry
+//! CLI (pinned by the registry tests and the golden CLI tests).
+
+use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{cluster_sweep, serve_cluster, PlacementKind};
+use crate::config::SimConfig;
+use crate::coordinator::calibrate;
+use crate::coordinator::experiments::{
+    ablation_chunk_sweep, ablation_load, ablation_matrix, ablation_vgg, fault_safety_demo,
+    fault_sweep, fig45_sizes, loopback_sweep, memory_sweep, memory_sweep_sizes, scaling_sweep,
+    table1, table1_runtime,
+};
+use crate::coordinator::serve::serve;
+use crate::coordinator::sweeps::{bench, serve_sweep, BenchOptions};
+use crate::drivers::DriverKind;
+use crate::report;
+use crate::runtime::Runtime;
+use crate::workload::QosPolicyKind;
+
+use super::{Experiment, ExperimentOutput, RunOpts};
+
+/// Every CLI command. Order matters: the `in_all` prefix runs in this
+/// exact order under `all` (the legacy hand-wired sequence); the
+/// standalone commands follow.
+pub static REGISTRY: &[&dyn Experiment] = &[
+    &Fig4,
+    &Fig5,
+    &Table1,
+    &AblationBuffer,
+    &AblationBlocks,
+    &AblationVgg,
+    &AblationLoad,
+    &Scaling,
+    &Faults,
+    &Serve,
+    &MemorySweep,
+    &ServeSweep,
+    &Cluster,
+    &ClusterSweep,
+    &Bench,
+    &Trace,
+    &Calibrate,
+];
+
+/// Resolve the `--driver`/`--engines` flags for the serving commands
+/// (default driver: kernel — the scheme the serving argument is about,
+/// since it frees the CPU under load). The multi-queue scheme manages
+/// every engine itself and cannot back per-engine serving; flag values
+/// are rejected here so `serve` never panics on CLI input.
+fn serve_driver(opts: &RunOpts) -> Result<DriverKind> {
+    let kind = match &opts.driver {
+        None => DriverKind::KernelIrq,
+        Some(s) => DriverKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown --driver {s}; see the README"))?,
+    };
+    if kind == DriverKind::KernelMultiQueue {
+        bail!("serve binds one driver per engine; --driver multiqueue is not supported");
+    }
+    let max = crate::sim::event::MAX_ENGINES;
+    if opts.engines < 1 || opts.engines > max {
+        bail!("--engines must be in 1..={max}, got {}", opts.engines);
+    }
+    Ok(kind)
+}
+
+fn fig45(cfg: &SimConfig, fig5: bool) -> Result<ExperimentOutput> {
+    let rows = loopback_sweep(cfg, &fig45_sizes(), &DriverKind::ALL)?;
+    let mut text = String::new();
+    if fig5 {
+        text.push_str(&report::fig5_text(&rows));
+        text.push('\n');
+        text.push_str(&report::plot::fig5_ascii(&rows, 72, 18));
+    } else {
+        text.push_str(&report::fig4_text(&rows));
+    }
+    Ok(ExperimentOutput {
+        text,
+        csv: vec![("loopback_sweep.csv".into(), report::sweep_csv(&rows))],
+    })
+}
+
+pub struct Fig4;
+impl Experiment for Fig4 {
+    fn name(&self) -> &'static str {
+        "fig4"
+    }
+    fn about(&self) -> &'static str {
+        "Fig. 4: loop-back transfer times (ms)"
+    }
+    fn run(&self, cfg: &SimConfig, _opts: &RunOpts) -> Result<ExperimentOutput> {
+        fig45(cfg, false)
+    }
+}
+
+pub struct Fig5;
+impl Experiment for Fig5 {
+    fn name(&self) -> &'static str {
+        "fig5"
+    }
+    fn about(&self) -> &'static str {
+        "Fig. 5: time per byte (us/B)"
+    }
+    fn run(&self, cfg: &SimConfig, _opts: &RunOpts) -> Result<ExperimentOutput> {
+        fig45(cfg, true)
+    }
+}
+
+pub struct Table1;
+impl Experiment for Table1 {
+    fn name(&self) -> &'static str {
+        "table1"
+    }
+    fn about(&self) -> &'static str {
+        "Table I: NullHop RoShamBo transfer times"
+    }
+    fn flags(&self) -> &'static [&'static str] {
+        &["--runtime", "--frames"]
+    }
+    fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
+        let rows = if opts.use_runtime {
+            let rt = Runtime::load(&Runtime::default_dir())?;
+            eprintln!(
+                "runtime: platform={}, artifacts: {:?}",
+                rt.platform,
+                rt.names().collect::<Vec<_>>()
+            );
+            let (rows, plan) = table1_runtime(cfg, &rt, opts.frames)?;
+            eprintln!(
+                "functional path: frame classified as class {} (logits {:?})",
+                plan.class, plan.logits
+            );
+            for p in &plan.plans {
+                eprintln!(
+                    "  {}: tx {} B, rx {} B, sparsity in/out {:.2}/{:.2}",
+                    p.name, p.timing.tx_bytes, p.timing.rx_bytes, p.sparsity_in, p.sparsity_out
+                );
+            }
+            rows
+        } else {
+            table1(cfg, opts.frames)?
+        };
+        let mut text = report::table1_text(&rows);
+        text.push_str(&report::table1_paper_reference());
+        Ok(ExperimentOutput {
+            text,
+            csv: vec![("table1.csv".into(), report::table1_csv(&rows))],
+        })
+    }
+}
+
+pub struct AblationBuffer;
+impl Experiment for AblationBuffer {
+    fn name(&self) -> &'static str {
+        "ablation-buffer"
+    }
+    fn about(&self) -> &'static str {
+        "single vs double buffer x Unique vs Blocks"
+    }
+    fn separator_after(&self) -> bool {
+        false // each matrix already ends with a blank line
+    }
+    fn run(&self, cfg: &SimConfig, _opts: &RunOpts) -> Result<ExperimentOutput> {
+        let mut text = String::new();
+        for bytes in [256u64 << 10, 2 << 20] {
+            let rows = ablation_matrix(cfg, bytes)?;
+            text.push_str(&report::ablation_text(&rows));
+            text.push('\n');
+        }
+        Ok(ExperimentOutput::text(text))
+    }
+}
+
+pub struct AblationBlocks;
+impl Experiment for AblationBlocks {
+    fn name(&self) -> &'static str {
+        "ablation-blocks"
+    }
+    fn about(&self) -> &'static str {
+        "Blocks chunk-size sweep"
+    }
+    fn run(&self, cfg: &SimConfig, _opts: &RunOpts) -> Result<ExperimentOutput> {
+        let chunks: Vec<u64> = (12..=20).map(|e| 1u64 << e).collect(); // 4KB..1MB
+        let rows = ablation_chunk_sweep(cfg, 4 << 20, &chunks)?;
+        let mut text = String::new();
+        writeln!(text, "Blocks chunk-size sweep (4MB loop-back, double buffer):").unwrap();
+        writeln!(text, "{:>10} | {:>12}", "chunk", "RX total ms").unwrap();
+        for (chunk, rx) in rows {
+            writeln!(text, "{:>10} | {:>12.4}", report::size_label(chunk), rx.as_ms()).unwrap();
+        }
+        Ok(ExperimentOutput::text(text))
+    }
+}
+
+pub struct AblationVgg;
+impl Experiment for AblationVgg {
+    fn name(&self) -> &'static str {
+        "ablation-vgg"
+    }
+    fn about(&self) -> &'static str {
+        "VGG19 failure modes"
+    }
+    fn run(&self, cfg: &SimConfig, _opts: &RunOpts) -> Result<ExperimentOutput> {
+        let ab = ablation_vgg(cfg)?;
+        Ok(ExperimentOutput::text(report::vgg_text(&ab)))
+    }
+}
+
+pub struct AblationLoad;
+impl Experiment for AblationLoad {
+    fn name(&self) -> &'static str {
+        "ablation-load"
+    }
+    fn about(&self) -> &'static str {
+        "CPU-load sensitivity of the user-level schemes"
+    }
+    fn run(&self, cfg: &SimConfig, _opts: &RunOpts) -> Result<ExperimentOutput> {
+        let rows = ablation_load(cfg, 1 << 20, &[0.0, 100.0, 200.0, 400.0, 800.0])?;
+        Ok(ExperimentOutput::text(report::load_text(&rows)))
+    }
+}
+
+/// The multi-engine scaling grid: RoShamBo frames/sec for every
+/// channel-count x pipeline-depth cell, per driver.
+pub struct Scaling;
+impl Experiment for Scaling {
+    fn name(&self) -> &'static str {
+        "scaling"
+    }
+    fn about(&self) -> &'static str {
+        "channel-count x pipeline-depth frame throughput"
+    }
+    fn flags(&self) -> &'static [&'static str] {
+        &["--frames"]
+    }
+    fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
+        let drivers = [DriverKind::UserPolling, DriverKind::KernelIrq];
+        let rows = scaling_sweep(cfg, &drivers, &[1, 2, 4], &[1, 2, 4], opts.frames.max(4))?;
+        Ok(ExperimentOutput {
+            text: report::scaling_text(&rows),
+            csv: vec![("scaling.csv".into(), report::scaling_csv(&rows))],
+        })
+    }
+}
+
+/// Fault-injection reliability sweep: both driver families × a grid of
+/// per-burst DMA error rates (plus descriptor corruption and IRQ loss —
+/// see `fault_sweep`), every run seeded and bit-reproducible, followed
+/// by the deterministic safety demonstration.
+pub struct Faults;
+impl Experiment for Faults {
+    fn name(&self) -> &'static str {
+        "faults"
+    }
+    fn about(&self) -> &'static str {
+        "fault-injection reliability sweep + safety demo"
+    }
+    fn flags(&self) -> &'static [&'static str] {
+        &["--quick"]
+    }
+    fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
+        let drivers = [DriverKind::UserPolling, DriverKind::KernelIrq];
+        let rates = [0.0, 1e-3, 5e-3, 2e-2];
+        let transfers = if opts.quick { 8 } else { 24 };
+        let rows = fault_sweep(cfg, &drivers, &rates, transfers, 256 << 10)?;
+        let mut text = report::faults_text(&rows);
+        for kind in drivers {
+            let (rec, fail, inj) = report::fault_totals(&rows, kind);
+            writeln!(
+                text,
+                "{:<26} totals: {} transfers recovered, {} dropped, {} faults injected",
+                kind.label(),
+                rec,
+                fail,
+                inj
+            )
+            .unwrap();
+        }
+        let demo = fault_safety_demo(cfg)?;
+        text.push_str(&report::faults_demo_text(&demo));
+        Ok(ExperimentOutput {
+            text,
+            csv: vec![("faults.csv".into(), report::faults_csv(&rows))],
+        })
+    }
+}
+
+/// Multi-tenant serving run: the `workload` config key shapes the tenant
+/// streams; this prints the per-tenant SLO table.
+pub struct Serve;
+impl Experiment for Serve {
+    fn name(&self) -> &'static str {
+        "serve"
+    }
+    fn about(&self) -> &'static str {
+        "multi-tenant serving run (workload config)"
+    }
+    fn flags(&self) -> &'static [&'static str] {
+        &["--driver", "--engines", "--quick"]
+    }
+    fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
+        let mut c = cfg.clone();
+        if opts.quick {
+            c.workload.duration_ns = c.workload.duration_ns.min(200_000_000);
+        }
+        let kind = serve_driver(opts)?;
+        let rep = serve(&c, kind, opts.engines)?;
+        Ok(ExperimentOutput {
+            text: report::serve_text(&rep),
+            csv: vec![
+                ("serve.csv".into(), report::serve_csv(&rep)),
+                ("serve.json".into(), rep.to_json().to_string_pretty()),
+            ],
+        })
+    }
+}
+
+/// Capacity-planning sweep: offered load x QoS policy x engine count,
+/// sharded across worker threads. The knee shows as the goodput column
+/// flattening at load ≈ 1.0 while the p99 column explodes.
+pub struct ServeSweep;
+impl Experiment for ServeSweep {
+    fn name(&self) -> &'static str {
+        "serve-sweep"
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        &["serve_sweep"]
+    }
+    fn about(&self) -> &'static str {
+        "capacity planning: load x policy x engines"
+    }
+    fn flags(&self) -> &'static [&'static str] {
+        &["--driver", "--engines", "--quick", "--workers"]
+    }
+    fn in_all(&self) -> bool {
+        false
+    }
+    fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
+        let kind = serve_driver(opts)?;
+        let mut c = cfg.clone();
+        let (loads, engines_list): (&[f64], Vec<usize>) = if opts.quick {
+            c.workload.duration_ns = c.workload.duration_ns.min(150_000_000);
+            (&[0.5, 1.0, 2.0], vec![opts.engines])
+        } else {
+            // A 1-engine reference leg plus the requested pool size (just
+            // the one leg when --engines 1 was asked for explicitly).
+            let mut engines_list = vec![1, opts.engines];
+            engines_list.dedup();
+            (&[0.2, 0.5, 0.8, 1.0, 1.2, 1.6, 2.4], engines_list)
+        };
+        let policies = [QosPolicyKind::Fifo, QosPolicyKind::Drr, QosPolicyKind::Edf];
+        let rows = serve_sweep(&c, kind, loads, &policies, &engines_list, opts.workers)?;
+        Ok(ExperimentOutput {
+            text: report::serve_sweep_text(&rows),
+            csv: vec![("serve_sweep.csv".into(), report::serve_sweep_csv(&rows))],
+        })
+    }
+}
+
+/// One multi-board fleet run: the `cluster` config key shapes the fleet
+/// (board count/profiles, placement, spill/steal, failure schedule);
+/// this prints the per-board table and the cluster-wide tenant ledger.
+pub struct Cluster;
+impl Experiment for Cluster {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+    fn about(&self) -> &'static str {
+        "multi-board fleet serving run (cluster config)"
+    }
+    fn flags(&self) -> &'static [&'static str] {
+        &["--driver", "--quick", "--workers"]
+    }
+    fn in_all(&self) -> bool {
+        false
+    }
+    fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
+        let kind = serve_driver(opts)?;
+        let mut c = cfg.clone();
+        if opts.quick {
+            c.workload.duration_ns = c.workload.duration_ns.min(200_000_000);
+        }
+        let rep = serve_cluster(&c, kind, opts.workers)?;
+        Ok(ExperimentOutput {
+            text: report::cluster_text(&rep),
+            csv: vec![
+                ("cluster.csv".into(), report::cluster_csv(&rep)),
+                ("cluster.json".into(), rep.to_json().to_string_pretty()),
+            ],
+        })
+    }
+}
+
+/// The fleet capacity grid: boards × placement × load, with offered
+/// load normalised to the fleet's measured capacity. The placement gap
+/// under skewed tenants reads off the SLO column.
+pub struct ClusterSweep;
+impl Experiment for ClusterSweep {
+    fn name(&self) -> &'static str {
+        "cluster-sweep"
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        &["cluster_sweep"]
+    }
+    fn about(&self) -> &'static str {
+        "fleet planning: boards x placement x load"
+    }
+    fn flags(&self) -> &'static [&'static str] {
+        &["--driver", "--quick", "--workers"]
+    }
+    fn in_all(&self) -> bool {
+        false
+    }
+    fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
+        let kind = serve_driver(opts)?;
+        let mut c = cfg.clone();
+        let (boards, placements, loads): (Vec<u64>, Vec<PlacementKind>, &[f64]) = if opts.quick
+        {
+            c.workload.duration_ns = c.workload.duration_ns.min(120_000_000);
+            (
+                vec![c.cluster.boards],
+                vec![PlacementKind::LeastLoaded, PlacementKind::ConsistentHash],
+                &[0.5, 1.2],
+            )
+        } else {
+            (vec![2, 4, 8], PlacementKind::ALL.to_vec(), &[0.5, 1.0, 1.5])
+        };
+        let rows = cluster_sweep(&c, kind, &boards, &placements, loads, opts.workers)?;
+        Ok(ExperimentOutput {
+            text: report::cluster_sweep_text(&rows),
+            csv: vec![("cluster_sweep.csv".into(), report::cluster_sweep_csv(&rows))],
+        })
+    }
+}
+
+/// Memory-path sweep: copy-through vs. zero-copy on both port families,
+/// as frame streams (`--frames` per cell, so ring amortisation shows),
+/// with the per-driver ACP/HP crossover in the footer.
+pub struct MemorySweep;
+impl Experiment for MemorySweep {
+    fn name(&self) -> &'static str {
+        "memory-sweep"
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        &["memory_sweep", "memory"]
+    }
+    fn about(&self) -> &'static str {
+        "copy-through vs zero-copy x ACP/HP crossover"
+    }
+    fn flags(&self) -> &'static [&'static str] {
+        &["--quick", "--frames"]
+    }
+    fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
+        let sizes = memory_sweep_sizes(opts.quick);
+        let frames = opts.frames.max(2) as u64;
+        let rows = memory_sweep(cfg, &sizes, &DriverKind::ALL, frames)?;
+        Ok(ExperimentOutput {
+            text: report::memory_sweep_text(&rows),
+            csv: vec![("memory_sweep.csv".into(), report::memory_sweep_csv(&rows))],
+        })
+    }
+}
+
+/// Simulator perf bench: calendar backends + parallel sweep scaling.
+/// Writes `BENCH_sweeps.json` and optionally gates against a baseline.
+/// Self-rendering: stdout/file/gate ordering must survive a gate
+/// failure, so everything happens inside `run`.
+pub struct Bench;
+impl Experiment for Bench {
+    fn name(&self) -> &'static str {
+        "bench"
+    }
+    fn about(&self) -> &'static str {
+        "simulator perf bench -> BENCH_sweeps.json"
+    }
+    fn flags(&self) -> &'static [&'static str] {
+        &["--quick", "--workers", "--out", "--check"]
+    }
+    fn in_all(&self) -> bool {
+        false
+    }
+    fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
+        // The parallel leg needs >= 2 workers to measure a speedup;
+        // `bench` clamps (the single policy site) and the report records
+        // the count actually used.
+        let bopts = BenchOptions { quick: opts.quick, workers: opts.workers };
+        let rep = bench(cfg, bopts)?;
+        print!("{}", report::bench_text(&rep));
+        let out = opts.out.as_deref().unwrap_or("BENCH_sweeps.json");
+        report::save(out, &rep.to_json().to_string_pretty())?;
+        println!("wrote {out}");
+        if let Some(baseline_path) = &opts.check {
+            match std::fs::read_to_string(baseline_path) {
+                Ok(text) => {
+                    let baseline = crate::util::json::Json::parse(&text)
+                        .map_err(|e| anyhow::anyhow!("parsing baseline {baseline_path}: {e}"))?;
+                    let regressions = rep.check_against(&baseline, 0.20);
+                    if !regressions.is_empty() {
+                        for r in &regressions {
+                            eprintln!("PERF REGRESSION: {r}");
+                        }
+                        bail!("{} perf regression(s) vs {baseline_path}", regressions.len());
+                    }
+                    println!("no regression >20% vs {baseline_path}");
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    eprintln!(
+                        "baseline {baseline_path} not found — skipping the regression gate \
+                         (commit this run's {out} as the baseline to arm it)"
+                    );
+                }
+                Err(e) => bail!("reading baseline {baseline_path}: {e}"),
+            }
+        }
+        Ok(ExperimentOutput::empty())
+    }
+}
+
+/// Record a chrome://tracing timeline of one 256 KB loop-back round trip
+/// per driver into `results/trace_<driver>.json`. Self-rendering (one
+/// line per file as it lands).
+pub struct Trace;
+impl Experiment for Trace {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+    fn about(&self) -> &'static str {
+        "chrome://tracing timelines -> results/trace_*.json"
+    }
+    fn in_all(&self) -> bool {
+        false
+    }
+    fn run(&self, cfg: &SimConfig, _opts: &RunOpts) -> Result<ExperimentOutput> {
+        use crate::drivers::{Driver, DriverConfig};
+        use crate::memory::buffer::CmaAllocator;
+        use crate::system::System;
+        let bytes = 256 << 10;
+        for kind in DriverKind::ALL {
+            let mut sys = System::loopback(cfg.clone());
+            sys.enable_trace();
+            let mut cma = CmaAllocator::zynq_default();
+            let mut drv = Driver::new(DriverConfig::table1(kind), &mut cma, cfg, bytes)?;
+            drv.transfer(&mut sys, bytes, bytes)?;
+            let trace = sys.trace.take().unwrap();
+            let path = format!(
+                "results/trace_{}.json",
+                kind.label().replace(' ', "_").replace('-', "_")
+            );
+            report::save(&path, &trace.to_chrome_json().to_string_compact())?;
+            println!(
+                "{path}: {} spans, {} markers — open in chrome://tracing or Perfetto",
+                trace.spans.len(),
+                trace.instants.len()
+            );
+        }
+        Ok(ExperimentOutput::empty())
+    }
+}
+
+/// Fit report + knob sensitivities against the paper's Table I anchors.
+/// Self-rendering (streams tables as they are computed).
+pub struct Calibrate;
+impl Experiment for Calibrate {
+    fn name(&self) -> &'static str {
+        "calibrate"
+    }
+    fn about(&self) -> &'static str {
+        "fit + sensitivity vs the paper's Table I anchors"
+    }
+    fn in_all(&self) -> bool {
+        false
+    }
+    fn run(&self, cfg: &SimConfig, _opts: &RunOpts) -> Result<ExperimentOutput> {
+        let rep = calibrate::fit(cfg)?;
+        println!("Fit vs. paper Table I:");
+        println!(
+            "{:<12} {:<10} {:>12} {:>12} {:>9}",
+            "driver", "metric", "paper", "measured", "err"
+        );
+        println!("{}", "-".repeat(60));
+        for c in &rep.cells {
+            println!(
+                "{:<12} {:<10} {:>12.4} {:>12.4} {:>8.1}%",
+                c.driver,
+                c.metric,
+                c.paper,
+                c.measured,
+                100.0 * c.rel_err()
+            );
+        }
+        println!(
+            "\ngeometric-mean |ratio| = {:.3}x; worst cell: {} {} ({:+.1}%); orderings {}",
+            rep.gmean_abs_ratio(),
+            rep.worst().driver,
+            rep.worst().metric,
+            100.0 * rep.worst().rel_err(),
+            if rep.orderings_hold() { "hold" } else { "VIOLATED" },
+        );
+
+        println!("\nSensitivity (elasticity per +20% knob bump; |e| >= 0.05 shown):");
+        println!("{:<24} {:<12} {:<10} {:>10}", "knob", "driver", "metric", "elasticity");
+        println!("{}", "-".repeat(60));
+        for s in calibrate::sensitivity(cfg)? {
+            if s.elasticity.abs() >= 0.05 {
+                println!(
+                    "{:<24} {:<12} {:<10} {:>10.2}",
+                    s.knob, s.driver, s.metric, s.elasticity
+                );
+            }
+        }
+        Ok(ExperimentOutput::empty())
+    }
+}

@@ -1,0 +1,271 @@
+//! The unified experiment API behind the CLI.
+//!
+//! Every command (`fig4`, `serve`, `cluster-sweep`, ...) is an
+//! [`Experiment`]: a named unit declaring its CLI aliases, the flags it
+//! honours, and a `run` that maps a [`SimConfig`] + [`RunOpts`] to an
+//! [`ExperimentOutput`] (stdout text + named CSV/JSON side files). All
+//! of them live in one [`REGISTRY`] slice, so adding a command is one
+//! new impl + one registry entry — `main.rs`, the `all` meta-command,
+//! and `--csv` delivery all iterate the registry instead of hand-wired
+//! match arms.
+//!
+//! Delivery is split from computation on purpose: `run` is pure-ish
+//! (it may read artifacts and log diagnostics to stderr, but stdout and
+//! the `--csv` dir belong to [`dispatch`]), which is what lets tests
+//! assert byte-compatibility of the rendered text without scraping a
+//! child process. The handful of commands with bespoke side effects
+//! (`bench` writes/gates `BENCH_sweeps.json`, `trace` writes
+//! `results/trace_*.json`, `calibrate` streams tables) self-render and
+//! return [`ExperimentOutput::empty`] so their output ordering is
+//! unchanged from the pre-registry CLI.
+
+pub mod builtin;
+
+pub use builtin::REGISTRY;
+
+use crate::config::SimConfig;
+use crate::report;
+
+/// CLI options shared by every experiment, resolved once by
+/// `parse_args`. Experiments read only the fields they declare in
+/// [`Experiment::flags`]; the rest are ignored.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// `--csv <dir>`: where [`dispatch`] writes the side files.
+    pub csv_dir: Option<String>,
+    /// `--runtime`: drive Table I from real feature maps.
+    pub use_runtime: bool,
+    /// `--frames <n>`.
+    pub frames: usize,
+    /// `--quick`: CI smoke grids / short horizons.
+    pub quick: bool,
+    /// `--workers <n>` for the sharded grids.
+    pub workers: usize,
+    /// `--out <path>` (bench report destination).
+    pub out: Option<String>,
+    /// `--check <baseline.json>` (bench regression gate).
+    pub check: Option<String>,
+    /// `--driver <name>` for the serving commands.
+    pub driver: Option<String>,
+    /// `--engines <n>` for the serving commands.
+    pub engines: usize,
+}
+
+impl Default for RunOpts {
+    /// The same defaults `parse_args` starts from.
+    fn default() -> Self {
+        RunOpts {
+            csv_dir: None,
+            use_runtime: false,
+            frames: 3,
+            quick: false,
+            workers: 4,
+            out: None,
+            check: None,
+            driver: None,
+            engines: 2,
+        }
+    }
+}
+
+/// What one experiment produced.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentOutput {
+    /// The stdout text, printed verbatim by [`dispatch`].
+    pub text: String,
+    /// `(file name, content)` pairs written under the `--csv` dir.
+    pub csv: Vec<(String, String)>,
+}
+
+impl ExperimentOutput {
+    /// Text-only output (no side files).
+    pub fn text(text: String) -> Self {
+        ExperimentOutput { text, csv: Vec::new() }
+    }
+
+    /// No output — for self-rendering experiments (`bench`, `trace`,
+    /// `calibrate`) that own their stdout/file ordering.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+}
+
+/// One CLI command.
+pub trait Experiment: Sync {
+    /// Canonical command name (`fig4`, `memory-sweep`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Alternate spellings accepted on the command line.
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description (the CLI help table).
+    fn about(&self) -> &'static str;
+
+    /// Flags this experiment honours (documentation; parsing is global).
+    fn flags(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// Whether the `all` meta-command includes this experiment.
+    fn in_all(&self) -> bool {
+        true
+    }
+
+    /// Whether `all` prints a blank separator line after this section
+    /// (false for sections whose text already ends with one).
+    fn separator_after(&self) -> bool {
+        true
+    }
+
+    fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> anyhow::Result<ExperimentOutput>;
+}
+
+/// Every registered experiment, in `all`-execution order (the
+/// non-`in_all` commands trail the list).
+pub fn registry() -> &'static [&'static dyn Experiment] {
+    REGISTRY
+}
+
+/// Resolve a command-line name (canonical or alias) to its experiment.
+pub fn find(name: &str) -> Option<&'static dyn Experiment> {
+    REGISTRY
+        .iter()
+        .copied()
+        .find(|e| e.name() == name || e.aliases().contains(&name))
+}
+
+/// Run one experiment and deliver its output: text to stdout, side
+/// files under `opts.csv_dir` (when set).
+pub fn dispatch(exp: &dyn Experiment, cfg: &SimConfig, opts: &RunOpts) -> anyhow::Result<()> {
+    let out = exp.run(cfg, opts)?;
+    print!("{}", out.text);
+    if let Some(dir) = &opts.csv_dir {
+        for (name, content) in &out.csv {
+            report::save(&format!("{dir}/{name}"), content)?;
+        }
+    }
+    Ok(())
+}
+
+/// The `all` meta-command: every `in_all` experiment in registry order,
+/// separated by blank lines exactly as the pre-registry CLI printed
+/// them (no separator after sections that end with their own, none
+/// after the last).
+pub fn run_all(cfg: &SimConfig, opts: &RunOpts) -> anyhow::Result<()> {
+    let all: Vec<&dyn Experiment> = REGISTRY.iter().copied().filter(|e| e.in_all()).collect();
+    for (i, exp) in all.iter().enumerate() {
+        dispatch(*exp, cfg, opts)?;
+        if i + 1 < all.len() && exp.separator_after() {
+            println!();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_and_aliases_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for e in registry() {
+            assert!(seen.insert(e.name()), "duplicate name {}", e.name());
+            for a in e.aliases() {
+                assert!(seen.insert(a), "alias {a} collides");
+            }
+            assert!(!e.about().is_empty(), "{} has no about", e.name());
+        }
+    }
+
+    #[test]
+    fn all_order_matches_the_legacy_cli() {
+        let names: Vec<&str> =
+            registry().iter().filter(|e| e.in_all()).map(|e| e.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "fig4",
+                "fig5",
+                "table1",
+                "ablation-buffer",
+                "ablation-blocks",
+                "ablation-vgg",
+                "ablation-load",
+                "scaling",
+                "faults",
+                "serve",
+                "memory-sweep",
+            ]
+        );
+        // The only section that already ends with a blank line.
+        for e in registry() {
+            assert_eq!(
+                e.separator_after(),
+                e.name() != "ablation-buffer",
+                "{}",
+                e.name()
+            );
+        }
+    }
+
+    #[test]
+    fn find_resolves_canonical_names_and_aliases() {
+        assert_eq!(find("fig4").unwrap().name(), "fig4");
+        assert_eq!(find("memory").unwrap().name(), "memory-sweep");
+        assert_eq!(find("memory_sweep").unwrap().name(), "memory-sweep");
+        assert_eq!(find("serve_sweep").unwrap().name(), "serve-sweep");
+        assert_eq!(find("cluster_sweep").unwrap().name(), "cluster-sweep");
+        assert!(find("no-such-command").is_none());
+    }
+
+    #[test]
+    fn serve_experiment_is_byte_compatible_with_direct_call() {
+        let mut cfg = SimConfig::default();
+        cfg.workload.tenants = 2;
+        cfg.workload.duration_ns = 80_000_000;
+        let opts = RunOpts { quick: true, ..RunOpts::default() };
+        let out = find("serve").unwrap().run(&cfg, &opts).unwrap();
+
+        let mut c = cfg.clone();
+        c.workload.duration_ns = c.workload.duration_ns.min(200_000_000);
+        let rep = crate::coordinator::serve::serve(
+            &c,
+            crate::drivers::DriverKind::KernelIrq,
+            opts.engines,
+        )
+        .unwrap();
+        assert_eq!(out.text, report::serve_text(&rep));
+        assert_eq!(out.csv.len(), 2);
+        assert_eq!(out.csv[0].0, "serve.csv");
+        assert_eq!(out.csv[1].0, "serve.json");
+    }
+
+    #[test]
+    fn cluster_experiment_runs_and_names_side_files() {
+        let mut cfg = SimConfig::default();
+        cfg.workload.tenants = 2;
+        cfg.workload.offered_fps = 120.0;
+        cfg.workload.duration_ns = 50_000_000;
+        cfg.cluster.boards = 2;
+        let opts = RunOpts::default();
+        let out = find("cluster").unwrap().run(&cfg, &opts).unwrap();
+        assert!(out.text.contains("Cluster — 2 boards"), "{}", out.text);
+        let names: Vec<&str> = out.csv.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["cluster.csv", "cluster.json"]);
+    }
+
+    #[test]
+    fn serving_commands_reject_bad_driver_flags() {
+        let cfg = SimConfig::default();
+        let opts = RunOpts { driver: Some("multiqueue".into()), ..RunOpts::default() };
+        for cmd in ["serve", "serve-sweep", "cluster", "cluster-sweep"] {
+            let err = find(cmd).unwrap().run(&cfg, &opts).unwrap_err().to_string();
+            assert!(err.contains("multiqueue"), "{cmd}: {err}");
+        }
+        let opts = RunOpts { engines: 0, ..RunOpts::default() };
+        assert!(find("serve").unwrap().run(&cfg, &opts).is_err());
+    }
+}

@@ -54,6 +54,13 @@
 //!   keeps up to `depth` frames in flight across the engines, and the
 //!   multi-tenant [`coordinator::serve`] loop that multiplexes tenant
 //!   streams onto the engine pool under a QoS policy;
+//! * [`cluster`] — fleet-scale serving: N simulated boards (possibly
+//!   heterogeneous profiles) behind a front-end balancer with pluggable
+//!   tenant placement, cross-board spill/steal, and seeded deterministic
+//!   board-failure failover (DESIGN.md §13);
+//! * [`experiment`] — the unified `Experiment` trait + registry every
+//!   CLI command dispatches through (one place to add a command: name,
+//!   flags, runner, renderers);
 //! * [`workload`] — the serving workload model behind `serve`: seeded
 //!   open-/closed-loop stream generators, bounded admission queues with
 //!   shed policies, pluggable QoS scheduling (FIFO / weighted DRR /
@@ -74,10 +81,12 @@
 
 pub mod accel;
 pub mod axi;
+pub mod cluster;
 pub mod cnn;
 pub mod config;
 pub mod coordinator;
 pub mod drivers;
+pub mod experiment;
 pub mod memory;
 pub mod os;
 pub mod report;

@@ -13,16 +13,24 @@
 //! psoc-dma serve             # multi-tenant serving run (workload config)
 //! psoc-dma serve-sweep       # capacity planning: load x policy x engines
 //! psoc-dma memory-sweep      # copy-through vs zero-copy x ACP/HP crossover
+//! psoc-dma cluster           # multi-board fleet serving run (cluster config)
+//! psoc-dma cluster-sweep     # fleet planning: boards x placement x load
 //! psoc-dma bench             # simulator perf bench -> BENCH_sweeps.json
 //! psoc-dma all               # everything above (estimate plans)
 //! ```
+//!
+//! Every command is an [`experiment::Experiment`] in
+//! [`experiment::REGISTRY`]; this binary only parses flags, resolves the
+//! command name (aliases included), and dispatches.
 //!
 //! `--config <file.json>` overrides any `SimConfig` constant;
 //! `--csv <dir>` additionally writes machine-readable outputs.
 //!
 //! `serve` flags: `--driver polling|scheduled|kernel` (default kernel),
 //! `--engines <n>` (default 2), `--quick` (short horizon). `serve-sweep`
-//! adds `--workers <n>` for the sharded grid.
+//! adds `--workers <n>` for the sharded grid. `cluster`/`cluster-sweep`
+//! take `--driver`, `--quick` and `--workers` (boards shard across
+//! workers; rows are worker-count-invariant).
 //!
 //! `memory-sweep` flags: `--quick` (3-size grid), `--frames <n>` (frames
 //! per cell, default 3 — rings amortise across them).
@@ -38,43 +46,16 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use psoc_dma::config::SimConfig;
-use psoc_dma::coordinator::experiments::{
-    ablation_chunk_sweep, ablation_load, ablation_matrix, ablation_vgg, fault_safety_demo,
-    fault_sweep, fig45_sizes, loopback_sweep, memory_sweep, memory_sweep_sizes, scaling_sweep,
-    table1, table1_runtime,
-};
-use psoc_dma::drivers::DriverKind;
-use psoc_dma::report;
-use psoc_dma::runtime::Runtime;
+use psoc_dma::experiment::{self, RunOpts};
 
 struct Args {
     cmd: String,
     config: Option<String>,
-    csv_dir: Option<String>,
-    use_runtime: bool,
-    frames: usize,
-    quick: bool,
-    workers: usize,
-    out: Option<String>,
-    check: Option<String>,
-    driver: Option<String>,
-    engines: usize,
+    opts: RunOpts,
 }
 
 fn parse_args() -> Result<Args> {
-    let mut args = Args {
-        cmd: String::new(),
-        config: None,
-        csv_dir: None,
-        use_runtime: false,
-        frames: 3,
-        quick: false,
-        workers: 4,
-        out: None,
-        check: None,
-        driver: None,
-        engines: 2,
-    };
+    let mut args = Args { cmd: String::new(), config: None, opts: RunOpts::default() };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -83,36 +64,37 @@ fn parse_args() -> Result<Args> {
                     Some(it.next().ok_or_else(|| anyhow::anyhow!("--config needs a path"))?)
             }
             "--csv" => {
-                args.csv_dir =
+                args.opts.csv_dir =
                     Some(it.next().ok_or_else(|| anyhow::anyhow!("--csv needs a dir"))?)
             }
-            "--runtime" => args.use_runtime = true,
-            "--quick" => args.quick = true,
+            "--runtime" => args.opts.use_runtime = true,
+            "--quick" => args.opts.quick = true,
             "--frames" => {
-                args.frames = it
+                args.opts.frames = it
                     .next()
                     .ok_or_else(|| anyhow::anyhow!("--frames needs a count"))?
                     .parse()?
             }
             "--workers" => {
-                args.workers = it
+                args.opts.workers = it
                     .next()
                     .ok_or_else(|| anyhow::anyhow!("--workers needs a count"))?
                     .parse()?
             }
             "--out" => {
-                args.out = Some(it.next().ok_or_else(|| anyhow::anyhow!("--out needs a path"))?)
+                args.opts.out =
+                    Some(it.next().ok_or_else(|| anyhow::anyhow!("--out needs a path"))?)
             }
             "--check" => {
-                args.check =
+                args.opts.check =
                     Some(it.next().ok_or_else(|| anyhow::anyhow!("--check needs a path"))?)
             }
             "--driver" => {
-                args.driver =
+                args.opts.driver =
                     Some(it.next().ok_or_else(|| anyhow::anyhow!("--driver needs a name"))?)
             }
             "--engines" => {
-                args.engines = it
+                args.opts.engines = it
                     .next()
                     .ok_or_else(|| anyhow::anyhow!("--engines needs a count"))?
                     .parse()?
@@ -139,353 +121,14 @@ fn load_cfg(args: &Args) -> Result<SimConfig> {
     })
 }
 
-fn run_fig45(cfg: &SimConfig, args: &Args, fig5: bool) -> Result<()> {
-    let rows = loopback_sweep(cfg, &fig45_sizes(), &DriverKind::ALL)?;
-    if fig5 {
-        print!("{}", report::fig5_text(&rows));
-        println!();
-        print!("{}", report::plot::fig5_ascii(&rows, 72, 18));
-    } else {
-        print!("{}", report::fig4_text(&rows));
-    }
-    if let Some(dir) = &args.csv_dir {
-        report::save(&format!("{dir}/loopback_sweep.csv"), &report::sweep_csv(&rows))?;
-    }
-    Ok(())
-}
-
-fn run_table1(cfg: &SimConfig, args: &Args) -> Result<()> {
-    let rows = if args.use_runtime {
-        let rt = Runtime::load(&Runtime::default_dir())?;
-        eprintln!(
-            "runtime: platform={}, artifacts: {:?}",
-            rt.platform,
-            rt.names().collect::<Vec<_>>()
-        );
-        let (rows, plan) = table1_runtime(cfg, &rt, args.frames)?;
-        eprintln!(
-            "functional path: frame classified as class {} (logits {:?})",
-            plan.class, plan.logits
-        );
-        for p in &plan.plans {
-            eprintln!(
-                "  {}: tx {} B, rx {} B, sparsity in/out {:.2}/{:.2}",
-                p.name, p.timing.tx_bytes, p.timing.rx_bytes, p.sparsity_in, p.sparsity_out
-            );
-        }
-        rows
-    } else {
-        table1(cfg, args.frames)?
-    };
-    print!("{}", report::table1_text(&rows));
-    print!("{}", report::table1_paper_reference());
-    if let Some(dir) = &args.csv_dir {
-        report::save(&format!("{dir}/table1.csv"), &report::table1_csv(&rows))?;
-    }
-    Ok(())
-}
-
-fn run_ablation_buffer(cfg: &SimConfig) -> Result<()> {
-    for bytes in [256u64 << 10, 2 << 20] {
-        let rows = ablation_matrix(cfg, bytes)?;
-        print!("{}", report::ablation_text(&rows));
-        println!();
-    }
-    Ok(())
-}
-
-fn run_ablation_blocks(cfg: &SimConfig) -> Result<()> {
-    let chunks: Vec<u64> = (12..=20).map(|e| 1u64 << e).collect(); // 4KB..1MB
-    let rows = ablation_chunk_sweep(cfg, 4 << 20, &chunks)?;
-    println!("Blocks chunk-size sweep (4MB loop-back, double buffer):");
-    println!("{:>10} | {:>12}", "chunk", "RX total ms");
-    for (chunk, rx) in rows {
-        println!("{:>10} | {:>12.4}", report::size_label(chunk), rx.as_ms());
-    }
-    Ok(())
-}
-
-fn run_ablation_vgg(cfg: &SimConfig) -> Result<()> {
-    let ab = ablation_vgg(cfg)?;
-    print!("{}", report::vgg_text(&ab));
-    Ok(())
-}
-
-fn run_ablation_load(cfg: &SimConfig) -> Result<()> {
-    let rows = ablation_load(cfg, 1 << 20, &[0.0, 100.0, 200.0, 400.0, 800.0])?;
-    print!("{}", report::load_text(&rows));
-    Ok(())
-}
-
-/// The multi-engine scaling grid: RoShamBo frames/sec for every
-/// channel-count x pipeline-depth cell, per driver.
-fn run_scaling(cfg: &SimConfig, args: &Args) -> Result<()> {
-    let drivers = [DriverKind::UserPolling, DriverKind::KernelIrq];
-    let rows = scaling_sweep(cfg, &drivers, &[1, 2, 4], &[1, 2, 4], args.frames.max(4))?;
-    print!("{}", report::scaling_text(&rows));
-    if let Some(dir) = &args.csv_dir {
-        report::save(&format!("{dir}/scaling.csv"), &report::scaling_csv(&rows))?;
-    }
-    Ok(())
-}
-
-/// Fault-injection reliability sweep: both driver families × a grid of
-/// per-burst DMA error rates (plus descriptor corruption and IRQ loss —
-/// see `fault_sweep`), every run seeded and bit-reproducible, followed
-/// by the deterministic safety demonstration.
-fn run_faults(cfg: &SimConfig, args: &Args) -> Result<()> {
-    let drivers = [DriverKind::UserPolling, DriverKind::KernelIrq];
-    let rates = [0.0, 1e-3, 5e-3, 2e-2];
-    let transfers = if args.quick { 8 } else { 24 };
-    let rows = fault_sweep(cfg, &drivers, &rates, transfers, 256 << 10)?;
-    print!("{}", report::faults_text(&rows));
-    for kind in drivers {
-        let (rec, fail, inj) = report::fault_totals(&rows, kind);
-        println!(
-            "{:<26} totals: {} transfers recovered, {} dropped, {} faults injected",
-            kind.label(),
-            rec,
-            fail,
-            inj
-        );
-    }
-    let demo = fault_safety_demo(cfg)?;
-    print!("{}", report::faults_demo_text(&demo));
-    if let Some(dir) = &args.csv_dir {
-        report::save(&format!("{dir}/faults.csv"), &report::faults_csv(&rows))?;
-    }
-    Ok(())
-}
-
-/// Resolve the `--driver`/`--engines` flags for the serving commands
-/// (default driver: kernel — the scheme the serving argument is about,
-/// since it frees the CPU under load). The multi-queue scheme manages
-/// every engine itself and cannot back per-engine serving; flag values
-/// are rejected here so `serve` never panics on CLI input.
-fn serve_driver(args: &Args) -> Result<DriverKind> {
-    let kind = match &args.driver {
-        None => DriverKind::KernelIrq,
-        Some(s) => DriverKind::parse(s)
-            .ok_or_else(|| anyhow::anyhow!("unknown --driver {s}; see the README"))?,
-    };
-    if kind == DriverKind::KernelMultiQueue {
-        bail!("serve binds one driver per engine; --driver multiqueue is not supported");
-    }
-    let max = psoc_dma::sim::event::MAX_ENGINES;
-    if args.engines < 1 || args.engines > max {
-        bail!("--engines must be in 1..={max}, got {}", args.engines);
-    }
-    Ok(kind)
-}
-
-/// Multi-tenant serving run: the `workload` config key shapes the tenant
-/// streams; this prints the per-tenant SLO table.
-fn run_serve(cfg: &SimConfig, args: &Args) -> Result<()> {
-    use psoc_dma::coordinator::serve::serve;
-    let mut c = cfg.clone();
-    if args.quick {
-        c.workload.duration_ns = c.workload.duration_ns.min(200_000_000);
-    }
-    let kind = serve_driver(args)?;
-    let rep = serve(&c, kind, args.engines)?;
-    print!("{}", report::serve_text(&rep));
-    if let Some(dir) = &args.csv_dir {
-        report::save(&format!("{dir}/serve.csv"), &report::serve_csv(&rep))?;
-        report::save(&format!("{dir}/serve.json"), &rep.to_json().to_string_pretty())?;
-    }
-    Ok(())
-}
-
-/// Capacity-planning sweep: offered load x QoS policy x engine count,
-/// sharded across worker threads. The knee shows as the goodput column
-/// flattening at load ≈ 1.0 while the p99 column explodes.
-fn run_serve_sweep(cfg: &SimConfig, args: &Args) -> Result<()> {
-    use psoc_dma::coordinator::sweeps::serve_sweep;
-    use psoc_dma::workload::QosPolicyKind;
-    let mut c = cfg.clone();
-    let (loads, engines_list): (&[f64], Vec<usize>) = if args.quick {
-        c.workload.duration_ns = c.workload.duration_ns.min(150_000_000);
-        (&[0.5, 1.0, 2.0], vec![args.engines])
-    } else {
-        // A 1-engine reference leg plus the requested pool size (just
-        // the one leg when --engines 1 was asked for explicitly).
-        let mut engines_list = vec![1, args.engines];
-        engines_list.dedup();
-        (&[0.2, 0.5, 0.8, 1.0, 1.2, 1.6, 2.4], engines_list)
-    };
-    let policies = [QosPolicyKind::Fifo, QosPolicyKind::Drr, QosPolicyKind::Edf];
-    let kind = serve_driver(args)?;
-    let rows = serve_sweep(&c, kind, loads, &policies, &engines_list, args.workers)?;
-    print!("{}", report::serve_sweep_text(&rows));
-    if let Some(dir) = &args.csv_dir {
-        report::save(&format!("{dir}/serve_sweep.csv"), &report::serve_sweep_csv(&rows))?;
-    }
-    Ok(())
-}
-
-/// Memory-path sweep: copy-through vs. zero-copy on both port families,
-/// as frame streams (`--frames` per cell, so ring amortisation shows),
-/// with the per-driver ACP/HP crossover in the footer.
-fn run_memory_sweep(cfg: &SimConfig, args: &Args) -> Result<()> {
-    let sizes = memory_sweep_sizes(args.quick);
-    let frames = args.frames.max(2) as u64;
-    let rows = memory_sweep(cfg, &sizes, &DriverKind::ALL, frames)?;
-    print!("{}", report::memory_sweep_text(&rows));
-    if let Some(dir) = &args.csv_dir {
-        report::save(&format!("{dir}/memory_sweep.csv"), &report::memory_sweep_csv(&rows))?;
-    }
-    Ok(())
-}
-
-/// Simulator perf bench: calendar backends + parallel sweep scaling.
-/// Writes `BENCH_sweeps.json` and optionally gates against a baseline.
-fn run_bench(cfg: &SimConfig, args: &Args) -> Result<()> {
-    use psoc_dma::coordinator::sweeps::{bench, BenchOptions};
-    // The parallel leg needs >= 2 workers to measure a speedup; `bench`
-    // clamps (the single policy site) and the report records the count
-    // actually used.
-    let opts = BenchOptions { quick: args.quick, workers: args.workers };
-    let rep = bench(cfg, opts)?;
-    print!("{}", report::bench_text(&rep));
-    let out = args.out.as_deref().unwrap_or("BENCH_sweeps.json");
-    report::save(out, &rep.to_json().to_string_pretty())?;
-    println!("wrote {out}");
-    if let Some(baseline_path) = &args.check {
-        match std::fs::read_to_string(baseline_path) {
-            Ok(text) => {
-                let baseline = psoc_dma::util::json::Json::parse(&text)
-                    .map_err(|e| anyhow::anyhow!("parsing baseline {baseline_path}: {e}"))?;
-                let regressions = rep.check_against(&baseline, 0.20);
-                if !regressions.is_empty() {
-                    for r in &regressions {
-                        eprintln!("PERF REGRESSION: {r}");
-                    }
-                    bail!("{} perf regression(s) vs {baseline_path}", regressions.len());
-                }
-                println!("no regression >20% vs {baseline_path}");
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                eprintln!(
-                    "baseline {baseline_path} not found — skipping the regression gate \
-                     (commit this run's {out} as the baseline to arm it)"
-                );
-            }
-            Err(e) => bail!("reading baseline {baseline_path}: {e}"),
-        }
-    }
-    Ok(())
-}
-
-/// Fit report + knob sensitivities against the paper's Table I anchors.
-fn run_calibrate(cfg: &SimConfig) -> Result<()> {
-    use psoc_dma::coordinator::calibrate;
-    let rep = calibrate::fit(cfg)?;
-    println!("Fit vs. paper Table I:");
-    println!("{:<12} {:<10} {:>12} {:>12} {:>9}", "driver", "metric", "paper", "measured", "err");
-    println!("{}", "-".repeat(60));
-    for c in &rep.cells {
-        println!(
-            "{:<12} {:<10} {:>12.4} {:>12.4} {:>8.1}%",
-            c.driver,
-            c.metric,
-            c.paper,
-            c.measured,
-            100.0 * c.rel_err()
-        );
-    }
-    println!(
-        "\ngeometric-mean |ratio| = {:.3}x; worst cell: {} {} ({:+.1}%); orderings {}",
-        rep.gmean_abs_ratio(),
-        rep.worst().driver,
-        rep.worst().metric,
-        100.0 * rep.worst().rel_err(),
-        if rep.orderings_hold() { "hold" } else { "VIOLATED" },
-    );
-
-    println!("\nSensitivity (elasticity per +20% knob bump; |e| >= 0.05 shown):");
-    println!("{:<24} {:<12} {:<10} {:>10}", "knob", "driver", "metric", "elasticity");
-    println!("{}", "-".repeat(60));
-    for s in calibrate::sensitivity(cfg)? {
-        if s.elasticity.abs() >= 0.05 {
-            println!(
-                "{:<24} {:<12} {:<10} {:>10.2}",
-                s.knob, s.driver, s.metric, s.elasticity
-            );
-        }
-    }
-    Ok(())
-}
-
-/// Record a chrome://tracing timeline of one 256 KB loop-back round trip
-/// per driver into `results/trace_<driver>.json`.
-fn run_trace(cfg: &SimConfig) -> Result<()> {
-    use psoc_dma::drivers::{Driver, DriverConfig};
-    use psoc_dma::memory::buffer::CmaAllocator;
-    use psoc_dma::system::System;
-    let bytes = 256 << 10;
-    for kind in DriverKind::ALL {
-        let mut sys = System::loopback(cfg.clone());
-        sys.enable_trace();
-        let mut cma = CmaAllocator::zynq_default();
-        let mut drv = Driver::new(DriverConfig::table1(kind), &mut cma, cfg, bytes)?;
-        drv.transfer(&mut sys, bytes, bytes)?;
-        let trace = sys.trace.take().unwrap();
-        let path = format!(
-            "results/trace_{}.json",
-            kind.label().replace(' ', "_").replace('-', "_")
-        );
-        report::save(&path, &trace.to_chrome_json().to_string_compact())?;
-        println!(
-            "{path}: {} spans, {} markers — open in chrome://tracing or Perfetto",
-            trace.spans.len(),
-            trace.instants.len()
-        );
-    }
-    Ok(())
-}
-
 fn main() -> Result<()> {
     let args = parse_args()?;
     let cfg = load_cfg(&args)?;
-    match args.cmd.as_str() {
-        "fig4" => run_fig45(&cfg, &args, false)?,
-        "fig5" => run_fig45(&cfg, &args, true)?,
-        "table1" => run_table1(&cfg, &args)?,
-        "ablation-buffer" => run_ablation_buffer(&cfg)?,
-        "ablation-blocks" => run_ablation_blocks(&cfg)?,
-        "ablation-vgg" => run_ablation_vgg(&cfg)?,
-        "ablation-load" => run_ablation_load(&cfg)?,
-        "scaling" => run_scaling(&cfg, &args)?,
-        "faults" => run_faults(&cfg, &args)?,
-        "serve" => run_serve(&cfg, &args)?,
-        "serve-sweep" | "serve_sweep" => run_serve_sweep(&cfg, &args)?,
-        "memory-sweep" | "memory_sweep" | "memory" => run_memory_sweep(&cfg, &args)?,
-        "bench" => run_bench(&cfg, &args)?,
-        "trace" => run_trace(&cfg)?,
-        "calibrate" => run_calibrate(&cfg)?,
-        "all" => {
-            run_fig45(&cfg, &args, false)?;
-            println!();
-            run_fig45(&cfg, &args, true)?;
-            println!();
-            run_table1(&cfg, &args)?;
-            println!();
-            run_ablation_buffer(&cfg)?;
-            run_ablation_blocks(&cfg)?;
-            println!();
-            run_ablation_vgg(&cfg)?;
-            println!();
-            run_ablation_load(&cfg)?;
-            println!();
-            run_scaling(&cfg, &args)?;
-            println!();
-            run_faults(&cfg, &args)?;
-            println!();
-            run_serve(&cfg, &args)?;
-            println!();
-            run_memory_sweep(&cfg, &args)?;
-        }
-        other => bail!("unknown command {other}; see the README"),
+    if args.cmd == "all" {
+        return experiment::run_all(&cfg, &args.opts);
     }
-    Ok(())
+    match experiment::find(&args.cmd) {
+        Some(exp) => experiment::dispatch(exp, &cfg, &args.opts),
+        None => bail!("unknown command {}; see the README", args.cmd),
+    }
 }

@@ -118,6 +118,19 @@ impl MemoryConfig {
         self.path == MemoryPath::ZeroCopy
     }
 
+    /// One label for the whole mode (path + port): `"copy"`,
+    /// `"zero-hp"` or `"zero-acp"` — the serve and cluster reports'
+    /// self-description, matching the `memory-sweep` mode column.
+    pub fn mode_label(&self) -> &'static str {
+        match self.path {
+            MemoryPath::CopyThrough => "copy",
+            MemoryPath::ZeroCopy => match self.port {
+                DmaPortKind::Hp => "zero-hp",
+                DmaPortKind::Acp => "zero-acp",
+            },
+        }
+    }
+
     /// Apply overrides from the nested `memory` JSON object; unknown
     /// keys are an error.
     pub fn apply_json(&mut self, v: &Json) -> anyhow::Result<()> {
@@ -204,6 +217,7 @@ mod tests {
         let cfg = MemoryConfig::default();
         assert!(!cfg.is_zero_copy());
         assert_eq!(cfg.port, DmaPortKind::Hp);
+        assert_eq!(cfg.mode_label(), "copy");
         cfg.validate().unwrap();
     }
 
@@ -219,6 +233,7 @@ mod tests {
         assert_eq!(cfg, back);
         assert_eq!(json.get("path").as_str(), Some("zero"));
         assert_eq!(json.get("port").as_str(), Some("acp"));
+        assert_eq!(cfg.mode_label(), "zero-acp");
     }
 
     #[test]

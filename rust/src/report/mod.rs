@@ -6,6 +6,7 @@ pub mod plot;
 use std::fmt::Write as _;
 use std::path::Path;
 
+use crate::cluster::{ClusterReport, ClusterSweepRow};
 use crate::coordinator::experiments::{
     acp_hp_crossover, AblationRow, FaultCell, FaultSafetyDemo, MemoryMode, MemoryRow, ScalingRow,
     SweepRow, Table1Row, VggAblation,
@@ -662,6 +663,201 @@ pub fn memory_sweep_csv(rows: &[MemoryRow]) -> String {
     out
 }
 
+/// The fleet table of one cluster run (`cluster` CLI command): per-board
+/// placement/utilization, then the cluster-wide tenant ledger (the
+/// `lost` column is `failed_over` — frames the board failure cost).
+pub fn cluster_text(rep: &ClusterReport) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Cluster — {} boards / placement {} / {}",
+        rep.boards.len(),
+        rep.placement,
+        rep.driver,
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:>5} {:<11} {:>4} {:<9} | {:>9} {:>9} {:>7} {:>6} | {:>6}",
+        "board", "kind", "eng", "memory", "cap f/s", "delivered", "done", "util%", "failed"
+    )
+    .unwrap();
+    writeln!(out, "{}", "-".repeat(84)).unwrap();
+    for (i, b) in rep.boards.iter().enumerate() {
+        writeln!(
+            out,
+            "{:>5} {:<11} {:>4} {:<9} | {:>9.1} {:>9} {:>7} {:>5.1}% | {:>6}",
+            i,
+            b.kind.label(),
+            b.engines,
+            b.memory,
+            b.capacity_fps,
+            b.delivered,
+            b.report.total_completed(),
+            100.0 * b.utilization,
+            if b.failed { "DIED" } else { "-" },
+        )
+        .unwrap();
+    }
+    writeln!(
+        out,
+        "{:<7} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>6} | {:>8} {:>8} | {:>6}",
+        "tenant", "offered", "done", "drop", "coal", "unsrv", "lost", "miss", "p50 ms", "p99 ms",
+        "SLO%"
+    )
+    .unwrap();
+    writeln!(out, "{}", "-".repeat(96)).unwrap();
+    for (i, t) in rep.tenants.iter().enumerate() {
+        writeln!(
+            out,
+            "{:<7} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>6} | {:>8} {:>8} | {:>5.1}%",
+            i,
+            t.offered,
+            t.completed,
+            t.dropped,
+            t.coalesced,
+            t.unserved,
+            t.failed_over,
+            t.missed,
+            opt_ms(t.latency.percentile(50.0)),
+            opt_ms(t.latency.percentile(99.0)),
+            100.0 * t.slo_attainment(),
+        )
+        .unwrap();
+    }
+    let merged = rep.merged_latency();
+    let fairness = rep.fairness_ratio();
+    writeln!(
+        out,
+        "routing: {} generated | {} spilled ({:.1}%), {} stolen ({:.1}%), {} redirected, \
+         {} retried, {} lost",
+        rep.generated,
+        rep.spilled,
+        100.0 * rep.spill_rate(),
+        rep.stolen,
+        100.0 * rep.steal_rate(),
+        rep.redirected,
+        rep.retried,
+        rep.failed_over,
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "total: {:.1} ms simulated | goodput {:.1}/s, SLO {:.1}%, fairness max/min {}, \
+         p99 {} ms",
+        rep.duration.as_ms(),
+        rep.goodput_fps(),
+        100.0 * rep.slo_attainment(),
+        if fairness.is_finite() { format!("{fairness:.2}") } else { "inf".into() },
+        opt_ms(merged.percentile(99.0)),
+    )
+    .unwrap();
+    out
+}
+
+/// CSV twin of [`cluster_text`] (one row per board).
+pub fn cluster_csv(rep: &ClusterReport) -> String {
+    let mut out = String::from(
+        "board,kind,engines,memory,capacity_fps,delivered,completed,unserved,utilization,\
+         failed,events\n",
+    );
+    for (i, b) in rep.boards.iter().enumerate() {
+        writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{},{},{}",
+            i,
+            b.kind.label(),
+            b.engines,
+            b.memory,
+            b.capacity_fps,
+            b.delivered,
+            b.report.total_completed(),
+            b.report.total_unserved(),
+            b.utilization,
+            b.failed,
+            b.report.events,
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// The cluster capacity grid (`cluster-sweep` CLI command): per
+/// boards × placement, SLO attainment and spill/steal rates across
+/// offered-load levels. The placement-policy gap reads straight off the
+/// SLO column at equal load.
+pub fn cluster_sweep_text(rows: &[ClusterSweepRow]) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Cluster sweep — boards x placement x load (load 1.0 = fleet capacity)"
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:>6} {:<16} {:>5} | {:>9} {:>9} {:>7} {:>7} | {:>8} {:>6} {:>8}",
+        "boards", "placement", "load", "generated", "goodput/s", "spill%", "steal%", "p99 ms",
+        "SLO%", "fairness"
+    )
+    .unwrap();
+    writeln!(out, "{}", "-".repeat(100)).unwrap();
+    for r in rows {
+        let rep = &r.report;
+        let merged = rep.merged_latency();
+        let fairness = rep.fairness_ratio();
+        writeln!(
+            out,
+            "{:>6} {:<16} {:>5.2} | {:>9} {:>9.1} {:>6.1}% {:>6.1}% | {:>8} {:>5.1}% {:>8}",
+            r.boards,
+            r.placement.label(),
+            r.load,
+            rep.generated,
+            rep.goodput_fps(),
+            100.0 * rep.spill_rate(),
+            100.0 * rep.steal_rate(),
+            opt_ms(merged.percentile(99.0)),
+            100.0 * rep.slo_attainment(),
+            if fairness.is_finite() { format!("{fairness:.2}") } else { "inf".into() },
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// CSV twin of [`cluster_sweep_text`].
+pub fn cluster_sweep_csv(rows: &[ClusterSweepRow]) -> String {
+    let mut out = String::from(
+        "boards,placement,load,generated,completed,shed,unserved,failed_over,spilled,stolen,\
+         redirected,retried,goodput_fps,slo_attainment,fairness_ratio,latency_p99_ns\n",
+    );
+    for r in rows {
+        let rep = &r.report;
+        let merged = rep.merged_latency();
+        writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            r.boards,
+            r.placement.label(),
+            r.load,
+            rep.generated,
+            rep.total_completed(),
+            rep.total_shed(),
+            rep.total_unserved(),
+            rep.failed_over,
+            rep.spilled,
+            rep.stolen,
+            rep.redirected,
+            rep.retried,
+            rep.goodput_fps(),
+            rep.slo_attainment(),
+            rep.fairness_ratio(),
+            merged.percentile(99.0).unwrap_or(0.0),
+        )
+        .unwrap();
+    }
+    out
+}
+
 /// The `bench` command's stdout table (the JSON twin goes to
 /// `BENCH_sweeps.json`).
 pub fn bench_text(rep: &BenchReport) -> String {
@@ -723,6 +919,15 @@ pub fn bench_text(rep: &BenchReport) -> String {
         rep.memory.events,
         rep.memory.wall.as_secs_f64() * 1e3,
         rep.memory_events_per_sec()
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "cluster: {} boards, {} events in {:.3} ms = {:.0} events/sec",
+        rep.cluster.cells,
+        rep.cluster.events,
+        rep.cluster.wall.as_secs_f64() * 1e3,
+        rep.cluster_events_per_sec()
     )
     .unwrap();
     out
@@ -808,6 +1013,7 @@ mod tests {
             policy: "fifo",
             shed: "tail-drop",
             arrival: "poisson",
+            memory: "copy",
             engines: 2,
             duration: Dur::from_secs(1.0),
             tenants: vec![served, starved],
@@ -884,5 +1090,37 @@ mod tests {
         assert_eq!(fault_totals(&rows, DriverKind::KernelIrq), (3, 0, 4));
         let demo = FaultSafetyDemo { poll_recovered: 1, kern_recovered: 2 };
         assert!(faults_demo_text(&demo).contains("yes"));
+    }
+
+    #[test]
+    fn cluster_report_renders_and_csv() {
+        let mut cfg = crate::config::SimConfig::default();
+        cfg.workload.tenants = 2;
+        cfg.workload.offered_fps = 120.0;
+        cfg.workload.duration_ns = 50_000_000;
+        cfg.workload.deadline_ns = 40_000_000;
+        cfg.cluster.boards = 2;
+        let rep =
+            crate::cluster::serve_cluster(&cfg, DriverKind::KernelIrq, 1).unwrap();
+        let t = cluster_text(&rep);
+        assert!(t.contains("Cluster — 2 boards"), "{t}");
+        assert!(t.contains("zynq7000"), "{t}");
+        assert!(t.contains("routing:"), "{t}");
+        let c = cluster_csv(&rep);
+        assert_eq!(c.lines().count(), 3);
+        assert!(c.starts_with("board,kind,"));
+
+        let row = crate::cluster::ClusterSweepRow {
+            boards: 2,
+            placement: crate::cluster::PlacementKind::LeastLoaded,
+            load: 1.0,
+            report: rep,
+        };
+        let st = cluster_sweep_text(std::slice::from_ref(&row));
+        assert!(st.contains("least-loaded"), "{st}");
+        assert!(st.contains("boards x placement x load"), "{st}");
+        let sc = cluster_sweep_csv(&[row]);
+        assert!(sc.starts_with("boards,placement,"));
+        assert_eq!(sc.lines().count(), 2);
     }
 }

@@ -30,6 +30,11 @@ pub struct TenantSlo {
     pub unserved: u64,
     /// Of `completed`, frames delivered past their deadline.
     pub missed: u64,
+    /// Frames lost to a board failure (always 0 on a single-board
+    /// report; the cluster layer sets it on fleet-wide aggregates so the
+    /// ledger identity closes: `offered == completed + dropped +
+    /// coalesced + unserved + failed_over`).
+    pub failed_over: u64,
     /// End-to-end latency of completed frames, ns.
     pub latency: LogHistogram,
     /// Queueing delay component (admission → service start), ns.
@@ -77,7 +82,7 @@ impl TenantSlo {
         (self.dropped + self.coalesced) as f64 / self.offered as f64
     }
 
-    fn to_json(&self, duration: Dur) -> Json {
+    pub(crate) fn to_json(&self, duration: Dur) -> Json {
         let pct = |h: &LogHistogram, p: f64| Json::num(h.percentile(p).unwrap_or(0.0));
         Json::obj(vec![
             ("offered", Json::num(self.offered as f64)),
@@ -86,6 +91,7 @@ impl TenantSlo {
             ("coalesced", Json::num(self.coalesced as f64)),
             ("completed", Json::num(self.completed as f64)),
             ("unserved", Json::num(self.unserved as f64)),
+            ("failed_over", Json::num(self.failed_over as f64)),
             ("missed", Json::num(self.missed as f64)),
             ("goodput_fps", Json::num(self.goodput_fps(duration))),
             ("slo_attainment", Json::num(self.slo_attainment())),
@@ -110,6 +116,8 @@ pub struct ServeReport {
     pub policy: &'static str,
     pub shed: &'static str,
     pub arrival: &'static str,
+    /// Memory-path mode label ("copy" / "zero-hp" / "zero-acp").
+    pub memory: &'static str,
     pub engines: usize,
     /// First arrival generated → last frame drained.
     pub duration: Dur,
@@ -209,6 +217,7 @@ impl ServeReport {
             ("policy", Json::str(self.policy)),
             ("shed", Json::str(self.shed)),
             ("arrival", Json::str(self.arrival)),
+            ("memory", Json::str(self.memory)),
             ("engines", Json::num(self.engines as f64)),
             ("duration_ms", Json::num(self.duration.as_ms())),
             ("events", Json::num(self.events as f64)),
@@ -281,6 +290,7 @@ mod tests {
             policy: "drr",
             shed: "tail-drop",
             arrival: "poisson",
+            memory: "copy",
             engines: 2,
             duration: Dur::from_secs(1.0),
             tenants,

@@ -1,0 +1,317 @@
+//! Named fleet-serving scenarios: each pins a behaviour of the
+//! multi-board cluster layer, and each is replayed twice to assert the
+//! bit-identical determinism contract (same seed + config → the same
+//! serialised `ClusterReport`, byte for byte) — including the
+//! board-failure path, whose retry draws come from a dedicated seeded
+//! stream.
+
+use psoc_dma::cluster::{cluster_sweep, serve_cluster, BoardKind, ClusterReport, PlacementKind};
+use psoc_dma::config::SimConfig;
+use psoc_dma::drivers::DriverKind;
+use psoc_dma::sim::rng::Pcg32;
+
+/// The cluster-wide frame ledger: every generated frame is offered to
+/// exactly one board (retried frames count on the survivor that re-ran
+/// them, failover losses are folded into the aggregate as
+/// `failed_over`), and every offered frame ends in exactly one bucket.
+fn assert_cluster_ledger(rep: &ClusterReport, name: &str) {
+    let offered: u64 = rep.tenants.iter().map(|t| t.offered).sum();
+    let accounted: u64 = rep
+        .tenants
+        .iter()
+        .map(|t| t.completed + t.dropped + t.coalesced + t.unserved + t.failed_over)
+        .sum();
+    assert_eq!(offered, accounted, "{name}: cluster ledger out of balance");
+    assert_eq!(rep.generated, offered, "{name}: generated != sum of tenant offered");
+    // Every generated frame is delivered once; retried frames are
+    // delivered a second time (to the survivor that re-ran them).
+    let delivered: u64 = rep.boards.iter().map(|b| b.delivered).sum();
+    assert_eq!(
+        rep.generated + rep.retried,
+        delivered,
+        "{name}: delivery count disagrees with routing + failover"
+    );
+}
+
+/// A named scenario = a config mutation + the driver binding.
+struct Scenario {
+    name: &'static str,
+    kind: DriverKind,
+    tweak: fn(&mut SimConfig),
+}
+
+fn scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "homogeneous-fleet-least-loaded",
+            kind: DriverKind::KernelIrq,
+            tweak: |c| {
+                c.workload.tenants = 4;
+                c.workload.offered_fps = 300.0;
+                c.workload.duration_ns = 120_000_000;
+                c.cluster.boards = 3;
+                c.cluster.placement = PlacementKind::LeastLoaded;
+            },
+        },
+        Scenario {
+            name: "heterogeneous-fleet-consistent-hash",
+            kind: DriverKind::KernelIrq,
+            tweak: |c| {
+                c.workload.tenants = 5;
+                c.workload.offered_fps = 350.0;
+                c.workload.duration_ns = 120_000_000;
+                c.cluster.boards = 4;
+                c.cluster.profiles = vec![
+                    BoardKind::Zynq7000,
+                    BoardKind::PynqZ2,
+                    BoardKind::ZynqNet,
+                    BoardKind::Ultrascale,
+                ];
+                c.cluster.placement = PlacementKind::ConsistentHash;
+            },
+        },
+        Scenario {
+            name: "board-failure-mid-run-failover",
+            kind: DriverKind::KernelIrq,
+            tweak: |c| {
+                c.workload.tenants = 4;
+                c.workload.offered_fps = 280.0;
+                c.workload.duration_ns = 150_000_000;
+                c.cluster.boards = 3;
+                c.cluster.fail_at_ns = 50_000_000;
+                c.cluster.fail_board = 1;
+                c.cluster.failover_retry = 0.6;
+            },
+        },
+        Scenario {
+            name: "spill-under-skewed-tenants",
+            kind: DriverKind::UserPolling,
+            tweak: |c| {
+                c.workload.tenants = 4;
+                c.workload.skew = 4.0;
+                c.workload.offered_fps = 500.0;
+                c.workload.duration_ns = 150_000_000;
+                c.cluster.boards = 3;
+                c.cluster.placement = PlacementKind::ConsistentHash;
+                c.cluster.spill = true;
+                c.cluster.steal = false;
+            },
+        },
+        Scenario {
+            name: "steal-under-skewed-tenants",
+            kind: DriverKind::UserPolling,
+            tweak: |c| {
+                c.workload.tenants = 4;
+                c.workload.skew = 4.0;
+                c.workload.offered_fps = 500.0;
+                c.workload.duration_ns = 150_000_000;
+                c.cluster.boards = 3;
+                c.cluster.placement = PlacementKind::ConsistentHash;
+                c.cluster.spill = false;
+                c.cluster.steal = true;
+            },
+        },
+        Scenario {
+            name: "locality-affine-rehoming",
+            kind: DriverKind::KernelIrq,
+            tweak: |c| {
+                c.workload.tenants = 4;
+                c.workload.skew = 3.0;
+                c.workload.offered_fps = 450.0;
+                c.workload.duration_ns = 150_000_000;
+                c.cluster.boards = 3;
+                c.cluster.placement = PlacementKind::LocalityAffine;
+            },
+        },
+    ]
+}
+
+fn run(s: &Scenario) -> ClusterReport {
+    let mut cfg = SimConfig::default();
+    (s.tweak)(&mut cfg);
+    cfg.validate().expect("scenario config must validate");
+    serve_cluster(&cfg, s.kind, 2)
+        .unwrap_or_else(|e| panic!("scenario {} failed: {e}", s.name))
+}
+
+#[test]
+fn named_scenarios_replay_bit_identically() {
+    for s in scenarios() {
+        let a = run(&s).to_json().to_string_pretty();
+        let b = run(&s).to_json().to_string_pretty();
+        assert_eq!(a, b, "scenario {} not bit-reproducible", s.name);
+        let json = psoc_dma::util::json::Json::parse(&a).unwrap();
+        assert!(
+            json.get("completed").as_u64().unwrap() > 0,
+            "scenario {} served nothing:\n{a}",
+            s.name
+        );
+    }
+}
+
+#[test]
+fn frame_ledger_balances_in_every_scenario() {
+    for s in scenarios() {
+        let rep = run(&s);
+        assert_cluster_ledger(&rep, s.name);
+    }
+}
+
+/// The board-failure contract: the dead board is flagged, its surviving
+/// work is either retried elsewhere or counted as `failed_over`, and the
+/// whole thing replays bit-identically (the failover retry draws come
+/// from a dedicated `Pcg32` stream keyed off `cluster.seed`).
+#[test]
+fn board_failure_is_deterministic_and_fully_accounted() {
+    let s = scenarios().into_iter().find(|s| s.name.starts_with("board-failure")).unwrap();
+    let a = run(&s);
+    let b = run(&s);
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "board failure run not bit-reproducible"
+    );
+    assert!(a.boards[1].failed, "fail_board 1 not marked failed");
+    assert_eq!(a.boards.iter().filter(|bo| bo.failed).count(), 1);
+    assert!(
+        a.retried + a.failed_over > 0,
+        "mid-run failure left no trace: retried {} failed_over {}",
+        a.retried,
+        a.failed_over
+    );
+    assert_cluster_ledger(&a, "board-failure");
+
+    // retry = 0 is the degenerate contract: every abandoned frame is a
+    // failover loss, none re-appear on survivors.
+    let mut cfg = SimConfig::default();
+    (s.tweak)(&mut cfg);
+    cfg.cluster.failover_retry = 0.0;
+    let none = serve_cluster(&cfg, s.kind, 1).unwrap();
+    assert_eq!(none.retried, 0);
+    assert_cluster_ledger(&none, "board-failure-retry-0");
+}
+
+/// Spill and steal each actually move frames off the saturated home
+/// board (the skewed scenarios are tuned so the consistent-hash home of
+/// the heavy tenant overloads while capacity idles elsewhere).
+#[test]
+fn spill_and_steal_relieve_the_saturated_home_board() {
+    let spill = run(&scenarios().into_iter().find(|s| s.name.starts_with("spill")).unwrap());
+    assert!(spill.spilled > 0, "spill scenario never spilled");
+    assert_eq!(spill.stolen, 0, "steal disabled but frames were stolen");
+    assert_cluster_ledger(&spill, "spill");
+
+    let steal = run(&scenarios().into_iter().find(|s| s.name.starts_with("steal")).unwrap());
+    assert!(steal.stolen > 0, "steal scenario never stole");
+    assert_eq!(steal.spilled, 0, "spill disabled but frames were spilled");
+    assert_cluster_ledger(&steal, "steal");
+}
+
+/// The tentpole acceptance gate: on a heterogeneous 4-board fleet under
+/// skewed tenants, capacity-aware least-loaded placement attains more
+/// SLO than capacity-blind consistent hashing at the same offered load.
+/// Spill/steal are disabled so the comparison isolates placement.
+#[test]
+fn least_loaded_beats_consistent_hash_on_heterogeneous_fleet() {
+    let mut cfg = SimConfig::default();
+    cfg.workload.tenants = 8;
+    cfg.workload.skew = 2.0;
+    cfg.workload.duration_ns = 200_000_000;
+    cfg.cluster.boards = 4;
+    cfg.cluster.profiles = vec![
+        BoardKind::Zynq7000,
+        BoardKind::PynqZ2,
+        BoardKind::ZynqNet,
+        BoardKind::Ultrascale,
+    ];
+    cfg.cluster.spill = false;
+    cfg.cluster.steal = false;
+    let rows = cluster_sweep(
+        &cfg,
+        DriverKind::KernelIrq,
+        &[4],
+        &[PlacementKind::ConsistentHash, PlacementKind::LeastLoaded],
+        &[1.2],
+        2,
+    )
+    .unwrap();
+    let slo = |p: PlacementKind| -> f64 {
+        rows.iter().find(|r| r.placement == p).unwrap().report.slo_attainment()
+    };
+    let ch = slo(PlacementKind::ConsistentHash);
+    let ll = slo(PlacementKind::LeastLoaded);
+    assert!(
+        ll > ch,
+        "least-loaded ({ll:.4}) must beat consistent hashing ({ch:.4}) under skewed load"
+    );
+}
+
+/// Cluster sweep rows are identical for any worker count: boards shard
+/// across threads inside a cell, cells shard across the grid, and both
+/// layers merge in deterministic order.
+#[test]
+fn cluster_sweep_serial_and_sharded_rows_identical() {
+    let mut cfg = SimConfig::default();
+    cfg.workload.tenants = 3;
+    cfg.workload.duration_ns = 80_000_000;
+    cfg.cluster.boards = 3;
+    cfg.cluster.fail_at_ns = 30_000_000;
+    cfg.cluster.fail_board = 0;
+    let go = |workers| {
+        cluster_sweep(
+            &cfg,
+            DriverKind::KernelIrq,
+            &[3],
+            &[PlacementKind::LeastLoaded, PlacementKind::LocalityAffine],
+            &[0.6, 1.3],
+            workers,
+        )
+        .unwrap()
+        .iter()
+        .map(|r| r.report.to_json().to_string_compact())
+        .collect::<Vec<_>>()
+    };
+    assert_eq!(go(1), go(4), "cluster sweep rows depend on worker count");
+
+    // Worker invariance of a single cluster run as well (boards shard
+    // across threads inside serve_cluster).
+    let one = serve_cluster(&cfg, DriverKind::KernelIrq, 1).unwrap();
+    let four = serve_cluster(&cfg, DriverKind::KernelIrq, 4).unwrap();
+    assert_eq!(
+        one.to_json().to_string_pretty(),
+        four.to_json().to_string_pretty(),
+        "serve_cluster depends on worker count"
+    );
+}
+
+/// Property test: the cluster-wide frame ledger closes under random
+/// fleet shapes, placements, spill/steal mixes and failure schedules.
+#[test]
+fn cluster_ledger_identity_holds_under_random_configs() {
+    for case in 0u64..12 {
+        let mut rng = Pcg32::with_stream(0xF1EE7, case);
+        let mut cfg = SimConfig::default();
+        cfg.workload.tenants = rng.range_u64(1, 5);
+        cfg.workload.offered_fps = 60.0 + rng.range_u64(0, 340) as f64;
+        cfg.workload.skew = 1.0 + rng.range_u64(0, 3) as f64;
+        cfg.workload.duration_ns = 50_000_000 + rng.range_u64(0, 50) * 1_000_000;
+        cfg.cluster.boards = rng.range_u64(1, 4);
+        cfg.cluster.placement =
+            PlacementKind::ALL[rng.range_u64(0, 2) as usize];
+        cfg.cluster.spill = rng.chance(0.5);
+        cfg.cluster.steal = rng.chance(0.5);
+        if rng.chance(0.3) {
+            cfg.cluster.profiles = vec![BoardKind::Zynq7000, BoardKind::Ultrascale];
+        }
+        if cfg.cluster.boards >= 2 && rng.chance(0.5) {
+            cfg.cluster.fail_at_ns = 10_000_000 + rng.range_u64(0, 30) * 1_000_000;
+            cfg.cluster.fail_board = rng.range_u64(0, cfg.cluster.boards - 1);
+            cfg.cluster.failover_retry = [0.0, 0.5, 1.0][rng.range_u64(0, 2) as usize];
+        }
+        cfg.validate().unwrap_or_else(|e| panic!("case {case}: invalid config: {e}"));
+        let rep = serve_cluster(&cfg, DriverKind::KernelIrq, 2)
+            .unwrap_or_else(|e| panic!("case {case} failed: {e}"));
+        assert_cluster_ledger(&rep, &format!("random case {case}"));
+        assert_eq!(rep.boards.len(), cfg.cluster.boards as usize);
+    }
+}
