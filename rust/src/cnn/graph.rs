@@ -1,0 +1,502 @@
+//! Layer-graph model descriptions: typed conv/pool/fire/concat nodes
+//! lowered onto the existing [`LayerDesc`]/[`NetDesc`] machinery.
+//!
+//! The two hardcoded nets (roshambo, vgg19) are straight-line chains; the
+//! related work the model zoo draws from is not — SqueezeNet-style fire
+//! modules (ZynqNet) branch a 1×1 squeeze into parallel 1×1 and 3×3
+//! expands whose outputs concatenate channel-wise. A [`ModelGraph`] keeps
+//! the *typed* structure (what the architect wrote), and [`ModelGraph::lower`]
+//! flattens it into the sequential job list NullHop actually executes:
+//! one accelerator pass per conv, with [`InputSource`] recording where
+//! each pass's input map really comes from (previous pass, an earlier
+//! pass, or a channel concat of two passes — the concat itself is free:
+//! the two expand streams land in disjoint channel ranges of the same
+//! PS buffer).
+//!
+//! The lowered form carries the per-layer byte + MAC ledger the
+//! co-scheduling coordinator exploits: weight prefetch needs per-layer
+//! weight bytes, fusion needs intermediate-map sizes and consumer
+//! counts, adaptive driver selection needs per-layer packet sizes.
+
+use crate::cnn::layer::{LayerDesc, NetDesc};
+use crate::config::SimConfig;
+
+/// Where a lowered layer's input feature map comes from.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum InputSource {
+    /// The sensor frame (only valid for the first lowered layer).
+    Frame,
+    /// Output of an earlier lowered layer.
+    Layer(usize),
+    /// Channel-wise concat of two earlier outputs with equal spatial
+    /// dims (a fire module's expand pair).
+    Concat(usize, usize),
+}
+
+/// One typed node of a model graph.
+#[derive(Clone, Copy, Debug)]
+pub enum NodeKind {
+    /// Conv + ReLU ('same' padding) with an optional fused 2×2/stride-2
+    /// max-pool on the output stream.
+    Conv { k: usize, out_c: usize, pool: bool },
+    /// SqueezeNet fire module: 1×1 squeeze to `squeeze` channels, then
+    /// parallel 1×1 (`expand1`) and 3×3 (`expand3`) expands over the
+    /// squeeze output, concatenated channel-wise. `pool` applies a 2×2
+    /// max-pool to both expand streams (keeping the concat square).
+    Fire { squeeze: usize, expand1: usize, expand3: usize, pool: bool },
+}
+
+/// A named node plus its sparsity estimates (same semantics as
+/// [`LayerDesc::sparsity_in`]/`sparsity_out`).
+#[derive(Clone, Copy, Debug)]
+pub struct GraphNode {
+    pub name: &'static str,
+    pub kind: NodeKind,
+    pub sparsity_in: f64,
+    pub sparsity_out: f64,
+}
+
+/// A whole model as its architect wrote it: input geometry, typed nodes,
+/// and the PS-side classifier head.
+#[derive(Clone, Debug)]
+pub struct ModelGraph {
+    pub name: &'static str,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub nodes: Vec<GraphNode>,
+    /// FC head output width (classes); `fc_in` is derived by lowering.
+    pub fc_out: usize,
+}
+
+/// One NullHop pass of the lowered schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct LoweredLayer {
+    pub desc: LayerDesc,
+    pub input: InputSource,
+    /// Index of the graph node this pass came from.
+    pub node: usize,
+    /// Sub-layer role within the node ("" for a plain conv).
+    pub part: &'static str,
+}
+
+impl LoweredLayer {
+    /// Display name: the node name, suffixed with the fire sub-layer
+    /// role where one exists (`fire2/squeeze`).
+    pub fn full_name(&self) -> String {
+        if self.part.is_empty() {
+            self.desc.name.to_string()
+        } else {
+            format!("{}/{}", self.desc.name, self.part)
+        }
+    }
+}
+
+/// One row of the per-layer ledger.
+#[derive(Clone, Debug)]
+pub struct LayerLedger {
+    pub name: String,
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+    pub weight_bytes: u64,
+    pub macs: u64,
+}
+
+/// The sequential NullHop schedule a graph lowers to.
+#[derive(Clone, Debug)]
+pub struct LoweredModel {
+    pub name: &'static str,
+    pub layers: Vec<LoweredLayer>,
+    /// What feeds the FC head (the last pass, or the final concat).
+    pub head: InputSource,
+    pub fc_in: usize,
+    pub fc_out: usize,
+}
+
+impl ModelGraph {
+    /// Flatten the graph into NullHop passes. Conv nodes lower 1:1; fire
+    /// nodes lower to three passes (squeeze, expand1, expand3) with the
+    /// expands both reading the squeeze output and concatenating into
+    /// the node's output.
+    pub fn lower(&self) -> LoweredModel {
+        let (mut h, mut w, mut c) = (self.in_h, self.in_w, self.in_c);
+        let mut src = InputSource::Frame;
+        let mut layers: Vec<LoweredLayer> = Vec::new();
+        for (ni, node) in self.nodes.iter().enumerate() {
+            match node.kind {
+                NodeKind::Conv { k, out_c, pool } => {
+                    let desc = LayerDesc {
+                        name: node.name,
+                        in_h: h,
+                        in_w: w,
+                        in_c: c,
+                        out_c,
+                        k,
+                        same_pad: true,
+                        pool,
+                        sparsity_in: node.sparsity_in,
+                        sparsity_out: node.sparsity_out,
+                    };
+                    layers.push(LoweredLayer { desc, input: src, node: ni, part: "" });
+                    (h, w, c) = (desc.out_h(), desc.out_w(), out_c);
+                    src = InputSource::Layer(layers.len() - 1);
+                }
+                NodeKind::Fire { squeeze, expand1, expand3, pool } => {
+                    let sq = LayerDesc {
+                        name: node.name,
+                        in_h: h,
+                        in_w: w,
+                        in_c: c,
+                        out_c: squeeze,
+                        k: 1,
+                        same_pad: true,
+                        pool: false,
+                        sparsity_in: node.sparsity_in,
+                        sparsity_out: node.sparsity_out,
+                    };
+                    layers.push(LoweredLayer { desc: sq, input: src, node: ni, part: "squeeze" });
+                    let sq_idx = layers.len() - 1;
+                    let expand = |k: usize, out_c: usize| LayerDesc {
+                        name: node.name,
+                        in_h: h,
+                        in_w: w,
+                        in_c: squeeze,
+                        out_c,
+                        k,
+                        same_pad: true,
+                        pool,
+                        sparsity_in: node.sparsity_out,
+                        sparsity_out: node.sparsity_out,
+                    };
+                    let e1 = expand(1, expand1);
+                    layers.push(LoweredLayer {
+                        desc: e1,
+                        input: InputSource::Layer(sq_idx),
+                        node: ni,
+                        part: "expand1",
+                    });
+                    let e1_idx = layers.len() - 1;
+                    let e3 = expand(3, expand3);
+                    layers.push(LoweredLayer {
+                        desc: e3,
+                        input: InputSource::Layer(sq_idx),
+                        node: ni,
+                        part: "expand3",
+                    });
+                    let e3_idx = layers.len() - 1;
+                    (h, w, c) = (e3.out_h(), e3.out_w(), expand1 + expand3);
+                    src = InputSource::Concat(e1_idx, e3_idx);
+                }
+            }
+        }
+        LoweredModel {
+            name: self.name,
+            layers,
+            head: src,
+            fc_in: h * w * c,
+            fc_out: self.fc_out,
+        }
+    }
+}
+
+impl LoweredModel {
+    /// Wrap an existing straight-line [`NetDesc`] (roshambo, vgg19) so
+    /// the chain nets and the graph nets share one model-zoo interface.
+    pub fn from_net(net: &NetDesc) -> LoweredModel {
+        let layers = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, &desc)| LoweredLayer {
+                desc,
+                input: if i == 0 { InputSource::Frame } else { InputSource::Layer(i - 1) },
+                node: i,
+                part: "",
+            })
+            .collect::<Vec<_>>();
+        let head = InputSource::Layer(layers.len().saturating_sub(1));
+        LoweredModel { name: net.name, layers, head, fc_in: net.fc_in, fc_out: net.fc_out }
+    }
+
+    /// The straight-line [`NetDesc`] view, when the schedule has no
+    /// branches (every pass reads its predecessor). Branching models
+    /// (fire modules) return `None` — their validation goes through
+    /// [`LoweredModel::check_chain`] instead.
+    pub fn to_net(&self) -> Option<NetDesc> {
+        let sequential = self.layers.iter().enumerate().all(|(i, l)| match l.input {
+            InputSource::Frame => i == 0,
+            InputSource::Layer(j) => j + 1 == i,
+            InputSource::Concat(..) => false,
+        });
+        let head_ok = matches!(self.head, InputSource::Layer(j) if j + 1 == self.layers.len());
+        if !sequential || !head_ok || self.layers.is_empty() {
+            return None;
+        }
+        Some(NetDesc {
+            name: self.name,
+            layers: self.layers.iter().map(|l| l.desc).collect(),
+            fc_in: self.fc_in,
+            fc_out: self.fc_out,
+        })
+    }
+
+    /// Output geometry `(h, w, c)` of one lowered layer.
+    fn out_dims(&self, i: usize) -> (usize, usize, usize) {
+        let d = &self.layers[i].desc;
+        (d.out_h(), d.out_w(), d.out_c)
+    }
+
+    /// Geometry `(h, w, c)` flowing out of an input source.
+    fn src_dims(&self, s: InputSource) -> Option<(usize, usize, usize)> {
+        match s {
+            InputSource::Frame => None,
+            InputSource::Layer(j) => Some(self.out_dims(j)),
+            InputSource::Concat(a, b) => {
+                let (ah, aw, ac) = self.out_dims(a);
+                let (bh, bw, bc) = self.out_dims(b);
+                if (ah, aw) != (bh, bw) {
+                    return Some((usize::MAX, usize::MAX, 0)); // forced mismatch
+                }
+                Some((ah, aw, ac + bc))
+            }
+        }
+    }
+
+    /// Branch-aware analogue of [`NetDesc::check_chain`]: every pass's
+    /// input geometry must match what its source actually produces
+    /// (including concat channel sums), sources must strictly precede
+    /// their consumers, and the FC head must see `fc_in` elements.
+    pub fn check_chain(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err("empty model".into());
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            match l.input {
+                InputSource::Frame => {
+                    if i != 0 {
+                        return Err(format!("{} reads the frame mid-model", l.full_name()));
+                    }
+                }
+                InputSource::Layer(j) if j >= i => {
+                    return Err(format!("{} reads a later layer {j}", l.full_name()));
+                }
+                InputSource::Concat(a, b) if a >= i || b >= i || a == b => {
+                    return Err(format!("{} has an invalid concat ({a}, {b})", l.full_name()));
+                }
+                _ => {}
+            }
+            if let Some((h, w, c)) = self.src_dims(l.input) {
+                if (h, w, c) != (l.desc.in_h, l.desc.in_w, l.desc.in_c) {
+                    return Err(format!(
+                        "{}({h}x{w}x{c}) does not feed {}({}x{}x{})",
+                        match l.input {
+                            InputSource::Concat(a, b) => format!(
+                                "concat({}, {})",
+                                self.layers[a].full_name(),
+                                self.layers[b].full_name()
+                            ),
+                            InputSource::Layer(j) => self.layers[j].full_name(),
+                            InputSource::Frame => "frame".to_string(),
+                        },
+                        l.full_name(),
+                        l.desc.in_h,
+                        l.desc.in_w,
+                        l.desc.in_c
+                    ));
+                }
+            }
+        }
+        let (h, w, c) = self
+            .src_dims(self.head)
+            .ok_or("model head cannot be the raw frame")?;
+        if h * w * c != self.fc_in {
+            return Err(format!(
+                "FC head expects {} inputs, model produces {h}x{w}x{c} = {}",
+                self.fc_in,
+                h * w * c
+            ));
+        }
+        Ok(())
+    }
+
+    /// How many consumers (later passes, plus the FC head) read layer
+    /// `i`'s output. Fusion may only skip an intermediate round-trip
+    /// when exactly one consumer exists — a fire squeeze output, read by
+    /// both expands, must still land in PS memory.
+    pub fn consumers(&self, i: usize) -> usize {
+        let uses = |s: InputSource| match s {
+            InputSource::Layer(j) => (j == i) as usize,
+            InputSource::Concat(a, b) => (a == i) as usize + (b == i) as usize,
+            InputSource::Frame => 0,
+        };
+        self.layers.iter().map(|l| uses(l.input)).sum::<usize>() + uses(self.head)
+    }
+
+    /// Per-layer byte + MAC ledger (estimate-based sparsities).
+    pub fn ledger(&self) -> Vec<LayerLedger> {
+        self.layers
+            .iter()
+            .map(|l| LayerLedger {
+                name: l.full_name(),
+                tx_bytes: l.desc.tx_bytes(),
+                rx_bytes: l.desc.rx_bytes(),
+                weight_bytes: l.desc.weight_bytes(),
+                macs: l.desc.macs(),
+            })
+            .collect()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.desc.macs()).sum()
+    }
+
+    pub fn total_tx_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.desc.tx_bytes()).sum()
+    }
+
+    pub fn total_rx_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.desc.rx_bytes()).sum()
+    }
+
+    /// Largest per-direction transfer any pass needs (bounce-buffer
+    /// sizing for the drivers).
+    pub fn max_transfer_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.desc.tx_bytes().max(l.desc.rx_bytes()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Sanity-check a config-independent property the sweep relies on:
+    /// per-layer timings derive purely from each pass's own descriptor.
+    pub fn timings(&self, cfg: &SimConfig) -> Vec<crate::accel::nullhop::LayerTiming> {
+        self.layers.iter().map(|l| l.desc.timing(cfg)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fire_graph() -> ModelGraph {
+        ModelGraph {
+            name: "fire-test",
+            in_h: 16,
+            in_w: 16,
+            in_c: 8,
+            nodes: vec![
+                GraphNode {
+                    name: "conv1",
+                    kind: NodeKind::Conv { k: 3, out_c: 16, pool: true },
+                    sparsity_in: 0.0,
+                    sparsity_out: 0.5,
+                },
+                GraphNode {
+                    name: "fire2",
+                    kind: NodeKind::Fire { squeeze: 4, expand1: 8, expand3: 8, pool: false },
+                    sparsity_in: 0.5,
+                    sparsity_out: 0.5,
+                },
+            ],
+            fc_out: 2,
+        }
+    }
+
+    #[test]
+    fn fire_lowers_to_three_passes_with_concat_head() {
+        let m = fire_graph().lower();
+        assert_eq!(m.layers.len(), 4); // conv1, squeeze, expand1, expand3
+        m.check_chain().unwrap();
+        assert_eq!(m.layers[1].full_name(), "fire2/squeeze");
+        assert_eq!(m.layers[2].input, InputSource::Layer(1));
+        assert_eq!(m.layers[3].input, InputSource::Layer(1));
+        assert_eq!(m.head, InputSource::Concat(2, 3));
+        // conv1 pools 16 -> 8; fire keeps 8x8, concat 8+8 channels.
+        assert_eq!(m.fc_in, 8 * 8 * 16);
+        // The squeeze output feeds both expands: two consumers.
+        assert_eq!(m.consumers(1), 2);
+        assert_eq!(m.consumers(2), 1);
+        // Branching models have no straight-line NetDesc view.
+        assert!(m.to_net().is_none());
+    }
+
+    #[test]
+    fn chain_graph_roundtrips_to_netdesc() {
+        let g = ModelGraph {
+            name: "chain",
+            in_h: 32,
+            in_w: 32,
+            in_c: 1,
+            nodes: vec![
+                GraphNode {
+                    name: "c1",
+                    kind: NodeKind::Conv { k: 3, out_c: 8, pool: true },
+                    sparsity_in: 0.0,
+                    sparsity_out: 0.5,
+                },
+                GraphNode {
+                    name: "c2",
+                    kind: NodeKind::Conv { k: 3, out_c: 16, pool: true },
+                    sparsity_in: 0.5,
+                    sparsity_out: 0.5,
+                },
+            ],
+            fc_out: 4,
+        };
+        let m = g.lower();
+        m.check_chain().unwrap();
+        let net = m.to_net().expect("pure chain");
+        net.check_chain().unwrap();
+        assert_eq!(net.fc_in, 8 * 8 * 16);
+        // from_net round-trips back to an equivalent lowered schedule.
+        let back = LoweredModel::from_net(&net);
+        back.check_chain().unwrap();
+        assert_eq!(back.total_macs(), m.total_macs());
+        assert_eq!(back.total_tx_bytes(), m.total_tx_bytes());
+    }
+
+    #[test]
+    fn odd_dimension_pooling_floors() {
+        let g = ModelGraph {
+            name: "odd",
+            in_h: 7,
+            in_w: 7,
+            in_c: 4,
+            nodes: vec![GraphNode {
+                name: "c1",
+                kind: NodeKind::Conv { k: 1, out_c: 8, pool: true },
+                sparsity_in: 0.0,
+                sparsity_out: 0.5,
+            }],
+            fc_out: 2,
+        };
+        let m = g.lower();
+        m.check_chain().unwrap();
+        // 7/2 floors to 3 — fc_in must follow the floored geometry.
+        assert_eq!(m.fc_in, 3 * 3 * 8);
+    }
+
+    #[test]
+    fn check_chain_rejects_geometry_breaks() {
+        let mut m = fire_graph().lower();
+        m.layers[2].desc.in_c = 99;
+        assert!(m.check_chain().is_err());
+        let mut m2 = fire_graph().lower();
+        m2.fc_in += 1;
+        assert!(m2.check_chain().is_err());
+    }
+
+    #[test]
+    fn ledger_matches_descriptor_accounting() {
+        let m = fire_graph().lower();
+        let ledger = m.ledger();
+        assert_eq!(ledger.len(), m.layers.len());
+        for (row, l) in ledger.iter().zip(&m.layers) {
+            assert_eq!(row.macs, l.desc.macs());
+            assert_eq!(row.tx_bytes, l.desc.tx_bytes());
+            assert!(row.weight_bytes < row.tx_bytes);
+        }
+        assert_eq!(ledger.iter().map(|r| r.macs).sum::<u64>(), m.total_macs());
+    }
+}

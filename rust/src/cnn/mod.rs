@@ -1,12 +1,17 @@
 //! CNN workload descriptions: layer geometry, byte counts on the AXI bus,
-//! NullHop's sparse feature-map encoding, and the two networks the paper
+//! NullHop's sparse feature-map encoding, the two networks the paper
 //! references (RoShamBo, which it measures, and VGG19, which it cites as
-//! the case that blocks the user-level polling driver).
+//! the case that blocks the user-level polling driver), plus the layer
+//! graph (`graph`) and the model zoo (`zoo`) of related-work
+//! architectures the co-scheduling coordinator sweeps.
 
 pub mod encoding;
+pub mod graph;
 pub mod layer;
 pub mod roshambo;
 pub mod vgg19;
+pub mod zoo;
 
 pub use encoding::{decode_i16, encode_i16, encoded_len, quantize_q88};
+pub use graph::{InputSource, LoweredModel, ModelGraph};
 pub use layer::{LayerDesc, NetDesc};

@@ -1,0 +1,265 @@
+//! The model zoo: concrete architectures from the related work, all
+//! expressed as [`ModelGraph`]s and lowered onto the NullHop schedule.
+//!
+//! * [`objdet7`] — the 7-layer INT8 object-detection stack from the
+//!   Zedboard HW/SW co-design (per-layer latencies published for both
+//!   the ARM-only and the FPGA-offloaded runs; wired below as the
+//!   validation target for the per-layer ledger);
+//! * [`zynqnet`] — a ZynqNet-style SqueezeNet: fire modules (1×1
+//!   squeeze + parallel 1×1/3×3 expands) with periodic pooling and a
+//!   1×1 classifier conv whose final pool exercises the odd-dimension
+//!   floor (7 → 3);
+//! * [`tinycls`] — the PYNQ-Z2 64×64 grayscale INT8 2-class classifier
+//!   (all-hardware inference, PS does control + transfer only).
+//!
+//! The zoo also wraps the two pre-existing chain nets (roshambo, vgg19)
+//! so every runner sweeps one [`LoweredModel`] interface.
+
+use crate::cnn::graph::{GraphNode, LoweredModel, ModelGraph, NodeKind};
+use crate::cnn::roshambo::roshambo;
+use crate::cnn::vgg19::vgg19;
+
+fn conv(name: &'static str, k: usize, out_c: usize, pool: bool, sp_in: f64) -> GraphNode {
+    GraphNode {
+        name,
+        kind: NodeKind::Conv { k, out_c, pool },
+        sparsity_in: sp_in,
+        sparsity_out: 0.5,
+    }
+}
+
+fn fire(name: &'static str, squeeze: usize, expand: usize, pool: bool) -> GraphNode {
+    GraphNode {
+        name,
+        kind: NodeKind::Fire { squeeze, expand1: expand, expand3: expand, pool },
+        sparsity_in: 0.5,
+        sparsity_out: 0.5,
+    }
+}
+
+/// The Zedboard object detector: seven conv layers, 224×224×3 input,
+/// 7×7×24 detection grid decoded on the PS.
+pub fn objdet7() -> LoweredModel {
+    ModelGraph {
+        name: "objdet7",
+        in_h: 224,
+        in_w: 224,
+        in_c: 3,
+        nodes: vec![
+            conv("l0", 3, 16, true, 0.0),
+            conv("l1", 3, 32, true, 0.5),
+            conv("l2", 3, 64, true, 0.5),
+            conv("l3", 3, 128, true, 0.5),
+            conv("l4", 3, 256, true, 0.5),
+            conv("l5", 3, 512, false, 0.5),
+            conv("l6", 1, 24, false, 0.5),
+        ],
+        fc_out: 24,
+    }
+    .lower()
+}
+
+/// ZynqNet-style SqueezeNet: conv head, eight fire modules, 1×1
+/// classifier conv with a final pool over the odd 7×7 grid (floor → 3).
+pub fn zynqnet() -> LoweredModel {
+    ModelGraph {
+        name: "zynqnet",
+        in_h: 224,
+        in_w: 224,
+        in_c: 3,
+        nodes: vec![
+            conv("conv1", 3, 64, true, 0.0),
+            fire("fire2", 16, 64, false),
+            fire("fire3", 16, 64, true),
+            fire("fire4", 32, 128, false),
+            fire("fire5", 32, 128, true),
+            fire("fire6", 48, 192, false),
+            fire("fire7", 48, 192, true),
+            fire("fire8", 64, 256, false),
+            fire("fire9", 64, 256, true),
+            conv("conv10", 1, 128, true, 0.5),
+        ],
+        fc_out: 1000,
+    }
+    .lower()
+}
+
+/// The PYNQ-Z2 classifier: 64×64 grayscale in, two classes out.
+pub fn tinycls() -> LoweredModel {
+    ModelGraph {
+        name: "tinycls",
+        in_h: 64,
+        in_w: 64,
+        in_c: 1,
+        nodes: vec![
+            conv("conv1", 3, 8, true, 0.0),
+            conv("conv2", 3, 16, true, 0.5),
+            conv("conv3", 3, 32, true, 0.5),
+            conv("conv4", 3, 32, true, 0.5),
+        ],
+        fc_out: 2,
+    }
+    .lower()
+}
+
+/// The wrapped RoShamBo chain net under its zoo lookup key.
+fn roshambo_model() -> LoweredModel {
+    let mut m = LoweredModel::from_net(&roshambo());
+    m.name = "roshambo";
+    m
+}
+
+/// Every swept zoo model, chain nets included, in sweep order.
+pub fn models() -> Vec<LoweredModel> {
+    vec![roshambo_model(), tinycls(), objdet7(), zynqnet()]
+}
+
+/// Resolve a model by name (`vgg19` resolves too, though the sweeps
+/// exclude it: its whole-layer payloads exceed the user-level
+/// AXI4-Stream limit by design — that is what the AB-VGG ablation
+/// demonstrates).
+pub fn model(name: &str) -> Option<LoweredModel> {
+    match name {
+        "roshambo" => Some(roshambo_model()),
+        "tinycls" => Some(tinycls()),
+        "objdet7" => Some(objdet7()),
+        "zynqnet" => Some(zynqnet()),
+        "vgg19" => {
+            let mut m = LoweredModel::from_net(&vgg19());
+            m.name = "vgg19";
+            Some(m)
+        }
+        _ => None,
+    }
+}
+
+/// One published per-layer measurement of the Zedboard object detector
+/// (ARM-only vs FPGA-offloaded latency, milliseconds).
+#[derive(Clone, Copy, Debug)]
+pub struct PublishedLayer {
+    pub name: &'static str,
+    pub arm_ms: f64,
+    pub fpga_ms: f64,
+}
+
+/// The published per-layer breakdown (2.07× end-to-end speedup).
+pub const OBJDET7_PUBLISHED: [PublishedLayer; 7] = [
+    PublishedLayer { name: "l0", arm_ms: 3049.0, fpga_ms: 1574.0 },
+    PublishedLayer { name: "l1", arm_ms: 7668.0, fpga_ms: 3585.0 },
+    PublishedLayer { name: "l2", arm_ms: 7556.0, fpga_ms: 3519.0 },
+    PublishedLayer { name: "l3", arm_ms: 7410.0, fpga_ms: 3488.0 },
+    PublishedLayer { name: "l4", arm_ms: 7164.0, fpga_ms: 3469.0 },
+    PublishedLayer { name: "l5", arm_ms: 6723.0, fpga_ms: 3475.0 },
+    PublishedLayer { name: "l6", arm_ms: 95.0, fpga_ms: 72.0 },
+];
+
+/// Calibrated latency model for the published HLS accelerator: a fixed
+/// per-layer overhead (configuration, weight load, pipeline drain) plus
+/// MACs at the sustained rate. Both constants are fitted from the
+/// published table itself (L1–L5 mean and L6), then validated against
+/// every layer — see `objdet7_ledger_reproduces_published_latencies`.
+pub const HLS_OVERHEAD_MS: f64 = 35.8;
+pub const HLS_MACS_PER_MS: f64 = 16_650.0;
+
+/// Predicted FPGA latency of one layer under the calibrated HLS model.
+pub fn hls_layer_ms(macs: u64) -> f64 {
+    HLS_OVERHEAD_MS + macs as f64 / HLS_MACS_PER_MS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_zoo_model_chains() {
+        for m in models() {
+            m.check_chain().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            assert!(m.total_macs() > 0);
+        }
+        // vgg19 wraps cleanly too, even though the sweeps exclude it.
+        model("vgg19").unwrap().check_chain().unwrap();
+    }
+
+    #[test]
+    fn model_lookup_resolves_names() {
+        for name in ["roshambo", "tinycls", "objdet7", "zynqnet", "vgg19"] {
+            assert_eq!(model(name).unwrap().name, name);
+        }
+        assert!(model("lenet").is_none());
+    }
+
+    #[test]
+    fn objdet7_geometry_matches_published_table() {
+        let m = objdet7();
+        assert_eq!(m.layers.len(), 7);
+        // The published spatial sizes: 224, 112, 56, 28, 14, 7, 7.
+        let sides: Vec<usize> = m.layers.iter().map(|l| l.desc.in_h).collect();
+        assert_eq!(sides, vec![224, 112, 56, 28, 14, 7, 7]);
+        let chans: Vec<usize> = m.layers.iter().map(|l| l.desc.out_c).collect();
+        assert_eq!(chans, vec![16, 32, 64, 128, 256, 512, 24]);
+        assert_eq!(m.fc_in, 7 * 7 * 24);
+    }
+
+    #[test]
+    fn objdet7_ledger_reproduces_published_latencies() {
+        // The acceptance target: the per-layer MAC ledger, pushed
+        // through the calibrated HLS latency model, lands within 20% of
+        // every published per-layer FPGA time and within 5% end-to-end.
+        let m = objdet7();
+        let ledger = m.ledger();
+        let mut total_pred = 0.0;
+        let mut total_pub = 0.0;
+        for (row, p) in ledger.iter().zip(OBJDET7_PUBLISHED.iter()) {
+            let pred = hls_layer_ms(row.macs);
+            let err = (pred - p.fpga_ms).abs() / p.fpga_ms;
+            assert!(
+                err < 0.20,
+                "{}: predicted {pred:.0} ms vs published {} ms ({:.0}% off)",
+                p.name,
+                p.fpga_ms,
+                err * 100.0
+            );
+            total_pred += pred;
+            total_pub += p.fpga_ms;
+        }
+        let total_err = (total_pred - total_pub).abs() / total_pub;
+        assert!(total_err < 0.05, "end-to-end {:.1}% off", total_err * 100.0);
+        // And the published end-to-end speedup the repo cites: 2.07×.
+        let arm: f64 = OBJDET7_PUBLISHED.iter().map(|p| p.arm_ms).sum();
+        let speedup = arm / total_pub;
+        assert!((speedup - 2.07).abs() < 0.01, "speedup {speedup:.3}");
+    }
+
+    #[test]
+    fn zynqnet_fire_stack_shape() {
+        let m = zynqnet();
+        // conv1 + 8 fires x 3 passes + conv10 = 26 passes.
+        assert_eq!(m.layers.len(), 26);
+        // Final pool floors the odd 7x7 grid to 3x3.
+        assert_eq!(m.fc_in, 3 * 3 * 128);
+        // Every squeeze output is read twice (both expands).
+        let squeezes: Vec<usize> = m
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.part == "squeeze")
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(squeezes.len(), 8);
+        for i in squeezes {
+            assert_eq!(m.consumers(i), 2, "squeeze {i}");
+        }
+    }
+
+    #[test]
+    fn tinycls_is_a_small_chain() {
+        let m = tinycls();
+        let net = m.to_net().expect("tinycls is sequential");
+        net.check_chain().unwrap();
+        assert_eq!(m.fc_in, 4 * 4 * 32);
+        assert_eq!(m.fc_out, 2);
+        // Small enough that every transfer is deep in the polling-wins
+        // regime (well under the paper's ~100 KB crossover).
+        assert!(m.max_transfer_bytes() < 100 * 1024);
+    }
+}

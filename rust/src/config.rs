@@ -11,6 +11,7 @@
 use std::path::Path;
 
 use crate::cluster::ClusterConfig;
+use crate::coordinator::model::ModelConfig;
 use crate::memory::path::MemoryConfig;
 use crate::sim::engine::CalendarKind;
 use crate::sim::fault::FaultConfig;
@@ -190,6 +191,11 @@ pub struct SimConfig {
     /// and the board-failure schedule. Only the `cluster`/`cluster-sweep`
     /// paths read it.
     pub cluster: ClusterConfig,
+    /// Per-layer co-scheduling knobs (see [`crate::coordinator::model`]):
+    /// cross-layer weight prefetch and adjacent-layer fusion. Defaults
+    /// off; only the `model-sweep` runner reads the block, so every
+    /// other experiment's timeline is untouched by it.
+    pub model: ModelConfig,
 }
 
 impl Default for SimConfig {
@@ -261,6 +267,7 @@ impl Default for SimConfig {
             workload: WorkloadConfig::default(),
             memory: MemoryConfig::none(),
             cluster: ClusterConfig::none(),
+            model: ModelConfig::none(),
         }
     }
 }
@@ -334,12 +341,16 @@ macro_rules! config_fields {
     (@set $self:ident, $field:ident, cluster, $val:ident, $k:ident) => {
         $self.$field.apply_json($val)?;
     };
+    (@set $self:ident, $field:ident, model, $val:ident, $k:ident) => {
+        $self.$field.apply_json($val)?;
+    };
     (@get $self:ident, $field:ident, f64) => { Json::num($self.$field) };
     (@get $self:ident, $field:ident, u64) => { Json::num($self.$field as f64) };
     (@get $self:ident, $field:ident, faults) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, workload) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, memory) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, cluster) => { $self.$field.to_json() };
+    (@get $self:ident, $field:ident, model) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, vec_u64) => {
         Json::Arr($self.$field.iter().map(|&x| Json::num(x as f64)).collect())
     };
@@ -398,6 +409,7 @@ config_fields! {
     workload: workload,
     memory: memory,
     cluster: cluster,
+    model: model,
 }
 
 impl SimConfig {
@@ -472,6 +484,7 @@ impl SimConfig {
         self.workload.validate()?;
         self.memory.validate()?;
         self.cluster.validate()?;
+        self.model.validate()?;
         Ok(())
     }
 }
@@ -666,6 +679,28 @@ mod tests {
         assert!(cfg.apply_json(&Json::parse(r#"{"cluster": {"bogus": 1}}"#).unwrap()).is_err());
         let mut cfg = SimConfig::default();
         cfg.cluster.boards = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn model_key_roundtrips_and_validates() {
+        let mut cfg = SimConfig::default();
+        assert!(!cfg.model.prefetch && !cfg.model.fusion, "co-scheduling must default off");
+        let j = r#"{"model": {"prefetch": true, "fusion": true, "fusion_max_bytes": 4096}}"#;
+        cfg.apply_json(&Json::parse(j).unwrap()).unwrap();
+        assert!(cfg.model.prefetch);
+        assert!(cfg.model.fusion);
+        assert_eq!(cfg.model.fusion_max_bytes, 4096);
+        cfg.validate().unwrap();
+        let json = cfg.to_json();
+        let mut cfg2 = SimConfig::default();
+        cfg2.apply_json(&json).unwrap();
+        assert_eq!(cfg, cfg2);
+        // Unknown nested key and out-of-range value both rejected.
+        let mut cfg = SimConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"model": {"bogus": 1}}"#).unwrap()).is_err());
+        let mut cfg = SimConfig::default();
+        cfg.model.fusion_max_bytes = 0;
         assert!(cfg.validate().is_err());
     }
 

@@ -108,7 +108,7 @@ impl MemoryMode {
         }
     }
 
-    fn apply(self, cfg: &mut SimConfig) {
+    pub(crate) fn apply(self, cfg: &mut SimConfig) {
         match self {
             // Copy-through is the config default; touch nothing so the
             // cell exercises the exact seed timeline.

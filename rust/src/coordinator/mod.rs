@@ -9,6 +9,10 @@
 //!   (Table I), the channel-count × pipeline-depth scaling grid, the
 //!   memory-path sweep (copy-through vs. zero-copy × ACP/HP, DESIGN.md
 //!   §12), and the ablations (buffering, partitioning, VGG19 blocking);
+//! * [`model`] — the per-layer co-scheduling runner over the model zoo:
+//!   adaptive per-layer driver selection, cross-layer weight prefetch,
+//!   and adjacent-layer fusion, swept as model × policy × memory mode
+//!   (DESIGN.md §14);
 //! * [`serve`] — the multi-tenant serving loop: workload generators →
 //!   admission → QoS policy → the split-phase frame pipeline, the
 //!   execution mode behind the `serve` CLI command (DESIGN.md §11);
@@ -20,10 +24,15 @@
 
 pub mod calibrate;
 pub mod experiments;
+pub mod model;
 pub mod pipeline;
 pub mod serve;
 pub mod sweeps;
 
+pub use model::{
+    model_plans, model_sweep, probe_pass, DriverPolicy, LayerCell, ModelConfig, ModelRow,
+    PassPlan,
+};
 pub use experiments::{
     acp_hp_crossover, loopback_sweep, memory_sweep, memory_sweep_sizes, scaling_sweep, table1,
     MemoryMode, MemoryRow, ScalingRow, SweepRow, Table1Row,

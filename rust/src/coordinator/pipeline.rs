@@ -166,7 +166,13 @@ impl FrameReport {
 /// per weight on the A9 at ~2 ops/cycle → ~1 weight/cycle @ 666 MHz).
 /// `pub(crate)`: the serving loop pays the same per-frame head cost.
 pub(crate) fn fc_cpu_cost(net: &NetDesc) -> Dur {
-    let weights = (net.fc_in * net.fc_out) as u64;
+    fc_cost(net.fc_in, net.fc_out)
+}
+
+/// Same head-cost model keyed by raw dimensions, for runners that
+/// execute a [`crate::cnn::LoweredModel`] rather than a [`NetDesc`].
+pub(crate) fn fc_cost(fc_in: usize, fc_out: usize) -> Dur {
+    let weights = (fc_in * fc_out) as u64;
     Dur((weights as f64 / 0.666).ceil() as u64)
 }
 

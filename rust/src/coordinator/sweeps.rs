@@ -27,7 +27,9 @@
 //! * **memory** — a copy-through/zero-copy/port grid of frame streams
 //!   (events/sec, schema 3);
 //! * **cluster** — one fixed multi-board fleet scenario routed with the
-//!   least-loaded balancer (events/sec, schema 4).
+//!   least-loaded balancer (events/sec, schema 4);
+//! * **model** — the zoo's object-detection net streamed per driver
+//!   policy on the copy-through path (events/sec, schema 5).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -47,9 +49,11 @@ use crate::system::System;
 use crate::util::json::Json;
 
 use crate::cnn::roshambo::roshambo;
+use crate::cnn::zoo;
 use crate::workload::{QosPolicyKind, ServeReport};
 
 use super::experiments::{memory_cell, scaling_cell, AblationRow, MemoryMode, ScalingRow, SweepRow};
+use super::model::{model_cell, DriverPolicy};
 use super::serve::serve;
 
 /// Deterministic per-cell seed: splitmix64 over (base, cell index).
@@ -394,6 +398,10 @@ pub struct BenchReport {
     /// placement), measured as simulator events/sec summed over boards
     /// (the regression gate's fifth scalar — schema 4).
     pub cluster: SweepStats,
+    /// Model co-scheduling leg: the zoo's object-detection net streamed
+    /// under every driver policy on the copy-through path (the
+    /// regression gate's sixth scalar — schema 5).
+    pub model: SweepStats,
 }
 
 /// Deep-calendar churn: `events` schedule/pop cycles over a ~1 ms
@@ -497,6 +505,22 @@ pub fn bench(cfg: &SimConfig, opts: BenchOptions) -> Result<BenchReport, DriverE
             wall: t0.elapsed(),
         }
     };
+    // Model co-scheduling leg: the heaviest zoo net (objdet7) streamed
+    // under each driver policy on the copy-through path. Deterministic
+    // cells, so only events/sec varies run to run.
+    let model_stats = {
+        let frames = if opts.quick { 2 } else { 6 };
+        let net = zoo::objdet7();
+        let mut events = 0u64;
+        let mut cells = 0usize;
+        let t0 = Instant::now();
+        for policy in DriverPolicy::ALL {
+            let row = model_cell(cfg, &net, policy, MemoryMode::CopyThrough, frames)?;
+            events += row.events;
+            cells += 1;
+        }
+        SweepStats { workers: 1, cells, events, wall: t0.elapsed() }
+    };
     Ok(BenchReport {
         quick: opts.quick,
         calendar,
@@ -504,6 +528,7 @@ pub fn bench(cfg: &SimConfig, opts: BenchOptions) -> Result<BenchReport, DriverE
         serve: serve_stats,
         memory: memory_stats,
         cluster: cluster_stats,
+        model: model_stats,
     })
 }
 
@@ -563,6 +588,12 @@ impl BenchReport {
         self.cluster.events_per_sec()
     }
 
+    /// Model co-scheduling leg events/sec (the sixth gated scalar,
+    /// schema 5).
+    pub fn model_events_per_sec(&self) -> f64 {
+        self.model.events_per_sec()
+    }
+
     pub fn to_json(&self) -> Json {
         let calendar = self
             .calendar
@@ -607,8 +638,14 @@ impl BenchReport {
             ("wall_ms", Json::num(self.cluster.wall.as_secs_f64() * 1e3)),
             ("events_per_sec", Json::num(self.cluster.events_per_sec())),
         ]);
+        let model = Json::obj(vec![
+            ("cells", Json::num(self.model.cells as f64)),
+            ("events", Json::num(self.model.events as f64)),
+            ("wall_ms", Json::num(self.model.wall.as_secs_f64() * 1e3)),
+            ("events_per_sec", Json::num(self.model.events_per_sec())),
+        ]);
         Json::obj(vec![
-            ("schema", Json::num(4.0)),
+            ("schema", Json::num(5.0)),
             ("quick", Json::Bool(self.quick)),
             ("calendar", Json::Arr(calendar)),
             ("wheel_speedup_over_heap", Json::num(self.wheel_speedup_over_heap())),
@@ -617,6 +654,7 @@ impl BenchReport {
             ("serve", serve),
             ("memory", memory),
             ("cluster", cluster),
+            ("model", model),
         ])
     }
 
@@ -674,6 +712,13 @@ impl BenchReport {
             .as_f64()
             .unwrap_or(0.0);
         check("cluster/events", self.cluster_events_per_sec(), base_cluster);
+        // And for pre-schema-5 baselines and the model leg.
+        let base_model = baseline
+            .get("model")
+            .get("events_per_sec")
+            .as_f64()
+            .unwrap_or(0.0);
+        check("model/events", self.model_events_per_sec(), base_model);
         regressions
     }
 }
@@ -760,15 +805,17 @@ mod tests {
         assert!(rep.serve_events_per_sec() > 0.0);
         assert!(rep.memory_events_per_sec() > 0.0);
         assert!(rep.cluster_events_per_sec() > 0.0);
+        assert!(rep.model_events_per_sec() > 0.0);
         let json = rep.to_json();
-        assert_eq!(json.get("schema").as_u64(), Some(4));
+        assert_eq!(json.get("schema").as_u64(), Some(5));
         assert_eq!(json.get("calendar").as_arr().unwrap().len(), 2);
         assert!(json.get("serve").get("events").as_u64().unwrap() > 0);
         assert!(json.get("memory").get("events").as_u64().unwrap() > 0);
         assert!(json.get("cluster").get("events").as_u64().unwrap() > 0);
+        assert!(json.get("model").get("events").as_u64().unwrap() > 0);
         // A report never regresses against itself.
         assert!(rep.check_against(&json, 0.2).is_empty());
-        // A 10x-faster fake baseline must flag all five metrics.
+        // A 10x-faster fake baseline must flag all six metrics.
         let mut fake = rep.clone();
         for c in &mut fake.calendar {
             c.wall = Duration::from_nanos((c.wall.as_nanos() as u64 / 10).max(1));
@@ -781,16 +828,18 @@ mod tests {
             Duration::from_nanos((fake.memory.wall.as_nanos() as u64 / 10).max(1));
         fake.cluster.wall =
             Duration::from_nanos((fake.cluster.wall.as_nanos() as u64 / 10).max(1));
+        fake.model.wall = Duration::from_nanos((fake.model.wall.as_nanos() as u64 / 10).max(1));
         let flagged = rep.check_against(&fake.to_json(), 0.2);
-        assert_eq!(flagged.len(), 5, "{flagged:?}");
-        // Older-schema baselines (no serve / memory / cluster key)
-        // self-skip the legs they predate.
+        assert_eq!(flagged.len(), 6, "{flagged:?}");
+        // Older-schema baselines (no serve / memory / cluster / model
+        // key) self-skip the legs they predate.
         let old = Json::parse(
             &json
                 .to_string_compact()
                 .replace("\"serve\"", "\"serve_unused\"")
                 .replace("\"memory\"", "\"memory_unused\"")
-                .replace("\"cluster\"", "\"cluster_unused\""),
+                .replace("\"cluster\"", "\"cluster_unused\"")
+                .replace("\"model\"", "\"model_unused\""),
         );
         if let Ok(old) = old {
             assert!(rep.check_against(&old, 0.2).is_empty());

@@ -247,6 +247,10 @@ pub struct Driver {
     /// pay a doorbell trigger. Cleared by fault recovery and by a shape
     /// change, both of which force a re-arm.
     pub(crate) armed: Option<(u64, u64)>,
+    /// TX byte count already staged into the bounce buffer by
+    /// [`Driver::prestage`], consumed by the next split-phase submit of
+    /// the same size (which then skips its own staging copy).
+    pub(crate) prestaged: Option<u64>,
 }
 
 impl Driver {
@@ -304,7 +308,14 @@ impl Driver {
             tx.push(cma.alloc(buf_len)?);
             rx.push(cma.alloc(buf_len)?);
         }
-        Ok(Driver { cfg, port, bufs: BounceBufs { tx, rx }, buf_len, armed: None })
+        Ok(Driver {
+            cfg,
+            port,
+            bufs: BounceBufs { tx, rx },
+            buf_len,
+            armed: None,
+            prestaged: None,
+        })
     }
 
     /// Release the bounce buffers back to the CMA pool.
@@ -356,6 +367,31 @@ impl Driver {
     ) -> Result<SubmitToken, DriverError> {
         assert!(tx_bytes > 0, "submit with no TX payload");
         scheme_for(self.cfg.kind).submit(self, sys, tx_bytes, rx_bytes)
+    }
+
+    /// Software double-buffering of the *next* transfer's staging copy:
+    /// stage `tx_bytes` into the TX bounce buffer now, so the next
+    /// split-phase [`Driver::submit`] of the same size skips its copy.
+    ///
+    /// Called between `submit(N)` and `complete(N)` — the copy's CPU
+    /// time then runs while the engine drains frame N, which is exactly
+    /// the overlap the §III.A double-buffer scheme buys *within* one
+    /// payload, lifted to adjacent layers. Only the user-level
+    /// copy-through drivers have a staging copy to hide: the kernel
+    /// driver copies inside the syscall (unobservable from here) and
+    /// zero-copy paths have no staging copy at all, so for those this is
+    /// a no-op. Returns whether a copy was actually performed.
+    pub fn prestage(&mut self, sys: &mut System, tx_bytes: u64) -> bool {
+        let copy_through = matches!(
+            self.cfg.kind,
+            DriverKind::UserPolling | DriverKind::UserScheduled
+        );
+        if !copy_through || sys.cfg.memory.is_zero_copy() || tx_bytes == 0 {
+            return false;
+        }
+        sys.cpu_copy(tx_bytes, crate::memory::copy::CopyKind::UserUncached);
+        self.prestaged = Some(tx_bytes);
+        true
     }
 
     /// Split-phase completion: wait for both directions of a prior
@@ -435,6 +471,33 @@ mod tests {
         let (mut sys, _cma, mut drv) = setup(cfg, 16 << 20);
         let r = drv.transfer(&mut sys, 9 << 20, 9 << 20).unwrap();
         assert_eq!(r.tx_bytes, 9 << 20);
+    }
+
+    #[test]
+    fn prestage_moves_the_staging_copy_out_of_submit() {
+        let cfg = DriverConfig::table1(DriverKind::UserPolling);
+        let submit_time = |prestage: Option<u64>| {
+            let (mut sys, mut cma, mut drv) = setup(cfg, 1 << 20);
+            if let Some(b) = prestage {
+                assert!(drv.prestage(&mut sys, b));
+            }
+            let t0 = sys.now();
+            let tok = drv.submit(&mut sys, 1 << 20, 1 << 20).unwrap();
+            let dt = sys.now().since(t0);
+            drv.complete(&mut sys, tok).unwrap();
+            drv.release(&mut cma);
+            dt
+        };
+        let plain = submit_time(None);
+        let prestaged = submit_time(Some(1 << 20));
+        assert!(prestaged < plain, "prestaged submit must skip its copy");
+        // A stale prestage of the wrong size is discarded, not reused.
+        let stale = submit_time(Some(1 << 10));
+        assert_eq!(stale, plain);
+        // Kernel drivers copy inside the syscall: nothing to prestage.
+        let (mut sys, _cma, mut drv) =
+            setup(DriverConfig::table1(DriverKind::KernelIrq), 1 << 20);
+        assert!(!drv.prestage(&mut sys, 1 << 20));
     }
 
     #[test]

@@ -120,8 +120,13 @@ pub(super) fn submit(
     let rx_buf = drv.rx_buf(0);
 
     // Driver bookkeeping + staging copy into the uncached bounce buffer.
+    // A prestaged payload of exactly this size already sits in the
+    // buffer ([`Driver::prestage`]) and the copy is skipped; any other
+    // prestage residue is stale and discarded.
     sys.cpu_exec(Dur(sys.cfg.user_setup_ns));
-    sys.cpu_copy(tx_bytes, CopyKind::UserUncached);
+    if drv.prestaged.take() != Some(tx_bytes) {
+        sys.cpu_copy(tx_bytes, CopyKind::UserUncached);
+    }
 
     // RX must be armed before TX so the loop-back has somewhere to go.
     if rx_bytes > 0 {

@@ -19,6 +19,7 @@ use crate::coordinator::experiments::{
     fault_sweep, fig45_sizes, loopback_sweep, memory_sweep, memory_sweep_sizes, scaling_sweep,
     table1, table1_runtime,
 };
+use crate::coordinator::model::model_sweep;
 use crate::coordinator::serve::serve;
 use crate::coordinator::sweeps::{bench, serve_sweep, BenchOptions};
 use crate::drivers::DriverKind;
@@ -43,6 +44,7 @@ pub static REGISTRY: &[&dyn Experiment] = &[
     &Faults,
     &Serve,
     &MemorySweep,
+    &ModelSweep,
     &ServeSweep,
     &Cluster,
     &ClusterSweep,
@@ -465,6 +467,40 @@ impl Experiment for MemorySweep {
         Ok(ExperimentOutput {
             text: report::memory_sweep_text(&rows),
             csv: vec![("memory_sweep.csv".into(), report::memory_sweep_csv(&rows))],
+        })
+    }
+}
+
+/// Model-zoo co-scheduling sweep: every zoo architecture × driver
+/// policy (static polling/kernel + per-layer adaptive) × memory path.
+/// The `model` config block (`prefetch`, `fusion`) shapes the per-layer
+/// schedule; defaults-off keeps the static copy-through column
+/// bit-identical to the classic frame pipeline.
+pub struct ModelSweep;
+impl Experiment for ModelSweep {
+    fn name(&self) -> &'static str {
+        "model-sweep"
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        &["model_sweep", "model", "models"]
+    }
+    fn about(&self) -> &'static str {
+        "model zoo x driver policy x memory path"
+    }
+    fn flags(&self) -> &'static [&'static str] {
+        &["--quick", "--frames"]
+    }
+    fn in_all(&self) -> bool {
+        false
+    }
+    fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
+        let rows = model_sweep(cfg, opts.frames.max(1) as u64, opts.quick)?;
+        Ok(ExperimentOutput {
+            text: report::model_sweep_text(&rows),
+            csv: vec![
+                ("model_sweep.csv".into(), report::model_sweep_csv(&rows)),
+                ("model_layers.csv".into(), report::model_layers_csv(&rows)),
+            ],
         })
     }
 }

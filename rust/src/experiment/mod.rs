@@ -216,6 +216,8 @@ mod tests {
         assert_eq!(find("fig4").unwrap().name(), "fig4");
         assert_eq!(find("memory").unwrap().name(), "memory-sweep");
         assert_eq!(find("memory_sweep").unwrap().name(), "memory-sweep");
+        assert_eq!(find("model").unwrap().name(), "model-sweep");
+        assert_eq!(find("models").unwrap().name(), "model-sweep");
         assert_eq!(find("serve_sweep").unwrap().name(), "serve-sweep");
         assert_eq!(find("cluster_sweep").unwrap().name(), "cluster-sweep");
         assert!(find("no-such-command").is_none());

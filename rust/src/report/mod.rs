@@ -11,6 +11,7 @@ use crate::coordinator::experiments::{
     acp_hp_crossover, AblationRow, FaultCell, FaultSafetyDemo, MemoryMode, MemoryRow, ScalingRow,
     SweepRow, Table1Row, VggAblation,
 };
+use crate::coordinator::model::{DriverPolicy, ModelRow};
 use crate::coordinator::sweeps::{BenchReport, ServeSweepRow};
 use crate::drivers::DriverKind;
 use crate::workload::ServeReport;
@@ -663,6 +664,128 @@ pub fn memory_sweep_csv(rows: &[MemoryRow]) -> String {
     out
 }
 
+/// Short driver tag for the per-layer pick lines.
+fn driver_tag(kind: DriverKind) -> &'static str {
+    match kind {
+        DriverKind::UserPolling => "poll",
+        DriverKind::UserScheduled => "sched",
+        DriverKind::KernelIrq => "kern",
+        DriverKind::KernelMultiQueue => "mq",
+    }
+}
+
+/// The model co-scheduling table (`model-sweep` CLI command): per zoo
+/// model × driver policy, mean frame latency under each memory mode,
+/// then the adaptive policy's per-layer driver picks (copy-through
+/// rows) — the paper's §V packet-size dichotomy made visible layer by
+/// layer.
+pub fn model_sweep_text(rows: &[ModelRow]) -> String {
+    let mut models: Vec<&'static str> = Vec::new();
+    for r in rows {
+        if !models.contains(&r.model) {
+            models.push(r.model);
+        }
+    }
+    let frames = rows.first().map(|r| r.frames).unwrap_or(0);
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Model co-scheduling — frame latency ms ({frames} frames/cell)\n\
+         {:<10} {:<9} | {:>5} | {:>10} {:>10} {:>10}",
+        "model", "policy", "pass", "copy", "zero-hp", "zero-acp"
+    )
+    .unwrap();
+    writeln!(out, "{}", "-".repeat(64)).unwrap();
+    for &model in &models {
+        for policy in DriverPolicy::ALL {
+            let cell = |mode| {
+                rows.iter()
+                    .find(|r| r.model == model && r.policy == policy && r.mode == mode)
+            };
+            let ms = |mode| cell(mode).map(ModelRow::frame_ms).unwrap_or(f64::NAN);
+            let passes = cell(MemoryMode::CopyThrough).map(|r| r.passes).unwrap_or(0);
+            writeln!(
+                out,
+                "{:<10} {:<9} | {:>5} | {:>10.3} {:>10.3} {:>10.3}",
+                model,
+                policy.label(),
+                passes,
+                ms(MemoryMode::CopyThrough),
+                ms(MemoryMode::ZeroCopyHp),
+                ms(MemoryMode::ZeroCopyAcp),
+            )
+            .unwrap();
+        }
+    }
+    for &model in &models {
+        let Some(r) = rows.iter().find(|r| {
+            r.model == model
+                && r.policy == DriverPolicy::Adaptive
+                && r.mode == MemoryMode::CopyThrough
+        }) else {
+            continue;
+        };
+        let picks: Vec<String> = r
+            .per_layer
+            .iter()
+            .map(|c| format!("{}={}", c.name, driver_tag(c.driver)))
+            .collect();
+        writeln!(out, "{model} adaptive picks (copy): {}", picks.join(" ")).unwrap();
+    }
+    out
+}
+
+/// CSV twin of [`model_sweep_text`] (one row per cell).
+pub fn model_sweep_csv(rows: &[ModelRow]) -> String {
+    let mut out = String::from(
+        "model,policy,mode,frames,passes,frame_ms,total_ns,busy_ns,\
+         tx_bytes,rx_bytes,frames_per_sec,cpu_load\n",
+    );
+    for r in rows {
+        writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{},{},{},{}",
+            r.model,
+            r.policy.label(),
+            r.mode.label(),
+            r.frames,
+            r.passes,
+            r.frame_ms(),
+            r.total.ns(),
+            r.busy.ns(),
+            r.tx_bytes,
+            r.rx_bytes,
+            r.frames_per_sec(),
+            r.cpu_load(),
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Per-layer pick ledger of the adaptive rows: which driver each pass
+/// ran through and how long it took in context.
+pub fn model_layers_csv(rows: &[ModelRow]) -> String {
+    let mut out = String::from("model,mode,layer,driver,tx_bytes,rx_bytes,time_ns\n");
+    for r in rows.iter().filter(|r| r.policy == DriverPolicy::Adaptive) {
+        for c in &r.per_layer {
+            writeln!(
+                out,
+                "{},{},{},{},{},{},{}",
+                r.model,
+                r.mode.label(),
+                c.name,
+                driver_tag(c.driver),
+                c.tx_bytes,
+                c.rx_bytes,
+                c.time.ns(),
+            )
+            .unwrap();
+        }
+    }
+    out
+}
+
 /// The fleet table of one cluster run (`cluster` CLI command): per-board
 /// placement/utilization, then the cluster-wide tenant ledger (the
 /// `lost` column is `failed_over` — frames the board failure cost).
@@ -928,6 +1051,15 @@ pub fn bench_text(rep: &BenchReport) -> String {
         rep.cluster.events,
         rep.cluster.wall.as_secs_f64() * 1e3,
         rep.cluster_events_per_sec()
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "model: {} cells, {} events in {:.3} ms = {:.0} events/sec",
+        rep.model.cells,
+        rep.model.events,
+        rep.model.wall.as_secs_f64() * 1e3,
+        rep.model_events_per_sec()
     )
     .unwrap();
     out

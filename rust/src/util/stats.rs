@@ -61,6 +61,9 @@ pub struct LogHistogram {
     counts: [u64; 64],
     count: u64,
     sum: u64,
+    /// Smallest recorded value; `u64::MAX` sentinel while empty (keeps
+    /// the derived `PartialEq` exact for merge-vs-record equivalence).
+    min: u64,
     max: u64,
 }
 
@@ -68,7 +71,7 @@ pub struct LogHistogram {
 #[allow(clippy::derivable_impls)]
 impl Default for LogHistogram {
     fn default() -> Self {
-        LogHistogram { counts: [0; 64], count: 0, sum: 0, max: 0 }
+        LogHistogram { counts: [0; 64], count: 0, sum: 0, min: u64::MAX, max: 0 }
     }
 }
 
@@ -90,6 +93,7 @@ impl LogHistogram {
         self.counts[Self::bucket(v).min(63)] += 1;
         self.count += 1;
         self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
         self.max = self.max.max(v);
     }
 
@@ -101,6 +105,7 @@ impl LogHistogram {
         }
         self.count += other.count;
         self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
     }
 
@@ -123,6 +128,15 @@ impl LogHistogram {
         self.max
     }
 
+    /// Smallest recorded value (0 for an empty histogram).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
     /// Approximate percentile (`p` in `[0, 100]`), linearly interpolated
     /// inside the covering bucket. Empty histogram → `None`.
     pub fn percentile(&self, p: f64) -> Option<f64> {
@@ -141,9 +155,11 @@ impl LogHistogram {
                 let hi = if i == 0 { 1u64 } else { (1u64 << (i - 1)).saturating_mul(2) };
                 let within = ((rank - seen as f64) / c as f64).clamp(0.0, 1.0);
                 let v = lo as f64 + within * (hi - lo) as f64;
-                // Never report past the observed maximum (the top bucket
-                // is wide; the max is exact).
-                return Some(v.min(self.max as f64).max(0.0));
+                // Never report outside the observed range: buckets are
+                // wide (the covering bucket's lower bound can sit far
+                // below the smallest recorded value, and the top bucket
+                // far above the largest), while min/max are exact.
+                return Some(v.clamp(self.min as f64, self.max as f64));
             }
             seen += c;
         }
@@ -178,15 +194,24 @@ pub fn geomean(xs: &[f64]) -> f64 {
 }
 
 /// Format a byte count the way the paper's x-axes do (8B ... 6MB).
+/// Units are monotone in the value: everything ≥ 1 KB renders in KB,
+/// everything ≥ 1 MB in MB (exact multiples as integers, the rest with
+/// one decimal) — a non-multiple like 1536 is "1.5KB", never "1536B".
 pub fn fmt_bytes(b: u64) -> String {
-    if b >= 1024 * 1024 && b % (1024 * 1024) == 0 {
-        format!("{}MB", b / (1024 * 1024))
-    } else if b >= 1024 && b % 1024 == 0 {
-        format!("{}KB", b / 1024)
-    } else if b >= 1_000_000 {
-        format!("{:.1}MB", b as f64 / (1024.0 * 1024.0))
-    } else if b >= 10_000 {
-        format!("{:.1}KB", b as f64 / 1024.0)
+    const KB: u64 = 1024;
+    const MB: u64 = 1024 * 1024;
+    if b >= MB {
+        if b % MB == 0 {
+            format!("{}MB", b / MB)
+        } else {
+            format!("{:.1}MB", b as f64 / MB as f64)
+        }
+    } else if b >= KB {
+        if b % KB == 0 {
+            format!("{}KB", b / KB)
+        } else {
+            format!("{:.1}KB", b as f64 / KB as f64)
+        }
     } else {
         format!("{b}B")
     }
@@ -289,5 +314,65 @@ mod tests {
         assert_eq!(fmt_bytes(1024), "1KB");
         assert_eq!(fmt_bytes(65536), "64KB");
         assert_eq!(fmt_bytes(6 * 1024 * 1024), "6MB");
+    }
+
+    #[test]
+    fn fmt_bytes_units_are_monotone() {
+        // Regression: mid-range non-multiples used to fall through to
+        // the raw-bytes branch ("1536B" between "1KB" and "2KB").
+        assert_eq!(fmt_bytes(1536), "1.5KB");
+        assert_eq!(fmt_bytes(2500), "2.4KB");
+        assert_eq!(fmt_bytes(9999), "9.8KB");
+        assert_eq!(fmt_bytes(1_500_000), "1.4MB");
+        // Unit never regresses as the value grows.
+        let unit = |s: &str| {
+            if s.ends_with("MB") {
+                2
+            } else if s.ends_with("KB") {
+                1
+            } else {
+                0
+            }
+        };
+        let mut last = 0;
+        for b in [8u64, 1000, 1024, 1536, 9999, 10_001, 65_536, 1_500_000, 6 << 20] {
+            let u = unit(&fmt_bytes(b));
+            assert!(u >= last, "unit regressed at {b}: {}", fmt_bytes(b));
+            last = u;
+        }
+    }
+
+    #[test]
+    fn histogram_percentile_clamps_to_observed_range() {
+        // 1000 lands in bucket [512, 1024): p0 used to report 512, far
+        // below the smallest recorded value.
+        let mut h = LogHistogram::new();
+        h.record(1000);
+        h.record(1000);
+        assert_eq!(h.min(), 1000);
+        assert_eq!(h.percentile(0.0).unwrap(), 1000.0);
+        assert_eq!(h.percentile(100.0).unwrap(), 1000.0);
+        // Every percentile of a single-valued histogram is that value.
+        for p in [0.0, 25.0, 50.0, 99.9] {
+            assert_eq!(h.percentile(p).unwrap(), 1000.0);
+        }
+    }
+
+    #[test]
+    fn histogram_min_survives_merge() {
+        let mut a = LogHistogram::new();
+        assert_eq!(a.min(), 0, "empty histogram reports 0");
+        let mut b = LogHistogram::new();
+        a.record(5000);
+        b.record(700);
+        a.merge(&b);
+        assert_eq!(a.min(), 700);
+        assert_eq!(a.max(), 5000);
+        assert!(a.percentile(0.0).unwrap() >= 700.0);
+        // Merging an empty histogram must not disturb the sentinel.
+        let empty = LogHistogram::new();
+        let before = a.clone();
+        a.merge(&empty);
+        assert_eq!(a, before);
     }
 }

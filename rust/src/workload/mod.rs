@@ -90,6 +90,7 @@ pub struct WorkloadConfig {
     pub priorities: Vec<u64>,
     /// Priority aging: a waiting head frame gains one priority level per
     /// this much queueing delay, so low-priority tenants cannot starve.
+    /// 0 disables aging (strict priority, starvation possible).
     pub aging_ns: u64,
     /// CPU demand per admitted frame for the PS-side collection +
     /// normalization task — the "other important processes" of §V,
@@ -294,8 +295,8 @@ impl WorkloadConfig {
             "workload.priorities must be non-empty with every level <= 1e6"
         );
         anyhow::ensure!(
-            self.aging_ns >= 1 && self.aging_ns <= 1_000_000_000_000,
-            "workload.aging_ns must be in [1, 1e12]"
+            self.aging_ns <= 1_000_000_000_000,
+            "workload.aging_ns must be in [0, 1e12] (0 disables aging)"
         );
         anyhow::ensure!(
             self.normalize_ns <= 1_000_000_000,

@@ -74,6 +74,9 @@ pub struct QosState {
     deficits: Vec<u64>,
     /// DRR: round-robin cursor.
     cursor: usize,
+    /// DRR: whether the tenant under the cursor has already received its
+    /// per-visit credit (cleared whenever the cursor advances).
+    credited: bool,
 }
 
 impl QosState {
@@ -87,6 +90,7 @@ impl QosState {
             aging_ns: wl.aging_ns,
             deficits: vec![0; n],
             cursor: 0,
+            credited: false,
         }
     }
 
@@ -108,8 +112,13 @@ impl QosState {
                 let prios = std::mem::take(&mut self.priorities);
                 let picked = self.pick_min_by(adm, |f| {
                     // Clamped to 2^31 levels either way so the shifted
-                    // sort key below can never wrap.
-                    let waited_levels = ((now.since(f.arrived).ns() / aging).min(1 << 31)) as i64;
+                    // sort key below can never wrap. `aging_ns = 0`
+                    // disables aging entirely (strict priority).
+                    let waited_levels = if aging == 0 {
+                        0i64
+                    } else {
+                        ((now.since(f.arrived).ns() / aging).min(1 << 31)) as i64
+                    };
                     let base = prios[f.tenant].min(1 << 31) as i64;
                     let eff = base - waited_levels;
                     // Sort key is unsigned: shift the aged level into
@@ -148,24 +157,31 @@ impl QosState {
 
     fn pick_drr(&mut self, adm: &Admission) -> Option<usize> {
         let n = adm.num_tenants();
-        // Two full rotations always suffice: the first visit of any
-        // backlogged tenant credits it `quantum × weight ≥ 1`, enough to
-        // serve one frame.
+        // Two full rotations always suffice: visiting any backlogged
+        // tenant credits it `quantum × weight ≥ 1` on arrival, enough to
+        // serve one frame. The credit lands on the tenant *under* the
+        // cursor before its deficit is tested — crediting only after
+        // advancing would skip tenant 0 on the first rotation of a fresh
+        // state (cold-start bias).
         for _ in 0..(2 * n) {
             let t = self.cursor;
-            if adm.backlogged(t) && self.deficits[t] >= 1 {
-                self.deficits[t] -= 1;
-                return Some(t);
-            }
-            if !adm.backlogged(t) {
+            if adm.backlogged(t) {
+                if !self.credited {
+                    self.deficits[t] =
+                        self.deficits[t].saturating_add(self.quantum * self.weights[t]);
+                    self.credited = true;
+                }
+                if self.deficits[t] >= 1 {
+                    self.deficits[t] -= 1;
+                    return Some(t);
+                }
+            } else {
                 // An idle tenant must not bank credit (classic DRR reset
                 // — otherwise a returning tenant bursts unfairly).
                 self.deficits[t] = 0;
             }
             self.cursor = (self.cursor + 1) % n;
-            let next = self.cursor;
-            self.deficits[next] =
-                self.deficits[next].saturating_add(self.quantum * self.weights[next]);
+            self.credited = false;
         }
         // Work-conservation backstop (unreachable when the config is
         // validated: quantum and weights are all ≥ 1).
@@ -290,6 +306,44 @@ mod tests {
             adm.pop(t);
         }
         assert!(served[0] >= 4 && served[1] >= 4, "alternation lost: {served:?}");
+    }
+
+    #[test]
+    fn drr_first_pick_is_tenant_zero_on_fresh_state() {
+        // Cold-start regression: a fresh QosState must serve the lowest
+        // backlogged tenant first. The pre-fix code credited the tenant
+        // *after* advancing the cursor, so tenant 0's deficit was still 0
+        // when first tested and tenant 1 won the opening pick.
+        let (mut adm, mut qos) = setup(3, QosPolicyKind::Drr, vec![1, 1, 1], vec![0]);
+        for t in 0..3 {
+            offer(&mut adm, t, 0, 10, 10_000);
+        }
+        let mut order = Vec::new();
+        for _ in 0..3 {
+            let t = qos.pick(&adm, SimTime(50)).unwrap();
+            order.push(t);
+            adm.pop(t);
+        }
+        assert_eq!(order, vec![0, 1, 2], "cold-start rotation must begin at tenant 0");
+    }
+
+    #[test]
+    fn priority_with_zero_aging_is_strict_and_does_not_divide_by_zero() {
+        // aging_ns = 0 means "aging disabled": strict priority forever.
+        let mut wl = WorkloadConfig::default();
+        wl.tenants = 2;
+        wl.policy = QosPolicyKind::Priority;
+        wl.priorities = vec![0, 5];
+        wl.queue_cap = 64;
+        wl.shed = ShedPolicy::TailDrop;
+        wl.aging_ns = 0;
+        let mut adm = Admission::new(&wl);
+        let mut qos = QosState::new(&wl);
+        // Tenant 1 has waited ~forever; with aging disabled the level-0
+        // tenant still wins (and the pick must not panic on `/ 0`).
+        offer(&mut adm, 0, 0, 1_000_000_000, 10_000_000_000);
+        offer(&mut adm, 1, 0, 0, 10_000_000_000);
+        assert_eq!(qos.pick(&adm, SimTime(2_000_000_000)), Some(0));
     }
 
     #[test]
