@@ -25,6 +25,7 @@ use std::collections::VecDeque;
 use crate::cnn::roshambo::roshambo;
 use crate::config::SimConfig;
 use crate::drivers::{DriverError, DriverKind, SubmitToken};
+use crate::obs::{Ctr, FrameSpan, Gauge, ObsBundle};
 use crate::sim::event::{EngineId, TaskId, MAX_ENGINES};
 use crate::sim::time::{Dur, SimTime};
 use crate::workload::{
@@ -46,6 +47,9 @@ struct InFlight {
     arrived: SimTime,
     started: SimTime,
     deadline: SimTime,
+    /// Bytes the frame's completed layers moved so far (telemetry).
+    tx_bytes: u64,
+    rx_bytes: u64,
 }
 
 /// The outcome of one board's (possibly truncated) serve run.
@@ -67,6 +71,22 @@ pub fn serve_board(
     arrivals_in: Vec<FrameArrival>,
     hard_stop: Option<u64>,
 ) -> Result<BoardRun, DriverError> {
+    serve_board_observed(cfg, kind, arrivals_in, hard_stop, false).map(|(run, _)| run)
+}
+
+/// [`serve_board`] plus the board's telemetry bundle (DESIGN.md §15).
+/// Counters record events as they happened on this board — a dead
+/// board's later-revoked offers stay counted, the fleet's failover pass
+/// accounts them under `cluster.*` — and every collector is observation-
+/// only, so the returned [`BoardRun`] is bit-identical to
+/// [`serve_board`]'s for any `obs` setting.
+pub fn serve_board_observed(
+    cfg: &SimConfig,
+    kind: DriverKind,
+    arrivals_in: Vec<FrameArrival>,
+    hard_stop: Option<u64>,
+    want_trace: bool,
+) -> Result<(BoardRun, ObsBundle), DriverError> {
     let engines = cfg.num_engines as usize;
     assert!(
         engines >= 1 && engines <= MAX_ENGINES,
@@ -93,6 +113,10 @@ pub fn serve_board(
     let fc_cost = fc_cpu_cost(&net);
 
     let (mut sys, mut cma, mut drivers) = nullhop_pool(cfg, kind, max_bytes)?;
+    let mut obs = ObsBundle::empty(&cfg.obs, n_tenants);
+    if want_trace {
+        sys.enable_trace();
+    }
 
     let tasks: Vec<TaskId> = (0..n_tenants)
         .map(|t| sys.sched.spawn(format!("normalize-{t}")))
@@ -112,6 +136,9 @@ pub fn serve_board(
     let mut busy = vec![false; engines];
     let mut inflight: VecDeque<InFlight> = VecDeque::new();
     let mut dead = false;
+    // Observation-only bookkeeping: never read by any control-flow
+    // decision, so the timeline cannot depend on it.
+    let mut queued: u64 = 0;
 
     loop {
         // 0. Board death: detected at the first decision point at or
@@ -128,12 +155,28 @@ pub fn serve_board(
         //    owns the front-door ledger, this loop drives side effects).
         while let Some(a) = arrivals.pop_due(sys.now()) {
             let t = a.tenant;
+            obs.metrics.inc(Ctr::SrvOffered);
+            obs.series.on_offered(sys.now().ns());
             match adm.offer(a) {
-                AdmitOutcome::Admitted | AdmitOutcome::DroppedOldest(_) => {
+                AdmitOutcome::Admitted => {
+                    obs.metrics.inc(Ctr::SrvAdmitted);
+                    queued += 1;
                     sys.sched.add_work(tasks[t], normalize);
                 }
-                AdmitOutcome::DroppedNew | AdmitOutcome::Coalesced => {}
+                AdmitOutcome::DroppedOldest(_) => {
+                    obs.metrics.inc(Ctr::SrvAdmitted);
+                    obs.metrics.inc(Ctr::SrvDropped);
+                    sys.sched.add_work(tasks[t], normalize);
+                }
+                AdmitOutcome::DroppedNew => {
+                    obs.metrics.inc(Ctr::SrvDropped);
+                }
+                AdmitOutcome::Coalesced => {
+                    obs.metrics.inc(Ctr::SrvCoalesced);
+                }
             }
+            obs.metrics.gauge_set(Gauge::QueueDepth, queued);
+            obs.series.on_queue_depth(sys.now().ns(), queued);
         }
 
         // 2. Hand free engines to the policy's next head frames while the
@@ -144,6 +187,8 @@ pub fn serve_board(
                 let Some(chan) = busy.iter().position(|&b| !b) else { break };
                 let Some(t) = qos.pick(&adm, sys.now()) else { break };
                 let f = adm.pop(t).expect("policy picked an empty queue");
+                queued = queued.saturating_sub(1);
+                obs.series.on_queue_depth(sys.now().ns(), queued);
                 busy[chan] = true;
                 let started = sys.now();
                 let e = EngineId(chan as u8);
@@ -153,6 +198,7 @@ pub fn serve_board(
                     plans[0].timing.tx_bytes,
                     plans[0].timing.rx_bytes,
                 )?;
+                obs.metrics.inc(Ctr::SrvSubmitted);
                 inflight.push_back(InFlight {
                     tenant: f.tenant,
                     seq: f.seq,
@@ -162,20 +208,45 @@ pub fn serve_board(
                     arrived: f.arrived,
                     started,
                     deadline: f.deadline,
+                    tx_bytes: 0,
+                    rx_bytes: 0,
                 });
+                obs.metrics.gauge_set(Gauge::InFlight, inflight.len() as u64);
             }
         }
 
         // 3. Advance: complete the oldest armed layer, or idle until the
         //    next arrival, or finish.
         if let Some(mut slot) = inflight.pop_front() {
-            drivers[slot.chan].complete(&mut sys, slot.token)?;
+            let tr = drivers[slot.chan].complete(&mut sys, slot.token)?;
+            slot.tx_bytes += tr.tx_bytes;
+            slot.rx_bytes += tr.rx_bytes;
             slot.layer += 1;
             if slot.layer == plans.len() {
                 sys.cpu_exec(fc_cost);
                 let done = sys.now();
                 slo[slot.tenant].complete(slot.arrived, slot.started, done, slot.deadline);
                 busy[slot.chan] = false;
+                let missed = done > slot.deadline;
+                obs.metrics.inc(Ctr::SrvCompleted);
+                if missed {
+                    obs.metrics.inc(Ctr::SrvMissed);
+                }
+                obs.series.on_completed(done.ns(), missed);
+                obs.series.add_busy(done.ns(), done.since(slot.started).ns());
+                obs.spans.record(FrameSpan {
+                    tenant: slot.tenant,
+                    seq: slot.seq,
+                    engine: slot.chan,
+                    arrived_ns: slot.arrived.ns(),
+                    started_ns: slot.started.ns(),
+                    completed_ns: done.ns(),
+                    layers: plans.len() as u32,
+                    tx_bytes: slot.tx_bytes,
+                    rx_bytes: slot.rx_bytes,
+                    missed,
+                });
+                obs.metrics.gauge_set(Gauge::InFlight, inflight.len() as u64);
             } else {
                 let e = EngineId(slot.chan as u8);
                 let p = &plans[slot.layer];
@@ -243,6 +314,7 @@ pub fn serve_board(
         for t in 0..n_tenants {
             while adm.pop(t).is_some() {
                 slo[t].unserved += 1;
+                obs.metrics.inc(Ctr::SrvUnserved);
             }
         }
     }
@@ -258,22 +330,30 @@ pub fn serve_board(
         slo_t.normalize_cpu = sys.sched.received(tasks[t]);
     }
     let ledger = crate::drivers::diff_ledger(ledger0, sys.ledger);
+    obs.metrics.merge(&sys.obs);
+    if let Some(mut t) = sys.trace.take() {
+        obs.spans.add_tracks(&mut t);
+        obs.trace = Some(t);
+    }
     release_pool(&mut cma, drivers);
-    Ok(BoardRun {
-        report: ServeReport {
-            driver: kind.label(),
-            policy: wl.policy.label(),
-            shed: wl.shed.label(),
-            arrival: wl.arrival.label(),
-            memory: cfg.memory.mode_label(),
-            engines,
-            duration,
-            tenants: slo,
-            ledger,
-            events: sys.eng.dispatched,
+    Ok((
+        BoardRun {
+            report: ServeReport {
+                driver: kind.label(),
+                policy: wl.policy.label(),
+                shed: wl.shed.label(),
+                arrival: wl.arrival.label(),
+                memory: cfg.memory.mode_label(),
+                engines,
+                duration,
+                tenants: slo,
+                ledger,
+                events: sys.eng.dispatched,
+            },
+            abandoned,
         },
-        abandoned,
-    })
+        obs,
+    ))
 }
 
 #[cfg(test)]

@@ -30,15 +30,17 @@
 use crate::config::SimConfig;
 use crate::coordinator::{capacity_fps, cell_seed, run_cells};
 use crate::drivers::{DriverError, DriverKind};
+use crate::obs::{Ctr, ObsBundle};
 use crate::sim::rng::Pcg32;
 use crate::sim::time::{Dur, SimTime};
+use crate::sim::trace::Trace;
 use crate::util::json::Json;
 use crate::util::stats::LogHistogram;
 use crate::workload::{
     ArrivalKind, ArrivalQueue, FrameArrival, ServeReport, StreamGenerator, TenantSlo,
 };
 
-use super::board::{serve_board, BoardRun};
+use super::board::{serve_board_observed, BoardRun};
 use super::{BoardKind, ClusterConfig, PlacementKind};
 
 /// PCG32 stream selector for the failover retry draws.
@@ -306,6 +308,21 @@ pub fn serve_cluster(
     kind: DriverKind,
     workers: usize,
 ) -> Result<ClusterReport, DriverError> {
+    serve_cluster_observed(cfg, kind, workers, false).map(|(rep, _)| rep)
+}
+
+/// [`serve_cluster`] plus the fleet's merged telemetry bundle (DESIGN.md
+/// §15): every board's collectors folded together, the balancer's
+/// spill/steal/redirect/failover counters under `cluster.*`, and — when
+/// `want_trace` — one Perfetto trace with each board's tracks namespaced
+/// `b<N>.`. Observation-only throughout, so the [`ClusterReport`] is
+/// bit-identical to [`serve_cluster`]'s for any `obs` setting.
+pub fn serve_cluster_observed(
+    cfg: &SimConfig,
+    kind: DriverKind,
+    workers: usize,
+    want_trace: bool,
+) -> Result<(ClusterReport, ObsBundle), DriverError> {
     assert!(
         cfg.workload.arrival != ArrivalKind::Closed,
         "cluster serving requires an open-loop arrival kind (closed-loop pacing is per-board)"
@@ -315,6 +332,7 @@ pub fn serve_cluster(
     let boards = cl.boards as usize;
     let n_tenants = wl.tenants as usize;
     let fail_board = cl.fail_board as usize;
+    let mut obs = ObsBundle::empty(&cfg.obs, n_tenants);
 
     // Board configs + the capacities the balancer plans with. Capacity is
     // *measured* per board profile (a short scaling run), so heterogeneity
@@ -435,15 +453,16 @@ pub fn serve_cluster(
 
     // Phase 2 — run the failed board to its death and fail its owed
     // frames over. Every decision draws from a dedicated seeded stream.
-    let mut failed_run: Option<BoardRun> = None;
+    let mut failed_run: Option<(BoardRun, ObsBundle)> = None;
     let mut lost = vec![0u64; n_tenants];
     let mut retried = 0u64;
     if cl.has_failure() {
-        let run = serve_board(
+        let (run, board_obs) = serve_board_observed(
             &board_cfgs[fail_board],
             kind,
             deliveries[fail_board].clone(),
             Some(cl.fail_at_ns),
+            want_trace,
         )?;
         let mut rng = Pcg32::with_stream(cl.seed, FAILOVER_STREAM);
         let resume_at = cl.fail_at_ns.saturating_add(cl.failover_detect_ns);
@@ -478,7 +497,7 @@ pub fn serve_cluster(
             });
             retried += 1;
         }
-        failed_run = Some(run);
+        failed_run = Some((run, board_obs));
     }
 
     // Phase 3 — surviving boards are independent simulations; shard them
@@ -497,12 +516,12 @@ pub fn serve_cluster(
         })
         .collect();
     let results = run_cells(&cells, workers, |_, cell| {
-        serve_board(&cell.cfg, kind, cell.arrivals.clone(), None)
+        serve_board_observed(&cell.cfg, kind, cell.arrivals.clone(), None, want_trace)
     });
 
-    let mut runs: Vec<Option<BoardRun>> = (0..boards).map(|_| None).collect();
-    if let Some(run) = failed_run {
-        runs[fail_board] = Some(run);
+    let mut runs: Vec<Option<(BoardRun, ObsBundle)>> = (0..boards).map(|_| None).collect();
+    if let Some(pair) = failed_run {
+        runs[fail_board] = Some(pair);
     }
     for (cell, res) in cells.iter().zip(results) {
         runs[cell.index] = Some(res?);
@@ -514,8 +533,13 @@ pub fn serve_cluster(
     let mut tenants: Vec<TenantSlo> = (0..n_tenants).map(|_| TenantSlo::default()).collect();
     let mut duration = Dur::ZERO;
     let mut events = 0u64;
+    let mut fleet_trace = Trace::default();
     for (b, run) in runs.into_iter().enumerate() {
-        let run = run.expect("every board ran exactly once");
+        let (run, board_obs) = run.expect("every board ran exactly once");
+        obs.merge(&board_obs);
+        if let Some(bt) = &board_obs.trace {
+            fleet_trace.merge_prefixed(bt, &format!("b{b}."));
+        }
         let rep = run.report;
         duration = duration.max(rep.duration);
         events += rep.events;
@@ -554,20 +578,33 @@ pub fn serve_cluster(
         agg.offered += lost[t];
     }
 
-    Ok(ClusterReport {
-        driver: kind.label(),
-        placement: cl.placement.label(),
-        boards: summaries,
-        tenants,
-        duration,
-        generated,
-        spilled,
-        stolen,
-        redirected,
-        retried,
-        failed_over: lost.iter().sum(),
-        events,
-    })
+    // Fleet-side balancer counters land in the merged registry.
+    obs.metrics.add(Ctr::CluSpilled, spilled);
+    obs.metrics.add(Ctr::CluStolen, stolen);
+    obs.metrics.add(Ctr::CluRedirected, redirected);
+    obs.metrics.add(Ctr::CluRetried, retried);
+    obs.metrics.add(Ctr::CluFailedOver, lost.iter().sum::<u64>());
+    if want_trace {
+        obs.trace = Some(fleet_trace);
+    }
+
+    Ok((
+        ClusterReport {
+            driver: kind.label(),
+            placement: cl.placement.label(),
+            boards: summaries,
+            tenants,
+            duration,
+            generated,
+            spilled,
+            stolen,
+            redirected,
+            retried,
+            failed_over: lost.iter().sum(),
+            events,
+        },
+        obs,
+    ))
 }
 
 #[cfg(test)]

@@ -35,8 +35,8 @@ pub mod board;
 pub mod fleet;
 pub mod sweep;
 
-pub use board::{serve_board, BoardRun};
-pub use fleet::{serve_cluster, BoardSummary, ClusterReport};
+pub use board::{serve_board, serve_board_observed, BoardRun};
+pub use fleet::{serve_cluster, serve_cluster_observed, BoardSummary, ClusterReport};
 pub use sweep::{cluster_sweep, ClusterSweepRow};
 
 use crate::memory::path::{DmaPortKind, MemoryPath};

@@ -13,6 +13,7 @@ use std::path::Path;
 use crate::cluster::ClusterConfig;
 use crate::coordinator::model::ModelConfig;
 use crate::memory::path::MemoryConfig;
+use crate::obs::ObsConfig;
 use crate::sim::engine::CalendarKind;
 use crate::sim::fault::FaultConfig;
 use crate::util::json::Json;
@@ -196,6 +197,12 @@ pub struct SimConfig {
     /// off; only the `model-sweep` runner reads the block, so every
     /// other experiment's timeline is untouched by it.
     pub model: ModelConfig,
+    /// Telemetry knobs (see [`crate::obs`]): the metrics registry,
+    /// frame-lifecycle spans and the windowed time-series recorder.
+    /// Defaults off; observation never alters simulated time, so even a
+    /// fully enabled block leaves every timeline bit-identical
+    /// (enforced by `rust/tests/telemetry.rs`).
+    pub obs: ObsConfig,
 }
 
 impl Default for SimConfig {
@@ -268,6 +275,7 @@ impl Default for SimConfig {
             memory: MemoryConfig::none(),
             cluster: ClusterConfig::none(),
             model: ModelConfig::none(),
+            obs: ObsConfig::none(),
         }
     }
 }
@@ -344,6 +352,9 @@ macro_rules! config_fields {
     (@set $self:ident, $field:ident, model, $val:ident, $k:ident) => {
         $self.$field.apply_json($val)?;
     };
+    (@set $self:ident, $field:ident, obs, $val:ident, $k:ident) => {
+        $self.$field.apply_json($val)?;
+    };
     (@get $self:ident, $field:ident, f64) => { Json::num($self.$field) };
     (@get $self:ident, $field:ident, u64) => { Json::num($self.$field as f64) };
     (@get $self:ident, $field:ident, faults) => { $self.$field.to_json() };
@@ -351,6 +362,7 @@ macro_rules! config_fields {
     (@get $self:ident, $field:ident, memory) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, cluster) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, model) => { $self.$field.to_json() };
+    (@get $self:ident, $field:ident, obs) => { $self.$field.to_json() };
     (@get $self:ident, $field:ident, vec_u64) => {
         Json::Arr($self.$field.iter().map(|&x| Json::num(x as f64)).collect())
     };
@@ -410,6 +422,7 @@ config_fields! {
     memory: memory,
     cluster: cluster,
     model: model,
+    obs: obs,
 }
 
 impl SimConfig {
@@ -485,6 +498,7 @@ impl SimConfig {
         self.memory.validate()?;
         self.cluster.validate()?;
         self.model.validate()?;
+        self.obs.validate()?;
         Ok(())
     }
 }
@@ -701,6 +715,30 @@ mod tests {
         assert!(cfg.apply_json(&Json::parse(r#"{"model": {"bogus": 1}}"#).unwrap()).is_err());
         let mut cfg = SimConfig::default();
         cfg.model.fusion_max_bytes = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn obs_key_roundtrips_and_validates() {
+        let mut cfg = SimConfig::default();
+        assert!(!cfg.obs.enabled, "telemetry must default off");
+        let j = r#"{"obs": {"enabled": true, "window_ns": 5000000, "max_spans": 256,
+                    "spans": false, "timeseries": true}}"#;
+        cfg.apply_json(&Json::parse(j).unwrap()).unwrap();
+        assert!(cfg.obs.enabled);
+        assert!(!cfg.obs.spans);
+        assert_eq!(cfg.obs.window_ns, 5_000_000);
+        assert_eq!(cfg.obs.max_spans, 256);
+        cfg.validate().unwrap();
+        let json = cfg.to_json();
+        let mut cfg2 = SimConfig::default();
+        cfg2.apply_json(&json).unwrap();
+        assert_eq!(cfg, cfg2);
+        // Unknown nested key and out-of-range value both rejected.
+        let mut cfg = SimConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"obs": {"bogus": 1}}"#).unwrap()).is_err());
+        let mut cfg = SimConfig::default();
+        cfg.obs.window_ns = 0;
         assert!(cfg.validate().is_err());
     }
 

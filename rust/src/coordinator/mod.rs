@@ -30,14 +30,14 @@ pub mod serve;
 pub mod sweeps;
 
 pub use model::{
-    model_plans, model_sweep, probe_pass, DriverPolicy, LayerCell, ModelConfig, ModelRow,
-    PassPlan,
+    model_cell_observed, model_plans, model_sweep, probe_pass, DriverPolicy, LayerCell,
+    ModelConfig, ModelRow, PassPlan,
 };
 pub use experiments::{
     acp_hp_crossover, loopback_sweep, memory_sweep, memory_sweep_sizes, scaling_sweep, table1,
     MemoryMode, MemoryRow, ScalingRow, SweepRow, Table1Row,
 };
-pub use serve::serve;
+pub use serve::{serve, serve_observed};
 pub use sweeps::{
     bench, capacity_fps, cell_seed, loopback_sweep_parallel, run_cells, scaling_sweep_parallel,
     serve_sweep, BenchOptions, BenchReport, ServeSweepRow, SweepStats,

@@ -32,7 +32,9 @@ use crate::cnn::zoo;
 use crate::config::SimConfig;
 use crate::drivers::{Driver, DriverConfig, DriverError, DriverKind};
 use crate::memory::buffer::CmaAllocator;
+use crate::obs::Ctr;
 use crate::sim::time::Dur;
+use crate::sim::trace::Trace;
 use crate::system::System;
 use crate::util::json::Json;
 
@@ -305,11 +307,22 @@ pub fn run_model_frame(
             let token = drivers[di].1.submit(sys, p.timing.tx_bytes, p.timing.rx_bytes)?;
             if let Some(next) = plans.get(i + 1) {
                 let ni = driver_idx(drivers, choice[i + 1]);
-                drivers[ni].1.prestage(sys, next.timing.tx_bytes);
+                if drivers[ni].1.prestage(sys, next.timing.tx_bytes) {
+                    sys.obs.inc(Ctr::MdlPrefetches);
+                }
             }
             drivers[di].1.complete(sys, token)?;
         } else {
             drivers[di].1.transfer(sys, p.timing.tx_bytes, p.timing.rx_bytes)?;
+        }
+        sys.obs.inc(Ctr::MdlPasses);
+        if sys.trace.is_some() {
+            let dur = sys.now().since(li).ns();
+            let start = li.ns();
+            if let Some(t) = &mut sys.trace {
+                let k = DriverPolicy::Static(choice[i]).label();
+                t.span("model", format!("{} [{k}]", p.name), start, dur);
+            }
         }
         cells.push(LayerCell {
             name: p.name.clone(),
@@ -375,6 +388,21 @@ pub(crate) fn model_cell(
     mode: MemoryMode,
     frames: u64,
 ) -> Result<ModelRow, DriverError> {
+    model_cell_observed(cfg, model, policy, mode, frames, false).map(|(row, _)| row)
+}
+
+/// [`model_cell`] with the event trace switched on (`want_trace`): each
+/// pass lands on a `model` track named `layer [driver]`, on top of the
+/// usual cpu/ddr/dma tracks. Observation only — the returned row is
+/// bit-identical to the untraced cell's.
+pub fn model_cell_observed(
+    cfg: &SimConfig,
+    model: &LoweredModel,
+    policy: DriverPolicy,
+    mode: MemoryMode,
+    frames: u64,
+    want_trace: bool,
+) -> Result<(ModelRow, Option<Trace>), DriverError> {
     let mut c = cfg.clone();
     mode.apply(&mut c);
     let plans = model_plans(model, &c);
@@ -393,6 +421,15 @@ pub(crate) fn model_cell(
         .max()
         .expect("empty model plan");
     let mut sys = System::nullhop(c.clone());
+    if want_trace {
+        sys.enable_trace();
+    }
+    // The adaptive probe runs on throwaway systems, so account for it
+    // here: every plan is probed against every candidate exactly once.
+    if policy == DriverPolicy::Adaptive {
+        sys.obs
+            .add(Ctr::MdlProbes, (plans.len() * ADAPTIVE_CANDIDATES.len()) as u64);
+    }
     let mut cma = CmaAllocator::zynq_default();
     let mut drivers = kinds
         .into_iter()
@@ -426,7 +463,7 @@ pub(crate) fn model_cell(
     for (_, d) in drivers {
         d.release(&mut cma);
     }
-    Ok(row)
+    Ok((row, sys.trace.take()))
 }
 
 /// MODEL-SWEEP: every zoo model × driver policy × memory mode (`quick`

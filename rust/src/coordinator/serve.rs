@@ -30,6 +30,7 @@ use std::collections::VecDeque;
 use crate::cnn::roshambo::roshambo;
 use crate::config::SimConfig;
 use crate::drivers::{DriverError, DriverKind, SubmitToken};
+use crate::obs::{Ctr, FrameSpan, Gauge, ObsBundle};
 use crate::sim::event::{EngineId, TaskId, MAX_ENGINES};
 use crate::sim::time::{Dur, SimTime};
 use crate::workload::{
@@ -49,6 +50,11 @@ struct InFlight {
     /// Service start (queueing-delay accounting).
     started: SimTime,
     deadline: SimTime,
+    /// Global dispatch sequence number (telemetry span identity).
+    seq: u64,
+    /// Bytes the frame's completed layers moved so far (telemetry).
+    tx_bytes: u64,
+    rx_bytes: u64,
 }
 
 /// Run one serve experiment: `cfg.workload` tenants against `engines`
@@ -59,6 +65,23 @@ struct InFlight {
 /// {completed, dropped, coalesced, unserved} — the ledger identity the
 /// property suite asserts.
 pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeReport, DriverError> {
+    serve_observed(cfg, kind, engines, false).map(|(rep, _)| rep)
+}
+
+/// [`serve`] plus the telemetry the run collected (DESIGN.md §15): the
+/// merged metrics registry (serve-loop counters + the system's hardware
+/// and driver funnel), the frame-lifecycle span log, the windowed
+/// time-series, and — when `want_trace` — the full-stack Perfetto trace
+/// with per-tenant frame tracks. All collectors are gated by `cfg.obs`
+/// and record only already-computed values, so the returned
+/// [`ServeReport`] is bit-identical to [`serve`]'s no matter what `obs`
+/// enables.
+pub fn serve_observed(
+    cfg: &SimConfig,
+    kind: DriverKind,
+    engines: usize,
+    want_trace: bool,
+) -> Result<(ServeReport, ObsBundle), DriverError> {
     assert!(
         engines >= 1 && engines <= MAX_ENGINES,
         "serve needs 1..={MAX_ENGINES} engines"
@@ -82,6 +105,10 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
     let fc_cost = fc_cpu_cost(&net);
 
     let (mut sys, mut cma, mut drivers) = nullhop_pool(&c, kind, max_bytes)?;
+    let mut obs = ObsBundle::empty(&c.obs, n_tenants);
+    if want_trace {
+        sys.enable_trace();
+    }
 
     // One collection + normalization task per tenant: the PS-side work
     // that competes for whatever CPU the driver frees.
@@ -101,6 +128,10 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
     let ledger0 = sys.ledger;
     let mut busy = vec![false; engines];
     let mut inflight: VecDeque<InFlight> = VecDeque::new();
+    // Observation-only bookkeeping: never read by any control-flow
+    // decision, so the timeline cannot depend on it.
+    let mut queued: u64 = 0;
+    let mut next_seq: u64 = 0;
 
     loop {
         // 1. Admit everything that has arrived by virtual now. Sheds are
@@ -110,12 +141,22 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
         //    loop only drives the side effects.
         while let Some(a) = arrivals.pop_due(sys.now()) {
             let t = a.tenant;
+            obs.metrics.inc(Ctr::SrvOffered);
+            obs.series.on_offered(sys.now().ns());
             match adm.offer(a) {
                 AdmitOutcome::Admitted => {
+                    obs.metrics.inc(Ctr::SrvAdmitted);
+                    queued += 1;
                     sys.sched.add_work(tasks[t], normalize);
                 }
-                AdmitOutcome::DroppedNew => {}
+                AdmitOutcome::DroppedNew => {
+                    obs.metrics.inc(Ctr::SrvDropped);
+                }
                 AdmitOutcome::DroppedOldest(_evicted) => {
+                    // Newcomer in, stale head out: net queue depth is
+                    // unchanged, one admission and one drop.
+                    obs.metrics.inc(Ctr::SrvAdmitted);
+                    obs.metrics.inc(Ctr::SrvDropped);
                     // The newcomer entered, the stale head died. The
                     // evicted frame's normalization demand is *not*
                     // retracted: the demand pool is aggregate, so a
@@ -128,8 +169,11 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
                 AdmitOutcome::Coalesced => {
                     // Folded into an already-queued entry: the queued
                     // normalization covers the merged frame.
+                    obs.metrics.inc(Ctr::SrvCoalesced);
                 }
             }
+            obs.metrics.gauge_set(Gauge::QueueDepth, queued);
+            obs.series.on_queue_depth(sys.now().ns(), queued);
         }
 
         // 2. Hand free engines to the policy's next head frames — while
@@ -141,6 +185,8 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
                 let Some(chan) = busy.iter().position(|&b| !b) else { break };
                 let Some(t) = qos.pick(&adm, sys.now()) else { break };
                 let f = adm.pop(t).expect("policy picked an empty queue");
+                queued = queued.saturating_sub(1);
+                obs.series.on_queue_depth(sys.now().ns(), queued);
                 busy[chan] = true;
                 let started = sys.now();
                 let e = EngineId(chan as u8);
@@ -150,6 +196,7 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
                     plans[0].timing.tx_bytes,
                     plans[0].timing.rx_bytes,
                 )?;
+                obs.metrics.inc(Ctr::SrvSubmitted);
                 inflight.push_back(InFlight {
                     tenant: f.tenant,
                     chan,
@@ -158,14 +205,21 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
                     arrived: f.arrived,
                     started,
                     deadline: f.deadline,
+                    seq: next_seq,
+                    tx_bytes: 0,
+                    rx_bytes: 0,
                 });
+                next_seq += 1;
+                obs.metrics.gauge_set(Gauge::InFlight, inflight.len() as u64);
             }
         }
 
         // 3. Advance: complete the oldest armed layer, or idle until the
         //    next arrival, or finish.
         if let Some(mut slot) = inflight.pop_front() {
-            drivers[slot.chan].complete(&mut sys, slot.token)?;
+            let tr = drivers[slot.chan].complete(&mut sys, slot.token)?;
+            slot.tx_bytes += tr.tx_bytes;
+            slot.rx_bytes += tr.rx_bytes;
             slot.layer += 1;
             if slot.layer == plans.len() {
                 // FC head on the PS, then the result is delivered.
@@ -173,6 +227,26 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
                 let done = sys.now();
                 slo[slot.tenant].complete(slot.arrived, slot.started, done, slot.deadline);
                 busy[slot.chan] = false;
+                let missed = done > slot.deadline;
+                obs.metrics.inc(Ctr::SrvCompleted);
+                if missed {
+                    obs.metrics.inc(Ctr::SrvMissed);
+                }
+                obs.series.on_completed(done.ns(), missed);
+                obs.series.add_busy(done.ns(), done.since(slot.started).ns());
+                obs.spans.record(FrameSpan {
+                    tenant: slot.tenant,
+                    seq: slot.seq,
+                    engine: slot.chan,
+                    arrived_ns: slot.arrived.ns(),
+                    started_ns: slot.started.ns(),
+                    completed_ns: done.ns(),
+                    layers: plans.len() as u32,
+                    tx_bytes: slot.tx_bytes,
+                    rx_bytes: slot.rx_bytes,
+                    missed,
+                });
+                obs.metrics.gauge_set(Gauge::InFlight, inflight.len() as u64);
                 if let Some(next) = gen.on_complete(slot.tenant, done) {
                     arrivals.push(next);
                 }
@@ -210,6 +284,7 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
     for t in 0..n_tenants {
         while adm.pop(t).is_some() {
             slo[t].unserved += 1;
+            obs.metrics.inc(Ctr::SrvUnserved);
         }
     }
 
@@ -226,19 +301,29 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
         slo_t.normalize_cpu = sys.sched.received(tasks[t]);
     }
     let ledger = crate::drivers::diff_ledger(ledger0, sys.ledger);
+    // Fold the system's hardware/driver funnel into the serve-side
+    // registry, and lift the trace (with per-tenant frame tracks) out.
+    obs.metrics.merge(&sys.obs);
+    if let Some(mut t) = sys.trace.take() {
+        obs.spans.add_tracks(&mut t);
+        obs.trace = Some(t);
+    }
     release_pool(&mut cma, drivers);
-    Ok(ServeReport {
-        driver: kind.label(),
-        policy: wl.policy.label(),
-        shed: wl.shed.label(),
-        arrival: wl.arrival.label(),
-        memory: c.memory.mode_label(),
-        engines,
-        duration,
-        tenants: slo,
-        ledger,
-        events: sys.eng.dispatched,
-    })
+    Ok((
+        ServeReport {
+            driver: kind.label(),
+            policy: wl.policy.label(),
+            shed: wl.shed.label(),
+            arrival: wl.arrival.label(),
+            memory: c.memory.mode_label(),
+            engines,
+            duration,
+            tenants: slo,
+            ledger,
+            events: sys.eng.dispatched,
+        },
+        obs,
+    ))
 }
 
 #[cfg(test)]

@@ -46,6 +46,7 @@ pub use scheme::{scheme_for, SubmitToken, TransferScheme};
 
 use crate::axi::descriptor::MAX_DESC_LEN;
 use crate::memory::buffer::{AllocError, CmaAllocator, DmaBuffer};
+use crate::obs::{Ctr, HistId};
 use crate::sim::event::EngineId;
 use crate::sim::fault::DmaErrorKind;
 use crate::sim::time::Dur;
@@ -352,7 +353,25 @@ impl Driver {
         let ledger_before = sys.ledger;
         let mut report = scheme_for(self.cfg.kind).transfer(self, sys, tx_bytes, rx_bytes)?;
         report.ledger = diff_ledger(ledger_before, sys.ledger);
+        self.record_obs(sys, &report);
         Ok(report)
+    }
+
+    /// Record one finished round trip into the per-scheme telemetry
+    /// lane. Pure observation: only the already-built report is read.
+    fn record_obs(&self, sys: &mut System, r: &TransferReport) {
+        if !sys.obs.enabled() {
+            return;
+        }
+        let k = self.cfg.kind;
+        sys.obs.add(Ctr::tx_bytes(k), r.tx_bytes);
+        sys.obs.add(Ctr::rx_bytes(k), r.rx_bytes);
+        sys.obs.inc(Ctr::transfers(k));
+        if let TransferOutcome::Recovered { retries, .. } = r.outcome {
+            sys.obs.add(Ctr::retries(k), retries as u64);
+        }
+        sys.obs.observe(HistId::TxWindowNs, r.tx_time.ns());
+        sys.obs.observe(HistId::RxWindowNs, r.rx_time.ns());
     }
 
     /// Split-phase entry: stage + arm one TX/RX round trip on this
@@ -391,6 +410,7 @@ impl Driver {
         }
         sys.cpu_copy(tx_bytes, crate::memory::copy::CopyKind::UserUncached);
         self.prestaged = Some(tx_bytes);
+        sys.obs.inc(Ctr::DrvPrestages);
         true
     }
 
@@ -401,7 +421,9 @@ impl Driver {
         sys: &mut System,
         token: SubmitToken,
     ) -> Result<TransferReport, DriverError> {
-        scheme_for(self.cfg.kind).complete(self, sys, token)
+        let report = scheme_for(self.cfg.kind).complete(self, sys, token)?;
+        self.record_obs(sys, &report);
+        Ok(report)
     }
 }
 

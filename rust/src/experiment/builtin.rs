@@ -11,20 +11,22 @@ use std::fmt::Write as _;
 
 use anyhow::{bail, Result};
 
-use crate::cluster::{cluster_sweep, serve_cluster, PlacementKind};
+use crate::cluster::{cluster_sweep, serve_cluster, serve_cluster_observed, PlacementKind};
+use crate::cnn::zoo;
 use crate::config::SimConfig;
 use crate::coordinator::calibrate;
 use crate::coordinator::experiments::{
     ablation_chunk_sweep, ablation_load, ablation_matrix, ablation_vgg, fault_safety_demo,
     fault_sweep, fig45_sizes, loopback_sweep, memory_sweep, memory_sweep_sizes, scaling_sweep,
-    table1, table1_runtime,
+    table1, table1_runtime, MemoryMode,
 };
-use crate::coordinator::model::model_sweep;
-use crate::coordinator::serve::serve;
+use crate::coordinator::model::{model_cell_observed, model_sweep, DriverPolicy};
+use crate::coordinator::serve::{serve, serve_observed};
 use crate::coordinator::sweeps::{bench, serve_sweep, BenchOptions};
 use crate::drivers::DriverKind;
 use crate::report;
 use crate::runtime::Runtime;
+use crate::sim::trace::Trace as SimTrace;
 use crate::workload::QosPolicyKind;
 
 use super::{Experiment, ExperimentOutput, RunOpts};
@@ -48,10 +50,23 @@ pub static REGISTRY: &[&dyn Experiment] = &[
     &ServeSweep,
     &Cluster,
     &ClusterSweep,
+    &Telemetry,
     &Bench,
     &Trace,
     &Calibrate,
 ];
+
+/// Write a captured timeline as compact Trace Event Format JSON and note
+/// it on stderr (stdout belongs to the experiment's report text).
+fn save_trace(path: &str, trace: &SimTrace) -> Result<()> {
+    report::save(path, &trace.to_chrome_json().to_string_compact())?;
+    eprintln!(
+        "wrote trace {path}: {} spans, {} markers — open in chrome://tracing or Perfetto",
+        trace.spans.len(),
+        trace.instants.len()
+    );
+    Ok(())
+}
 
 /// Resolve the `--driver`/`--engines` flags for the serving commands
 /// (default driver: kernel — the scheme the serving argument is about,
@@ -306,7 +321,7 @@ impl Experiment for Serve {
         "multi-tenant serving run (workload config)"
     }
     fn flags(&self) -> &'static [&'static str] {
-        &["--driver", "--engines", "--quick"]
+        &["--driver", "--engines", "--quick", "--trace"]
     }
     fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
         let mut c = cfg.clone();
@@ -314,7 +329,15 @@ impl Experiment for Serve {
             c.workload.duration_ns = c.workload.duration_ns.min(200_000_000);
         }
         let kind = serve_driver(opts)?;
-        let rep = serve(&c, kind, opts.engines)?;
+        let rep = if let Some(path) = &opts.trace_out {
+            let (rep, obs) = serve_observed(&c, kind, opts.engines, true)?;
+            if let Some(t) = &obs.trace {
+                save_trace(path, t)?;
+            }
+            rep
+        } else {
+            serve(&c, kind, opts.engines)?
+        };
         Ok(ExperimentOutput {
             text: report::serve_text(&rep),
             csv: vec![
@@ -379,7 +402,7 @@ impl Experiment for Cluster {
         "multi-board fleet serving run (cluster config)"
     }
     fn flags(&self) -> &'static [&'static str] {
-        &["--driver", "--quick", "--workers"]
+        &["--driver", "--quick", "--workers", "--trace"]
     }
     fn in_all(&self) -> bool {
         false
@@ -390,7 +413,15 @@ impl Experiment for Cluster {
         if opts.quick {
             c.workload.duration_ns = c.workload.duration_ns.min(200_000_000);
         }
-        let rep = serve_cluster(&c, kind, opts.workers)?;
+        let rep = if let Some(path) = &opts.trace_out {
+            let (rep, obs) = serve_cluster_observed(&c, kind, opts.workers, true)?;
+            if let Some(t) = &obs.trace {
+                save_trace(path, t)?;
+            }
+            rep
+        } else {
+            serve_cluster(&c, kind, opts.workers)?
+        };
         Ok(ExperimentOutput {
             text: report::cluster_text(&rep),
             csv: vec![
@@ -443,6 +474,49 @@ impl Experiment for ClusterSweep {
     }
 }
 
+/// The observability demo: one serve run with the full `obs` block
+/// switched on — metrics registry, frame-lifecycle spans, and the
+/// windowed time-series — rendered as a text report plus CSV/JSON side
+/// files. `--trace` additionally writes the full-stack Perfetto
+/// timeline (per-engine DMA tracks + per-tenant frame tracks).
+/// Observation never moves simulated time, so the SLO table printed
+/// here is bit-identical to the plain `serve` command's.
+pub struct Telemetry;
+impl Experiment for Telemetry {
+    fn name(&self) -> &'static str {
+        "telemetry"
+    }
+    fn about(&self) -> &'static str {
+        "obs-enabled serve: metrics + spans + time-series"
+    }
+    fn flags(&self) -> &'static [&'static str] {
+        &["--driver", "--engines", "--quick", "--trace"]
+    }
+    fn in_all(&self) -> bool {
+        false
+    }
+    fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
+        let kind = serve_driver(opts)?;
+        let mut c = cfg.clone();
+        if opts.quick {
+            c.workload.duration_ns = c.workload.duration_ns.min(200_000_000);
+        }
+        c.obs.enabled = true;
+        let (rep, obs) = serve_observed(&c, kind, opts.engines, opts.trace_out.is_some())?;
+        if let (Some(path), Some(t)) = (&opts.trace_out, &obs.trace) {
+            save_trace(path, t)?;
+        }
+        Ok(ExperimentOutput {
+            text: report::telemetry_text(&rep, &obs, opts.engines),
+            csv: vec![
+                ("telemetry_metrics.csv".into(), obs.metrics.csv()),
+                ("telemetry_timeseries.csv".into(), obs.series.csv(opts.engines)),
+                ("telemetry.json".into(), obs.to_json(opts.engines).to_string_pretty()),
+            ],
+        })
+    }
+}
+
 /// Memory-path sweep: copy-through vs. zero-copy on both port families,
 /// as frame streams (`--frames` per cell, so ring amortisation shows),
 /// with the per-driver ACP/HP crossover in the footer.
@@ -488,13 +562,30 @@ impl Experiment for ModelSweep {
         "model zoo x driver policy x memory path"
     }
     fn flags(&self) -> &'static [&'static str] {
-        &["--quick", "--frames"]
+        &["--quick", "--frames", "--trace"]
     }
     fn in_all(&self) -> bool {
         false
     }
     fn run(&self, cfg: &SimConfig, opts: &RunOpts) -> Result<ExperimentOutput> {
         let rows = model_sweep(cfg, opts.frames.max(1) as u64, opts.quick)?;
+        if let Some(path) = &opts.trace_out {
+            // One representative cell re-run with the timeline on: the
+            // RoShamBo network under the per-layer adaptive policy, so
+            // the `model` track shows the driver mix.
+            let model = zoo::model("roshambo").expect("zoo always has roshambo");
+            let (_, trace) = model_cell_observed(
+                cfg,
+                &model,
+                DriverPolicy::Adaptive,
+                MemoryMode::CopyThrough,
+                1,
+                true,
+            )?;
+            if let Some(t) = &trace {
+                save_trace(path, t)?;
+            }
+        }
         Ok(ExperimentOutput {
             text: report::model_sweep_text(&rows),
             csv: vec![

@@ -49,6 +49,9 @@ pub struct RunOpts {
     pub driver: Option<String>,
     /// `--engines <n>` for the serving commands.
     pub engines: usize,
+    /// `--trace <path>`: write a Chrome/Perfetto trace of the run
+    /// (serve, cluster, model-sweep, telemetry).
+    pub trace_out: Option<String>,
 }
 
 impl Default for RunOpts {
@@ -64,6 +67,7 @@ impl Default for RunOpts {
             check: None,
             driver: None,
             engines: 2,
+            trace_out: None,
         }
     }
 }

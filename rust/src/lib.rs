@@ -88,6 +88,7 @@ pub mod coordinator;
 pub mod drivers;
 pub mod experiment;
 pub mod memory;
+pub mod obs;
 pub mod os;
 pub mod report;
 pub mod runtime;

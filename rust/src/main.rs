@@ -16,6 +16,7 @@
 //! psoc-dma cluster           # multi-board fleet serving run (cluster config)
 //! psoc-dma cluster-sweep     # fleet planning: boards x placement x load
 //! psoc-dma bench             # simulator perf bench -> BENCH_sweeps.json
+//! psoc-dma telemetry         # obs-enabled serve: metrics + spans + time-series
 //! psoc-dma all               # everything above (estimate plans)
 //! ```
 //!
@@ -31,6 +32,11 @@
 //! adds `--workers <n>` for the sharded grid. `cluster`/`cluster-sweep`
 //! take `--driver`, `--quick` and `--workers` (boards shard across
 //! workers; rows are worker-count-invariant).
+//!
+//! `serve`, `cluster`, `model-sweep`, and `telemetry` accept
+//! `--trace <path>`: write a Chrome/Perfetto Trace Event Format JSON of
+//! the run (per-board, per-engine, and per-tenant tracks) — load it at
+//! `chrome://tracing` or <https://ui.perfetto.dev>.
 //!
 //! `memory-sweep` flags: `--quick` (3-size grid), `--frames <n>` (frames
 //! per cell, default 3 — rings amortise across them).
@@ -98,6 +104,10 @@ fn parse_args() -> Result<Args> {
                     .next()
                     .ok_or_else(|| anyhow::anyhow!("--engines needs a count"))?
                     .parse()?
+            }
+            "--trace" => {
+                args.opts.trace_out =
+                    Some(it.next().ok_or_else(|| anyhow::anyhow!("--trace needs a path"))?)
             }
             "--version" => {
                 println!("psoc-dma {}", psoc_dma::version());

@@ -1,0 +1,466 @@
+//! Static-id metrics: counters, gauges and log-histograms keyed by
+//! closed enums, so hot-path recording is one `enabled` branch plus an
+//! array index — no hashing, no string lookup, no allocation. The enum
+//! *is* the interning: `Ctr::ALL[i] as usize == i` (pinned by a test),
+//! and every id carries its stable export name.
+//!
+//! The registry is observation-only by contract: recording never calls
+//! into the simulator, so an enabled registry cannot perturb simulated
+//! time (the observer-effect tests in `rust/tests/telemetry.rs` pin
+//! this bit-identically).
+
+use crate::drivers::DriverKind;
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+
+/// Monotonic counters. Grouped by subsystem; the four driver schemes
+/// each own a lane of tx/rx/transfer/retry counters so per-scheme
+/// byte accounting needs no per-record branching beyond the lane pick.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Ctr {
+    PollTxBytes,
+    PollRxBytes,
+    PollTransfers,
+    PollRetries,
+    SchedTxBytes,
+    SchedRxBytes,
+    SchedTransfers,
+    SchedRetries,
+    IrqTxBytes,
+    IrqRxBytes,
+    IrqTransfers,
+    IrqRetries,
+    MqTxBytes,
+    MqRxBytes,
+    MqTransfers,
+    MqRetries,
+    DrvPrestages,
+    DdrBursts,
+    DdrBytes,
+    OsIrqs,
+    OsPollReads,
+    OsSleepCycles,
+    OsCopyBytes,
+    SrvOffered,
+    SrvAdmitted,
+    SrvDropped,
+    SrvCoalesced,
+    SrvSubmitted,
+    SrvCompleted,
+    SrvMissed,
+    SrvUnserved,
+    MdlPasses,
+    MdlPrefetches,
+    MdlProbes,
+    CluSpilled,
+    CluStolen,
+    CluRedirected,
+    CluRetried,
+    CluFailedOver,
+}
+
+impl Ctr {
+    pub const COUNT: usize = 39;
+
+    /// Every counter in discriminant order (the registry's array layout).
+    pub const ALL: [Ctr; Ctr::COUNT] = [
+        Ctr::PollTxBytes,
+        Ctr::PollRxBytes,
+        Ctr::PollTransfers,
+        Ctr::PollRetries,
+        Ctr::SchedTxBytes,
+        Ctr::SchedRxBytes,
+        Ctr::SchedTransfers,
+        Ctr::SchedRetries,
+        Ctr::IrqTxBytes,
+        Ctr::IrqRxBytes,
+        Ctr::IrqTransfers,
+        Ctr::IrqRetries,
+        Ctr::MqTxBytes,
+        Ctr::MqRxBytes,
+        Ctr::MqTransfers,
+        Ctr::MqRetries,
+        Ctr::DrvPrestages,
+        Ctr::DdrBursts,
+        Ctr::DdrBytes,
+        Ctr::OsIrqs,
+        Ctr::OsPollReads,
+        Ctr::OsSleepCycles,
+        Ctr::OsCopyBytes,
+        Ctr::SrvOffered,
+        Ctr::SrvAdmitted,
+        Ctr::SrvDropped,
+        Ctr::SrvCoalesced,
+        Ctr::SrvSubmitted,
+        Ctr::SrvCompleted,
+        Ctr::SrvMissed,
+        Ctr::SrvUnserved,
+        Ctr::MdlPasses,
+        Ctr::MdlPrefetches,
+        Ctr::MdlProbes,
+        Ctr::CluSpilled,
+        Ctr::CluStolen,
+        Ctr::CluRedirected,
+        Ctr::CluRetried,
+        Ctr::CluFailedOver,
+    ];
+
+    /// Stable export name (the CSV/JSON key).
+    pub fn name(self) -> &'static str {
+        match self {
+            Ctr::PollTxBytes => "drv.polling.tx_bytes",
+            Ctr::PollRxBytes => "drv.polling.rx_bytes",
+            Ctr::PollTransfers => "drv.polling.transfers",
+            Ctr::PollRetries => "drv.polling.retries",
+            Ctr::SchedTxBytes => "drv.scheduled.tx_bytes",
+            Ctr::SchedRxBytes => "drv.scheduled.rx_bytes",
+            Ctr::SchedTransfers => "drv.scheduled.transfers",
+            Ctr::SchedRetries => "drv.scheduled.retries",
+            Ctr::IrqTxBytes => "drv.kernel.tx_bytes",
+            Ctr::IrqRxBytes => "drv.kernel.rx_bytes",
+            Ctr::IrqTransfers => "drv.kernel.transfers",
+            Ctr::IrqRetries => "drv.kernel.retries",
+            Ctr::MqTxBytes => "drv.multiqueue.tx_bytes",
+            Ctr::MqRxBytes => "drv.multiqueue.rx_bytes",
+            Ctr::MqTransfers => "drv.multiqueue.transfers",
+            Ctr::MqRetries => "drv.multiqueue.retries",
+            Ctr::DrvPrestages => "drv.prestages",
+            Ctr::DdrBursts => "ddr.bursts",
+            Ctr::DdrBytes => "ddr.bytes",
+            Ctr::OsIrqs => "os.irqs",
+            Ctr::OsPollReads => "os.poll_reads",
+            Ctr::OsSleepCycles => "os.sleep_cycles",
+            Ctr::OsCopyBytes => "os.copy_bytes",
+            Ctr::SrvOffered => "serve.offered",
+            Ctr::SrvAdmitted => "serve.admitted",
+            Ctr::SrvDropped => "serve.dropped",
+            Ctr::SrvCoalesced => "serve.coalesced",
+            Ctr::SrvSubmitted => "serve.submitted",
+            Ctr::SrvCompleted => "serve.completed",
+            Ctr::SrvMissed => "serve.missed",
+            Ctr::SrvUnserved => "serve.unserved",
+            Ctr::MdlPasses => "model.passes",
+            Ctr::MdlPrefetches => "model.prefetches",
+            Ctr::MdlProbes => "model.probe_runs",
+            Ctr::CluSpilled => "cluster.spilled",
+            Ctr::CluStolen => "cluster.stolen",
+            Ctr::CluRedirected => "cluster.redirected",
+            Ctr::CluRetried => "cluster.retried",
+            Ctr::CluFailedOver => "cluster.failed_over",
+        }
+    }
+
+    /// The TX-bytes lane of a driver scheme.
+    pub fn tx_bytes(kind: DriverKind) -> Ctr {
+        match kind {
+            DriverKind::UserPolling => Ctr::PollTxBytes,
+            DriverKind::UserScheduled => Ctr::SchedTxBytes,
+            DriverKind::KernelIrq => Ctr::IrqTxBytes,
+            DriverKind::KernelMultiQueue => Ctr::MqTxBytes,
+        }
+    }
+
+    /// The RX-bytes lane of a driver scheme.
+    pub fn rx_bytes(kind: DriverKind) -> Ctr {
+        match kind {
+            DriverKind::UserPolling => Ctr::PollRxBytes,
+            DriverKind::UserScheduled => Ctr::SchedRxBytes,
+            DriverKind::KernelIrq => Ctr::IrqRxBytes,
+            DriverKind::KernelMultiQueue => Ctr::MqRxBytes,
+        }
+    }
+
+    /// The completed-transfers lane of a driver scheme.
+    pub fn transfers(kind: DriverKind) -> Ctr {
+        match kind {
+            DriverKind::UserPolling => Ctr::PollTransfers,
+            DriverKind::UserScheduled => Ctr::SchedTransfers,
+            DriverKind::KernelIrq => Ctr::IrqTransfers,
+            DriverKind::KernelMultiQueue => Ctr::MqTransfers,
+        }
+    }
+
+    /// The fault-retry lane of a driver scheme.
+    pub fn retries(kind: DriverKind) -> Ctr {
+        match kind {
+            DriverKind::UserPolling => Ctr::PollRetries,
+            DriverKind::UserScheduled => Ctr::SchedRetries,
+            DriverKind::KernelIrq => Ctr::IrqRetries,
+            DriverKind::KernelMultiQueue => Ctr::MqRetries,
+        }
+    }
+}
+
+/// Log-histogram ids (distributions, not sums).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum HistId {
+    DdrBurstNs,
+    TxWindowNs,
+    RxWindowNs,
+    WaitNs,
+    CopyNs,
+}
+
+impl HistId {
+    pub const COUNT: usize = 5;
+
+    pub const ALL: [HistId; HistId::COUNT] = [
+        HistId::DdrBurstNs,
+        HistId::TxWindowNs,
+        HistId::RxWindowNs,
+        HistId::WaitNs,
+        HistId::CopyNs,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HistId::DdrBurstNs => "ddr.burst_ns",
+            HistId::TxWindowNs => "drv.tx_window_ns",
+            HistId::RxWindowNs => "drv.rx_window_ns",
+            HistId::WaitNs => "os.wait_ns",
+            HistId::CopyNs => "os.copy_ns",
+        }
+    }
+}
+
+/// Gauges: last-set value plus the high-water mark (the export).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Gauge {
+    QueueDepth,
+    InFlight,
+}
+
+impl Gauge {
+    pub const COUNT: usize = 2;
+
+    pub const ALL: [Gauge; Gauge::COUNT] = [Gauge::QueueDepth, Gauge::InFlight];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::QueueDepth => "serve.queue_depth",
+            Gauge::InFlight => "serve.in_flight",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Default, Debug, PartialEq)]
+struct GaugeCell {
+    cur: u64,
+    max: u64,
+}
+
+/// The registry: one fixed-size slot per metric id. Disabled is the
+/// default and the zero-cost mode — every record path is a single
+/// branch on `enabled`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsRegistry {
+    enabled: bool,
+    counters: [u64; Ctr::COUNT],
+    hists: [LogHistogram; HistId::COUNT],
+    gauges: [GaugeCell; Gauge::COUNT],
+}
+
+impl MetricsRegistry {
+    pub fn new(enabled: bool) -> MetricsRegistry {
+        MetricsRegistry {
+            enabled,
+            counters: [0; Ctr::COUNT],
+            hists: std::array::from_fn(|_| LogHistogram::new()),
+            gauges: [GaugeCell::default(); Gauge::COUNT],
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn add(&mut self, c: Ctr, v: u64) {
+        if self.enabled {
+            self.counters[c as usize] += v;
+        }
+    }
+
+    #[inline]
+    pub fn inc(&mut self, c: Ctr) {
+        self.add(c, 1);
+    }
+
+    #[inline]
+    pub fn observe(&mut self, h: HistId, v: u64) {
+        if self.enabled {
+            self.hists[h as usize].record(v);
+        }
+    }
+
+    #[inline]
+    pub fn gauge_set(&mut self, g: Gauge, v: u64) {
+        if self.enabled {
+            let cell = &mut self.gauges[g as usize];
+            cell.cur = v;
+            cell.max = cell.max.max(v);
+        }
+    }
+
+    pub fn get(&self, c: Ctr) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn hist(&self, h: HistId) -> &LogHistogram {
+        &self.hists[h as usize]
+    }
+
+    pub fn gauge_max(&self, g: Gauge) -> u64 {
+        self.gauges[g as usize].max
+    }
+
+    /// Fold another registry in (board → fleet aggregation). Counters
+    /// add, histograms merge, gauges keep the fleet-wide high-water
+    /// mark.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (a, b) in self.counters.iter_mut().zip(other.counters.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.hists.iter_mut().zip(other.hists.iter()) {
+            a.merge(b);
+        }
+        for (a, b) in self.gauges.iter_mut().zip(other.gauges.iter()) {
+            a.max = a.max.max(b.max);
+        }
+    }
+
+    /// Machine-readable export: every counter (zeros included, so the
+    /// schema is load-independent), non-empty histograms with summary
+    /// stats, gauge high-water marks.
+    pub fn to_json(&self) -> Json {
+        let counters = Ctr::ALL
+            .iter()
+            .map(|&c| (c.name(), Json::num(self.get(c) as f64)))
+            .collect::<Vec<_>>();
+        let hists = HistId::ALL
+            .iter()
+            .filter(|&&h| !self.hist(h).is_empty())
+            .map(|&h| {
+                let hist = self.hist(h);
+                (
+                    h.name(),
+                    Json::obj(vec![
+                        ("count", Json::num(hist.count() as f64)),
+                        ("mean", Json::num(hist.mean())),
+                        ("p50", Json::num(hist.percentile(50.0).unwrap_or(0.0))),
+                        ("p99", Json::num(hist.percentile(99.0).unwrap_or(0.0))),
+                        ("max", Json::num(hist.max() as f64)),
+                    ]),
+                )
+            })
+            .collect::<Vec<_>>();
+        let gauges = Gauge::ALL
+            .iter()
+            .map(|&g| (g.name(), Json::num(self.gauge_max(g) as f64)))
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("histograms", Json::obj(hists)),
+            ("gauges_max", Json::obj(gauges)),
+        ])
+    }
+
+    /// `metric,value` CSV of every counter and gauge high-water mark.
+    pub fn csv(&self) -> String {
+        let mut out = String::from("metric,value\n");
+        for &c in Ctr::ALL.iter() {
+            out.push_str(&format!("{},{}\n", c.name(), self.get(c)));
+        }
+        for &g in Gauge::ALL.iter() {
+            out.push_str(&format!("{}.max,{}\n", g.name(), self.gauge_max(g)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enum_tables_are_consistent() {
+        assert_eq!(Ctr::ALL.len(), Ctr::COUNT);
+        for (i, &c) in Ctr::ALL.iter().enumerate() {
+            assert_eq!(c as usize, i, "{c:?} out of order");
+        }
+        let mut names = std::collections::HashSet::new();
+        for &c in Ctr::ALL.iter() {
+            assert!(names.insert(c.name()), "duplicate name {}", c.name());
+        }
+        for (i, &h) in HistId::ALL.iter().enumerate() {
+            assert_eq!(h as usize, i);
+            assert!(names.insert(h.name()));
+        }
+        for (i, &g) in Gauge::ALL.iter().enumerate() {
+            assert_eq!(g as usize, i);
+            assert!(names.insert(g.name()));
+        }
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let mut m = MetricsRegistry::new(false);
+        m.inc(Ctr::DdrBursts);
+        m.add(Ctr::DdrBytes, 4096);
+        m.observe(HistId::DdrBurstNs, 100);
+        m.gauge_set(Gauge::QueueDepth, 9);
+        assert_eq!(m.get(Ctr::DdrBursts), 0);
+        assert_eq!(m.get(Ctr::DdrBytes), 0);
+        assert!(m.hist(HistId::DdrBurstNs).is_empty());
+        assert_eq!(m.gauge_max(Gauge::QueueDepth), 0);
+    }
+
+    #[test]
+    fn enabled_registry_counts_and_merges() {
+        let mut a = MetricsRegistry::new(true);
+        a.inc(Ctr::SrvOffered);
+        a.add(Ctr::IrqTxBytes, 100);
+        a.observe(HistId::WaitNs, 50);
+        a.gauge_set(Gauge::QueueDepth, 3);
+        a.gauge_set(Gauge::QueueDepth, 1);
+        let mut b = MetricsRegistry::new(true);
+        b.add(Ctr::IrqTxBytes, 23);
+        b.gauge_set(Gauge::QueueDepth, 7);
+        a.merge(&b);
+        assert_eq!(a.get(Ctr::IrqTxBytes), 123);
+        assert_eq!(a.get(Ctr::SrvOffered), 1);
+        assert_eq!(a.hist(HistId::WaitNs).count(), 1);
+        assert_eq!(a.gauge_max(Gauge::QueueDepth), 7);
+    }
+
+    #[test]
+    fn lane_helpers_cover_every_kind() {
+        for kind in DriverKind::ALL {
+            let lanes = [
+                Ctr::tx_bytes(kind),
+                Ctr::rx_bytes(kind),
+                Ctr::transfers(kind),
+                Ctr::retries(kind),
+            ];
+            for w in lanes.windows(2) {
+                assert_ne!(w[0], w[1]);
+            }
+        }
+        assert_eq!(Ctr::tx_bytes(DriverKind::KernelIrq), Ctr::IrqTxBytes);
+    }
+
+    #[test]
+    fn export_shapes_are_stable() {
+        let mut m = MetricsRegistry::new(true);
+        m.add(Ctr::DdrBytes, 64);
+        m.observe(HistId::DdrBurstNs, 120);
+        let j = m.to_json();
+        assert_eq!(j.get("counters").get("ddr.bytes").as_f64(), Some(64.0));
+        assert_eq!(j.get("histograms").get("ddr.burst_ns").get("count").as_f64(), Some(1.0));
+        let csv = m.csv();
+        assert!(csv.starts_with("metric,value\n"));
+        assert!(csv.contains("ddr.bytes,64\n"), "{csv}");
+        // One line per counter + gauge + the header.
+        assert_eq!(csv.lines().count(), 1 + Ctr::COUNT + Gauge::COUNT);
+    }
+}

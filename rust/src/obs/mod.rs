@@ -1,0 +1,226 @@
+//! The unified telemetry layer (DESIGN.md §15): a static-id
+//! [`MetricsRegistry`] threaded through the hardware model and drivers,
+//! frame-lifecycle [`FrameSpan`]s with per-tenant phase histograms, and
+//! a windowed [`TimeSeries`] recorder — everything the serve/cluster/
+//! model runners can observe about a run beyond their end-of-run
+//! aggregates.
+//!
+//! Gated by the `obs` config block, default off. The determinism
+//! contract every collector honours: **observation never touches the
+//! simulator** — no events scheduled, no CPU cost charged, only
+//! already-computed timestamps and counters read — so a fully enabled
+//! run is bit-identical in simulated time to the same run with `obs`
+//! off (`rust/tests/telemetry.rs` pins this).
+
+pub mod metrics;
+pub mod span;
+pub mod timeseries;
+
+pub use metrics::{Ctr, Gauge, HistId, MetricsRegistry};
+pub use span::{FrameSpan, SpanLog};
+pub use timeseries::TimeSeries;
+
+use crate::sim::trace::Trace;
+use crate::util::json::Json;
+
+/// Telemetry knobs, nested under the `obs` config key. Every default is
+/// off/inert: with `enabled: false` no collector records anything and
+/// every runner replays its exact seed event sequence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Master switch for every collector.
+    pub enabled: bool,
+    /// Record per-frame lifecycle spans (and per-tenant phase
+    /// histograms) in the serving loops.
+    pub spans: bool,
+    /// Record the windowed time-series.
+    pub timeseries: bool,
+    /// Width of one time-series bucket.
+    pub window_ns: u64,
+    /// Cap on retained raw spans (phase histograms keep counting past
+    /// it; the overflow count is reported).
+    pub max_spans: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: false,
+            spans: true,
+            timeseries: true,
+            // 10 ms windows: ~5 frames per bucket at the RoShamBo rate,
+            // fine enough to see the admission knee, coarse enough that
+            // a 1 s horizon is 100 rows.
+            window_ns: 10_000_000,
+            max_spans: 65_536,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// The disabled configuration (nothing records).
+    pub fn none() -> Self {
+        ObsConfig::default()
+    }
+
+    /// Apply overrides from the nested `obs` JSON object; unknown keys
+    /// are an error.
+    pub fn apply_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("obs must be a JSON object"))?;
+        for (k, val) in obj {
+            match k.as_str() {
+                "enabled" => {
+                    self.enabled = val
+                        .as_bool()
+                        .ok_or_else(|| anyhow::anyhow!("obs key {k} must be a boolean"))?;
+                }
+                "spans" => {
+                    self.spans = val
+                        .as_bool()
+                        .ok_or_else(|| anyhow::anyhow!("obs key {k} must be a boolean"))?;
+                }
+                "timeseries" => {
+                    self.timeseries = val
+                        .as_bool()
+                        .ok_or_else(|| anyhow::anyhow!("obs key {k} must be a boolean"))?;
+                }
+                "window_ns" => {
+                    self.window_ns = val.as_u64().ok_or_else(|| {
+                        anyhow::anyhow!("obs key {k} must be a non-negative integer")
+                    })?;
+                }
+                "max_spans" => {
+                    self.max_spans = val.as_u64().ok_or_else(|| {
+                        anyhow::anyhow!("obs key {k} must be a non-negative integer")
+                    })?;
+                }
+                _ => anyhow::bail!("unknown obs key: {k}"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled)),
+            ("spans", Json::Bool(self.spans)),
+            ("timeseries", Json::Bool(self.timeseries)),
+            ("window_ns", Json::num(self.window_ns as f64)),
+            ("max_spans", Json::num(self.max_spans as f64)),
+        ])
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.window_ns > 0, "obs.window_ns must be > 0");
+        anyhow::ensure!(self.max_spans > 0, "obs.max_spans must be > 0");
+        Ok(())
+    }
+
+    /// Should the serving loops record spans?
+    pub fn spans_on(&self) -> bool {
+        self.enabled && self.spans
+    }
+
+    /// Should the serving loops record the time-series?
+    pub fn timeseries_on(&self) -> bool {
+        self.enabled && self.timeseries
+    }
+}
+
+/// Everything one observed run collected. The `*_observed` runners
+/// return it alongside their unchanged report; the legacy entry points
+/// discard it.
+#[derive(Clone, Debug)]
+pub struct ObsBundle {
+    pub metrics: MetricsRegistry,
+    pub spans: SpanLog,
+    pub series: TimeSeries,
+    /// The full-stack Perfetto trace, when the caller asked for one.
+    pub trace: Option<Trace>,
+}
+
+impl ObsBundle {
+    /// An empty bundle shaped by `cfg` (the starting point for fleet
+    /// aggregation).
+    pub fn empty(cfg: &ObsConfig, tenants: usize) -> ObsBundle {
+        ObsBundle {
+            metrics: MetricsRegistry::new(cfg.enabled),
+            spans: SpanLog::new(cfg.spans_on(), cfg.max_spans as usize, tenants),
+            series: TimeSeries::new(cfg.timeseries_on(), cfg.window_ns),
+            trace: None,
+        }
+    }
+
+    /// Fold another bundle's collectors in (board → fleet). Traces are
+    /// merged separately with [`Trace::merge_prefixed`] so each board
+    /// keeps its own tracks.
+    pub fn merge(&mut self, other: &ObsBundle) {
+        self.metrics.merge(&other.metrics);
+        self.spans.merge(&other.spans);
+        self.series.merge(&other.series);
+    }
+
+    /// The combined machine-readable export (`telemetry.json`).
+    pub fn to_json(&self, engines: usize) -> Json {
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("metrics", self.metrics.to_json()),
+            ("spans", self.spans.to_json()),
+            ("timeseries", self.series.to_json(engines)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_config_roundtrips_and_rejects_junk() {
+        let mut cfg = ObsConfig::default();
+        assert!(!cfg.enabled && cfg.spans && cfg.timeseries);
+        cfg.enabled = true;
+        cfg.window_ns = 5_000_000;
+        cfg.max_spans = 128;
+        cfg.spans = false;
+        let json = cfg.to_json();
+        let mut back = ObsConfig::default();
+        back.apply_json(&json).unwrap();
+        assert_eq!(cfg, back);
+        let mut cfg = ObsConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"enabled": 1}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"bogus": true}"#).unwrap()).is_err());
+        cfg.window_ns = 0;
+        assert!(cfg.validate().is_err());
+        cfg.window_ns = 1;
+        cfg.max_spans = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn sub_switches_require_the_master() {
+        let mut cfg = ObsConfig::default();
+        assert!(!cfg.spans_on() && !cfg.timeseries_on());
+        cfg.enabled = true;
+        assert!(cfg.spans_on() && cfg.timeseries_on());
+        cfg.spans = false;
+        assert!(!cfg.spans_on() && cfg.timeseries_on());
+    }
+
+    #[test]
+    fn bundle_merges_collectors() {
+        let cfg = ObsConfig { enabled: true, ..ObsConfig::default() };
+        let mut a = ObsBundle::empty(&cfg, 1);
+        let mut b = ObsBundle::empty(&cfg, 1);
+        b.metrics.inc(Ctr::SrvCompleted);
+        b.series.on_completed(100, false);
+        a.merge(&b);
+        assert_eq!(a.metrics.get(Ctr::SrvCompleted), 1);
+        assert_eq!(a.series.total_completed(), 1);
+        let j = a.to_json(2);
+        assert_eq!(j.get("schema").as_f64(), Some(1.0));
+        assert!(j.get("metrics").get("counters").as_obj().is_some());
+    }
+}

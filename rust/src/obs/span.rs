@@ -1,0 +1,250 @@
+//! Frame-lifecycle spans: one record per served frame carrying the
+//! phase timestamps (arrival → dispatch → completion) and the bytes it
+//! moved, plus per-tenant phase histograms fed as spans are recorded.
+//!
+//! Recording happens at frame completion from timestamps the serve loop
+//! already holds — the span log never touches the simulator, so an
+//! enabled log cannot alter simulated time. The raw span vector is
+//! capped at `obs.max_spans` (histograms keep counting past the cap).
+
+use crate::sim::trace::Trace;
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+
+/// One frame's lifecycle through the serve loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FrameSpan {
+    pub tenant: usize,
+    pub seq: u64,
+    /// Engine (DMA channel) the frame ran on.
+    pub engine: usize,
+    pub arrived_ns: u64,
+    /// First layer submitted to the engine.
+    pub started_ns: u64,
+    /// Last layer's RX landed and the FC head retired.
+    pub completed_ns: u64,
+    pub layers: u32,
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+    pub missed: bool,
+}
+
+impl FrameSpan {
+    /// Admission-queue wait: arrival → first submit.
+    pub fn queue_ns(&self) -> u64 {
+        self.started_ns.saturating_sub(self.arrived_ns)
+    }
+
+    /// Engine occupancy: first submit → completion.
+    pub fn engine_ns(&self) -> u64 {
+        self.completed_ns.saturating_sub(self.started_ns)
+    }
+
+    /// End-to-end latency.
+    pub fn total_ns(&self) -> u64 {
+        self.completed_ns.saturating_sub(self.arrived_ns)
+    }
+}
+
+/// Per-tenant phase histograms.
+#[derive(Clone, Debug, Default, PartialEq)]
+struct TenantPhases {
+    queue: LogHistogram,
+    engine: LogHistogram,
+    total: LogHistogram,
+}
+
+/// The capped span log plus always-on (while enabled) phase histograms.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanLog {
+    enabled: bool,
+    cap: usize,
+    pub spans: Vec<FrameSpan>,
+    /// Frames recorded past the cap (histograms still saw them).
+    pub truncated: u64,
+    tenants: Vec<TenantPhases>,
+    frames: u64,
+}
+
+impl SpanLog {
+    pub fn new(enabled: bool, cap: usize, tenants: usize) -> SpanLog {
+        SpanLog {
+            enabled,
+            cap,
+            spans: Vec::new(),
+            truncated: 0,
+            tenants: vec![TenantPhases::default(); tenants],
+            frames: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Frames recorded, including those past the span cap.
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    pub fn record(&mut self, span: FrameSpan) {
+        if !self.enabled {
+            return;
+        }
+        self.frames += 1;
+        if self.tenants.len() <= span.tenant {
+            self.tenants.resize(span.tenant + 1, TenantPhases::default());
+        }
+        let t = &mut self.tenants[span.tenant];
+        t.queue.record(span.queue_ns());
+        t.engine.record(span.engine_ns());
+        t.total.record(span.total_ns());
+        if self.spans.len() < self.cap {
+            self.spans.push(span);
+        } else {
+            self.truncated += 1;
+        }
+    }
+
+    /// Fold another log in (board → fleet). Spans append up to the cap.
+    pub fn merge(&mut self, other: &SpanLog) {
+        self.frames += other.frames;
+        self.truncated += other.truncated;
+        if self.tenants.len() < other.tenants.len() {
+            self.tenants.resize(other.tenants.len(), TenantPhases::default());
+        }
+        for (a, b) in self.tenants.iter_mut().zip(other.tenants.iter()) {
+            a.queue.merge(&b.queue);
+            a.engine.merge(&b.engine);
+            a.total.merge(&b.total);
+        }
+        for s in &other.spans {
+            if self.spans.len() < self.cap {
+                self.spans.push(*s);
+            } else {
+                self.truncated += 1;
+            }
+        }
+    }
+
+    /// Emit every retained span onto per-tenant trace tracks: a queue
+    /// phase plus an engine phase per frame (missed deadlines tagged).
+    pub fn add_tracks(&self, trace: &mut Trace) {
+        for s in &self.spans {
+            let track = format!("tenant{}", s.tenant);
+            if s.queue_ns() > 0 {
+                trace.span(track.clone(), format!("queue f{}", s.seq), s.arrived_ns, s.queue_ns());
+            }
+            let tag = if s.missed { " MISS" } else { "" };
+            trace.span(
+                track,
+                format!("run f{} e{}{}", s.seq, s.engine, tag),
+                s.started_ns,
+                s.engine_ns(),
+            );
+        }
+    }
+
+    /// Per-tenant phase summary (the `telemetry` report's span table).
+    pub fn to_json(&self) -> Json {
+        let tenants = self
+            .tenants
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| !p.total.is_empty())
+            .map(|(i, p)| {
+                Json::obj(vec![
+                    ("tenant", Json::num(i as f64)),
+                    ("frames", Json::num(p.total.count() as f64)),
+                    ("queue_p50_ns", Json::num(p.queue.percentile(50.0).unwrap_or(0.0))),
+                    ("queue_p99_ns", Json::num(p.queue.percentile(99.0).unwrap_or(0.0))),
+                    ("engine_p50_ns", Json::num(p.engine.percentile(50.0).unwrap_or(0.0))),
+                    ("engine_p99_ns", Json::num(p.engine.percentile(99.0).unwrap_or(0.0))),
+                    ("total_p50_ns", Json::num(p.total.percentile(50.0).unwrap_or(0.0))),
+                    ("total_p99_ns", Json::num(p.total.percentile(99.0).unwrap_or(0.0))),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("frames", Json::num(self.frames as f64)),
+            ("retained", Json::num(self.spans.len() as f64)),
+            ("truncated", Json::num(self.truncated as f64)),
+            ("tenants", Json::Arr(tenants)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(tenant: usize, seq: u64, arrived: u64, started: u64, done: u64) -> FrameSpan {
+        FrameSpan {
+            tenant,
+            seq,
+            engine: 0,
+            arrived_ns: arrived,
+            started_ns: started,
+            completed_ns: done,
+            layers: 5,
+            tx_bytes: 100,
+            rx_bytes: 50,
+            missed: false,
+        }
+    }
+
+    #[test]
+    fn disabled_log_records_nothing() {
+        let mut l = SpanLog::new(false, 16, 2);
+        l.record(span(0, 0, 0, 10, 20));
+        assert_eq!(l.frames(), 0);
+        assert!(l.spans.is_empty());
+    }
+
+    #[test]
+    fn phases_split_queue_and_engine_time() {
+        let s = span(0, 1, 100, 160, 400);
+        assert_eq!(s.queue_ns(), 60);
+        assert_eq!(s.engine_ns(), 240);
+        assert_eq!(s.total_ns(), 300);
+    }
+
+    #[test]
+    fn cap_truncates_spans_but_not_histograms() {
+        let mut l = SpanLog::new(true, 2, 1);
+        for i in 0..5 {
+            l.record(span(0, i, i * 10, i * 10 + 1, i * 10 + 5));
+        }
+        assert_eq!(l.spans.len(), 2);
+        assert_eq!(l.truncated, 3);
+        assert_eq!(l.frames(), 5);
+        let j = l.to_json();
+        assert_eq!(j.get("frames").as_f64(), Some(5.0));
+        assert_eq!(j.get("tenants").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn merge_appends_and_sums() {
+        let mut a = SpanLog::new(true, 4, 1);
+        a.record(span(0, 0, 0, 1, 2));
+        let mut b = SpanLog::new(true, 4, 2);
+        b.record(span(1, 0, 5, 6, 9));
+        a.merge(&b);
+        assert_eq!(a.frames(), 2);
+        assert_eq!(a.spans.len(), 2);
+        assert_eq!(a.to_json().get("tenants").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn tracks_are_per_tenant() {
+        let mut l = SpanLog::new(true, 8, 2);
+        l.record(span(0, 0, 0, 10, 20));
+        l.record(span(1, 0, 0, 0, 30)); // zero queue wait → one span only
+        let mut t = Trace::default();
+        l.add_tracks(&mut t);
+        assert_eq!(t.spans.len(), 3);
+        assert_eq!(t.spans[0].track, "tenant0");
+        assert_eq!(t.spans[2].track, "tenant1");
+        assert!(t.spans[2].name.starts_with("run f0"));
+    }
+}

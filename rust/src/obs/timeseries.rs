@@ -1,0 +1,263 @@
+//! Windowed time-series: fixed `window_ns` buckets of offered load,
+//! goodput, deadline misses, queue depth and engine busy time — the
+//! observation stream a future adaptive controller would consume, and
+//! the `telemetry` experiment's CSV.
+//!
+//! Buckets are materialised lazily from already-computed event
+//! timestamps (`t_ns / window_ns`): the recorder schedules nothing on
+//! the simulator calendar, so enabling it changes neither timings nor
+//! the report's `events` count.
+
+use crate::util::json::Json;
+
+/// One `window_ns`-wide bucket of aggregates.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Bucket {
+    /// Frames offered at the front door in this window.
+    pub offered: u64,
+    /// Frames completed in this window.
+    pub completed: u64,
+    /// Completions past their deadline.
+    pub missed: u64,
+    /// Deepest admission queue observed in this window.
+    pub queue_peak: u64,
+    /// Engine busy time attributed to this window (summed over engines,
+    /// so it can exceed `window_ns`).
+    pub busy_ns: u64,
+}
+
+/// The windowed recorder.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimeSeries {
+    enabled: bool,
+    window_ns: u64,
+    pub buckets: Vec<Bucket>,
+}
+
+impl TimeSeries {
+    pub fn new(enabled: bool, window_ns: u64) -> TimeSeries {
+        TimeSeries { enabled, window_ns: window_ns.max(1), buckets: Vec::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn window_ns(&self) -> u64 {
+        self.window_ns
+    }
+
+    fn at(&mut self, t_ns: u64) -> &mut Bucket {
+        let i = (t_ns / self.window_ns) as usize;
+        if self.buckets.len() <= i {
+            self.buckets.resize(i + 1, Bucket::default());
+        }
+        &mut self.buckets[i]
+    }
+
+    pub fn on_offered(&mut self, t_ns: u64) {
+        if self.enabled {
+            self.at(t_ns).offered += 1;
+        }
+    }
+
+    pub fn on_completed(&mut self, t_ns: u64, missed: bool) {
+        if self.enabled {
+            let b = self.at(t_ns);
+            b.completed += 1;
+            if missed {
+                b.missed += 1;
+            }
+        }
+    }
+
+    pub fn on_queue_depth(&mut self, t_ns: u64, depth: u64) {
+        if self.enabled {
+            let b = self.at(t_ns);
+            b.queue_peak = b.queue_peak.max(depth);
+        }
+    }
+
+    /// Attribute `busy_ns` of engine occupancy ending at `end_ns`,
+    /// spread backwards across the windows it actually covered.
+    pub fn add_busy(&mut self, end_ns: u64, busy_ns: u64) {
+        if !self.enabled || busy_ns == 0 {
+            return;
+        }
+        let mut remaining = busy_ns;
+        let mut end = end_ns.max(1);
+        while remaining > 0 {
+            // Window containing the instant just before `end`.
+            let win_start = ((end - 1) / self.window_ns) * self.window_ns;
+            let in_window = (end - win_start).min(remaining);
+            self.at(win_start).busy_ns += in_window;
+            remaining -= in_window;
+            if win_start == 0 {
+                // Occupancy predating t=0 (can't happen in practice;
+                // clamp it into the first window).
+                self.at(0).busy_ns += remaining;
+                break;
+            }
+            end = win_start;
+        }
+    }
+
+    /// Fold another series in, bucket-wise (board → fleet; windows must
+    /// agree, which they do — both come from the same `obs` config).
+    pub fn merge(&mut self, other: &TimeSeries) {
+        debug_assert_eq!(self.window_ns, other.window_ns);
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), Bucket::default());
+        }
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            a.offered += b.offered;
+            a.completed += b.completed;
+            a.missed += b.missed;
+            a.queue_peak = a.queue_peak.max(b.queue_peak);
+            a.busy_ns += b.busy_ns;
+        }
+    }
+
+    pub fn total_offered(&self) -> u64 {
+        self.buckets.iter().map(|b| b.offered).sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.buckets.iter().map(|b| b.completed).sum()
+    }
+
+    fn goodput_fps(&self, b: &Bucket) -> f64 {
+        b.completed as f64 / (self.window_ns as f64 * 1e-9)
+    }
+
+    /// In-window service quality: completions that made their deadline
+    /// over completions (1.0 for an idle window).
+    fn slo_attainment(b: &Bucket) -> f64 {
+        if b.completed == 0 {
+            return 1.0;
+        }
+        (b.completed - b.missed) as f64 / b.completed as f64
+    }
+
+    /// Busy share of `engines` engines over one window, clamped to 1.
+    fn utilization(&self, b: &Bucket, engines: usize) -> f64 {
+        let cap = self.window_ns as f64 * engines.max(1) as f64;
+        (b.busy_ns as f64 / cap).min(1.0)
+    }
+
+    /// The windowed schema (DESIGN.md §15).
+    pub fn to_json(&self, engines: usize) -> Json {
+        let windows = self
+            .buckets
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                Json::obj(vec![
+                    ("start_ns", Json::num((i as u64 * self.window_ns) as f64)),
+                    ("offered", Json::num(b.offered as f64)),
+                    ("completed", Json::num(b.completed as f64)),
+                    ("missed", Json::num(b.missed as f64)),
+                    ("goodput_fps", Json::num(self.goodput_fps(b))),
+                    ("slo_attainment", Json::num(Self::slo_attainment(b))),
+                    ("queue_peak", Json::num(b.queue_peak as f64)),
+                    ("busy_ns", Json::num(b.busy_ns as f64)),
+                    ("engine_utilization", Json::num(self.utilization(b, engines))),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("window_ns", Json::num(self.window_ns as f64)),
+            ("engines", Json::num(engines as f64)),
+            ("windows", Json::Arr(windows)),
+        ])
+    }
+
+    /// CSV twin of [`TimeSeries::to_json`] (one row per window).
+    pub fn csv(&self, engines: usize) -> String {
+        let mut out = String::from(
+            "window_start_ns,offered,completed,missed,goodput_fps,slo_attainment,\
+             queue_peak,busy_ns,engine_utilization\n",
+        );
+        for (i, b) in self.buckets.iter().enumerate() {
+            out.push_str(&format!(
+                "{},{},{},{},{:.3},{:.4},{},{},{:.4}\n",
+                i as u64 * self.window_ns,
+                b.offered,
+                b.completed,
+                b.missed,
+                self.goodput_fps(b),
+                Self::slo_attainment(b),
+                b.queue_peak,
+                b.busy_ns,
+                self.utilization(b, engines),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_series_stays_empty() {
+        let mut s = TimeSeries::new(false, 1_000);
+        s.on_offered(10);
+        s.on_completed(20, true);
+        s.add_busy(500, 400);
+        assert!(s.buckets.is_empty());
+    }
+
+    #[test]
+    fn events_land_in_their_windows() {
+        let mut s = TimeSeries::new(true, 1_000);
+        s.on_offered(0);
+        s.on_offered(999);
+        s.on_offered(1_000);
+        s.on_completed(2_500, true);
+        s.on_queue_depth(2_600, 4);
+        s.on_queue_depth(2_700, 2);
+        assert_eq!(s.buckets.len(), 3);
+        assert_eq!(s.buckets[0].offered, 2);
+        assert_eq!(s.buckets[1].offered, 1);
+        assert_eq!(s.buckets[2].completed, 1);
+        assert_eq!(s.buckets[2].missed, 1);
+        assert_eq!(s.buckets[2].queue_peak, 4);
+        assert_eq!(s.total_offered(), 3);
+        assert_eq!(s.total_completed(), 1);
+    }
+
+    #[test]
+    fn busy_time_spreads_across_windows() {
+        let mut s = TimeSeries::new(true, 1_000);
+        // 1.5 windows of work ending mid-window 2.
+        s.add_busy(2_500, 1_500);
+        assert_eq!(s.buckets[2].busy_ns, 500);
+        assert_eq!(s.buckets[1].busy_ns, 1_000);
+        assert_eq!(s.buckets[0].busy_ns, 0);
+        // Exactly on a boundary: all of it goes to the earlier window.
+        let mut t = TimeSeries::new(true, 1_000);
+        t.add_busy(1_000, 1_000);
+        assert_eq!(t.buckets[0].busy_ns, 1_000);
+    }
+
+    #[test]
+    fn derived_columns_and_merge() {
+        let mut a = TimeSeries::new(true, 1_000_000);
+        a.on_completed(100, false);
+        a.on_completed(200, true);
+        a.add_busy(500_000, 500_000);
+        let mut b = TimeSeries::new(true, 1_000_000);
+        b.on_completed(300, false);
+        a.merge(&b);
+        let j = a.to_json(2);
+        let w = &j.get("windows").as_arr().unwrap()[0];
+        assert_eq!(w.get("completed").as_f64(), Some(3.0));
+        assert_eq!(w.get("slo_attainment").as_f64(), Some(2.0 / 3.0));
+        assert_eq!(w.get("engine_utilization").as_f64(), Some(0.25));
+        let csv = a.csv(2);
+        assert_eq!(csv.lines().count(), 2, "{csv}");
+        assert!(csv.lines().nth(1).unwrap().starts_with("0,"), "{csv}");
+    }
+}

@@ -14,6 +14,7 @@ use crate::coordinator::experiments::{
 use crate::coordinator::model::{DriverPolicy, ModelRow};
 use crate::coordinator::sweeps::{BenchReport, ServeSweepRow};
 use crate::drivers::DriverKind;
+use crate::obs::{Ctr, Gauge, HistId, ObsBundle};
 use crate::workload::ServeReport;
 
 /// Distinct sizes present in a sweep, in ascending order.
@@ -494,6 +495,118 @@ pub fn serve_csv(rep: &ServeReport) -> String {
             t.slo_attainment(),
             t.normalize_cpu.ns(),
             t.max_queue,
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// The `telemetry` command's report: the serve SLO table followed by
+/// the metric funnel (non-zero counters, gauge peaks, histogram tails),
+/// the per-tenant frame-phase table, and the windowed time-series
+/// (DESIGN.md §15).
+pub fn telemetry_text(rep: &ServeReport, obs: &ObsBundle, engines: usize) -> String {
+    let mut out = serve_text(rep);
+    writeln!(out).unwrap();
+    writeln!(out, "Telemetry — counters (non-zero of {}):", Ctr::COUNT).unwrap();
+    for &c in Ctr::ALL.iter() {
+        let v = obs.metrics.get(c);
+        if v > 0 {
+            writeln!(out, "  {:<26} {:>14}", c.name(), v).unwrap();
+        }
+    }
+    for &g in Gauge::ALL.iter() {
+        writeln!(out, "  {:<26} {:>14} (peak)", g.name(), obs.metrics.gauge_max(g)).unwrap();
+    }
+    writeln!(
+        out,
+        "histograms: {:<14} {:>9} {:>10} {:>10} {:>10}",
+        "", "count", "p50 us", "p99 us", "max us"
+    )
+    .unwrap();
+    for &h in HistId::ALL.iter() {
+        let hist = obs.metrics.hist(h);
+        if hist.is_empty() {
+            continue;
+        }
+        writeln!(
+            out,
+            "  {:<24} {:>9} {:>10.1} {:>10.1} {:>10.1}",
+            h.name(),
+            hist.count(),
+            hist.percentile(50.0).unwrap_or(0.0) / 1e3,
+            hist.percentile(99.0).unwrap_or(0.0) / 1e3,
+            hist.max() as f64 / 1e3,
+        )
+        .unwrap();
+    }
+    let sj = obs.spans.to_json();
+    writeln!(
+        out,
+        "spans: {} frames ({} retained, {} truncated)",
+        obs.spans.frames(),
+        obs.spans.spans.len(),
+        obs.spans.truncated,
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:<7} {:>7} | {:>9} {:>9} | {:>9} {:>9} | {:>9} {:>9}",
+        "tenant", "frames", "queue p50", "p99 ms", "eng p50", "p99 ms", "total p50", "p99 ms"
+    )
+    .unwrap();
+    if let Some(tenants) = sj.get("tenants").as_arr() {
+        for t in tenants {
+            let f = |k: &str| t.get(k).as_f64().unwrap_or(0.0) / 1e6;
+            writeln!(
+                out,
+                "{:<7} {:>7} | {:>9.2} {:>9.2} | {:>9.2} {:>9.2} | {:>9.2} {:>9.2}",
+                t.get("tenant").as_f64().unwrap_or(0.0) as u64,
+                t.get("frames").as_f64().unwrap_or(0.0) as u64,
+                f("queue_p50_ns"),
+                f("queue_p99_ns"),
+                f("engine_p50_ns"),
+                f("engine_p99_ns"),
+                f("total_p50_ns"),
+                f("total_p99_ns"),
+            )
+            .unwrap();
+        }
+    }
+    writeln!(
+        out,
+        "time-series: {} windows of {:.1} ms x {engines} engines",
+        obs.series.buckets.len(),
+        obs.series.window_ns() as f64 / 1e6,
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:>9} {:>7} {:>6} {:>6} {:>9} {:>6} {:>6} {:>6}",
+        "start ms", "offered", "done", "miss", "goodput/s", "SLO%", "queue", "util%"
+    )
+    .unwrap();
+    let w_ns = obs.series.window_ns();
+    for (i, b) in obs.series.buckets.iter().enumerate() {
+        let goodput = b.completed as f64 / (w_ns as f64 * 1e-9);
+        let slo = if b.completed == 0 {
+            1.0
+        } else {
+            (b.completed - b.missed) as f64 / b.completed as f64
+        };
+        let util =
+            (b.busy_ns as f64 / (w_ns as f64 * engines.max(1) as f64)).min(1.0);
+        writeln!(
+            out,
+            "{:>9.1} {:>7} {:>6} {:>6} {:>9.1} {:>5.1}% {:>6} {:>5.1}%",
+            (i as u64 * w_ns) as f64 / 1e6,
+            b.offered,
+            b.completed,
+            b.missed,
+            goodput,
+            100.0 * slo,
+            b.queue_peak,
+            100.0 * util,
         )
         .unwrap();
     }
@@ -1254,5 +1367,36 @@ mod tests {
         let sc = cluster_sweep_csv(&[row]);
         assert!(sc.starts_with("boards,placement,"));
         assert_eq!(sc.lines().count(), 2);
+    }
+
+    #[test]
+    fn save_creates_missing_parent_directories() {
+        let base =
+            std::env::temp_dir().join(format!("psoc_report_save_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let nested = base.join("a").join("b").join("out.csv");
+        let path = nested.to_str().unwrap();
+        save(path, "x,y\n1,2\n").unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "x,y\n1,2\n");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn telemetry_report_renders_all_sections() {
+        let mut cfg = crate::config::SimConfig::default();
+        cfg.workload.tenants = 2;
+        cfg.workload.duration_ns = 60_000_000;
+        cfg.obs.enabled = true;
+        let (rep, obs) =
+            crate::coordinator::serve::serve_observed(&cfg, DriverKind::KernelIrq, 2, false)
+                .unwrap();
+        let t = telemetry_text(&rep, &obs, 2);
+        assert!(t.contains("Telemetry — counters"), "{t}");
+        assert!(t.contains("serve.offered"), "{t}");
+        assert!(t.contains("serve.queue_depth"), "{t}");
+        assert!(t.contains("spans:"), "{t}");
+        assert!(t.contains("time-series:"), "{t}");
+        // The SLO table leads, byte-identical to the plain serve report.
+        assert!(t.starts_with(&serve_text(&rep)), "{t}");
     }
 }

@@ -7,13 +7,20 @@
 //! `chrome://tracing` / Perfetto to *see* the paper's phenomena: the
 //! TX/RX burst interleave, the polling spin occupying the CPU track
 //! while kernel-mode waits leave it empty, DDR turnaround gaps.
+//!
+//! Tracks are open-ended strings: the six core hardware tracks keep
+//! their historical tids 0–5, and every other track name (per-engine
+//! `mm2s.e1`, per-tenant `tenant0`, per-board `b2.cpu`, ...) is interned
+//! to a stable tid ≥ 6 at export time in first-appearance order, so
+//! multi-engine and multi-board tracks no longer collapse onto one
+//! Perfetto row.
 
 use crate::util::json::Json;
 
 /// One duration span on a named track.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Span {
-    pub track: &'static str,
+    pub track: String,
     pub name: String,
     pub start_ns: u64,
     pub dur_ns: u64,
@@ -22,7 +29,7 @@ pub struct Span {
 /// One instantaneous marker.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Instant {
-    pub track: &'static str,
+    pub track: String,
     pub name: String,
     pub at_ns: u64,
 }
@@ -34,45 +41,90 @@ pub struct Trace {
     pub instants: Vec<Instant>,
 }
 
-/// Stable tid per track name (chrome wants numeric thread ids).
-fn tid(track: &str) -> u64 {
-    match track {
-        "cpu" => 0,
-        "ddr" => 1,
-        "mm2s" => 2,
-        "s2mm" => 3,
-        "irq" => 4,
-        "device" => 5,
-        _ => 9,
+/// The six historical hardware tracks with fixed tids (kept stable so
+/// saved traces diff cleanly across versions).
+const CORE_TRACKS: [(&str, u64); 6] =
+    [("cpu", 0), ("ddr", 1), ("mm2s", 2), ("s2mm", 3), ("irq", 4), ("device", 5)];
+
+fn core_tid(track: &str) -> Option<u64> {
+    CORE_TRACKS.iter().find(|(name, _)| *name == track).map(|&(_, t)| t)
+}
+
+/// Export-time tid interner: core tracks map to 0–5, anything else gets
+/// 6, 7, ... keyed by track name in first-appearance order.
+#[derive(Default)]
+struct TidMap {
+    dynamic: Vec<String>,
+}
+
+impl TidMap {
+    fn tid(&mut self, track: &str) -> u64 {
+        if let Some(t) = core_tid(track) {
+            return t;
+        }
+        if let Some(i) = self.dynamic.iter().position(|d| d == track) {
+            return 6 + i as u64;
+        }
+        self.dynamic.push(track.to_string());
+        6 + (self.dynamic.len() - 1) as u64
     }
 }
 
 impl Trace {
-    pub fn span(&mut self, track: &'static str, name: impl Into<String>, start_ns: u64, dur_ns: u64) {
-        self.spans.push(Span { track, name: name.into(), start_ns, dur_ns });
+    pub fn span(
+        &mut self,
+        track: impl Into<String>,
+        name: impl Into<String>,
+        start_ns: u64,
+        dur_ns: u64,
+    ) {
+        self.spans.push(Span { track: track.into(), name: name.into(), start_ns, dur_ns });
     }
 
-    pub fn instant(&mut self, track: &'static str, name: impl Into<String>, at_ns: u64) {
-        self.instants.push(Instant { track, name: name.into(), at_ns });
+    pub fn instant(&mut self, track: impl Into<String>, name: impl Into<String>, at_ns: u64) {
+        self.instants.push(Instant { track: track.into(), name: name.into(), at_ns });
     }
 
     pub fn is_empty(&self) -> bool {
         self.spans.is_empty() && self.instants.is_empty()
     }
 
+    /// Append every event of `other`, prefixing its track names with
+    /// `prefix` (e.g. `"b0."` for board 0 in a cluster trace). Core
+    /// track names become dynamic tracks under the prefix, which is the
+    /// point: each board keeps its own rows.
+    pub fn merge_prefixed(&mut self, other: &Trace, prefix: &str) {
+        for s in &other.spans {
+            self.spans.push(Span {
+                track: format!("{prefix}{}", s.track),
+                name: s.name.clone(),
+                start_ns: s.start_ns,
+                dur_ns: s.dur_ns,
+            });
+        }
+        for i in &other.instants {
+            self.instants.push(Instant {
+                track: format!("{prefix}{}", i.track),
+                name: i.name.clone(),
+                at_ns: i.at_ns,
+            });
+        }
+    }
+
     /// Serialize in the Trace Event Format (`ph: "X"` complete events,
     /// `ph: "i"` instants; timestamps in µs as the format requires).
     pub fn to_chrome_json(&self) -> Json {
+        let mut tids = TidMap::default();
         let mut events: Vec<Json> = Vec::with_capacity(self.spans.len() + self.instants.len());
         for s in &self.spans {
             events.push(Json::obj(vec![
                 ("name", Json::str(s.name.clone())),
                 ("ph", Json::str("X")),
                 ("pid", Json::num(1.0)),
-                ("tid", Json::num(tid(s.track) as f64)),
+                ("tid", Json::num(tids.tid(&s.track) as f64)),
                 ("ts", Json::num(s.start_ns as f64 / 1e3)),
                 ("dur", Json::num(s.dur_ns as f64 / 1e3)),
-                ("cat", Json::str(s.track)),
+                ("cat", Json::str(s.track.clone())),
             ]));
         }
         for i in &self.instants {
@@ -81,24 +133,25 @@ impl Trace {
                 ("ph", Json::str("i")),
                 ("s", Json::str("t")),
                 ("pid", Json::num(1.0)),
-                ("tid", Json::num(tid(i.track) as f64)),
+                ("tid", Json::num(tids.tid(&i.track) as f64)),
                 ("ts", Json::num(i.at_ns as f64 / 1e3)),
-                ("cat", Json::str(i.track)),
+                ("cat", Json::str(i.track.clone())),
             ]));
         }
-        // Thread-name metadata so the tracks are labelled in the viewer.
-        for (track, t) in
-            [("cpu", 0u64), ("ddr", 1), ("mm2s", 2), ("s2mm", 3), ("irq", 4), ("device", 5)]
-        {
+        // Thread-name metadata so the tracks are labelled in the viewer:
+        // the six core tracks always, then every interned dynamic track.
+        let mut named: Vec<(String, u64)> =
+            CORE_TRACKS.iter().map(|&(name, t)| (name.to_string(), t)).collect();
+        for (i, track) in tids.dynamic.iter().enumerate() {
+            named.push((track.clone(), 6 + i as u64));
+        }
+        for (track, t) in named {
             events.push(Json::obj(vec![
                 ("name", Json::str("thread_name")),
                 ("ph", Json::str("M")),
                 ("pid", Json::num(1.0)),
                 ("tid", Json::num(t as f64)),
-                (
-                    "args",
-                    Json::obj(vec![("name", Json::str(track))]),
-                ),
+                ("args", Json::obj(vec![("name", Json::str(track))])),
             ]));
         }
         Json::obj(vec![("traceEvents", Json::Arr(events))])
@@ -133,8 +186,38 @@ mod tests {
     }
 
     #[test]
-    fn track_tids_stable() {
-        assert_eq!(tid("cpu"), 0);
-        assert_eq!(tid("unknown-track"), 9);
+    fn distinct_dynamic_tracks_get_distinct_stable_tids() {
+        let mut t = Trace::default();
+        t.span("mm2s", "read 1B", 0, 1);
+        t.span("mm2s.e1", "read 1B", 0, 1);
+        t.span("s2mm.e1", "write 1B", 0, 1);
+        t.span("mm2s.e1", "read 2B", 2, 1);
+        let j = t.to_chrome_json();
+        let evs = j.get("traceEvents").as_arr().unwrap();
+        assert_eq!(evs[0].get("tid").as_u64(), Some(2), "core track keeps its tid");
+        let a = evs[1].get("tid").as_u64().unwrap();
+        let b = evs[2].get("tid").as_u64().unwrap();
+        let c = evs[3].get("tid").as_u64().unwrap();
+        assert!(a >= 6 && b >= 6, "dynamic tracks start above the core block");
+        assert_ne!(a, b, "distinct tracks must not share a tid");
+        assert_eq!(a, c, "same track name interns to the same tid");
+        // Metadata names every dynamic track.
+        let named: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("M"))
+            .map(|e| e.get("args").get("name").as_str().unwrap())
+            .collect();
+        assert!(named.contains(&"mm2s.e1") && named.contains(&"s2mm.e1"), "{named:?}");
+    }
+
+    #[test]
+    fn merge_prefixed_namespaces_every_track() {
+        let mut board = Trace::default();
+        board.span("mm2s", "read 1B", 0, 1);
+        board.instant("irq", "IOC", 2);
+        let mut fleet = Trace::default();
+        fleet.merge_prefixed(&board, "b0.");
+        assert_eq!(fleet.spans[0].track, "b0.mm2s");
+        assert_eq!(fleet.instants[0].track, "b0.irq");
     }
 }

@@ -37,6 +37,7 @@ use crate::axi::stream::ByteFifo;
 use crate::config::SimConfig;
 use crate::memory::copy::{CoherencyModel, CopyKind, CopyModel};
 use crate::memory::ddr::{DdrController, Requester};
+use crate::obs::{Ctr, HistId, MetricsRegistry};
 use crate::os::costs::OsCosts;
 use crate::os::sched::Scheduler;
 use crate::sim::engine::Engine;
@@ -200,6 +201,11 @@ pub struct System {
     pub coh: CoherencyModel,
     pub sched: Scheduler,
     pub ledger: CpuLedger,
+    /// Telemetry funnel for the hardware model and drivers (DESIGN.md
+    /// §15). Inert unless `cfg.obs.enabled`; recording only reads
+    /// already-computed timestamps and counters, never the calendar, so
+    /// an enabled registry cannot perturb the timeline.
+    pub obs: MetricsRegistry,
     /// Fault-injection plan (built from `SimConfig::faults`; inert by
     /// default). Scenario tests pin extra faults with
     /// [`crate::sim::fault::FaultPlan::schedule`] before running.
@@ -238,6 +244,7 @@ impl System {
             sched: Scheduler::new(timeslice),
             ledger: CpuLedger::default(),
             faults: FaultPlan::from_config(&cfg.faults),
+            obs: MetricsRegistry::new(cfg.obs.enabled),
             trace: None,
             desc_scratch: Vec::new(),
             cfg,
@@ -349,14 +356,20 @@ impl System {
                     self.ddr.set_fault_window(factor, until);
                 }
                 let c = self.ddr.complete(&mut self.eng, req);
+                self.obs.inc(Ctr::DdrBursts);
+                self.obs.add(Ctr::DdrBytes, c.bytes);
+                self.obs.observe(HistId::DdrBurstNs, self.eng.now().since(c.started_at).ns());
                 if let Some(t) = &mut self.trace {
                     let now = self.eng.now();
-                    let (track, what): (&'static str, String) = match c.requester {
-                        Requester::Mm2s(e) if e.0 == 0 => ("mm2s", "read".into()),
-                        Requester::S2mm(e) if e.0 == 0 => ("s2mm", "write".into()),
-                        Requester::Mm2s(e) => ("mm2s", format!("eng{} read", e.0)),
-                        Requester::S2mm(e) => ("s2mm", format!("eng{} write", e.0)),
-                        Requester::Cpu => ("ddr", "bg write".into()),
+                    // Engines past 0 get their own tracks (distinct tids
+                    // in the Perfetto export); engine 0 keeps the seed's
+                    // track names and span shape.
+                    let (track, what): (String, &'static str) = match c.requester {
+                        Requester::Mm2s(e) if e.0 == 0 => ("mm2s".into(), "read"),
+                        Requester::S2mm(e) if e.0 == 0 => ("s2mm".into(), "write"),
+                        Requester::Mm2s(e) => (format!("mm2s.e{}", e.0), "read"),
+                        Requester::S2mm(e) => (format!("s2mm.e{}", e.0), "write"),
+                        Requester::Cpu => ("ddr".into(), "bg write"),
                     };
                     t.span(
                         track,
@@ -436,6 +449,7 @@ impl System {
                 let (e, ch) = irq_line_owner(line);
                 self.ports[e.index()].irq_delivered[ch_index(ch)] = true;
                 self.ledger.irqs += 1;
+                self.obs.inc(Ctr::OsIrqs);
                 if let Some(t) = &mut self.trace {
                     let name = if e.0 == 0 {
                         format!("{} IOC", ch.name())
@@ -547,6 +561,8 @@ impl System {
         }
         let start = self.eng.now();
         self.cpu_exec(d);
+        self.obs.add(Ctr::OsCopyBytes, bytes);
+        self.obs.observe(HistId::CopyNs, d.ns());
         if let Some(t) = &mut self.trace {
             let what = match kind {
                 CopyKind::UserUncached => "memcpy (uncached)",
@@ -776,6 +792,8 @@ impl System {
         self.drain_to(observed.max(done_at));
         self.ledger.busy += self.eng.now().since(start);
         self.ledger.poll_reads += iters;
+        self.obs.add(Ctr::OsPollReads, iters);
+        self.obs.observe(HistId::WaitNs, self.eng.now().since(start).ns());
         if let Some(t) = &mut self.trace {
             t.span(
                 "cpu",
@@ -815,6 +833,7 @@ impl System {
             let back = self.costs.ctx_switch() + self.costs.syscall_exit();
             self.cpu_exec(back);
             self.ledger.sleep_cycles += 1;
+            self.obs.inc(Ctr::OsSleepCycles);
         }
     }
 
@@ -838,6 +857,7 @@ impl System {
         let waited = self.eng.now().since(start);
         self.ledger.freed += waited;
         self.ledger.used_by_tasks += self.sched.run_for(waited);
+        self.obs.observe(HistId::WaitNs, waited.ns());
         let port = &mut self.ports[e.index()];
         port.irq_delivered[idx] = false;
         port.chan_mut(ch).ack_irq();
@@ -917,6 +937,8 @@ impl System {
         self.drain_to(observed.max(done_at));
         self.ledger.busy += self.eng.now().since(start);
         self.ledger.poll_reads += iters;
+        self.obs.add(Ctr::OsPollReads, iters);
+        self.obs.observe(HistId::WaitNs, self.eng.now().since(start).ns());
         Ok(verdict)
     }
 
@@ -955,6 +977,7 @@ impl System {
             let back = self.costs.ctx_switch() + self.costs.syscall_exit();
             self.cpu_exec(back);
             self.ledger.sleep_cycles += 1;
+            self.obs.inc(Ctr::OsSleepCycles);
         }
     }
 
@@ -995,6 +1018,7 @@ impl System {
             let waited = self.eng.now().since(wait_from);
             self.ledger.freed += waited;
             self.ledger.used_by_tasks += self.sched.run_for(waited);
+            self.obs.observe(HistId::WaitNs, waited.ns());
             if timed_out {
                 // The sleep timer fired instead of the ISR: wake + switch in.
                 let wake = self.costs.wake_and_switch();

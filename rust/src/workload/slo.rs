@@ -175,6 +175,15 @@ impl ServeReport {
         h
     }
 
+    /// Merged admission-queue wait histogram across tenants.
+    pub fn merged_queueing(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for t in &self.tenants {
+            h.merge(&t.queueing);
+        }
+        h
+    }
+
     /// Aggregate SLO attainment over offered frames.
     pub fn slo_attainment(&self) -> f64 {
         let offered = self.total_offered();
@@ -211,6 +220,7 @@ impl ServeReport {
     /// `serve --csv` and the sweep reports derive from the same numbers).
     pub fn to_json(&self) -> Json {
         let merged = self.merged_latency();
+        let queueing = self.merged_queueing();
         Json::obj(vec![
             ("schema", Json::num(1.0)),
             ("driver", Json::str(self.driver)),
@@ -232,6 +242,9 @@ impl ServeReport {
             ("latency_p50_ns", Json::num(merged.percentile(50.0).unwrap_or(0.0))),
             ("latency_p99_ns", Json::num(merged.percentile(99.0).unwrap_or(0.0))),
             ("latency_p999_ns", Json::num(merged.percentile(99.9).unwrap_or(0.0))),
+            ("queueing_p50_ns", Json::num(queueing.percentile(50.0).unwrap_or(0.0))),
+            ("queueing_p99_ns", Json::num(queueing.percentile(99.0).unwrap_or(0.0))),
+            ("queueing_p999_ns", Json::num(queueing.percentile(99.9).unwrap_or(0.0))),
             ("cpu_busy_ms", Json::num(self.ledger.busy.as_ms())),
             ("cpu_freed_ms", Json::num(self.ledger.freed.as_ms())),
             ("cpu_used_by_tasks_ms", Json::num(self.ledger.used_by_tasks.as_ms())),
@@ -328,5 +341,23 @@ mod tests {
         // serialised form).
         let text = j.to_string_pretty();
         assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn report_json_carries_queueing_percentiles() {
+        // slo_with queues every frame for exactly 100 ns (arrived at
+        // i*1000, started at i*1000 + 100), so every percentile of the
+        // merged queueing histogram brackets 100 ns.
+        let r = report(vec![slo_with(8, 10), slo_with(4, 4)]);
+        let q = r.merged_queueing();
+        assert_eq!(q.count(), 12);
+        let j = r.to_json();
+        for key in ["queueing_p50_ns", "queueing_p99_ns", "queueing_p999_ns"] {
+            let v = j.get(key).as_f64().expect(key);
+            assert!(v > 0.0 && v < 1000.0, "{key} = {v}");
+        }
+        // No completions → the keys render as 0, not a crash.
+        let j = report(vec![TenantSlo::default()]).to_json();
+        assert_eq!(j.get("queueing_p99_ns").as_f64(), Some(0.0));
     }
 }

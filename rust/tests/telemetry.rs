@@ -1,0 +1,271 @@
+//! Telemetry contract tests (DESIGN.md §15).
+//!
+//! Two properties gate the whole `obs` layer:
+//!
+//! 1. **Observer effect is zero**: a run with every collector enabled is
+//!    bit-identical in simulated time to the same run with `obs` off —
+//!    across drivers, memory paths, model policies, and trace capture.
+//! 2. **Metrics agree with the ledgers**: the registry's serve-loop
+//!    counters reproduce the SLO report's front-door accounting, span
+//!    byte totals match the driver lane counters, and the time-series
+//!    sums match the frame totals.
+
+use psoc_dma::cluster::{serve_cluster, serve_cluster_observed};
+use psoc_dma::cnn::zoo;
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::experiments::MemoryMode;
+use psoc_dma::coordinator::model::{
+    model_cell_observed, model_plans, run_model_frame, DriverPolicy,
+};
+use psoc_dma::coordinator::serve::{serve, serve_observed};
+use psoc_dma::drivers::{Driver, DriverConfig, DriverKind};
+use psoc_dma::memory::buffer::CmaAllocator;
+use psoc_dma::memory::{DmaPortKind, MemoryPath};
+use psoc_dma::obs::Ctr;
+use psoc_dma::sim::time::Dur;
+use psoc_dma::system::System;
+use psoc_dma::util::json::Json;
+
+fn serve_cfg() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.workload.tenants = 2;
+    c.workload.offered_fps = 150.0;
+    c.workload.duration_ns = 100_000_000;
+    c.workload.deadline_ns = 50_000_000;
+    c
+}
+
+/// Observer-effect gate, serve loop: every driver × memory path, the
+/// fully-enabled observed run serialises to the exact bytes of the
+/// obs-off run.
+#[test]
+fn obs_on_serve_is_bit_identical_across_drivers_and_memory_paths() {
+    let paths = [
+        (MemoryPath::CopyThrough, DmaPortKind::Hp),
+        (MemoryPath::ZeroCopy, DmaPortKind::Hp),
+        (MemoryPath::ZeroCopy, DmaPortKind::Acp),
+    ];
+    for kind in DriverKind::ALL {
+        for (path, port) in paths {
+            let mut base = serve_cfg();
+            base.memory.path = path;
+            base.memory.port = port;
+            let off = serve(&base, kind, 2).unwrap();
+            let mut on_cfg = base.clone();
+            on_cfg.obs.enabled = true;
+            // Trace capture rides along: it must be observation-only too.
+            let (on, obs) = serve_observed(&on_cfg, kind, 2, true).unwrap();
+            assert_eq!(
+                off.to_json().to_string_pretty(),
+                on.to_json().to_string_pretty(),
+                "{kind:?} {path:?}/{port:?} timeline moved under observation"
+            );
+            assert!(obs.metrics.get(Ctr::SrvOffered) > 0, "{kind:?}: nothing recorded");
+            assert!(obs.trace.is_some(), "{kind:?}: trace requested but absent");
+        }
+    }
+}
+
+/// Observer-effect gate, fleet: the cluster report with `obs` fully on
+/// (and the fleet trace captured) matches the obs-off bytes.
+#[test]
+fn obs_on_cluster_is_bit_identical() {
+    let mut cfg = SimConfig::default();
+    cfg.workload.tenants = 2;
+    cfg.workload.offered_fps = 120.0;
+    cfg.workload.duration_ns = 60_000_000;
+    cfg.cluster.boards = 2;
+    let off = serve_cluster(&cfg, DriverKind::KernelIrq, 2).unwrap();
+    let mut on_cfg = cfg.clone();
+    on_cfg.obs.enabled = true;
+    let (on, obs) = serve_cluster_observed(&on_cfg, DriverKind::KernelIrq, 2, true).unwrap();
+    assert_eq!(off.to_json().to_string_pretty(), on.to_json().to_string_pretty());
+    assert!(obs.metrics.get(Ctr::SrvOffered) > 0);
+    assert_eq!(obs.metrics.get(Ctr::SrvOffered), obs.series.total_offered());
+}
+
+/// Observer-effect gate, model runner: every policy replays the same
+/// row (frame latency, wall clock, CPU busy, event count) under full
+/// observation + trace capture.
+#[test]
+fn obs_on_model_cell_is_bit_identical_across_policies() {
+    let model = zoo::tinycls();
+    for policy in DriverPolicy::ALL {
+        let mut base = SimConfig::default();
+        base.model.prefetch = true;
+        let (off, _) =
+            model_cell_observed(&base, &model, policy, MemoryMode::CopyThrough, 2, false)
+                .unwrap();
+        let mut on_cfg = base.clone();
+        on_cfg.obs.enabled = true;
+        let (on, trace) =
+            model_cell_observed(&on_cfg, &model, policy, MemoryMode::CopyThrough, 2, true)
+                .unwrap();
+        assert_eq!(off.frame, on.frame, "{policy:?}");
+        assert_eq!(off.total, on.total, "{policy:?}");
+        assert_eq!(off.busy, on.busy, "{policy:?}");
+        assert_eq!(off.events, on.events, "{policy:?}");
+        let t = trace.expect("trace requested");
+        assert!(
+            t.spans.iter().any(|s| s.track == "model"),
+            "{policy:?}: no per-pass model spans"
+        );
+    }
+}
+
+/// Metrics-vs-ledger identity on a non-failure single-board run: the
+/// registry's serve counters are the SLO report's front-door ledger,
+/// span byte totals are the driver lane totals, and the time-series
+/// sums match.
+#[test]
+fn serve_metrics_match_the_slo_ledger() {
+    let mut c = serve_cfg();
+    c.obs.enabled = true;
+    let (rep, obs) = serve_observed(&c, DriverKind::KernelIrq, 2, false).unwrap();
+    let m = &obs.metrics;
+    assert_eq!(m.get(Ctr::SrvOffered), rep.total_offered());
+    assert_eq!(
+        m.get(Ctr::SrvAdmitted),
+        rep.tenants.iter().map(|t| t.admitted).sum::<u64>()
+    );
+    assert_eq!(
+        m.get(Ctr::SrvDropped),
+        rep.tenants.iter().map(|t| t.dropped).sum::<u64>()
+    );
+    assert_eq!(
+        m.get(Ctr::SrvCoalesced),
+        rep.tenants.iter().map(|t| t.coalesced).sum::<u64>()
+    );
+    assert_eq!(m.get(Ctr::SrvCompleted), rep.total_completed());
+    assert_eq!(m.get(Ctr::SrvMissed), rep.total_missed());
+    assert_eq!(m.get(Ctr::SrvUnserved), rep.total_unserved());
+    // Every offered frame ends in exactly one bucket (the serve loop's
+    // ledger identity, restated in metric space).
+    assert_eq!(
+        m.get(Ctr::SrvOffered),
+        m.get(Ctr::SrvCompleted)
+            + m.get(Ctr::SrvDropped)
+            + m.get(Ctr::SrvCoalesced)
+            + m.get(Ctr::SrvUnserved)
+    );
+
+    // Spans saw every completed frame; their byte totals are the kernel
+    // driver lane's.
+    assert_eq!(obs.spans.frames(), rep.total_completed());
+    assert_eq!(obs.spans.truncated, 0);
+    let span_tx: u64 = obs.spans.spans.iter().map(|s| s.tx_bytes).sum();
+    let span_rx: u64 = obs.spans.spans.iter().map(|s| s.rx_bytes).sum();
+    assert_eq!(m.get(Ctr::IrqTxBytes), span_tx);
+    assert_eq!(m.get(Ctr::IrqRxBytes), span_rx);
+
+    // Time-series sums match the frame totals.
+    assert_eq!(obs.series.total_offered(), rep.total_offered());
+    assert_eq!(obs.series.total_completed(), rep.total_completed());
+
+    // The hardware funnel recorded (counts since system creation, so
+    // ≥ the report's over-the-run ledger delta).
+    assert!(m.get(Ctr::DdrBursts) > 0);
+    assert!(m.get(Ctr::DdrBytes) > 0);
+    assert!(m.get(Ctr::OsIrqs) >= rep.ledger.irqs);
+    assert!(rep.ledger.irqs > 0, "kernel driver must take interrupts");
+}
+
+/// Disabled obs (the default) records nothing anywhere.
+#[test]
+fn default_obs_records_nothing() {
+    let c = serve_cfg();
+    assert!(!c.obs.enabled);
+    let (_, obs) = serve_observed(&c, DriverKind::UserPolling, 1, false).unwrap();
+    for &ctr in Ctr::ALL.iter() {
+        assert_eq!(obs.metrics.get(ctr), 0, "{}", ctr.name());
+    }
+    assert_eq!(obs.spans.frames(), 0);
+    assert!(obs.series.buckets.is_empty());
+}
+
+/// The model-runner counters: one pass per plan, prefetches only under
+/// the prefetch mode, all visible on the system registry.
+#[test]
+fn model_frame_counts_passes_and_prefetches() {
+    let mut c = SimConfig::default();
+    c.obs.enabled = true;
+    c.model.prefetch = true;
+    let model = zoo::tinycls();
+    let plans = model_plans(&model, &c);
+    let choice = vec![DriverKind::UserPolling; plans.len()];
+    let max = plans
+        .iter()
+        .map(|p| p.timing.tx_bytes.max(p.timing.rx_bytes))
+        .max()
+        .unwrap();
+    let mut sys = System::nullhop(c.clone());
+    let mut cma = CmaAllocator::zynq_default();
+    let mut drivers = vec![(
+        DriverKind::UserPolling,
+        Driver::new(DriverConfig::table1(DriverKind::UserPolling), &mut cma, &c, max).unwrap(),
+    )];
+    run_model_frame(&mut sys, &mut drivers, &choice, &plans, Dur(1_000)).unwrap();
+    assert_eq!(sys.obs.get(Ctr::MdlPasses), plans.len() as u64);
+    let prefetches = sys.obs.get(Ctr::MdlPrefetches);
+    assert!(
+        prefetches >= 1 && prefetches <= plans.len() as u64 - 1,
+        "prefetches = {prefetches} of {} passes",
+        plans.len()
+    );
+    // The user-level copy-through lane moved the frame's bytes.
+    let tx: u64 = plans.iter().map(|p| p.timing.tx_bytes).sum();
+    assert_eq!(sys.obs.get(Ctr::PollTxBytes), tx);
+    for (_, d) in drivers {
+        d.release(&mut cma);
+    }
+}
+
+/// The serve trace is valid Trace Event Format with one tid per
+/// engine track and per-tenant frame tracks (the acceptance criterion
+/// for the Perfetto export).
+#[test]
+fn serve_trace_has_distinct_engine_and_tenant_tracks() {
+    let mut c = serve_cfg();
+    c.workload.offered_fps = 400.0; // force both engines into play
+    c.obs.enabled = true;
+    let (_, obs) = serve_observed(&c, DriverKind::KernelIrq, 2, true).unwrap();
+    let trace = obs.trace.expect("trace requested");
+    let text = trace.to_chrome_json().to_string_compact();
+    let j = Json::parse(&text).expect("trace must parse");
+    let evs = j.get("traceEvents").as_arr().unwrap();
+    assert!(!evs.is_empty());
+    let tid_of = |cat: &str| {
+        evs.iter()
+            .find(|e| e.get("cat").as_str() == Some(cat))
+            .and_then(|e| e.get("tid").as_u64())
+    };
+    let e0 = tid_of("mm2s").expect("engine 0 track missing");
+    let e1 = tid_of("mm2s.e1").expect("engine 1 track missing");
+    assert_ne!(e0, e1, "per-engine tracks must not share a tid");
+    assert!(tid_of("tenant0").is_some(), "per-tenant frame track missing");
+}
+
+/// The fleet trace namespaces every board: board-prefixed tracks exist
+/// and intern to distinct tids.
+#[test]
+fn cluster_trace_namespaces_boards() {
+    let mut cfg = SimConfig::default();
+    cfg.workload.tenants = 2;
+    cfg.workload.offered_fps = 120.0;
+    cfg.workload.duration_ns = 60_000_000;
+    cfg.cluster.boards = 2;
+    cfg.obs.enabled = true;
+    let (_, obs) = serve_cluster_observed(&cfg, DriverKind::KernelIrq, 2, true).unwrap();
+    let trace = obs.trace.expect("fleet trace requested");
+    let text = trace.to_chrome_json().to_string_compact();
+    let j = Json::parse(&text).expect("fleet trace must parse");
+    let evs = j.get("traceEvents").as_arr().unwrap();
+    let tid_of = |cat: &str| {
+        evs.iter()
+            .find(|e| e.get("cat").as_str() == Some(cat))
+            .and_then(|e| e.get("tid").as_u64())
+    };
+    let b0 = tid_of("b0.cpu").expect("board 0 cpu track missing");
+    let b1 = tid_of("b1.cpu").expect("board 1 cpu track missing");
+    assert_ne!(b0, b1, "board tracks must not share a tid");
+}
