@@ -15,6 +15,7 @@ use crate::sim::engine::Engine;
 use crate::sim::event::{Channel, EngineId, Event};
 use crate::sim::time::{Dur, SimTime};
 
+#[derive(Clone)]
 pub struct Loopback {
     /// Which engine's stream ports this core is attached to.
     port: EngineId,

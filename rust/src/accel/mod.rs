@@ -24,6 +24,7 @@ pub use nullhop::{LayerTiming, NullHopCore};
 /// The device plugged into one engine's PL stream ports for a given
 /// experiment. In a multi-engine system every engine carries its own
 /// device instance (NEURAghe-style: independent PS–PL stream port pairs).
+#[derive(Clone)]
 pub enum PlDevice {
     /// Nothing attached: MM2S data vanishes, S2MM never produces. Used by
     /// unit tests and the TX-only calibration runs.

@@ -71,6 +71,7 @@ enum Phase {
     LayerDone,
 }
 
+#[derive(Clone)]
 pub struct NullHopCore {
     /// Which engine's stream ports this core is attached to.
     port: EngineId,

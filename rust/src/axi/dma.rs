@@ -93,6 +93,11 @@ pub enum DmaIrq {
 }
 
 /// One direction of one AXI-DMA IP instance.
+///
+/// `Clone` copies the full channel state — descriptor queue, in-flight
+/// burst, latches, armed ring template — so a forked [`crate::system::System`]
+/// carries its prototype's programmed BD templates without re-arming.
+#[derive(Clone)]
 pub struct DmaChannelEngine {
     /// Which engine instance this channel belongs to (routes kicks,
     /// DDR requests and IRQ lines in a multi-engine system).

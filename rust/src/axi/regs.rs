@@ -130,7 +130,7 @@ impl Default for ChannelRegs {
 }
 
 /// The MMIO register block of one AXI DMA instance (both channels).
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct DmaRegFile {
     mm2s: ChannelRegs,
     s2mm: ChannelRegs,

@@ -34,8 +34,9 @@ use crate::workload::{
 };
 
 use crate::coordinator::pipeline::{
-    fc_cpu_cost, nullhop_pool, plan_from_estimates, release_pool, LayerPlan,
+    fc_cpu_cost, nullhop_pool_src, plan_from_estimates, release_pool, LayerPlan,
 };
+use crate::system::{ProtoKind, SystemSource};
 
 /// One frame owning an engine while its layers stream.
 struct InFlight {
@@ -87,6 +88,20 @@ pub fn serve_board_observed(
     hard_stop: Option<u64>,
     want_trace: bool,
 ) -> Result<(BoardRun, ObsBundle), DriverError> {
+    serve_board_observed_src(SystemSource::Build, cfg, kind, arrivals_in, hard_stop, want_trace)
+}
+
+/// [`serve_board_observed`] with an explicit system source: the fleet
+/// passes its snapshot cache so every board of a class forks from one
+/// warmed prototype instead of rebuilding. Bit-identical either way.
+pub fn serve_board_observed_src(
+    src: SystemSource<'_>,
+    cfg: &SimConfig,
+    kind: DriverKind,
+    arrivals_in: Vec<FrameArrival>,
+    hard_stop: Option<u64>,
+    want_trace: bool,
+) -> Result<(BoardRun, ObsBundle), DriverError> {
     let engines = cfg.num_engines as usize;
     assert!(
         engines >= 1 && engines <= MAX_ENGINES,
@@ -112,7 +127,7 @@ pub fn serve_board_observed(
         .expect("empty plan");
     let fc_cost = fc_cpu_cost(&net);
 
-    let (mut sys, mut cma, mut drivers) = nullhop_pool(cfg, kind, max_bytes)?;
+    let (mut sys, mut cma, mut drivers) = nullhop_pool_src(src, cfg, kind, max_bytes)?;
     let mut obs = ObsBundle::empty(&cfg.obs, n_tenants);
     if want_trace {
         sys.enable_trace();
@@ -336,6 +351,7 @@ pub fn serve_board_observed(
         obs.trace = Some(t);
     }
     release_pool(&mut cma, drivers);
+    src.retire(ProtoKind::NullHop, &sys);
     Ok((
         BoardRun {
             report: ServeReport {

@@ -28,7 +28,8 @@
 //! summed over boards and tenants.
 
 use crate::config::SimConfig;
-use crate::coordinator::{capacity_fps, cell_seed, run_cells};
+use crate::coordinator::{capacity_fps_src, cell_seed, run_cells};
+use crate::system::{BuildMode, SnapshotCache, SystemSource};
 use crate::drivers::{DriverError, DriverKind};
 use crate::obs::{Ctr, ObsBundle};
 use crate::sim::rng::Pcg32;
@@ -40,7 +41,7 @@ use crate::workload::{
     ArrivalKind, ArrivalQueue, FrameArrival, ServeReport, StreamGenerator, TenantSlo,
 };
 
-use super::board::{serve_board_observed, BoardRun};
+use super::board::{serve_board_observed_src, BoardRun};
 use super::{BoardKind, ClusterConfig, PlacementKind};
 
 /// PCG32 stream selector for the failover retry draws.
@@ -242,7 +243,7 @@ impl ClusterReport {
 /// Hash for ring placement: reuse the sweep executor's splitmix-based
 /// seed derivation so placement shares the repo's one mixing function.
 fn hash64(seed: u64, x: u64) -> u64 {
-    cell_seed(seed, x)
+    cell_seed(seed, x as usize)
 }
 
 /// The home board per tenant under consistent hashing: each board owns
@@ -311,6 +312,18 @@ pub fn serve_cluster(
     serve_cluster_observed(cfg, kind, workers, false).map(|(rep, _)| rep)
 }
 
+/// [`serve_cluster`] with an explicit system source: the cluster sweep
+/// passes one shared snapshot cache so board prototypes warm once per
+/// board class across the whole grid. Bit-identical either way.
+pub fn serve_cluster_src(
+    src: SystemSource<'_>,
+    cfg: &SimConfig,
+    kind: DriverKind,
+    workers: usize,
+) -> Result<ClusterReport, DriverError> {
+    serve_cluster_observed_src(src, cfg, kind, workers, false).map(|(rep, _)| rep)
+}
+
 /// [`serve_cluster`] plus the fleet's merged telemetry bundle (DESIGN.md
 /// §15): every board's collectors folded together, the balancer's
 /// spill/steal/redirect/failover counters under `cluster.*`, and — when
@@ -318,6 +331,20 @@ pub fn serve_cluster(
 /// `b<N>.`. Observation-only throughout, so the [`ClusterReport`] is
 /// bit-identical to [`serve_cluster`]'s for any `obs` setting.
 pub fn serve_cluster_observed(
+    cfg: &SimConfig,
+    kind: DriverKind,
+    workers: usize,
+    want_trace: bool,
+) -> Result<(ClusterReport, ObsBundle), DriverError> {
+    // One run already repeats board construction (capacity probes +
+    // every board of a class), so fork from a local cache by default.
+    let cache = SnapshotCache::new();
+    serve_cluster_observed_src(BuildMode::Fork.source(&cache), cfg, kind, workers, want_trace)
+}
+
+/// [`serve_cluster_observed`] with an explicit system source.
+pub fn serve_cluster_observed_src(
+    src: SystemSource<'_>,
     cfg: &SimConfig,
     kind: DriverKind,
     workers: usize,
@@ -342,8 +369,8 @@ pub fn serve_cluster_observed(
     for b in 0..boards {
         let spec = cl.board_kind(b).spec();
         let mut c = spec.specialize(cfg);
-        c.seed = cell_seed(cl.seed, b as u64);
-        capacity.push(capacity_fps(&c, kind, spec.engines)?.max(1e-9));
+        c.seed = cell_seed(cl.seed, b);
+        capacity.push(capacity_fps_src(src, &c, kind, spec.engines)?.max(1e-9));
         board_cfgs.push(c);
     }
 
@@ -457,7 +484,8 @@ pub fn serve_cluster_observed(
     let mut lost = vec![0u64; n_tenants];
     let mut retried = 0u64;
     if cl.has_failure() {
-        let (run, board_obs) = serve_board_observed(
+        let (run, board_obs) = serve_board_observed_src(
+            src,
             &board_cfgs[fail_board],
             kind,
             deliveries[fail_board].clone(),
@@ -516,7 +544,7 @@ pub fn serve_cluster_observed(
         })
         .collect();
     let results = run_cells(&cells, workers, |_, cell| {
-        serve_board_observed(&cell.cfg, kind, cell.arrivals.clone(), None, want_trace)
+        serve_board_observed_src(src, &cell.cfg, kind, cell.arrivals.clone(), None, want_trace)
     });
 
     let mut runs: Vec<Option<(BoardRun, ObsBundle)>> = (0..boards).map(|_| None).collect();

@@ -35,9 +35,12 @@ pub mod board;
 pub mod fleet;
 pub mod sweep;
 
-pub use board::{serve_board, serve_board_observed, BoardRun};
-pub use fleet::{serve_cluster, serve_cluster_observed, BoardSummary, ClusterReport};
-pub use sweep::{cluster_sweep, ClusterSweepRow};
+pub use board::{serve_board, serve_board_observed, serve_board_observed_src, BoardRun};
+pub use fleet::{
+    serve_cluster, serve_cluster_observed, serve_cluster_observed_src, serve_cluster_src,
+    BoardSummary, ClusterReport,
+};
+pub use sweep::{cluster_sweep, cluster_sweep_with, ClusterSweepRow};
 
 use crate::memory::path::{DmaPortKind, MemoryPath};
 use crate::util::json::Json;

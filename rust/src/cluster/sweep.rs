@@ -13,10 +13,11 @@
 //! `serve_sweep` keeps, pinned by `rust/tests/cluster_scenarios.rs`.
 
 use crate::config::SimConfig;
-use crate::coordinator::{capacity_fps, run_cells};
+use crate::coordinator::{capacity_fps_src, run_cells};
 use crate::drivers::{DriverError, DriverKind};
+use crate::system::{BuildMode, SnapshotCache};
 
-use super::fleet::{serve_cluster, ClusterReport};
+use super::fleet::{serve_cluster_src, ClusterReport};
 use super::PlacementKind;
 
 /// One cell of the cluster grid.
@@ -41,6 +42,25 @@ pub fn cluster_sweep(
     loads: &[f64],
     workers: usize,
 ) -> Result<Vec<ClusterSweepRow>, DriverError> {
+    cluster_sweep_with(BuildMode::Fork, cfg, kind, boards_axis, placements, loads, workers)
+}
+
+/// [`cluster_sweep`] with an explicit per-cell system build mode: `Fork`
+/// (the default) warms one snapshot prototype per board class and forks
+/// every capacity probe and board simulation in the grid from it;
+/// `Rebuild` reconstructs each board from scratch. Bit-identical rows
+/// either way — the snapshot suite pins that.
+pub fn cluster_sweep_with(
+    mode: BuildMode,
+    cfg: &SimConfig,
+    kind: DriverKind,
+    boards_axis: &[u64],
+    placements: &[PlacementKind],
+    loads: &[f64],
+    workers: usize,
+) -> Result<Vec<ClusterSweepRow>, DriverError> {
+    let cache = SnapshotCache::new();
+    let src = mode.source(&cache);
     // Fleet capacity per board count, measured serially up front (the
     // same short scaling runs the balancer itself plans with).
     let max_boards = boards_axis.iter().copied().max().unwrap_or(0) as usize;
@@ -48,7 +68,7 @@ pub fn cluster_sweep(
     for b in 0..max_boards {
         let spec = cfg.cluster.board_kind(b).spec();
         let c = spec.specialize(cfg);
-        board_caps.push(capacity_fps(&c, kind, spec.engines)?);
+        board_caps.push(capacity_fps_src(src, &c, kind, spec.engines)?);
     }
 
     struct Cell {
@@ -73,7 +93,7 @@ pub fn cluster_sweep(
     }
 
     let results = run_cells(&cells, workers, |_, cell| {
-        serve_cluster(&cell.cfg, kind, 1)
+        serve_cluster_src(src, &cell.cfg, kind, 1)
     });
     cells
         .into_iter()

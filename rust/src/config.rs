@@ -426,6 +426,33 @@ config_fields! {
 }
 
 impl SimConfig {
+    /// The *construction shape* of this config: every field
+    /// [`crate::system::System::new`] and the device constructors read,
+    /// with the fields they do **not** read normalised away. Two configs
+    /// with equal shapes build bit-identical `System`s modulo the
+    /// `cfg.seed`-derived OS-jitter RNG stream, which
+    /// [`crate::system::System::fork`] re-derives per fork.
+    ///
+    /// Normalised out: `seed` (only consumed by `OsCosts`, re-derived on
+    /// fork; `faults.seed` is a *separate* stream and stays in the
+    /// shape), and the `workload`/`cluster`/`model` blocks, which only
+    /// the serve loop, the fleet router and the model runner read — at
+    /// run time, from the forked system's own `cfg` copy.
+    pub fn construction_shape(&self) -> SimConfig {
+        let mut c = self.clone();
+        c.seed = 0;
+        c.workload = WorkloadConfig::default();
+        c.cluster = ClusterConfig::default();
+        c.model = ModelConfig::default();
+        c
+    }
+
+    /// Whether `self` and `other` build bit-identical `System`s (modulo
+    /// the per-fork jitter stream) — the snapshot-cache key predicate.
+    pub fn same_construction_shape(&self, other: &SimConfig) -> bool {
+        self.construction_shape() == other.construction_shape()
+    }
+
     /// Load a config: defaults overridden by the JSON file at `path`.
     pub fn load(path: &Path) -> anyhow::Result<SimConfig> {
         let text = std::fs::read_to_string(path)

@@ -18,7 +18,7 @@ use crate::runtime::Runtime;
 use crate::sensor::davis::{DavisConfig, DavisSim};
 use crate::sensor::frame::FrameCollector;
 use crate::sim::time::Dur;
-use crate::system::System;
+use crate::system::{BuildMode, ProtoKind, SnapshotCache, System, SystemSource};
 
 use crate::sim::event::EngineId;
 
@@ -176,6 +176,19 @@ pub(crate) fn memory_cell(
     mode: MemoryMode,
     frames: u64,
 ) -> Result<MemoryRow, DriverError> {
+    memory_cell_src(SystemSource::Build, cfg, bytes, kind, mode, frames)
+}
+
+/// [`memory_cell`] with an explicit system source (fork-per-cell when
+/// the sweep passes its snapshot cache; bit-identical either way).
+pub(crate) fn memory_cell_src(
+    src: SystemSource<'_>,
+    cfg: &SimConfig,
+    bytes: u64,
+    kind: DriverKind,
+    mode: MemoryMode,
+    frames: u64,
+) -> Result<MemoryRow, DriverError> {
     let mut c = cfg.clone();
     mode.apply(&mut c);
     // Same per-driver shapes as the loop-back sweep: user drivers in
@@ -189,7 +202,7 @@ pub(crate) fn memory_cell(
         },
         _ => DriverConfig::table1(kind),
     };
-    let mut sys = System::loopback(c.clone());
+    let mut sys = src.loopback(&c);
     let mut cma = CmaAllocator::zynq_default();
     let mut drv = Driver::new(dcfg, &mut cma, &c, bytes)?;
     let t0 = sys.now();
@@ -208,22 +221,38 @@ pub(crate) fn memory_cell(
         events: sys.eng.dispatched - ev0,
     };
     drv.release(&mut cma);
+    src.retire(ProtoKind::Loopback, &sys);
     Ok(row)
 }
 
 /// MEM-SWEEP: the copy-through vs. zero-copy vs. port crossover grid —
 /// every {size × driver × memory mode} cell as a frame stream.
+/// Forks each cell from a shared snapshot prototype by default
+/// ([`BuildMode::Fork`]); bit-identical to rebuilding per cell.
 pub fn memory_sweep(
     cfg: &SimConfig,
     sizes: &[u64],
     drivers: &[DriverKind],
     frames: u64,
 ) -> Result<Vec<MemoryRow>, DriverError> {
+    memory_sweep_with(BuildMode::Fork, cfg, sizes, drivers, frames)
+}
+
+/// [`memory_sweep`] with an explicit per-cell system build mode.
+pub fn memory_sweep_with(
+    mode: BuildMode,
+    cfg: &SimConfig,
+    sizes: &[u64],
+    drivers: &[DriverKind],
+    frames: u64,
+) -> Result<Vec<MemoryRow>, DriverError> {
+    let cache = SnapshotCache::new();
+    let src = mode.source(&cache);
     let mut rows = Vec::with_capacity(sizes.len() * drivers.len() * MemoryMode::ALL.len());
     for &bytes in sizes {
         for &kind in drivers {
-            for mode in MemoryMode::ALL {
-                rows.push(memory_cell(cfg, bytes, kind, mode, frames)?);
+            for mem in MemoryMode::ALL {
+                rows.push(memory_cell_src(src, cfg, bytes, kind, mem, frames)?);
             }
         }
     }
@@ -365,6 +394,21 @@ pub(crate) fn scaling_cell(
     depth: usize,
     frames: usize,
 ) -> Result<BatchReport, DriverError> {
+    scaling_cell_src(SystemSource::Build, cfg, net, kind, channels, depth, frames)
+}
+
+/// [`scaling_cell`] with an explicit system source. Note the grid
+/// varies `num_engines`, so a fork source keeps one prototype per
+/// distinct channel count.
+pub(crate) fn scaling_cell_src(
+    src: SystemSource<'_>,
+    cfg: &SimConfig,
+    net: &NetDesc,
+    kind: DriverKind,
+    channels: usize,
+    depth: usize,
+    frames: usize,
+) -> Result<BatchReport, DriverError> {
     let mut c = cfg.clone();
     c.num_engines = channels as u64;
     let plans = plan_from_estimates(net, &c);
@@ -373,7 +417,7 @@ pub(crate) fn scaling_cell(
         .map(|p| p.timing.tx_bytes.max(p.timing.rx_bytes))
         .max()
         .expect("empty plan");
-    let (mut sys, mut cma, mut drvs) = pipeline::nullhop_pool(&c, kind, max)?;
+    let (mut sys, mut cma, mut drvs) = pipeline::nullhop_pool_src(src, &c, kind, max)?;
     let report = run_batch(
         &mut sys,
         &mut drvs,
@@ -383,6 +427,7 @@ pub(crate) fn scaling_cell(
         PipelineOpts::new(channels, depth),
     )?;
     pipeline::release_pool(&mut cma, drvs);
+    src.retire(ProtoKind::NullHop, &sys);
     Ok(report)
 }
 

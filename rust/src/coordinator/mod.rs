@@ -30,17 +30,19 @@ pub mod serve;
 pub mod sweeps;
 
 pub use model::{
-    model_cell_observed, model_plans, model_sweep, probe_pass, DriverPolicy, LayerCell,
-    ModelConfig, ModelRow, PassPlan,
+    model_cell_observed, model_plans, model_sweep, model_sweep_with, probe_pass, DriverPolicy,
+    LayerCell, ModelConfig, ModelRow, PassPlan,
 };
 pub use experiments::{
-    acp_hp_crossover, loopback_sweep, memory_sweep, memory_sweep_sizes, scaling_sweep, table1,
-    MemoryMode, MemoryRow, ScalingRow, SweepRow, Table1Row,
+    acp_hp_crossover, loopback_sweep, memory_sweep, memory_sweep_sizes, memory_sweep_with,
+    scaling_sweep, table1, MemoryMode, MemoryRow, ScalingRow, SweepRow, Table1Row,
 };
-pub use serve::{serve, serve_observed};
+pub use serve::{serve, serve_observed, serve_src};
 pub use sweeps::{
-    bench, capacity_fps, cell_seed, loopback_sweep_parallel, run_cells, scaling_sweep_parallel,
-    serve_sweep, BenchOptions, BenchReport, ServeSweepRow, SweepStats,
+    bench, capacity_fps, capacity_fps_src, cell_seed, loopback_sweep_parallel,
+    loopback_sweep_parallel_timed, run_cells, run_cells_timed, scaling_sweep_parallel,
+    scaling_sweep_parallel_timed, serve_sweep, serve_sweep_timed, serve_sweep_with, BenchOptions,
+    BenchReport, ServeSweepRow, SweepStats,
 };
 pub use pipeline::{
     plan_from_estimates, plan_with_runtime, run_batch, run_frame, BatchReport, ChannelPolicy,

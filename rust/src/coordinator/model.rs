@@ -35,7 +35,7 @@ use crate::memory::buffer::CmaAllocator;
 use crate::obs::Ctr;
 use crate::sim::time::Dur;
 use crate::sim::trace::Trace;
-use crate::system::System;
+use crate::system::{BuildMode, ProtoKind, SnapshotCache, System, SystemSource};
 use crate::util::json::Json;
 
 use super::experiments::MemoryMode;
@@ -229,7 +229,19 @@ pub fn probe_pass(
     kind: DriverKind,
     timing: LayerTiming,
 ) -> Result<Dur, DriverError> {
-    let mut sys = System::nullhop(cfg.clone());
+    probe_pass_src(SystemSource::Build, cfg, kind, timing)
+}
+
+/// [`probe_pass`] with an explicit system source. The adaptive policy
+/// probes every (pass × candidate) on a throwaway system, so forking
+/// from a snapshot is where the sweep's probe cost collapses.
+pub fn probe_pass_src(
+    src: SystemSource<'_>,
+    cfg: &SimConfig,
+    kind: DriverKind,
+    timing: LayerTiming,
+) -> Result<Dur, DriverError> {
+    let mut sys = src.nullhop(cfg);
     let mut cma = CmaAllocator::zynq_default();
     let max = timing.tx_bytes.max(timing.rx_bytes);
     let mut drv = Driver::new(DriverConfig::table1(kind), &mut cma, cfg, max)?;
@@ -238,11 +250,22 @@ pub fn probe_pass(
     drv.transfer(&mut sys, timing.tx_bytes, timing.rx_bytes)?;
     let dt = sys.now().since(t0);
     drv.release(&mut cma);
+    src.retire(ProtoKind::NullHop, &sys);
     Ok(dt)
 }
 
 /// Resolve a policy into one driver kind per pass.
 pub fn choose_drivers(
+    cfg: &SimConfig,
+    plans: &[PassPlan],
+    policy: DriverPolicy,
+) -> Result<Vec<DriverKind>, DriverError> {
+    choose_drivers_src(SystemSource::Build, cfg, plans, policy)
+}
+
+/// [`choose_drivers`] with an explicit system source for the probes.
+pub fn choose_drivers_src(
+    src: SystemSource<'_>,
     cfg: &SimConfig,
     plans: &[PassPlan],
     policy: DriverPolicy,
@@ -255,7 +278,7 @@ pub fn choose_drivers(
                 let mut pick = ADAPTIVE_CANDIDATES[0];
                 let mut best = Dur(u64::MAX);
                 for kind in ADAPTIVE_CANDIDATES {
-                    let d = probe_pass(cfg, kind, p.timing)?;
+                    let d = probe_pass_src(src, cfg, kind, p.timing)?;
                     if d < best {
                         best = d;
                         pick = kind;
@@ -391,6 +414,19 @@ pub(crate) fn model_cell(
     model_cell_observed(cfg, model, policy, mode, frames, false).map(|(row, _)| row)
 }
 
+/// [`model_cell`] with an explicit system source (measured cell *and*
+/// adaptive probes fork from the shared cache).
+pub(crate) fn model_cell_src(
+    src: SystemSource<'_>,
+    cfg: &SimConfig,
+    model: &LoweredModel,
+    policy: DriverPolicy,
+    mode: MemoryMode,
+    frames: u64,
+) -> Result<ModelRow, DriverError> {
+    model_cell_observed_src(src, cfg, model, policy, mode, frames, false).map(|(row, _)| row)
+}
+
 /// [`model_cell`] with the event trace switched on (`want_trace`): each
 /// pass lands on a `model` track named `layer [driver]`, on top of the
 /// usual cpu/ddr/dma tracks. Observation only — the returned row is
@@ -403,10 +439,23 @@ pub fn model_cell_observed(
     frames: u64,
     want_trace: bool,
 ) -> Result<(ModelRow, Option<Trace>), DriverError> {
+    model_cell_observed_src(SystemSource::Build, cfg, model, policy, mode, frames, want_trace)
+}
+
+/// [`model_cell_observed`] with an explicit system source.
+pub fn model_cell_observed_src(
+    src: SystemSource<'_>,
+    cfg: &SimConfig,
+    model: &LoweredModel,
+    policy: DriverPolicy,
+    mode: MemoryMode,
+    frames: u64,
+    want_trace: bool,
+) -> Result<(ModelRow, Option<Trace>), DriverError> {
     let mut c = cfg.clone();
     mode.apply(&mut c);
     let plans = model_plans(model, &c);
-    let choice = choose_drivers(&c, &plans, policy)?;
+    let choice = choose_drivers_src(src, &c, &plans, policy)?;
     let fc = fc_cost(model.fc_in, model.fc_out);
 
     let mut kinds: Vec<DriverKind> = Vec::new();
@@ -420,7 +469,7 @@ pub fn model_cell_observed(
         .map(|p| p.timing.tx_bytes.max(p.timing.rx_bytes))
         .max()
         .expect("empty model plan");
-    let mut sys = System::nullhop(c.clone());
+    let mut sys = src.nullhop(&c);
     if want_trace {
         sys.enable_trace();
     }
@@ -463,23 +512,39 @@ pub fn model_cell_observed(
     for (_, d) in drivers {
         d.release(&mut cma);
     }
-    Ok((row, sys.trace.take()))
+    let trace = sys.trace.take();
+    src.retire(ProtoKind::NullHop, &sys);
+    Ok((row, trace))
 }
 
 /// MODEL-SWEEP: every zoo model × driver policy × memory mode (`quick`
-/// restricts the memory axis to the copy-through baseline).
+/// restricts the memory axis to the copy-through baseline). Forks each
+/// cell — and each adaptive probe — from per-shape snapshot prototypes
+/// by default; bit-identical to rebuilding per cell.
 pub fn model_sweep(
     cfg: &SimConfig,
     frames: u64,
     quick: bool,
 ) -> Result<Vec<ModelRow>, DriverError> {
+    model_sweep_with(BuildMode::Fork, cfg, frames, quick)
+}
+
+/// [`model_sweep`] with an explicit per-cell system build mode.
+pub fn model_sweep_with(
+    mode: BuildMode,
+    cfg: &SimConfig,
+    frames: u64,
+    quick: bool,
+) -> Result<Vec<ModelRow>, DriverError> {
+    let cache = SnapshotCache::new();
+    let src = mode.source(&cache);
     let modes: &[MemoryMode] =
         if quick { &[MemoryMode::CopyThrough] } else { &MemoryMode::ALL };
     let mut rows = Vec::new();
     for model in zoo::models() {
         for policy in DriverPolicy::ALL {
-            for &mode in modes {
-                rows.push(model_cell(cfg, &model, policy, mode, frames)?);
+            for &mem in modes {
+                rows.push(model_cell_src(src, cfg, &model, policy, mem, frames)?);
             }
         }
     }

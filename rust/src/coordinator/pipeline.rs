@@ -39,7 +39,7 @@ use crate::memory::buffer::CmaAllocator;
 use crate::runtime::Runtime;
 use crate::sim::event::EngineId;
 use crate::sim::time::{Dur, SimTime};
-use crate::system::{CpuLedger, System};
+use crate::system::{CpuLedger, System, SystemSource};
 
 /// One layer's execution plan: everything the simulator needs.
 #[derive(Clone, Debug)]
@@ -224,8 +224,20 @@ pub fn nullhop_pool(
     kind: DriverKind,
     max_bytes: u64,
 ) -> Result<(System, CmaAllocator, Vec<Driver>), DriverError> {
+    nullhop_pool_src(SystemSource::Build, cfg, kind, max_bytes)
+}
+
+/// [`nullhop_pool`] with an explicit system source, so sweep grids can
+/// fork the pool's system from a shared warmed snapshot instead of
+/// rebuilding it per cell.
+pub fn nullhop_pool_src(
+    src: SystemSource<'_>,
+    cfg: &SimConfig,
+    kind: DriverKind,
+    max_bytes: u64,
+) -> Result<(System, CmaAllocator, Vec<Driver>), DriverError> {
     let engines = cfg.num_engines as usize;
-    let sys = System::nullhop(cfg.clone());
+    let sys = src.nullhop(cfg);
     let mut cma = CmaAllocator::zynq_default();
     let drivers = (0..engines)
         .map(|e| {

@@ -37,7 +37,10 @@ use crate::workload::{
     Admission, AdmitOutcome, ArrivalQueue, QosState, ServeReport, StreamGenerator, TenantSlo,
 };
 
-use super::pipeline::{fc_cpu_cost, nullhop_pool, plan_from_estimates, release_pool, LayerPlan};
+use super::pipeline::{
+    fc_cpu_cost, nullhop_pool_src, plan_from_estimates, release_pool, LayerPlan,
+};
+use crate::system::{ProtoKind, SystemSource};
 
 /// One frame owning an engine while its layers stream.
 struct InFlight {
@@ -68,6 +71,18 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
     serve_observed(cfg, kind, engines, false).map(|(rep, _)| rep)
 }
 
+/// [`serve`] with an explicit system source: a fork source starts each
+/// run from a shared snapshot prototype instead of rebuilding the
+/// board. Bit-identical output either way.
+pub fn serve_src(
+    src: SystemSource<'_>,
+    cfg: &SimConfig,
+    kind: DriverKind,
+    engines: usize,
+) -> Result<ServeReport, DriverError> {
+    serve_observed_src(src, cfg, kind, engines, false).map(|(rep, _)| rep)
+}
+
 /// [`serve`] plus the telemetry the run collected (DESIGN.md §15): the
 /// merged metrics registry (serve-loop counters + the system's hardware
 /// and driver funnel), the frame-lifecycle span log, the windowed
@@ -77,6 +92,17 @@ pub fn serve(cfg: &SimConfig, kind: DriverKind, engines: usize) -> Result<ServeR
 /// [`ServeReport`] is bit-identical to [`serve`]'s no matter what `obs`
 /// enables.
 pub fn serve_observed(
+    cfg: &SimConfig,
+    kind: DriverKind,
+    engines: usize,
+    want_trace: bool,
+) -> Result<(ServeReport, ObsBundle), DriverError> {
+    serve_observed_src(SystemSource::Build, cfg, kind, engines, want_trace)
+}
+
+/// [`serve_observed`] with an explicit system source.
+pub fn serve_observed_src(
+    src: SystemSource<'_>,
     cfg: &SimConfig,
     kind: DriverKind,
     engines: usize,
@@ -104,7 +130,7 @@ pub fn serve_observed(
         .expect("empty plan");
     let fc_cost = fc_cpu_cost(&net);
 
-    let (mut sys, mut cma, mut drivers) = nullhop_pool(&c, kind, max_bytes)?;
+    let (mut sys, mut cma, mut drivers) = nullhop_pool_src(src, &c, kind, max_bytes)?;
     let mut obs = ObsBundle::empty(&c.obs, n_tenants);
     if want_trace {
         sys.enable_trace();
@@ -309,6 +335,7 @@ pub fn serve_observed(
         obs.trace = Some(t);
     }
     release_pool(&mut cma, drivers);
+    src.retire(ProtoKind::NullHop, &sys);
     Ok((
         ServeReport {
             driver: kind.label(),

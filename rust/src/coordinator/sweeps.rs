@@ -3,7 +3,7 @@
 //!
 //! Every experiment in this repo is a *grid* of independent cells
 //! (transfer size × driver, channels × depth, the ablation matrix), and
-//! each cell builds its own [`System`] from scratch — embarrassingly
+//! each cell builds its own [`crate::system::System`] — embarrassingly
 //! parallel. [`run_cells`] shards any such grid across scoped worker
 //! threads with a work-stealing index counter, then merges results back
 //! **in grid order**, so the output is bit-identical for any worker
@@ -29,7 +29,16 @@
 //! * **cluster** — one fixed multi-board fleet scenario routed with the
 //!   least-loaded balancer (events/sec, schema 4);
 //! * **model** — the zoo's object-detection net streamed per driver
-//!   policy on the copy-through path (events/sec, schema 5).
+//!   policy on the copy-through path (events/sec, schema 5);
+//! * **snapshot** — a grid of tiny loop-back cells run twice, rebuilding
+//!   every [`crate::system::System`] from scratch vs. forking each cell
+//!   from one warmed [`crate::system::SystemSnapshot`], with per-path
+//!   setup/run wall splits (cells/sec, schema 6).
+//!
+//! Since schema 6 the parallel grid wrappers fork each cell from
+//! per-shape snapshot prototypes by default ([`BuildMode::Fork`]) —
+//! bit-identical to the rebuild path, which `rust/tests/snapshot.rs`
+//! pins for every sweep.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -45,16 +54,18 @@ use crate::sim::engine::{CalendarKind, Engine};
 use crate::sim::event::Event;
 use crate::sim::rng::Pcg32;
 use crate::sim::time::Dur;
-use crate::system::System;
+use crate::system::{BuildMode, ProtoKind, SnapshotCache, SystemSource};
 use crate::util::json::Json;
 
 use crate::cnn::roshambo::roshambo;
 use crate::cnn::zoo;
 use crate::workload::{QosPolicyKind, ServeReport};
 
-use super::experiments::{memory_cell, scaling_cell, AblationRow, MemoryMode, ScalingRow, SweepRow};
+use super::experiments::{
+    memory_cell, scaling_cell_src, AblationRow, MemoryMode, ScalingRow, SweepRow,
+};
 use super::model::{model_cell, DriverPolicy};
-use super::serve::serve;
+use super::serve::serve_src;
 
 /// Deterministic per-cell seed: splitmix64 over (base, cell index).
 /// Cells re-seed from this regardless of which worker executes them, so
@@ -103,6 +114,25 @@ where
     rows.into_iter().map(|(_, r)| r).collect()
 }
 
+/// [`run_cells`] plus each cell's wall time in milliseconds, measured on
+/// the worker that executed it and merged back in grid order. The wall
+/// column is observation only — results are exactly [`run_cells`]'s —
+/// so the timed wrappers stay bit-identical to the untimed ones.
+pub fn run_cells_timed<T, R, F>(cells: &[T], workers: usize, f: F) -> (Vec<R>, Vec<f64>)
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    run_cells(cells, workers, |i, c| {
+        let t0 = Instant::now();
+        let r = f(i, c);
+        (r, t0.elapsed().as_secs_f64() * 1e3)
+    })
+    .into_iter()
+    .unzip()
+}
+
 /// Wall-clock statistics of one parallel grid execution.
 #[derive(Clone, Copy, Debug)]
 pub struct SweepStats {
@@ -127,6 +157,7 @@ impl SweepStats {
 /// [`super::experiments::loopback_sweep`]), returning the row plus the
 /// cell's event count.
 fn loopback_cell(
+    src: SystemSource<'_>,
     cfg: &SimConfig,
     bytes: u64,
     kind: DriverKind,
@@ -142,18 +173,21 @@ fn loopback_cell(
         },
         _ => DriverConfig::table1(kind),
     };
-    let mut sys = System::loopback(c.clone());
+    let mut sys = src.loopback(&c);
     let mut cma = CmaAllocator::zynq_default();
     let mut drv = Driver::new(dcfg, &mut cma, &c, bytes)?;
     let r = drv.transfer(&mut sys, bytes, bytes)?;
     drv.release(&mut cma);
-    Ok((SweepRow { bytes, driver: kind, tx: r.tx_time, rx: r.rx_time }, sys.eng.dispatched))
+    let events = sys.eng.dispatched;
+    src.retire(ProtoKind::Loopback, &sys);
+    Ok((SweepRow { bytes, driver: kind, tx: r.tx_time, rx: r.rx_time }, events))
 }
 
 /// Parallel Fig. 4/5 grid: same cells and per-cell seeding for every
 /// worker count, merged in grid order (bit-identical to the serial
 /// [`super::experiments::loopback_sweep`] when jitter is disabled; see
-/// the module docs for the jittered-seed caveat). Returns the rows plus
+/// the module docs for the jittered-seed caveat). Forks each cell from a
+/// shared snapshot prototype by default. Returns the rows plus
 /// wall-clock stats for the bench harness.
 pub fn loopback_sweep_parallel(
     cfg: &SimConfig,
@@ -161,13 +195,40 @@ pub fn loopback_sweep_parallel(
     drivers: &[DriverKind],
     workers: usize,
 ) -> Result<(Vec<SweepRow>, SweepStats), DriverError> {
+    loopback_sweep_parallel_with(BuildMode::Fork, cfg, sizes, drivers, workers)
+}
+
+/// [`loopback_sweep_parallel`] with an explicit per-cell build mode (the
+/// bench's snapshot leg and the identity suite compare the two).
+pub fn loopback_sweep_parallel_with(
+    mode: BuildMode,
+    cfg: &SimConfig,
+    sizes: &[u64],
+    drivers: &[DriverKind],
+    workers: usize,
+) -> Result<(Vec<SweepRow>, SweepStats), DriverError> {
+    loopback_sweep_parallel_timed(mode, cfg, sizes, drivers, workers)
+        .map(|(rows, stats, _)| (rows, stats))
+}
+
+/// [`loopback_sweep_parallel_with`] plus each cell's wall time in ms (in
+/// grid order), for the sweep CSV's `wall_ms` column.
+pub fn loopback_sweep_parallel_timed(
+    mode: BuildMode,
+    cfg: &SimConfig,
+    sizes: &[u64],
+    drivers: &[DriverKind],
+    workers: usize,
+) -> Result<(Vec<SweepRow>, SweepStats, Vec<f64>), DriverError> {
+    let cache = SnapshotCache::new();
+    let src = mode.source(&cache);
     let cells: Vec<(u64, DriverKind)> = sizes
         .iter()
         .flat_map(|&b| drivers.iter().map(move |&k| (b, k)))
         .collect();
     let t0 = Instant::now();
-    let results = run_cells(&cells, workers, |i, &(bytes, kind)| {
-        loopback_cell(cfg, bytes, kind, cell_seed(cfg.seed, i))
+    let (results, wall_ms) = run_cells_timed(&cells, workers, |i, &(bytes, kind)| {
+        loopback_cell(src, cfg, bytes, kind, cell_seed(cfg.seed, i))
     });
     let wall = t0.elapsed();
     let mut rows = Vec::with_capacity(results.len());
@@ -178,7 +239,7 @@ pub fn loopback_sweep_parallel(
         rows.push(row);
     }
     let stats = SweepStats { workers, cells: cells.len(), events, wall };
-    Ok((rows, stats))
+    Ok((rows, stats, wall_ms))
 }
 
 /// Parallel channel-count × pipeline-depth scaling grid: identical rows
@@ -192,6 +253,32 @@ pub fn scaling_sweep_parallel(
     frames: usize,
     workers: usize,
 ) -> Result<Vec<ScalingRow>, DriverError> {
+    scaling_sweep_parallel_timed(
+        BuildMode::Fork,
+        cfg,
+        drivers,
+        channels_list,
+        depths,
+        frames,
+        workers,
+    )
+    .map(|(rows, _)| rows)
+}
+
+/// [`scaling_sweep_parallel`] with an explicit per-cell build mode, plus
+/// each grid cell's wall time in ms (baseline cells are not included in
+/// the wall column — one entry per returned row).
+pub fn scaling_sweep_parallel_timed(
+    mode: BuildMode,
+    cfg: &SimConfig,
+    drivers: &[DriverKind],
+    channels_list: &[usize],
+    depths: &[usize],
+    frames: usize,
+    workers: usize,
+) -> Result<(Vec<ScalingRow>, Vec<f64>), DriverError> {
+    let cache = SnapshotCache::new();
+    let src = mode.source(&cache);
     let net = roshambo();
     // Per-driver (1 channel, depth 1) baselines first — every grid cell
     // normalises against them. Baselines take cell indices 0..N and the
@@ -200,7 +287,7 @@ pub fn scaling_sweep_parallel(
     let baselines: Vec<f64> = run_cells(drivers, workers, |i, &kind| {
         let mut c = cfg.clone();
         c.seed = cell_seed(cfg.seed, i);
-        scaling_cell(&c, &net, kind, 1, 1, frames).map(|r| r.frames_per_sec())
+        scaling_cell_src(src, &c, &net, kind, 1, 1, frames).map(|r| r.frames_per_sec())
     })
     .into_iter()
     .collect::<Result<Vec<_>, DriverError>>()?;
@@ -215,10 +302,10 @@ pub fn scaling_sweep_parallel(
         })
         .collect();
     let base_cells = drivers.len();
-    let reports = run_cells(&cells, workers, |i, &(_, kind, channels, depth)| {
+    let (reports, wall_ms) = run_cells_timed(&cells, workers, |i, &(_, kind, channels, depth)| {
         let mut c = cfg.clone();
         c.seed = cell_seed(cfg.seed, base_cells + i);
-        scaling_cell(&c, &net, kind, channels, depth, frames)
+        scaling_cell_src(src, &c, &net, kind, channels, depth, frames)
     });
     let mut rows = Vec::with_capacity(cells.len());
     for (&(di, kind, channels, depth), report) in cells.iter().zip(reports) {
@@ -226,7 +313,7 @@ pub fn scaling_sweep_parallel(
         let speedup = report.frames_per_sec() / baselines[di];
         rows.push(ScalingRow { driver: kind, channels, depth, frames, report, speedup });
     }
-    Ok(rows)
+    Ok((rows, wall_ms))
 }
 
 /// Parallel §III.A ablation matrix: identical rows to
@@ -236,6 +323,8 @@ pub fn ablation_matrix_parallel(
     bytes: u64,
     workers: usize,
 ) -> Result<Vec<AblationRow>, DriverError> {
+    let cache = SnapshotCache::new();
+    let src = BuildMode::Fork.source(&cache);
     let mut cells: Vec<DriverConfig> = Vec::new();
     for kind in DriverKind::ALL {
         for buffering in [BufferScheme::Single, BufferScheme::Double] {
@@ -252,11 +341,12 @@ pub fn ablation_matrix_parallel(
     let results = run_cells(&cells, workers, |i, dcfg| -> Result<AblationRow, DriverError> {
         let mut c = cfg.clone();
         c.seed = cell_seed(cfg.seed, i);
-        let mut sys = System::loopback(c.clone());
+        let mut sys = src.loopback(&c);
         let mut cma = CmaAllocator::zynq_default();
         let mut drv = Driver::new(*dcfg, &mut cma, &c, bytes)?;
         let r = drv.transfer(&mut sys, bytes, bytes)?;
         drv.release(&mut cma);
+        src.retire(ProtoKind::Loopback, &sys);
         Ok(AblationRow { cfg: *dcfg, bytes, tx: r.tx_time, rx: r.rx_time })
     });
     results.into_iter().collect()
@@ -291,8 +381,21 @@ pub fn capacity_fps(
     kind: DriverKind,
     engines: usize,
 ) -> Result<f64, DriverError> {
+    capacity_fps_src(SystemSource::Build, cfg, kind, engines)
+}
+
+/// [`capacity_fps`] with an explicit system source — the serve and
+/// cluster sweeps probe capacity once per engine count / board class, so
+/// forking the probe from the sweep's shared cache makes it free after
+/// the first call per shape.
+pub fn capacity_fps_src(
+    src: SystemSource<'_>,
+    cfg: &SimConfig,
+    kind: DriverKind,
+    engines: usize,
+) -> Result<f64, DriverError> {
     let net = roshambo();
-    Ok(scaling_cell(cfg, &net, kind, engines, engines, 4 * engines)?.frames_per_sec())
+    Ok(scaling_cell_src(src, cfg, &net, kind, engines, engines, 4 * engines)?.frames_per_sec())
 }
 
 /// The capacity-planning grid behind the `serve-sweep` CLI command:
@@ -311,10 +414,43 @@ pub fn serve_sweep(
     engines_list: &[usize],
     workers: usize,
 ) -> Result<Vec<ServeSweepRow>, DriverError> {
+    serve_sweep_with(BuildMode::Fork, cfg, kind, loads, policies, engines_list, workers)
+}
+
+/// [`serve_sweep`] with an explicit per-cell system build mode: `Fork`
+/// (the default) warms one prototype per engine count and forks every
+/// capacity probe and serve cell from it; `Rebuild` reconstructs each
+/// cell's system from scratch. Bit-identical rows either way.
+pub fn serve_sweep_with(
+    mode: BuildMode,
+    cfg: &SimConfig,
+    kind: DriverKind,
+    loads: &[f64],
+    policies: &[QosPolicyKind],
+    engines_list: &[usize],
+    workers: usize,
+) -> Result<Vec<ServeSweepRow>, DriverError> {
+    serve_sweep_timed(mode, cfg, kind, loads, policies, engines_list, workers)
+        .map(|(rows, _)| rows)
+}
+
+/// [`serve_sweep_with`] plus each cell's wall time in ms (in grid
+/// order), for the serve-sweep CSV's `wall_ms` column.
+pub fn serve_sweep_timed(
+    mode: BuildMode,
+    cfg: &SimConfig,
+    kind: DriverKind,
+    loads: &[f64],
+    policies: &[QosPolicyKind],
+    engines_list: &[usize],
+    workers: usize,
+) -> Result<(Vec<ServeSweepRow>, Vec<f64>), DriverError> {
+    let cache = SnapshotCache::new();
+    let src = mode.source(&cache);
     // Capacities first (cheap, serial): one per engine count.
     let mut caps = Vec::with_capacity(engines_list.len());
     for &e in engines_list {
-        caps.push(capacity_fps(cfg, kind, e)?);
+        caps.push(capacity_fps_src(src, cfg, kind, e)?);
     }
     let cells: Vec<(usize, f64, QosPolicyKind)> = engines_list
         .iter()
@@ -325,11 +461,11 @@ pub fn serve_sweep(
             })
         })
         .collect();
-    let results = run_cells(&cells, workers, |_, &(ei, load, policy)| {
+    let (results, wall_ms) = run_cells_timed(&cells, workers, |_, &(ei, load, policy)| {
         let mut c = cfg.clone();
         c.workload.policy = policy;
         c.workload.offered_fps = load * caps[ei];
-        serve(&c, kind, engines_list[ei])
+        serve_src(src, &c, kind, engines_list[ei])
     });
     let mut rows = Vec::with_capacity(cells.len());
     for (&(ei, load, policy), rep) in cells.iter().zip(results) {
@@ -342,7 +478,7 @@ pub fn serve_sweep(
             report: rep?,
         });
     }
-    Ok(rows)
+    Ok((rows, wall_ms))
 }
 
 // ---------------------------------------------------------------------
@@ -380,6 +516,47 @@ impl CalendarBench {
     }
 }
 
+/// The snapshot/fork leg: the same grid of tiny loop-back cells run
+/// twice — rebuilding every system from scratch vs. forking each cell
+/// from one warmed snapshot prototype — with per-cell setup (system +
+/// CMA + driver construction) and run (transfer) wall time split out.
+/// Cell timelines are bit-identical between the paths; only the wall
+/// clock differs, and `fork_cells_per_sec` is the gated scalar.
+#[derive(Clone, Copy, Debug)]
+pub struct SnapshotBench {
+    /// Cells per path.
+    pub cells: usize,
+    /// Prototype systems the fork path built (one per config shape).
+    pub prototypes: usize,
+    /// Summed setup wall time, rebuild path.
+    pub rebuild_setup: Duration,
+    /// Summed run wall time, rebuild path.
+    pub rebuild_run: Duration,
+    /// Summed setup wall time, fork path.
+    pub fork_setup: Duration,
+    /// Summed run wall time, fork path.
+    pub fork_run: Duration,
+}
+
+impl SnapshotBench {
+    pub fn rebuild_cells_per_sec(&self) -> f64 {
+        self.cells as f64 / (self.rebuild_setup + self.rebuild_run).as_secs_f64().max(1e-12)
+    }
+
+    pub fn fork_cells_per_sec(&self) -> f64 {
+        self.cells as f64 / (self.fork_setup + self.fork_run).as_secs_f64().max(1e-12)
+    }
+
+    /// End-to-end cells/sec gain of forking over rebuilding.
+    pub fn fork_speedup(&self) -> f64 {
+        let rebuild = self.rebuild_cells_per_sec();
+        if rebuild <= 0.0 {
+            return 0.0;
+        }
+        self.fork_cells_per_sec() / rebuild
+    }
+}
+
 /// The full bench report (serialised to `BENCH_sweeps.json`).
 #[derive(Clone, Debug)]
 pub struct BenchReport {
@@ -402,6 +579,10 @@ pub struct BenchReport {
     /// under every driver policy on the copy-through path (the
     /// regression gate's sixth scalar — schema 5).
     pub model: SweepStats,
+    /// Snapshot/fork leg: fork-per-cell vs. rebuild-per-cell on a grid
+    /// of tiny loop-back cells, with setup/run wall splits (the
+    /// regression gate's seventh scalar — schema 6).
+    pub snapshot: SnapshotBench,
 }
 
 /// Deep-calendar churn: `events` schedule/pop cycles over a ~1 ms
@@ -459,7 +640,7 @@ pub fn bench(cfg: &SimConfig, opts: BenchOptions) -> Result<BenchReport, DriverE
         c.workload.offered_fps = 240.0;
         c.workload.tenants = 4;
         let t0 = Instant::now();
-        let rep = serve(&c, DriverKind::KernelIrq, 2)?;
+        let rep = serve_src(SystemSource::Build, &c, DriverKind::KernelIrq, 2)?;
         SweepStats { workers: 1, cells: 1, events: rep.events, wall: t0.elapsed() }
     };
 
@@ -521,6 +702,50 @@ pub fn bench(cfg: &SimConfig, opts: BenchOptions) -> Result<BenchReport, DriverE
         }
         SweepStats { workers: 1, cells, events, wall: t0.elapsed() }
     };
+    // Snapshot/fork leg: a grid of tiny loop-back transfers where system
+    // construction dominates the cell, run once rebuilding per cell and
+    // once forking from a warmed prototype. Setup (system + CMA + driver
+    // construction) and run (transfer) wall time are split so the report
+    // shows exactly where the fork path wins.
+    let snapshot_stats = {
+        let cells = if opts.quick { 96 } else { 384 };
+        let bytes = 4u64 << 10;
+        let path = |src: SystemSource<'_>| -> Result<(Duration, Duration), DriverError> {
+            let mut setup = Duration::ZERO;
+            let mut run = Duration::ZERO;
+            for i in 0..cells {
+                let mut c = cfg.clone();
+                c.seed = cell_seed(cfg.seed, i);
+                let t0 = Instant::now();
+                let mut sys = src.loopback(&c);
+                let mut cma = CmaAllocator::zynq_default();
+                let mut drv = Driver::new(
+                    DriverConfig::table1(DriverKind::UserPolling),
+                    &mut cma,
+                    &c,
+                    bytes,
+                )?;
+                setup += t0.elapsed();
+                let t1 = Instant::now();
+                drv.transfer(&mut sys, bytes, bytes)?;
+                run += t1.elapsed();
+                drv.release(&mut cma);
+                src.retire(ProtoKind::Loopback, &sys);
+            }
+            Ok((setup, run))
+        };
+        let (rebuild_setup, rebuild_run) = path(SystemSource::Build)?;
+        let cache = SnapshotCache::new();
+        let (fork_setup, fork_run) = path(BuildMode::Fork.source(&cache))?;
+        SnapshotBench {
+            cells,
+            prototypes: cache.prototypes(),
+            rebuild_setup,
+            rebuild_run,
+            fork_setup,
+            fork_run,
+        }
+    };
     Ok(BenchReport {
         quick: opts.quick,
         calendar,
@@ -529,6 +754,7 @@ pub fn bench(cfg: &SimConfig, opts: BenchOptions) -> Result<BenchReport, DriverE
         memory: memory_stats,
         cluster: cluster_stats,
         model: model_stats,
+        snapshot: snapshot_stats,
     })
 }
 
@@ -594,6 +820,12 @@ impl BenchReport {
         self.model.events_per_sec()
     }
 
+    /// Fork-path cells/sec of the snapshot leg (the seventh gated
+    /// scalar, schema 6).
+    pub fn snapshot_fork_cells_per_sec(&self) -> f64 {
+        self.snapshot.fork_cells_per_sec()
+    }
+
     pub fn to_json(&self) -> Json {
         let calendar = self
             .calendar
@@ -644,8 +876,20 @@ impl BenchReport {
             ("wall_ms", Json::num(self.model.wall.as_secs_f64() * 1e3)),
             ("events_per_sec", Json::num(self.model.events_per_sec())),
         ]);
+        let snap = &self.snapshot;
+        let snapshot = Json::obj(vec![
+            ("cells", Json::num(snap.cells as f64)),
+            ("prototypes", Json::num(snap.prototypes as f64)),
+            ("rebuild_setup_ms", Json::num(snap.rebuild_setup.as_secs_f64() * 1e3)),
+            ("rebuild_run_ms", Json::num(snap.rebuild_run.as_secs_f64() * 1e3)),
+            ("fork_setup_ms", Json::num(snap.fork_setup.as_secs_f64() * 1e3)),
+            ("fork_run_ms", Json::num(snap.fork_run.as_secs_f64() * 1e3)),
+            ("rebuild_cells_per_sec", Json::num(snap.rebuild_cells_per_sec())),
+            ("fork_cells_per_sec", Json::num(snap.fork_cells_per_sec())),
+            ("fork_speedup", Json::num(snap.fork_speedup())),
+        ]);
         Json::obj(vec![
-            ("schema", Json::num(5.0)),
+            ("schema", Json::num(6.0)),
             ("quick", Json::Bool(self.quick)),
             ("calendar", Json::Arr(calendar)),
             ("wheel_speedup_over_heap", Json::num(self.wheel_speedup_over_heap())),
@@ -655,6 +899,7 @@ impl BenchReport {
             ("memory", memory),
             ("cluster", cluster),
             ("model", model),
+            ("snapshot", snapshot),
         ])
     }
 
@@ -666,7 +911,7 @@ impl BenchReport {
         let mut check = |name: &str, current: f64, base: f64| {
             if base > 0.0 && current < base * (1.0 - tolerance) {
                 regressions.push(format!(
-                    "{name}: {current:.0} events/sec is {:.1}% below baseline {base:.0}",
+                    "{name}: {current:.0}/sec is {:.1}% below baseline {base:.0}",
                     100.0 * (1.0 - current / base)
                 ));
             }
@@ -719,6 +964,13 @@ impl BenchReport {
             .as_f64()
             .unwrap_or(0.0);
         check("model/events", self.model_events_per_sec(), base_model);
+        // And for pre-schema-6 baselines and the snapshot leg.
+        let base_snapshot = baseline
+            .get("snapshot")
+            .get("fork_cells_per_sec")
+            .as_f64()
+            .unwrap_or(0.0);
+        check("snapshot/fork-cells", self.snapshot_fork_cells_per_sec(), base_snapshot);
         regressions
     }
 }
@@ -806,16 +1058,19 @@ mod tests {
         assert!(rep.memory_events_per_sec() > 0.0);
         assert!(rep.cluster_events_per_sec() > 0.0);
         assert!(rep.model_events_per_sec() > 0.0);
+        assert!(rep.snapshot_fork_cells_per_sec() > 0.0);
+        assert!(rep.snapshot.prototypes >= 1, "fork path never built a prototype");
         let json = rep.to_json();
-        assert_eq!(json.get("schema").as_u64(), Some(5));
+        assert_eq!(json.get("schema").as_u64(), Some(6));
         assert_eq!(json.get("calendar").as_arr().unwrap().len(), 2);
         assert!(json.get("serve").get("events").as_u64().unwrap() > 0);
         assert!(json.get("memory").get("events").as_u64().unwrap() > 0);
         assert!(json.get("cluster").get("events").as_u64().unwrap() > 0);
         assert!(json.get("model").get("events").as_u64().unwrap() > 0);
+        assert!(json.get("snapshot").get("fork_cells_per_sec").as_f64().unwrap() > 0.0);
         // A report never regresses against itself.
         assert!(rep.check_against(&json, 0.2).is_empty());
-        // A 10x-faster fake baseline must flag all six metrics.
+        // A 10x-faster fake baseline must flag all seven metrics.
         let mut fake = rep.clone();
         for c in &mut fake.calendar {
             c.wall = Duration::from_nanos((c.wall.as_nanos() as u64 / 10).max(1));
@@ -829,21 +1084,44 @@ mod tests {
         fake.cluster.wall =
             Duration::from_nanos((fake.cluster.wall.as_nanos() as u64 / 10).max(1));
         fake.model.wall = Duration::from_nanos((fake.model.wall.as_nanos() as u64 / 10).max(1));
+        fake.snapshot.fork_setup =
+            Duration::from_nanos((fake.snapshot.fork_setup.as_nanos() as u64 / 10).max(1));
+        fake.snapshot.fork_run =
+            Duration::from_nanos((fake.snapshot.fork_run.as_nanos() as u64 / 10).max(1));
         let flagged = rep.check_against(&fake.to_json(), 0.2);
-        assert_eq!(flagged.len(), 6, "{flagged:?}");
-        // Older-schema baselines (no serve / memory / cluster / model
-        // key) self-skip the legs they predate.
+        assert_eq!(flagged.len(), 7, "{flagged:?}");
+        // Older-schema baselines (no serve / memory / cluster / model /
+        // snapshot key) self-skip the legs they predate.
         let old = Json::parse(
             &json
                 .to_string_compact()
                 .replace("\"serve\"", "\"serve_unused\"")
                 .replace("\"memory\"", "\"memory_unused\"")
                 .replace("\"cluster\"", "\"cluster_unused\"")
-                .replace("\"model\"", "\"model_unused\""),
+                .replace("\"model\"", "\"model_unused\"")
+                .replace("\"snapshot\"", "\"snapshot_unused\""),
         );
         if let Ok(old) = old {
             assert!(rep.check_against(&old, 0.2).is_empty());
         }
+    }
+
+    #[test]
+    fn bench_snapshot_leg_fork_beats_rebuild() {
+        // The acceptance bar for the snapshot layer: forking cells from
+        // a warmed prototype must be strictly faster end-to-end than
+        // rebuilding every system, even on the quick grid.
+        let cfg = SimConfig::default();
+        let rep = bench(&cfg, BenchOptions { quick: true, workers: 2 }).unwrap();
+        assert!(
+            rep.snapshot.fork_cells_per_sec() > rep.snapshot.rebuild_cells_per_sec(),
+            "fork path ({:.0} cells/sec) not above rebuild ({:.0} cells/sec)",
+            rep.snapshot.fork_cells_per_sec(),
+            rep.snapshot.rebuild_cells_per_sec(),
+        );
+        assert!(rep.snapshot.fork_speedup() > 1.0);
+        // One prototype: the leg's cells differ only by seed.
+        assert_eq!(rep.snapshot.prototypes, 1);
     }
 
     #[test]

@@ -22,8 +22,9 @@ use crate::coordinator::experiments::{
 };
 use crate::coordinator::model::{model_cell_observed, model_sweep, DriverPolicy};
 use crate::coordinator::serve::{serve, serve_observed};
-use crate::coordinator::sweeps::{bench, serve_sweep, BenchOptions};
+use crate::coordinator::sweeps::{bench, serve_sweep_timed, BenchOptions};
 use crate::drivers::DriverKind;
+use crate::system::BuildMode;
 use crate::report;
 use crate::runtime::Runtime;
 use crate::sim::trace::Trace as SimTrace;
@@ -382,10 +383,14 @@ impl Experiment for ServeSweep {
             (&[0.2, 0.5, 0.8, 1.0, 1.2, 1.6, 2.4], engines_list)
         };
         let policies = [QosPolicyKind::Fifo, QosPolicyKind::Drr, QosPolicyKind::Edf];
-        let rows = serve_sweep(&c, kind, loads, &policies, &engines_list, opts.workers)?;
+        let (rows, wall_ms) =
+            serve_sweep_timed(BuildMode::Fork, &c, kind, loads, &policies, &engines_list, opts.workers)?;
         Ok(ExperimentOutput {
             text: report::serve_sweep_text(&rows),
-            csv: vec![("serve_sweep.csv".into(), report::serve_sweep_csv(&rows))],
+            csv: vec![(
+                "serve_sweep.csv".into(),
+                report::with_wall_col(&report::serve_sweep_csv(&rows), &wall_ms),
+            )],
         })
     }
 }

@@ -106,6 +106,7 @@ pub struct DdrStats {
 
 /// One priority class of DMA traffic: a subqueue per engine plus the
 /// deficit-round-robin grant state.
+#[derive(Clone)]
 struct DmaClass {
     queues: Vec<VecDeque<DdrRequest>>,
     /// Remaining grants this refill round, per engine.
@@ -174,6 +175,7 @@ fn weight_of(weights: &[u64], engine: usize) -> u64 {
         .max(1)
 }
 
+#[derive(Clone)]
 pub struct DdrController {
     /// Reciprocal bandwidth in ns/byte (service time is a hot-path
     /// multiply, not a divide — §Perf).

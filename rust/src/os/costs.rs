@@ -9,6 +9,7 @@ use crate::config::SimConfig;
 use crate::sim::rng::Pcg32;
 use crate::sim::time::Dur;
 
+#[derive(Clone)]
 pub struct OsCosts {
     syscall_entry: Dur,
     syscall_exit: Dur,

@@ -33,6 +33,7 @@ struct Task {
 }
 
 /// Round-robin over ready tasks with a fixed timeslice.
+#[derive(Clone)]
 pub struct Scheduler {
     tasks: Vec<Task>,
     timeslice: Dur,

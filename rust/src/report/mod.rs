@@ -1175,6 +1175,49 @@ pub fn bench_text(rep: &BenchReport) -> String {
         rep.model_events_per_sec()
     )
     .unwrap();
+    let snap = &rep.snapshot;
+    writeln!(
+        out,
+        "snapshot: {} cells x {} prototype(s)\n  \
+         rebuild: setup {:.3} ms + run {:.3} ms = {:.0} cells/sec\n  \
+         fork:    setup {:.3} ms + run {:.3} ms = {:.0} cells/sec ({:.2}x)",
+        snap.cells,
+        snap.prototypes,
+        snap.rebuild_setup.as_secs_f64() * 1e3,
+        snap.rebuild_run.as_secs_f64() * 1e3,
+        snap.rebuild_cells_per_sec(),
+        snap.fork_setup.as_secs_f64() * 1e3,
+        snap.fork_run.as_secs_f64() * 1e3,
+        snap.fork_cells_per_sec(),
+        snap.fork_speedup()
+    )
+    .unwrap();
+    out
+}
+
+/// Append a `wall_ms` column to a line-per-row CSV (header + one line
+/// per row, the shape every sweep CSV in this module emits). `wall_ms`
+/// comes from the timed grid runners ([`crate::coordinator::run_cells_timed`])
+/// and is observation only — row values are untouched, so determinism
+/// tests that compare CSVs without the column are unaffected.
+pub fn with_wall_col(csv: &str, wall_ms: &[f64]) -> String {
+    let mut out = String::with_capacity(csv.len() + wall_ms.len() * 8);
+    let mut lines = csv.lines();
+    if let Some(header) = lines.next() {
+        out.push_str(header);
+        out.push_str(",wall_ms");
+        out.push('\n');
+    }
+    for (i, line) in lines.enumerate() {
+        out.push_str(line);
+        match wall_ms.get(i) {
+            Some(ms) => {
+                let _ = write!(out, ",{ms:.3}");
+            }
+            None => out.push(','),
+        }
+        out.push('\n');
+    }
     out
 }
 

@@ -68,6 +68,7 @@ impl CalendarKind {
     }
 }
 
+#[derive(Clone)]
 enum Calendar {
     Heap(BinaryHeap<Scheduled>),
     Wheel(Box<TimeWheel>),
@@ -80,6 +81,12 @@ enum Calendar {
 /// scaling sweeps and multi-engine batches push it far higher, and the
 /// §Perf profile showed the old queue dominating the full sweep. The
 /// default backend is the hierarchical time wheel; see [`CalendarKind`].
+///
+/// `Clone` copies the full calendar state (clock, sequence counter,
+/// queued events, dedup slots) — the snapshot/fork layer
+/// ([`crate::system::SystemSnapshot`]) relies on a clone being
+/// indistinguishable from the original to every observer.
+#[derive(Clone)]
 pub struct Engine {
     now: SimTime,
     seq: u64,
@@ -226,6 +233,25 @@ impl Engine {
         match &self.cal {
             Calendar::Heap(h) => h.len(),
             Calendar::Wheel(w) => w.len(),
+        }
+    }
+
+    /// High-water mark of the calendar's backing storage (wheel slot
+    /// pool, or heap length for the reference backend).
+    pub fn pool_high_water(&self) -> usize {
+        match &self.cal {
+            Calendar::Heap(h) => h.len(),
+            Calendar::Wheel(w) => w.pool_high_water(),
+        }
+    }
+
+    /// Pre-size the calendar's backing storage for `nodes` events.
+    /// Capacity is invisible to the simulation; snapshot forks use this
+    /// to inherit a warmed prototype's pool size without re-warming.
+    pub fn reserve_pool(&mut self, nodes: usize) {
+        match &mut self.cal {
+            Calendar::Heap(h) => h.reserve(nodes.saturating_sub(h.len())),
+            Calendar::Wheel(w) => w.reserve_pool(nodes),
         }
     }
 }

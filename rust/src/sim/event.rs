@@ -227,6 +227,16 @@ impl EventSlab {
     pub fn high_water(&self) -> usize {
         self.nodes.len()
     }
+
+    /// Pre-size the backing store for `n` nodes. Forked systems inherit a
+    /// warmed prototype's high-water mark this way (capacity is invisible
+    /// to the simulation — only allocation traffic changes), so the pool
+    /// never regrows mid-run.
+    pub fn reserve_nodes(&mut self, n: usize) {
+        if n > self.nodes.len() {
+            self.nodes.reserve(n - self.nodes.len());
+        }
+    }
 }
 
 #[cfg(test)]

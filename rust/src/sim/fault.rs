@@ -278,6 +278,7 @@ fn ch_idx(ch: Channel) -> usize {
 
 /// The runtime plan: configuration + scheduled specs + per-site
 /// opportunity counters + seeded RNG streams + injection stats.
+#[derive(Clone)]
 pub struct FaultPlan {
     cfg: FaultConfig,
     scheduled: Vec<FaultSpec>,

@@ -54,6 +54,7 @@ pub const WHEEL_HORIZON_NS: u64 = 1 << (WHEEL_BITS * WHEEL_LEVELS as u32);
 
 const SLOT_MASK: u64 = WHEEL_SLOTS as u64 - 1;
 
+#[derive(Clone)]
 pub struct TimeWheel {
     slab: EventSlab,
     /// Head node of each slot's singly-linked list.
@@ -405,6 +406,12 @@ impl TimeWheel {
     /// Pool high-water mark (for the §Perf steady-state-allocation bench).
     pub fn pool_high_water(&self) -> usize {
         self.slab.high_water()
+    }
+
+    /// Pre-size the slot-node pool (see [`EventSlab::reserve_nodes`]);
+    /// snapshot forks inherit a warmed prototype's high-water mark.
+    pub fn reserve_pool(&mut self, nodes: usize) {
+        self.slab.reserve_nodes(nodes);
     }
 }
 

@@ -135,6 +135,7 @@ pub struct CpuLedger {
 /// One AXI-DMA engine instance plus everything private to it: channel
 /// state machines, datamover FIFOs, AXI-Lite registers, the PL device on
 /// its stream ports, and the delivered-IRQ latches of its two lines.
+#[derive(Clone)]
 pub struct DmaPort {
     pub id: EngineId,
     pub mm2s: DmaChannelEngine,
@@ -188,6 +189,7 @@ fn ch_index(ch: Channel) -> usize {
     }
 }
 
+#[derive(Clone)]
 pub struct System {
     pub cfg: SimConfig,
     pub eng: Engine,
@@ -276,6 +278,31 @@ impl System {
             .map(|i| PlDevice::NullHop(crate::accel::NullHopCore::new(&cfg, EngineId(i as u8))))
             .collect();
         System::new(cfg, devs)
+    }
+
+    /// Fork an independent system from a captured prototype: a deep copy
+    /// of the snapshot's image (wheel + slab, DMA ports with any armed BD
+    /// templates, DDR controller, scheduler, coherency model) with `cfg`
+    /// installed and the `cfg.seed`-derived OS-jitter stream re-derived.
+    ///
+    /// `cfg` must share the snapshot's [construction
+    /// shape](SimConfig::same_construction_shape); the fork is then
+    /// bit-identical to `System::new(cfg, ...)` — no re-parse, no pool
+    /// re-allocation beyond the copy, no re-warm — while inheriting the
+    /// prototype's warmed pool capacities. Determinism contract: a fork
+    /// never observes wall-clock time or allocator addresses, so rows
+    /// computed on forks match rebuilt-per-cell rows byte for byte.
+    pub fn fork(snap: &SystemSnapshot, cfg: &SimConfig) -> System {
+        debug_assert!(
+            snap.proto.cfg.same_construction_shape(cfg),
+            "forking a snapshot for a config with a different construction shape"
+        );
+        let mut sys = snap.proto.clone();
+        sys.eng.reserve_pool(snap.pool_nodes);
+        sys.desc_scratch.reserve(snap.scratch_cap);
+        sys.cfg = cfg.clone();
+        sys.costs = OsCosts::new(&sys.cfg);
+        sys
     }
 
     #[inline]
@@ -1072,6 +1099,167 @@ impl System {
     }
 }
 
+// ---------------------------------------------------------------------
+// Snapshot / fork layer (DESIGN.md §16)
+// ---------------------------------------------------------------------
+
+/// A fully-built `System` captured as a cheap forkable image, plus the
+/// pool high-water marks harvested from warm runs so later forks start
+/// at steady-state capacity. See [`System::fork`] for the determinism
+/// contract.
+pub struct SystemSnapshot {
+    proto: System,
+    /// Calendar pool high-water mark absorbed from warm runs.
+    pool_nodes: usize,
+    /// Descriptor-scratch capacity absorbed from warm runs.
+    scratch_cap: usize,
+}
+
+impl SystemSnapshot {
+    /// Capture a freshly-built system as the fork prototype. The system
+    /// must not have been stepped: forks copy the image verbatim, so any
+    /// consumed virtual time would leak into every fork's timeline.
+    pub fn capture(sys: System) -> SystemSnapshot {
+        debug_assert_eq!(sys.eng.dispatched, 0, "capturing a stepped system");
+        SystemSnapshot { pool_nodes: 0, scratch_cap: 0, proto: sys }
+    }
+
+    /// The prototype's config (the cache key holder).
+    pub fn cfg(&self) -> &SimConfig {
+        &self.proto.cfg
+    }
+
+    /// Absorb pool high-water marks from a system that has finished its
+    /// cell, so subsequent forks pre-reserve steady-state capacity
+    /// instead of regrowing. Capacity never shows in the timeline —
+    /// warming is purely an allocation-traffic optimisation.
+    pub fn absorb_warmth(&mut self, used: &System) {
+        self.pool_nodes = self.pool_nodes.max(used.eng.pool_high_water());
+        self.scratch_cap = self.scratch_cap.max(used.desc_scratch.capacity());
+    }
+}
+
+/// Which PL device family a prototype attaches — mirrors the
+/// [`System::loopback`] / [`System::nullhop`] convenience constructors.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ProtoKind {
+    Loopback,
+    NullHop,
+}
+
+impl ProtoKind {
+    fn build(self, cfg: SimConfig) -> System {
+        match self {
+            ProtoKind::Loopback => System::loopback(cfg),
+            ProtoKind::NullHop => System::nullhop(cfg),
+        }
+    }
+}
+
+/// Shared prototype store for sweep grids: one warmed [`SystemSnapshot`]
+/// per distinct construction shape, forked per cell. Thread-safe — the
+/// parallel sweep executor shares one cache across workers (forks are µs
+/// next to cells, so the lock never becomes the bottleneck).
+#[derive(Default)]
+pub struct SnapshotCache {
+    snaps: std::sync::Mutex<Vec<(ProtoKind, SystemSnapshot)>>,
+}
+
+impl SnapshotCache {
+    pub fn new() -> SnapshotCache {
+        SnapshotCache::default()
+    }
+
+    /// Fork a system for `cfg`, building and caching a prototype the
+    /// first time this construction shape (× device kind) is seen.
+    pub fn fork(&self, kind: ProtoKind, cfg: &SimConfig) -> System {
+        let mut snaps = self.snaps.lock().unwrap();
+        if let Some((_, snap)) =
+            snaps.iter().find(|(k, s)| *k == kind && s.cfg().same_construction_shape(cfg))
+        {
+            return System::fork(snap, cfg);
+        }
+        let snap = SystemSnapshot::capture(kind.build(cfg.clone()));
+        let sys = System::fork(&snap, cfg);
+        snaps.push((kind, snap));
+        sys
+    }
+
+    /// Hand a finished cell's system back so its shape's snapshot can
+    /// absorb the pool high-water marks (see
+    /// [`SystemSnapshot::absorb_warmth`]).
+    pub fn retire(&self, kind: ProtoKind, used: &System) {
+        let mut snaps = self.snaps.lock().unwrap();
+        if let Some((_, snap)) = snaps
+            .iter_mut()
+            .find(|(k, s)| *k == kind && s.cfg().same_construction_shape(&used.cfg))
+        {
+            snap.absorb_warmth(used);
+        }
+    }
+
+    /// Number of prototypes built so far (one per distinct shape).
+    pub fn prototypes(&self) -> usize {
+        self.snaps.lock().unwrap().len()
+    }
+}
+
+/// Where a sweep cell obtains its `System`: a fresh build per cell (the
+/// legacy path, kept as the bit-identity reference) or a fork of a
+/// warmed prototype from a shared [`SnapshotCache`].
+#[derive(Clone, Copy)]
+pub enum SystemSource<'a> {
+    Build,
+    Fork(&'a SnapshotCache),
+}
+
+impl SystemSource<'_> {
+    pub fn loopback(self, cfg: &SimConfig) -> System {
+        self.system(ProtoKind::Loopback, cfg)
+    }
+
+    pub fn nullhop(self, cfg: &SimConfig) -> System {
+        self.system(ProtoKind::NullHop, cfg)
+    }
+
+    pub fn system(self, kind: ProtoKind, cfg: &SimConfig) -> System {
+        match self {
+            SystemSource::Build => kind.build(cfg.clone()),
+            SystemSource::Fork(cache) => cache.fork(kind, cfg),
+        }
+    }
+
+    /// Return a finished cell's system for capacity warming (no-op on
+    /// the build path).
+    pub fn retire(self, kind: ProtoKind, used: &System) {
+        if let SystemSource::Fork(cache) = self {
+            cache.retire(kind, used);
+        }
+    }
+}
+
+/// Grid-level switch between the fork-per-cell default and the legacy
+/// rebuild-per-cell path (kept selectable so the bit-identity suite and
+/// the bench can compare the two).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum BuildMode {
+    /// Fork every cell's system from a shared warmed snapshot cache.
+    #[default]
+    Fork,
+    /// Build every cell's system from scratch (the legacy path).
+    Rebuild,
+}
+
+impl BuildMode {
+    /// The per-cell source for this mode, borrowing `cache` in fork mode.
+    pub fn source(self, cache: &SnapshotCache) -> SystemSource<'_> {
+        match self {
+            BuildMode::Fork => SystemSource::Fork(cache),
+            BuildMode::Rebuild => SystemSource::Build,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1383,5 +1571,102 @@ mod tests {
             (tx, rx, sys.eng.dispatched)
         };
         assert_eq!(run(1), run(4), "idle engines changed the timeline");
+    }
+
+    /// One polled loop-back round trip; the probe the snapshot tests
+    /// compare timelines with.
+    fn round_trip(sys: &mut System, n: u64) -> (SimTime, SimTime, u64, String) {
+        sys.program_dma(
+            Channel::S2mm,
+            DmaMode::Simple,
+            vec![Descriptor::new(PhysAddr(0x100000), n).with_irq()],
+        );
+        sys.program_dma(
+            Channel::Mm2s,
+            DmaMode::Simple,
+            vec![Descriptor::new(PhysAddr(0), n).with_irq()],
+        );
+        let tx = sys.poll_wait(Channel::Mm2s).unwrap();
+        let rx = sys.poll_wait(Channel::S2mm).unwrap();
+        (tx, rx, sys.eng.dispatched, format!("{:?}", sys.ledger))
+    }
+
+    #[test]
+    fn fork_matches_fresh_build_bit_for_bit() {
+        // Jitter on, so the seed-derived OS stream actually matters.
+        let mut base = cfg();
+        base.os_jitter_frac = 0.05;
+        let snap = SystemSnapshot::capture(System::loopback(base.clone()));
+        for seed in [base.seed, 0xD00D, 42] {
+            let mut c = base.clone();
+            c.seed = seed;
+            let fresh = round_trip(&mut System::loopback(c.clone()), 256 * 1024);
+            let forked = round_trip(&mut System::fork(&snap, &c), 256 * 1024);
+            assert_eq!(fresh, forked, "fork drifted from fresh build at seed {seed:#x}");
+        }
+    }
+
+    #[test]
+    fn fork_carries_armed_ring_templates() {
+        // A snapshot taken after a ring is armed hands every fork the
+        // programmed BD template without re-arming.
+        let mut proto = System::loopback(cfg());
+        proto.program_dma_ring_on(
+            EngineId::ZERO,
+            Channel::Mm2s,
+            &crate::axi::descriptor::chain(PhysAddr(0), 64 * 1024, 16 * 1024),
+        );
+        let snap = SystemSnapshot::capture(proto);
+        let sys = System::fork(&snap, snap.cfg());
+        assert!(sys.ports[0].mm2s.ring_armed(), "ring template lost in the fork");
+    }
+
+    #[test]
+    fn forks_are_isolated_from_prototype_and_siblings() {
+        let base = cfg();
+        let snap = SystemSnapshot::capture(System::loopback(base.clone()));
+        let expect = round_trip(&mut System::fork(&snap, &base), 128 * 1024);
+        // Mutate one fork heavily...
+        let mut noisy = System::fork(&snap, &base);
+        for _ in 0..5 {
+            round_trip(&mut noisy, 512 * 1024);
+        }
+        // ...and a sibling forked afterwards still replays the original
+        // timeline exactly.
+        assert_eq!(expect, round_trip(&mut System::fork(&snap, &base), 128 * 1024));
+    }
+
+    #[test]
+    fn snapshot_cache_builds_one_prototype_per_shape() {
+        let cache = SnapshotCache::new();
+        let mut a = cfg();
+        for seed in [1u64, 2, 3] {
+            a.seed = seed;
+            let sys = cache.fork(ProtoKind::Loopback, &a);
+            cache.retire(ProtoKind::Loopback, &sys);
+        }
+        assert_eq!(cache.prototypes(), 1, "seed must not split the shape key");
+        let mut b = cfg();
+        b.num_engines = 2;
+        cache.fork(ProtoKind::Loopback, &b);
+        cache.fork(ProtoKind::NullHop, &a);
+        assert_eq!(cache.prototypes(), 3, "engines / device kind are shape axes");
+        let mut w = cfg();
+        w.workload.tenants = 9;
+        w.workload.offered_fps = 123.0;
+        cache.fork(ProtoKind::Loopback, &w);
+        assert_eq!(cache.prototypes(), 3, "workload block must not split the shape key");
+    }
+
+    #[test]
+    fn warmed_forks_still_replay_identically() {
+        let base = cfg();
+        let cache = SnapshotCache::new();
+        let cold = round_trip(&mut cache.fork(ProtoKind::Loopback, &base), 256 * 1024);
+        let mut used = cache.fork(ProtoKind::Loopback, &base);
+        round_trip(&mut used, 1 << 20);
+        cache.retire(ProtoKind::Loopback, &used);
+        let warm = round_trip(&mut cache.fork(ProtoKind::Loopback, &base), 256 * 1024);
+        assert_eq!(cold, warm, "capacity warming leaked into the timeline");
     }
 }

@@ -1,0 +1,212 @@
+//! Snapshot/fork acceptance suite (DESIGN.md §16).
+//!
+//! Two contracts:
+//!
+//! 1. **Isolation** — a [`SystemSnapshot`] is a frozen image: arbitrary
+//!    mutation sequences driven through one fork never alter the
+//!    snapshot itself or any sibling fork, and absorbing a used fork's
+//!    capacity warmth back into the snapshot stays invisible to the
+//!    timeline (warmth is allocation traffic only).
+//! 2. **Bit-identity** — every sweep grid produces byte-identical rows
+//!    whether each cell forks from a warmed prototype
+//!    ([`BuildMode::Fork`], the default) or rebuilds its
+//!    [`System`] from scratch ([`BuildMode::Rebuild`]), at every worker
+//!    count, across [`DriverKind::ALL`] and all three memory paths.
+//!
+//! Rows are compared through `Debug` formatting, which round-trips
+//! `f64` exactly — equal strings means bit-equal rows.
+
+use psoc_dma::cluster::{cluster_sweep_with, BoardKind, PlacementKind};
+use psoc_dma::config::SimConfig;
+use psoc_dma::coordinator::{
+    loopback_sweep_parallel_timed, memory_sweep_with, model_sweep_with,
+    scaling_sweep_parallel_timed, serve_sweep_with,
+};
+use psoc_dma::drivers::{Driver, DriverConfig, DriverKind};
+use psoc_dma::memory::buffer::CmaAllocator;
+use psoc_dma::memory::{DmaPortKind, MemoryPath};
+use psoc_dma::sim::rng::Pcg32;
+use psoc_dma::system::{BuildMode, System, SystemSnapshot};
+use psoc_dma::workload::QosPolicyKind;
+
+/// One fixed probe transfer on an already-built system; the returned
+/// timeline triple is the fingerprint isolation tests compare.
+fn probe(sys: &mut System, cfg: &SimConfig) -> (u64, u64, u64) {
+    let bytes = 16u64 << 10;
+    let mut cma = CmaAllocator::zynq_default();
+    let mut drv =
+        Driver::new(DriverConfig::table1(DriverKind::UserPolling), &mut cma, cfg, bytes).unwrap();
+    let r = drv.transfer(sys, bytes, bytes).unwrap();
+    drv.release(&mut cma);
+    sys.run_until_quiet();
+    (r.tx_time.ns(), r.rx_time.ns(), sys.eng.dispatched)
+}
+
+/// Drive a random mutation sequence (sizes × drivers, seeded) through a
+/// fork, stepping its clock and growing its pools arbitrarily.
+fn mutate(sys: &mut System, cfg: &SimConfig, seed: u64) {
+    let mut rng = Pcg32::with_stream(seed, 0xF0A4);
+    for _ in 0..12 {
+        let bytes = 64u64 << rng.next_bounded(11); // 64 B ..= 64 KiB
+        let kind = DriverKind::ALL[rng.next_bounded(3) as usize];
+        let mut cma = CmaAllocator::zynq_default();
+        let mut drv = Driver::new(DriverConfig::table1(kind), &mut cma, cfg, bytes).unwrap();
+        drv.transfer(sys, bytes, bytes).unwrap();
+        drv.release(&mut cma);
+        sys.run_until_quiet();
+    }
+}
+
+#[test]
+fn fork_mutations_never_leak_to_snapshot_or_siblings() {
+    let cfg = SimConfig::default();
+    let reference = probe(&mut System::loopback(cfg.clone()), &cfg);
+    let mut snap = SystemSnapshot::capture(System::loopback(cfg.clone()));
+
+    for seed in [1u64, 0xDEAD_BEEF, 42] {
+        // Sibling forked *before* the mutations run.
+        let mut sibling = System::fork(&snap, &cfg);
+        let mut victim = System::fork(&snap, &cfg);
+        mutate(&mut victim, &cfg, seed);
+
+        // Sibling and a fork taken *after* the mutations both still
+        // reproduce the fresh-build timeline exactly.
+        assert_eq!(probe(&mut sibling, &cfg), reference, "sibling drifted (seed {seed})");
+        let mut after = System::fork(&snap, &cfg);
+        assert_eq!(probe(&mut after, &cfg), reference, "snapshot drifted (seed {seed})");
+
+        // Warmth absorbed from the mutated fork pre-reserves capacity in
+        // later forks but must never show up in the timeline.
+        snap.absorb_warmth(&victim);
+        let mut warmed = System::fork(&snap, &cfg);
+        assert_eq!(probe(&mut warmed, &cfg), reference, "warmth leaked (seed {seed})");
+    }
+}
+
+/// Loop-back grid: fork vs. rebuild, every driver, all three memory
+/// paths, worker counts 1/2/4.
+#[test]
+fn loopback_grid_fork_matches_rebuild_on_every_path() {
+    let paths = [
+        (MemoryPath::CopyThrough, DmaPortKind::Hp),
+        (MemoryPath::ZeroCopy, DmaPortKind::Hp),
+        (MemoryPath::ZeroCopy, DmaPortKind::Acp),
+    ];
+    let sizes = [1u64 << 10, 64 << 10];
+    for (path, port) in paths {
+        let mut cfg = SimConfig::default();
+        cfg.memory.path = path;
+        cfg.memory.port = port;
+        let run = |mode, workers| {
+            let (rows, _, wall) =
+                loopback_sweep_parallel_timed(mode, &cfg, &sizes, &DriverKind::ALL, workers)
+                    .unwrap();
+            assert_eq!(wall.len(), rows.len(), "one wall entry per row");
+            format!("{rows:?}")
+        };
+        let rebuilt = run(BuildMode::Rebuild, 1);
+        for workers in [1, 2, 4] {
+            assert_eq!(
+                run(BuildMode::Fork, workers),
+                rebuilt,
+                "loopback fork/rebuild diverged ({path:?}/{port:?}, {workers} workers)"
+            );
+        }
+    }
+}
+
+#[test]
+fn scaling_grid_fork_matches_rebuild() {
+    let cfg = SimConfig::default();
+    let run = |mode, workers| {
+        let (rows, wall) =
+            scaling_sweep_parallel_timed(mode, &cfg, &DriverKind::ALL, &[1, 2], &[1, 2], 2, workers)
+                .unwrap();
+        assert_eq!(wall.len(), rows.len(), "one wall entry per row");
+        format!("{rows:?}")
+    };
+    let rebuilt = run(BuildMode::Rebuild, 1);
+    for workers in [1, 2, 4] {
+        assert_eq!(run(BuildMode::Fork, workers), rebuilt, "scaling diverged ({workers} workers)");
+    }
+}
+
+/// The memory sweep iterates all three [`MemoryMode`] paths internally,
+/// so one fork/rebuild comparison covers copy-through and both zero-copy
+/// ports for every driver.
+#[test]
+fn memory_sweep_fork_matches_rebuild_on_all_paths() {
+    let cfg = SimConfig::default();
+    let sizes = [4u64 << 10, 64 << 10];
+    let run = |mode| {
+        format!("{:?}", memory_sweep_with(mode, &cfg, &sizes, &DriverKind::ALL, 2).unwrap())
+    };
+    assert_eq!(run(BuildMode::Fork), run(BuildMode::Rebuild));
+}
+
+/// Full-mode model sweep (all memory modes, every policy, the whole
+/// zoo): adaptive probe passes fork too, and must choose the same
+/// drivers either way.
+#[test]
+fn model_sweep_fork_matches_rebuild() {
+    let cfg = SimConfig::default();
+    let run = |mode| format!("{:?}", model_sweep_with(mode, &cfg, 1, false).unwrap());
+    assert_eq!(run(BuildMode::Fork), run(BuildMode::Rebuild));
+}
+
+#[test]
+fn serve_sweep_fork_matches_rebuild_for_every_driver() {
+    let mut cfg = SimConfig::default();
+    cfg.workload.tenants = 2;
+    cfg.workload.duration_ns = 100_000_000;
+    let loads = [0.5, 2.0];
+    let policies = [QosPolicyKind::Fifo, QosPolicyKind::Edf];
+    for kind in DriverKind::ALL {
+        let run = |mode, workers| {
+            format!(
+                "{:?}",
+                serve_sweep_with(mode, &cfg, kind, &loads, &policies, &[1, 2], workers).unwrap()
+            )
+        };
+        let rebuilt = run(BuildMode::Rebuild, 1);
+        for workers in [1, 2, 4] {
+            assert_eq!(
+                run(BuildMode::Fork, workers),
+                rebuilt,
+                "serve sweep diverged ({kind:?}, {workers} workers)"
+            );
+        }
+    }
+}
+
+/// Heterogeneous fleet: two board classes means two snapshot prototypes
+/// (the construction shape key includes the board specialization), and
+/// the grid still matches the rebuild path bit for bit.
+#[test]
+fn cluster_sweep_fork_matches_rebuild_with_heterogeneous_boards() {
+    let mut cfg = SimConfig::default();
+    cfg.workload.tenants = 3;
+    cfg.workload.duration_ns = 60_000_000;
+    cfg.workload.deadline_ns = 50_000_000;
+    cfg.cluster.boards = 2;
+    cfg.cluster.profiles = vec![BoardKind::Zynq7000, BoardKind::ZynqNet];
+    let run = |mode, workers| {
+        format!(
+            "{:?}",
+            cluster_sweep_with(
+                mode,
+                &cfg,
+                DriverKind::KernelIrq,
+                &[1, 2],
+                &[PlacementKind::LeastLoaded, PlacementKind::ConsistentHash],
+                &[0.5, 1.2],
+                workers,
+            )
+            .unwrap()
+        )
+    };
+    let rebuilt = run(BuildMode::Rebuild, 1);
+    for workers in [1, 2, 4] {
+        assert_eq!(run(BuildMode::Fork, workers), rebuilt, "cluster diverged ({workers} workers)");
+    }
+}

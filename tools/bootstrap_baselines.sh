@@ -22,6 +22,16 @@ test -f rust/tests/golden/single_channel.json || {
 }
 cargo run --release -- bench --workers 4 --out BENCH_baseline.json
 
+# The baseline must carry the schema-6 snapshot leg (fork vs rebuild
+# cells/sec) so `bench --check` arms the snapshot/fork-cells gate; an
+# older binary would silently emit a baseline that self-skips it.
+python3 -c "
+import json
+r = json.load(open('BENCH_baseline.json'))
+assert r['schema'] >= 6, 'stale bench schema: %r' % r.get('schema')
+assert r['snapshot']['fork_cells_per_sec'] > 0, 'snapshot leg missing'
+"
+
 git add rust/tests/golden/single_channel.json BENCH_baseline.json
 git status --short rust/tests/golden/single_channel.json BENCH_baseline.json
 echo "baselines staged — review and commit"
